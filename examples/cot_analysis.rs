@@ -1,0 +1,93 @@
+//! CoT analysis (paper Fig. 2 / Fig. 3 / Fig. 4 companion): side-by-side
+//! FP16 vs INT8 generations for the same prompts, trace-shape statistics,
+//! and the repetition detector on live outputs.
+//!
+//!     cargo run --release --example cot_analysis -- [--artifacts DIR] [--tasks N]
+
+use anyhow::Result;
+
+use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
+use pangu_atlas_quant::coordinator::cot::{trace_shape, TraceShape};
+use pangu_atlas_quant::harness::Harness;
+use pangu_atlas_quant::tokenizer::CotMode;
+use pangu_atlas_quant::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n = args.usize_or("tasks", 6);
+    let mut h = Harness::open(&dir)?;
+    h.quick = Some(n.max(16));
+
+    // ---- Fig. 3 companion: side-by-side FP16 vs INT8 -----------------
+    println!("=== Fig. 3 companion: FP16 vs INT8 generations (7b-sim, slow_think) ===");
+    let tk = h.tokenizer.clone();
+    {
+        let fp = h.eval("7b-sim", "fp16", CotMode::SlowThink, "humaneval_s")?.clone();
+        let q = h.eval("7b-sim", "int8", CotMode::SlowThink, "humaneval_s")?.clone();
+        for i in 0..n.min(fp.len()) {
+            let same = fp[i].tokens == q[i].tokens;
+            println!("\ntask {i} ({}):", if same { "identical" } else { "DIFFERS" });
+            println!("  FP16: {}", tk.render(&fp[i].tokens));
+            if !same {
+                println!("  INT8: {}", tk.render(&q[i].tokens));
+            }
+            println!(
+                "  outcome: FP16 {:?} | INT8 {:?}",
+                fp[i].outcome, q[i].outcome
+            );
+        }
+        let identical = fp
+            .iter()
+            .zip(&q)
+            .filter(|(a, b)| a.tokens == b.tokens)
+            .count();
+        println!(
+            "\nidentical generations: {identical}/{} (paper: core reasoning preserved, surface wording may vary)",
+            fp.len()
+        );
+    }
+
+    // ---- trace-shape statistics per mode ------------------------------
+    println!("\n=== trace shapes by mode (7b-sim INT8) ===");
+    for mode in CotMode::ALL {
+        let records = h.eval("7b-sim", "int8", mode, "humaneval_s")?;
+        let mut direct = 0;
+        let mut traced = 0;
+        let mut unclosed = 0;
+        for r in records {
+            match trace_shape(&tk, &r.tokens) {
+                TraceShape::Direct => direct += 1,
+                TraceShape::Traced => traced += 1,
+                TraceShape::UnclosedTrace => unclosed += 1,
+            }
+        }
+        println!(
+            "  {:<11} direct {direct:>3}  traced {traced:>3}  unclosed {unclosed:>3}",
+            mode.name()
+        );
+    }
+
+    // ---- live repetition detection ------------------------------------
+    println!("\n=== repetition detector on live outputs (1b-sim fp16 slow_think) ===");
+    let records = h.eval("1b-sim", "fp16", CotMode::SlowThink, "humaneval_s")?;
+    let cfg = RepetitionConfig::default();
+    let mut flagged = 0;
+    for r in records.iter() {
+        let rep = detect(&r.tokens, &cfg);
+        if rep.repetitive {
+            flagged += 1;
+            if flagged <= 3 {
+                println!(
+                    "  task {}: period {} x{} | {}",
+                    r.task_id,
+                    rep.period,
+                    rep.repeats,
+                    tk.render(&r.tokens)
+                );
+            }
+        }
+    }
+    println!("  flagged {flagged}/{} generations", records.len());
+    Ok(())
+}

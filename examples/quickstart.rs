@@ -1,0 +1,52 @@
+//! Quickstart: load the quantized artifacts, run one CoT generation through
+//! the full stack, and score it against the held-out tests.
+//!
+//!     cargo run --release --example quickstart -- [--artifacts DIR]
+
+use anyhow::Result;
+
+use pangu_atlas_quant::bench_suite::scoring;
+use pangu_atlas_quant::coordinator::engine::Engine;
+use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::harness::Harness;
+use pangu_atlas_quant::runtime::backend::DeviceBackend;
+use pangu_atlas_quant::tokenizer::CotMode;
+use pangu_atlas_quant::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    // 1. Open the artifacts (manifest + AOT executables + PTEN weights).
+    let mut h = Harness::open(&dir)?;
+    println!("loaded artifacts from {}", dir.display());
+    println!("models: {:?}", h.runtime.manifest.models.keys().collect::<Vec<_>>());
+
+    // 2. Pick a benchmark task (examples shown to the model; tests held out).
+    let task = h.benchmark("humaneval_s")?.tasks[3].clone();
+    println!("\ntask: infer the program from 3 I/O examples");
+    for (xs, ys) in &task.examples {
+        println!("  {xs:?} -> {ys:?}");
+    }
+    println!("(reference program: {:?})", task.reference);
+
+    // 3. Generate under each CoT mode with the INT8 variant.
+    let tk = h.tokenizer.clone();
+    let engine = Engine::new(&tk);
+    for mode in CotMode::ALL {
+        let req = Request::new(1, "7b-sim", "int8", mode, task.examples.clone());
+        let mut backend = DeviceBackend::new(&mut h.runtime, "7b-sim", "int8")?;
+        let (resps, report) = engine.run_wave(&mut backend, 1, &[req])?;
+        let resp = &resps[0];
+        let outcome = scoring::score_generation(&tk, &task, &resp.tokens);
+        println!(
+            "\n[{:<10}] {:>5.1} ms | {:<9} | {}",
+            mode.name(),
+            report.prefill_ms + report.decode_ms,
+            format!("{outcome:?}"),
+            tk.render(&resp.tokens)
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

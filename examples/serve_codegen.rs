@@ -1,0 +1,128 @@
+//! End-to-end serving driver (the required E2E validation example):
+//! loads the trained 7b-sim model, serves batched HumanEval-S requests
+//! through the full router -> batcher -> engine -> PJRT stack from client
+//! threads, and reports latency / throughput / accuracy.
+//!
+//!     cargo run --release --example serve_codegen -- \
+//!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4]
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use pangu_atlas_quant::bench_suite::dataset::Benchmark;
+use pangu_atlas_quant::bench_suite::scoring::{self, Outcome};
+use pangu_atlas_quant::coordinator::batcher::BatcherConfig;
+use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::runtime::Runtime;
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
+use pangu_atlas_quant::util::cli::Args;
+use pangu_atlas_quant::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let n_requests = args.usize_or("requests", 48);
+    let n_clients = args.usize_or("clients", 4);
+    let variant = args.get_or("variant", "int8").to_string();
+    let model = args.get_or("model", "7b-sim").to_string();
+
+    let rt = Runtime::open(&dir)?;
+    let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
+    let buckets = rt.manifest.serve_buckets.clone();
+    let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["humaneval_s"]))?;
+    bench.validate()?;
+
+    println!(
+        "serving {n_requests} HumanEval-S requests on {model}/{variant} \
+         from {n_clients} client threads (buckets {buckets:?})"
+    );
+
+    let (mut server, handle) = Server::new(
+        rt,
+        &tk,
+        BatcherConfig { buckets, max_wait: Duration::from_millis(15) },
+    );
+
+    // Client threads: each submits a slice of the benchmark, cycling modes.
+    let tasks: Vec<_> = bench
+        .tasks
+        .iter()
+        .cycle()
+        .take(n_requests)
+        .cloned()
+        .collect();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let handle = handle.clone();
+        let model = model.clone();
+        let variant = variant.clone();
+        let my_tasks: Vec<_> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % n_clients == c)
+            .map(|(i, t)| (i, t.clone()))
+            .collect();
+        clients.push(std::thread::spawn(move || -> Vec<(usize, Vec<u32>, f64)> {
+            let mut rxs = Vec::new();
+            for (i, task) in &my_tasks {
+                let mode = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink][i % 3];
+                let req =
+                    Request::new(*i as u64, &model, &variant, mode, task.examples.clone());
+                rxs.push((*i, handle.submit(req).unwrap()));
+            }
+            rxs.into_iter()
+                .map(|(i, rx)| {
+                    let r = rx.recv().unwrap();
+                    (i, r.tokens, r.latency_ms)
+                })
+                .collect()
+        }));
+    }
+    drop(handle); // server exits when clients hang up
+
+    let t0 = std::time::Instant::now();
+    let processed = server.run_until_idle(Duration::from_millis(500))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies = Vec::new();
+    let mut score = scoring::Score::default();
+    for c in clients {
+        for (i, tokens, latency) in c.join().map_err(|_| anyhow!("client panicked"))? {
+            latencies.push(latency);
+            let outcome = scoring::score_generation(&tk, &tasks[i], &tokens);
+            score.add(&outcome);
+            let _ = matches!(outcome, Outcome::Pass);
+        }
+    }
+
+    println!("\n{}", server.metrics.render());
+    let rt = server.into_runtime();
+    let s = Summary::of(&latencies);
+    let tokens = rt.stats.decode_steps;
+    println!("=== E2E serving report ===");
+    println!("requests served:      {processed}");
+    println!("wall time:            {wall:.2} s");
+    println!("throughput:           {:.2} req/s", processed as f64 / wall);
+    println!("decode steps:         {tokens} ({:.1} steps/s)", tokens as f64 / wall);
+    println!(
+        "latency ms:           mean {:.1}  p50 {:.1}  p90 {:.1}  p99 {:.1}",
+        s.mean, s.p50, s.p90, s.p99
+    );
+    println!(
+        "accuracy (pass@1):    {:.2}%  ({} pass / {} wrong / {} malformed)",
+        score.accuracy(),
+        score.passed,
+        score.wrong,
+        score.malformed
+    );
+    println!(
+        "host traffic:         {:.2} MiB in, {:.2} MiB out (KV stays on device)",
+        rt.stats.host_bytes_in as f64 / (1 << 20) as f64,
+        rt.stats.host_bytes_out as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}

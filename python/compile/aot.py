@@ -1,0 +1,330 @@
+"""AOT artifact pipeline: the single entry point behind `make artifacts`.
+
+Runs the entire build-time path (Python never appears at serve time):
+
+  1. generate MiniLang benchmark suites + training corpus   (taskgen)
+  2. train pangu-lite at both simulated scales              (train)
+  3. calibrate on downstream-task prompts                   (quantlib)
+  4. quantize weights per variant                           (quantlib)
+  5. export serving executables as HLO text + PTEN weights  (artifactio)
+  6. write manifest.json, datasets, Fig.1 channel dump
+
+Idempotent: every product is skipped when its file already exists
+(`--force` rebuilds everything, `--force-export` re-exports graphs only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import minilang as ml
+from . import model as M
+from . import quantlib as Q
+from . import taskgen
+from . import train as T
+from .artifactio import lower_to_hlo_text, write_pten
+
+# ---------------------------------------------------------------------------
+# Build plan
+# ---------------------------------------------------------------------------
+
+MODEL_VARIANTS = {
+    "1b-sim": ["fp16", "int8"],
+    "7b-sim": ["fp16", "int8", "w4a8", "w4a8_smooth", "w4a8_hadamard"],
+}
+
+SERVE_BUCKETS = [1, 8]            # accuracy / serving path (prefill+decode+readout)
+LATENCY_BUCKETS = [2, 4, 8, 16, 32]  # Table 3 prefill sweep (7b-sim, fp16+int8)
+
+TRAIN_PLAN = {
+    # (steps, batch, peak_lr, seed) — budgets tuned on the 1-core build host;
+    # the 7b-sim scale gets a longer effective token budget, reproducing the
+    # paper's 1B-vs-7B capability gap.
+    "1b-sim": dict(steps=1200, batch=48, peak_lr=1.5e-3, seed=11),
+    "7b-sim": dict(steps=900, batch=32, peak_lr=1.2e-3, seed=13),
+}
+
+BENCH_SEEDS = {"humaneval_s": 20101, "mbpp_s": 20202}
+TRAIN_STREAM_SEED = 777
+CALIB_PROMPTS = 64
+
+
+# ---------------------------------------------------------------------------
+# Parameter (de)serialization
+# ---------------------------------------------------------------------------
+
+
+def save_params(path, params):
+    flat = {"embed": np.asarray(params["embed"]), "lnf": np.asarray(params["lnf"])}
+    for i, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            flat[f"layers.{i}.{k}"] = np.asarray(v)
+    np.savez(path, **flat)
+
+
+def load_params(path, cfg):
+    z = np.load(path)
+    params = {"embed": jnp.asarray(z["embed"]), "lnf": jnp.asarray(z["lnf"]), "layers": []}
+    for i in range(cfg.n_layers):
+        layer = {}
+        for k in ("ln1", "ln2") + M.LINEAR_NAMES:
+            layer[k] = jnp.asarray(z[f"layers.{i}.{k}"])
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _pad_prompt(ids, plen):
+    out = np.full(plen, ml.TOK["PAD"], np.int32)
+    out[: len(ids)] = ids
+    return out
+
+
+def spec(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Exporter:
+    def __init__(self, outdir: pathlib.Path, force: bool, log=print):
+        self.outdir = outdir
+        self.force = force
+        self.log = log
+        self.entries = []
+
+    def export(self, name: str, fn, example_args, *, model, variant, phase,
+               batch, weights_key, state_len):
+        rel = f"exe/{name}.hlo.txt"
+        path = self.outdir / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        if self.force or not path.exists():
+            t0 = time.time()
+            text = lower_to_hlo_text(fn, example_args)
+            path.write_text(text)
+            self.log(f"  [aot] {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+        self.entries.append({
+            "name": name,
+            "model": model,
+            "variant": variant,
+            "phase": phase,
+            "batch": batch,
+            "hlo": rel,
+            "weights": weights_key,
+            "state_len": state_len,
+        })
+
+
+# ---------------------------------------------------------------------------
+# Main pipeline
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="legacy sentinel path (Makefile stamp); implies artifacts dir = its parent")
+    ap.add_argument("--artifacts", default=None, help="artifacts directory")
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    ap.add_argument("--force-export", action="store_true", help="re-export graphs")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training budget (CI smoke; accuracy will be poor)")
+    args = ap.parse_args()
+
+    if args.artifacts:
+        outdir = pathlib.Path(args.artifacts)
+    elif args.out:
+        outdir = pathlib.Path(args.out).parent
+    else:
+        outdir = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "datasets").mkdir(exist_ok=True)
+    (outdir / "weights").mkdir(exist_ok=True)
+    (outdir / "exe").mkdir(exist_ok=True)
+    log = print
+
+    # ------------------------------------------------------------------ 1
+    log("[aot] 1/6 benchmarks + corpus")
+    # Difficulty bands mirror the paper's score ordering (HumanEval scores
+    # run higher than MBPP for openPangu): HumanEval-S is mostly 1-op,
+    # MBPP-S is mostly 2-op compositions.
+    he = taskgen.make_benchmark("humaneval_s", 164, 1, 2,
+                                BENCH_SEEDS["humaneval_s"], p_long=0.25)
+    mb = taskgen.make_benchmark("mbpp_s", 257, 1, 2, BENCH_SEEDS["mbpp_s"],
+                                exclude=he["sigs"], p_long=0.6)
+    for bench in (he, mb):
+        p = outdir / "datasets" / f"{bench['name']}.json"
+        if args.force or not p.exists():
+            p.write_text(json.dumps(taskgen.benchmark_json(bench)))
+            log(f"  wrote {p.name}: {len(bench['tasks'])} tasks")
+    exclude = he["sigs"] | mb["sigs"]
+    stream = taskgen.training_stream(TRAIN_STREAM_SEED, exclude, n=30000)
+
+    # ------------------------------------------------------------------ 2
+    log("[aot] 2/6 training")
+    params_by_model = {}
+    train_meta = {}
+    for mname, plan in TRAIN_PLAN.items():
+        cfg = M.CONFIGS[mname]
+        wpath = outdir / f"params_{mname}.npz"
+        if not args.force and wpath.exists():
+            params_by_model[mname] = load_params(wpath, cfg)
+            log(f"  {mname}: cached ({wpath.name})")
+            continue
+        plan = dict(plan)
+        if args.fast:
+            plan["steps"] = 40
+        res = T.train(cfg, stream, steps=plan["steps"], batch=plan["batch"],
+                      peak_lr=plan["peak_lr"], seed=plan["seed"], log=log)
+        save_params(wpath, res["params"])
+        params_by_model[mname] = res["params"]
+        train_meta[mname] = {
+            "steps": plan["steps"],
+            "batch": plan["batch"],
+            "final_loss": res["losses"][-1],
+            "seconds": round(res["seconds"], 1),
+            "loss_curve": [round(x, 4) for x in res["losses"][:: max(1, plan["steps"] // 50)]],
+        }
+
+    # ------------------------------------------------------------------ 3
+    log("[aot] 3/6 calibration")
+    calib_by_model = {}
+    for mname, params in params_by_model.items():
+        cfg = M.CONFIGS[mname]
+        cpath = outdir / f"calib_{mname}.npz"
+        if not args.force and cpath.exists():
+            z = np.load(cpath)
+            calib_by_model[mname] = {k: z[k] for k in z.files}
+            log(f"  {mname}: cached")
+            continue
+        prompts = np.stack([
+            _pad_prompt(ml.encode_prompt(t["mode"], t["examples"]), cfg.prompt_len)
+            for t in stream[:CALIB_PROMPTS]
+        ])
+        stats = Q.calibrate(cfg, params, jnp.asarray(prompts))
+        np.savez(cpath, **stats)
+        calib_by_model[mname] = stats
+        log(f"  {mname}: {len(stats)} linears calibrated")
+
+    # ------------------------------------------------------------------ 4+5
+    log("[aot] 4-5/6 quantize + export")
+    ex = Exporter(outdir, args.force or args.force_export, log)
+    weight_manifests = {}
+    for mname, variants in MODEL_VARIANTS.items():
+        cfg = M.CONFIGS[mname]
+        params = params_by_model[mname]
+        stats = calib_by_model[mname]
+        for variant in variants:
+            specs = Q.quantize(cfg, params, variant, stats)
+            names, arrays, _ = M.flatten_specs(specs)
+            wkey = f"{mname}_{variant}"
+            wrel = f"weights/{wkey}.pten"
+            wpath = outdir / wrel
+            if args.force or not wpath.exists():
+                write_pten(wpath, [(n, np.asarray(a)) for n, a in zip(names, arrays)])
+            weight_manifests[wkey] = {
+                "file": wrel,
+                "tensors": [
+                    {"name": n, "dtype": str(np.asarray(a).dtype),
+                     "shape": list(np.asarray(a).shape)}
+                    for n, a in zip(names, arrays)
+                ],
+            }
+
+            buckets = set(SERVE_BUCKETS)
+            if mname == "7b-sim" and variant in ("fp16", "int8"):
+                buckets |= set(LATENCY_BUCKETS)
+            for b in sorted(buckets):
+                slen = M.state_len(cfg, b)
+                arr_specs = [spec(np.asarray(a).shape, np.asarray(a).dtype)
+                             for a in arrays]
+                pf, _, _ = M.serve_prefill(cfg, specs)
+                ex.export(
+                    f"{wkey}_prefill_b{b}", pf,
+                    (arr_specs, spec((b, cfg.prompt_len), jnp.int32),
+                     spec((b,), jnp.int32)),
+                    model=mname, variant=variant, phase="prefill", batch=b,
+                    weights_key=wkey, state_len=slen,
+                )
+                if b in SERVE_BUCKETS:
+                    df, _, _ = M.serve_decode(cfg, specs, b)
+                    ex.export(
+                        f"{wkey}_decode_b{b}", df,
+                        (arr_specs, spec((b,), jnp.int32),
+                         spec((slen,), jnp.float32), spec((b,), jnp.int32)),
+                        model=mname, variant=variant, phase="decode", batch=b,
+                        weights_key=wkey, state_len=slen,
+                    )
+
+        # readout is variant-independent: one per (model, bucket). Latency
+        # buckets get one too so Table 3 timing forces completion the same
+        # way at every batch size.
+        ro_buckets = set(SERVE_BUCKETS)
+        if mname == "7b-sim":
+            ro_buckets |= set(LATENCY_BUCKETS)
+        for b in sorted(ro_buckets):
+            slen = M.state_len(cfg, b)
+            ro = M.serve_readout(cfg, b)
+            ex.export(
+                f"{mname}_readout_b{b}", ro, (spec((slen,), jnp.float32),),
+                model=mname, variant=None, phase="readout", batch=b,
+                weights_key=None, state_len=slen,
+            )
+
+    # ------------------------------------------------------------------ 6
+    log("[aot] 6/6 manifest + fig1")
+    fig1 = {}
+    for mname in MODEL_VARIANTS:
+        if mname != "7b-sim":
+            continue
+        fig1 = Q.channel_distributions(
+            M.CONFIGS[mname], params_by_model[mname], calib_by_model[mname],
+            layer=0, linear="wg",
+        )
+    (outdir / "fig1_channels.json").write_text(json.dumps(fig1))
+
+    manifest = {
+        "version": 1,
+        "vocab": ml.VOCAB,
+        "minilang": {"mod": ml.MOD, "seq_len": ml.SEQ_LEN, "ops": ml.OP_NAMES},
+        "seq": {"prompt_len": ml.PROMPT_LEN, "max_seq": ml.MAX_SEQ,
+                "train_seq": T.TRAIN_SEQ},
+        "models": {
+            name: {
+                "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                "head_dim": cfg.head_dim, "vocab": cfg.vocab,
+                "params": cfg.params_count(),
+            }
+            for name, cfg in M.CONFIGS.items()
+        },
+        "variants": MODEL_VARIANTS,
+        "buckets": {"serve": SERVE_BUCKETS, "latency": LATENCY_BUCKETS},
+        "executables": ex.entries,
+        "weights": weight_manifests,
+        "datasets": {
+            "humaneval_s": "datasets/humaneval_s.json",
+            "mbpp_s": "datasets/mbpp_s.json",
+        },
+        "fig1": "fig1_channels.json",
+        "training": train_meta,
+    }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # Stamp file so the Makefile dependency works.
+    if args.out:
+        pathlib.Path(args.out).write_text("ok\n")
+    log(f"[aot] done: {len(ex.entries)} executables in {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Artifact I/O: the PTEN binary tensor format and HLO text dumping.
+
+PTEN is the weight interchange format between the Python compile path and
+the Rust runtime (weights are runtime inputs, not HLO constants — see
+DESIGN.md §3). Layout (little-endian):
+
+    magic   b"PTEN\\x01"
+    u32     n_tensors
+    per tensor:
+        u16     name_len, name (utf-8)
+        u8      dtype   (0 = f32, 1 = i8, 2 = i32)
+        u8      ndim
+        u32[ndim] dims
+        u64     nbytes
+        bytes   raw data (C order, little-endian)
+
+Mirrored by rust/src/runtime/weights.rs.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+MAGIC = b"PTEN\x01"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+
+
+def write_pten(path, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_pten(path) -> list[tuple[str, np.ndarray]]:
+    """Python-side reader (round-trip tests)."""
+    inv = {v: k for k, v in DTYPES.items()}
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(5) == MAGIC, "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode()
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nbytes), dtype=inv[dt]).reshape(dims)
+            out.append((name, arr))
+    return out
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    """jax fn -> HLO text via StableHLO (the 0.5.1-compatible interchange;
+    see /opt/xla-example/README.md gotchas). return_tuple=False: all our
+    serving graphs have exactly one (flat) output."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()

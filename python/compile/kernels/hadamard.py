@@ -1,0 +1,52 @@
+"""Pallas blocked Walsh–Hadamard transform (the QuaRot-style online rotation).
+
+Computes x [M, D] -> x @ H with H the normalized Sylvester Hadamard matrix
+(D a power of two). Instead of materializing H and paying an O(D^2) GEMM per
+token, the kernel runs the O(D log D) butterfly in VMEM: log2(D) stages of
+add/sub over a re-blocked view. This is the "promote a uniform distribution
+before 4-bit quantization" preprocessing of paper Eq. 4, applied online to
+activations (the weight-side H is folded offline by ref.fold_hadamard).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    x = x_ref[...]
+    bm, d = x.shape
+    h = 1
+    # Sylvester-order FWHT butterfly; unrolled at trace time (d static).
+    while h < d:
+        y = x.reshape(bm, d // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(bm, d)
+        h *= 2
+    o_ref[...] = x * (1.0 / jnp.sqrt(jnp.float32(d)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def hadamard(x, *, block_m: int = 128):
+    """x f32 [M, D] -> x @ H, D a power of two."""
+    m, d = x.shape
+    assert d & (d - 1) == 0, f"D={d} must be a power of two"
+    bm = min(block_m, max(1, m))
+    m_pad = pl.cdiv(m, bm) * bm
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(m_pad // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[:m]

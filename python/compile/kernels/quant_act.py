@@ -1,0 +1,53 @@
+"""Pallas per-token dynamic activation quantization.
+
+x f32 [M, K] -> (xq int8 [M, K], scale f32 [M, 1]) with symmetric max-abs
+scaling (paper Eq. 1-2, per-token granularity). Runs as the producer stage
+immediately before the quantized GEMM kernels so that, in the lowered HLO,
+quantize -> int GEMM -> dequant forms one conversion-free low-bit region.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_QMAX = 127.0
+EPS = 1e-8
+
+
+def _kernel(x_ref, xq_ref, s_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(x / scale), -INT8_QMAX, INT8_QMAX)
+    xq_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def quant_act(x, *, block_m: int = 128):
+    """Per-token INT8 quantization of a [M, K] activation matrix."""
+    m, k = x.shape
+    bm = min(block_m, max(1, m))
+    m_pad = pl.cdiv(m, bm) * bm
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+
+    xq, s = pl.pallas_call(
+        _kernel,
+        grid=(m_pad // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, k), jnp.int8),
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+    return xq[:m], s[:m]

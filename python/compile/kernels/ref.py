@@ -1,0 +1,170 @@
+"""Pure-jnp oracles for every Pallas kernel and quantization primitive.
+
+These are the correctness ground truth: pytest/hypothesis sweeps assert the
+Pallas kernels (interpret=True) match these bit-for-bit (integer paths) or to
+float tolerance (dequant epilogues). They are also used directly by the
+calibration pipeline, where kernel-grade performance is irrelevant.
+
+Quantization follows the paper's formulation (Sec. 2): symmetric, scale from
+max-abs, per-output-channel for weights, per-token for activations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+import numpy as np
+
+INT8_QMAX = 127
+INT4_QMAX = 7
+EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (offline, per output channel)
+# ---------------------------------------------------------------------------
+
+def quant_weight_int8(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-output-channel INT8 weight quantization.
+
+    w: [K, N] float. Returns (wq int8 [K, N], scale f32 [1, N]) with
+    dequant(wq) = wq * scale ≈ w.
+    """
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / INT8_QMAX
+    wq = jnp.clip(jnp.round(w / scale), -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return wq, scale.astype(jnp.float32)
+
+
+def quant_weight_int4(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-output-channel INT4 weight quantization (values in
+    [-7, 7], stored unpacked as int8). Packing is a separate, lossless step."""
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / INT4_QMAX
+    wq = jnp.clip(jnp.round(w / scale), -INT4_QMAX, INT4_QMAX).astype(jnp.int8)
+    return wq, scale.astype(jnp.float32)
+
+
+def quant_weight_int4_grouped(w: jnp.ndarray, group: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-wise INT4: one scale per (group of `group` input rows, output
+    channel). w: [K, N] with K % group == 0. Returns (wq [K,N], scale
+    [K/group, N])."""
+    k, n = w.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    wg = w.reshape(k // group, group, n)
+    amax = jnp.max(jnp.abs(wg), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / INT4_QMAX
+    wq = jnp.clip(jnp.round(wg / scale), -INT4_QMAX, INT4_QMAX)
+    return wq.reshape(k, n).astype(jnp.int8), scale[:, 0, :].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# INT4 packing: two signed nibbles per int8 byte, along the K axis.
+# byte i holds w[2i] (low nibble) and w[2i+1] (high nibble).
+# ---------------------------------------------------------------------------
+
+def pack_int4(wq: jnp.ndarray) -> jnp.ndarray:
+    """wq: int8 [K, N] with values in [-8, 7] -> packed int8 [K//2, N]."""
+    k = wq.shape[0]
+    assert k % 2 == 0, "K must be even to pack"
+    lo = wq[0::2].astype(jnp.int32) & 0xF
+    hi = wq[1::2].astype(jnp.int32) & 0xF
+    packed = lo | (hi << 4)
+    # Values 0..255; reinterpret as int8 via uint8 wraparound.
+    return packed.astype(jnp.uint8).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_int4: int8 [K//2, N] -> int8 [K, N] (sign-extended)."""
+    p = packed.astype(jnp.uint8).astype(jnp.int32)
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    k2, n = packed.shape
+    out = jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+    return out.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (dynamic, per token)
+# ---------------------------------------------------------------------------
+
+def quant_act(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token symmetric INT8: x [M, K] -> (xq int8 [M, K], scale [M, 1])."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, EPS) / INT8_QMAX
+    xq = jnp.clip(jnp.round(x / scale), -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return xq, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantized GEMMs
+# ---------------------------------------------------------------------------
+
+def w8a8_matmul(xq, xs, wq, ws):
+    """INT8 x INT8 -> INT32 GEMM with fused dequant epilogue.
+
+    xq int8 [M, K], xs f32 [M, 1], wq int8 [K, N], ws f32 [1, N]
+    -> f32 [M, N] = (xq @ wq) * xs * ws.
+    """
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * xs * ws
+
+
+def w4a8_matmul(xq, xs, packed, ws):
+    """W4A8 GEMM: unpack int4 weights, int8 activations, int32 accumulate.
+
+    xq int8 [M, K], xs f32 [M, 1], packed int8 [K//2, N], ws f32 [1, N].
+    """
+    wq = unpack_int4(packed)
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * xs * ws
+
+
+# ---------------------------------------------------------------------------
+# Hadamard rotation
+# ---------------------------------------------------------------------------
+
+def hadamard_matrix(d: int) -> np.ndarray:
+    """Normalized Sylvester Hadamard matrix H (d a power of two), H H^T = I."""
+    assert d & (d - 1) == 0 and d > 0, f"d={d} not a power of two"
+    h = np.array([[1.0]])
+    while h.shape[0] < d:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(d)).astype(np.float32)
+
+
+def hadamard(x: jnp.ndarray) -> jnp.ndarray:
+    """Reference rotation: x [..., D] @ H (H symmetric, normalized)."""
+    h = jnp.asarray(hadamard_matrix(x.shape[-1]))
+    return x @ h
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing transforms (offline folding)
+# ---------------------------------------------------------------------------
+
+def smooth_scales(act_amax: jnp.ndarray, w: jnp.ndarray, alpha: float = 0.5):
+    """SmoothQuant (Eq. 3): s_j = max|X_j|^a / max|W_j|^(1-a) per input
+    channel j. Returns s [K] (applied as X' = X / s, W' = s * W)."""
+    w_amax = jnp.max(jnp.abs(w), axis=1)
+    s = jnp.power(jnp.maximum(act_amax, EPS), alpha) / jnp.power(
+        jnp.maximum(w_amax, EPS), 1.0 - alpha
+    )
+    # Guard against extreme scales blowing up either side.
+    return jnp.clip(s, 1e-2, 1e2).astype(jnp.float32)
+
+
+def fold_smooth(w: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """W' = diag(s) W (rows scaled by s)."""
+    return w * s[:, None]
+
+
+def fold_hadamard(w: jnp.ndarray) -> jnp.ndarray:
+    """Fold the rotation into the weight (Eq. 4): W' = H^T W (H symmetric =>
+    H W). Runtime computes (X H) @ W'."""
+    h = jnp.asarray(hadamard_matrix(w.shape[0]))
+    return h @ w

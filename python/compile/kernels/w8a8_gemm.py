@@ -1,0 +1,81 @@
+"""Pallas W8A8 GEMM: INT8 x INT8 -> INT32 with fused dequant epilogue.
+
+The paper's framework property (Sec. 3.1) is *native end-to-end low-bit
+execution without intermediate format conversion*: on the Atlas A2 this is a
+CATLASS template wiring int8 weight layout + dequant + cube-unit matmul into
+one operator. The TPU-style rethink (DESIGN.md §Hardware adaptation):
+
+  * grid tiles over (M, N); each program instance owns a [bm, bn] output
+    block — the HBM<->VMEM schedule the NPU version expresses with its
+    L1/UB tiling;
+  * the full K reduction stays resident in VMEM (K <= 512 for every linear
+    in the model, so an [bm, K] int8 slab + [K, bn] weight slab fit easily);
+  * int32 accumulation via an MXU-shaped dot_general, dequant (per-token x
+    per-channel scales) fused into the epilogue of the same kernel, so no
+    int32 tensor ever round-trips through HBM.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic custom
+calls; real-TPU performance is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xq_ref, xs_ref, wq_ref, ws_ref, o_ref):
+    # [bm, K] i8 . [K, bn] i8 -> [bm, bn] i32, then fused dequant epilogue.
+    acc = jax.lax.dot_general(
+        xq_ref[...],
+        wq_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = acc.astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+
+
+def _pad_rows(a: jnp.ndarray, to: int) -> jnp.ndarray:
+    m = a.shape[0]
+    return a if m == to else jnp.pad(a, ((0, to - m),) + ((0, 0),) * (a.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def w8a8_gemm(xq, xs, wq, ws, *, block_m: int = 128, block_n: int = 128):
+    """Quantized GEMM.
+
+    xq: int8 [M, K]   per-token-quantized activations
+    xs: f32  [M, 1]   per-token activation scales
+    wq: int8 [K, N]   per-channel-quantized weights
+    ws: f32  [1, N]   per-channel weight scales
+    returns f32 [M, N] ≈ dequant(xq) @ dequant(wq)
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    bm = min(block_m, max(1, m))
+    bn = min(block_n, n)
+    m_pad = pl.cdiv(m, bm) * bm
+    n_pad = pl.cdiv(n, bn) * bn
+    assert n_pad == n, f"N={n} must be a multiple of block_n={bn}"
+
+    xq_p = _pad_rows(xq, m_pad)
+    xs_p = _pad_rows(xs, m_pad)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(m_pad // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        interpret=True,
+    )(xq_p, xs_p, wq, ws)
+    return out[:m]

@@ -1,0 +1,155 @@
+"""MiniLang: the synthetic program-induction substrate.
+
+The paper evaluates openPangu-Embedded on HumanEval/MBPP with
+execution-based scoring. We cannot run a 7B code model here, so the
+reproduction substitutes MiniLang: a tiny stack-program DSL over fixed-length
+integer sequences. A task presents two input->output examples; the model must
+emit the program (a short op sequence) that realises the transformation.
+Scoring executes the emitted program on *held-out* test inputs (Rust VM at
+serve time, `rust/src/bench_suite/vm.rs`; this module is the Python twin used
+for data generation and as the ground-truth oracle in tests).
+
+Values live in Z_16 (tokens DIGIT_0..DIGIT_15); sequences have fixed length
+SEQ_LEN. Ops are closed over that domain, so every generated program is
+executable and every execution is exact — the functional-correctness property
+that HumanEval-style pass@1 scoring needs.
+"""
+
+from __future__ import annotations
+
+MOD = 16          # value domain Z_16
+SEQ_LEN = 5       # fixed sequence length for all tasks
+
+# ---------------------------------------------------------------------------
+# Instruction set. Names are vocabulary tokens; semantics are pure functions
+# on tuples of ints in [0, MOD). Keep in sync with rust/src/bench_suite/vm.rs.
+# ---------------------------------------------------------------------------
+
+def _ew(f):
+    return lambda xs: tuple(f(x) % MOD for x in xs)
+
+
+OPS = {
+    "ADD1":  _ew(lambda x: x + 1),
+    "ADD2":  _ew(lambda x: x + 2),
+    "SUB1":  _ew(lambda x: x - 1),
+    "MUL2":  _ew(lambda x: x * 2),
+    "NEG":   _ew(lambda x: -x),
+    "REV":   lambda xs: tuple(reversed(xs)),
+    "SORT":  lambda xs: tuple(sorted(xs)),
+    "SORTD": lambda xs: tuple(sorted(xs, reverse=True)),
+    "ROTL":  lambda xs: xs[1:] + xs[:1],
+    "ROTR":  lambda xs: xs[-1:] + xs[:-1],
+    "SWAP":  lambda xs: (xs[-1],) + xs[1:-1] + (xs[0],) if len(xs) >= 2 else xs,
+    "CUMSUM": lambda xs: tuple(
+        sum(xs[: i + 1]) % MOD for i in range(len(xs))
+    ),
+}
+
+OP_NAMES = sorted(OPS)
+
+
+def run_program(ops: list[str], xs: tuple[int, ...]) -> tuple[int, ...]:
+    """Execute `ops` left-to-right on sequence `xs`."""
+    for op in ops:
+        xs = OPS[op](xs)
+    return xs
+
+
+def program_trace(ops: list[str], xs: tuple[int, ...]) -> list[tuple[str, tuple[int, ...]]]:
+    """Intermediate states: [(op, state_after_op), ...]. This is the
+    scratchpad content emitted in slow_think mode."""
+    out = []
+    for op in ops:
+        xs = OPS[op](xs)
+        out.append((op, xs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary. Fixed order; baked into artifacts/manifest.json and mirrored by
+# the Rust tokenizer. Vocab is padded to 64 (power of two keeps the unembed
+# GEMM Hadamard-compatible).
+# ---------------------------------------------------------------------------
+
+SPECIAL = [
+    "PAD", "BOS", "END",
+    "MODE_NOTHINK", "MODE_AUTO", "MODE_SLOW",
+    "IN", "OUT", "SEP", "ASK",
+    "TRACE", "ENDTRACE", "STEP", "PROG",
+]
+
+DIGITS = [f"D{i}" for i in range(MOD)]
+
+VOCAB = SPECIAL + DIGITS + OP_NAMES
+VOCAB_SIZE = 64
+assert len(VOCAB) <= VOCAB_SIZE, f"vocab overflow: {len(VOCAB)}"
+VOCAB = VOCAB + [f"UNUSED{i}" for i in range(VOCAB_SIZE - len(VOCAB))]
+
+TOK = {name: i for i, name in enumerate(VOCAB)}
+
+MODE_TOKENS = {
+    "no_think": TOK["MODE_NOTHINK"],
+    "auto_think": TOK["MODE_AUTO"],
+    "slow_think": TOK["MODE_SLOW"],
+}
+
+# Sequence budget (shared with the Rust serving stack via manifest.json).
+PROMPT_LEN = 48    # prefill pad length: BOS MODE 3x(IN 5 OUT 5) 2xSEP ASK = 41
+MAX_SEQ = 96       # KV capacity: prompt + longest slow_think completion
+
+
+def encode_prompt(mode: str, examples: list[tuple[tuple[int, ...], tuple[int, ...]]]) -> list[int]:
+    """Prompt layout: BOS MODE (IN xs OUT ys | SEP)* ASK."""
+    ids = [TOK["BOS"], MODE_TOKENS[mode]]
+    for i, (xs, ys) in enumerate(examples):
+        if i > 0:
+            ids.append(TOK["SEP"])
+        ids.append(TOK["IN"])
+        ids.extend(TOK[f"D{v}"] for v in xs)
+        ids.append(TOK["OUT"])
+        ids.extend(TOK[f"D{v}"] for v in ys)
+    ids.append(TOK["ASK"])
+    return ids
+
+
+def encode_completion(mode: str, ops: list[str], first_input: tuple[int, ...],
+                      hard: bool) -> list[int]:
+    """Target completion for a training example.
+
+    no_think  -> PROG ops END
+    slow_think-> TRACE (STEP op state)* ENDTRACE PROG ops END
+    auto_think-> slow format iff the task is hard, else no_think format.
+    """
+    with_trace = mode == "slow_think" or (mode == "auto_think" and hard)
+    ids: list[int] = []
+    if with_trace:
+        ids.append(TOK["TRACE"])
+        for op, state in program_trace(ops, first_input):
+            ids.append(TOK["STEP"])
+            ids.append(TOK[op])
+            ids.extend(TOK[f"D{v}"] for v in state)
+        ids.append(TOK["ENDTRACE"])
+    ids.append(TOK["PROG"])
+    ids.extend(TOK[op] for op in ops)
+    ids.append(TOK["END"])
+    return ids
+
+
+def extract_program(token_ids: list[int]) -> list[str] | None:
+    """Parse a generated completion back into a program: the op tokens
+    between the last PROG marker and END. Returns None if malformed.
+    Mirrored by rust bench_suite/scoring.rs."""
+    names = [VOCAB[t] if 0 <= t < len(VOCAB) else "?" for t in token_ids]
+    try:
+        start = len(names) - 1 - names[::-1].index("PROG")
+    except ValueError:
+        return None
+    ops = []
+    for name in names[start + 1:]:
+        if name == "END":
+            return ops if ops else None
+        if name not in OPS:
+            return None
+        ops.append(name)
+    return None  # never hit END

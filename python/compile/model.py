@@ -1,0 +1,477 @@
+"""pangu-lite: the L2 JAX model (build-time only; never on the request path).
+
+A decoder-only transformer in the openPangu-Embedded architecture family
+(RMSNorm, RoPE multi-head attention, SwiGLU MLP, tied embeddings) at two
+simulated scales standing in for openPangu-Embedded-1B and -7B (DESIGN.md §2).
+
+Three entry points:
+
+  * forward_seq   — full-sequence logits, fp only; used by train.py and as
+                    the teacher for calibration capture.
+  * make_prefill  — (tokens [B,S], true_lens [B]) -> (last-valid logits
+                    [B,V], kv cache); quantized linears call the L1 Pallas
+                    kernels, so the lowered HLO contains the fused
+                    quantize -> int GEMM -> dequant regions.
+  * make_decode   — (tokens [B], kv, pos [B]) -> (logits [B,V], kv); one
+                    step with device-resident KV (per-element positions, as
+                    required by continuous batching in the Rust scheduler).
+
+Weights are *closed over* at lower time, so every exported executable is
+self-contained (weights are HLO constants — the "no format conversion on the
+hot path" property of the paper's framework).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import minilang as ml
+from .kernels import ref
+from .kernels.hadamard import hadamard
+from .kernels.quant_act import quant_act
+from .kernels.w4a8_gemm import w4a8_gemm
+from .kernels.w8a8_gemm import w8a8_gemm
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = ml.VOCAB_SIZE
+    max_seq: int = ml.MAX_SEQ
+    prompt_len: int = ml.PROMPT_LEN
+    rope_theta: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def params_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + self.n_layers * per_layer + d
+
+
+# Simulated stand-ins for openPangu-Embedded-1B / -7B. Dimensions are powers
+# of two so the Hadamard rotation applies to every linear input.
+CONFIGS = {
+    "1b-sim": ModelConfig("1b-sim", d_model=128, n_layers=4, n_heads=4, d_ff=256),
+    "7b-sim": ModelConfig("7b-sim", d_model=256, n_layers=8, n_heads=8, d_ff=512),
+}
+
+# The seven quantizable linears of each block, with (in, out) dim names.
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+def linear_dims(cfg: ModelConfig, name: str) -> tuple[int, int]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wg": (d, f), "wu": (d, f), "wd": (f, d),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Parameters (fp training form): nested dict of jnp arrays.
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict:
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 1 + cfg.n_layers)
+    d = cfg.d_model
+
+    def dense(k, shape):
+        fan_in = shape[0]
+        return (jax.random.normal(k, shape) / np.sqrt(fan_in)).astype(jnp.float32)
+
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, d)) * 0.02).astype(jnp.float32),
+        "lnf": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[1 + li], len(LINEAR_NAMES))
+        layer = {"ln1": jnp.ones((d,), jnp.float32), "ln2": jnp.ones((d,), jnp.float32)}
+        for name, k in zip(LINEAR_NAMES, lk):
+            layer[name] = dense(k, linear_dims(cfg, name))
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear specs. A "spec" is what apply_linear consumes:
+#   {"kind": "fp",   "w": f32[K,N]}
+#   {"kind": "int8", "wq": i8[K,N], "ws": f32[1,N], "smooth_inv": f32[K]?}
+#   {"kind": "w4a8", "wp": i8[K/2,N], "ws": f32[1,N],
+#                    "smooth_inv": f32[K]?, "had": bool}
+# smooth_inv multiplies the activation (X' = X * smooth_inv = X S^{-1});
+# had=True applies the online Hadamard rotation to the activation.
+# ---------------------------------------------------------------------------
+
+
+def apply_linear(spec: dict, x2d: jnp.ndarray) -> jnp.ndarray:
+    kind = spec["kind"]
+    if kind == "fp":
+        return x2d @ spec["w"]
+    if spec.get("had", False):
+        x2d = hadamard(x2d)
+    if "smooth_inv" in spec:
+        x2d = x2d * spec["smooth_inv"][None, :]
+    xq, xs = quant_act(x2d)
+    if kind == "int8":
+        return w8a8_gemm(xq, xs, spec["wq"], spec["ws"])
+    if kind == "w4a8":
+        return w4a8_gemm(xq, xs, spec["wp"], spec["ws"])
+    raise ValueError(f"unknown linear kind {kind!r}")
+
+
+def fp_specs(params: dict) -> dict:
+    """Wrap fp params into spec form (the FP16-baseline 'variant')."""
+    out = {"embed": params["embed"], "lnf": params["lnf"], "layers": []}
+    for layer in params["layers"]:
+        sl = {"ln1": layer["ln1"], "ln2": layer["ln2"]}
+        for name in LINEAR_NAMES:
+            sl[name] = {"kind": "fp", "w": layer[name]}
+        out["layers"].append(sl)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Core blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, g, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope(x, positions, theta):
+    """x [..., T, H, Dh], positions [..., T] -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # positions [..., T] -> angles [..., T, 1, half] (broadcast over heads)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_weights(scores, mask):
+    scores = jnp.where(mask, scores, -1e9)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# forward_seq: fp full-sequence logits (training / calibration teacher).
+# ---------------------------------------------------------------------------
+
+
+def forward_seq(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens int32 [B, S] -> logits f32 [B, S, V]. Pure fp, causal."""
+    b, s = tokens.shape
+    h = params["embed"][tokens]  # [B, S, D]
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    causal = jnp.tril(jnp.ones((s, s), bool))[None, None]
+
+    for layer in params["layers"]:
+        x = rms_norm(h, layer["ln1"], cfg.eps)
+        q = (x @ layer["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (x @ layer["wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = (x @ layer["wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = _attn_weights(scores, causal)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, cfg.d_model)
+        h = h + ctx @ layer["wo"]
+
+        x = rms_norm(h, layer["ln2"], cfg.eps)
+        gate = jax.nn.silu(x @ layer["wg"])
+        up = x @ layer["wu"]
+        h = h + (gate * up) @ layer["wd"]
+
+    h = rms_norm(h, params["lnf"], cfg.eps)
+    return h @ params["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# Calibration capture: per-linear input abs-max over a batch of sequences.
+# ---------------------------------------------------------------------------
+
+
+def capture_linear_inputs(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> dict:
+    """Run forward_seq capturing max|X_j| per input channel of every linear.
+
+    Returns {"L{li}.{name}": f32[K]} — the calibration statistics feeding
+    SmoothQuant scale computation and the Fig. 1 distribution dump.
+    """
+    b, s = tokens.shape
+    stats: dict[str, jnp.ndarray] = {}
+
+    def record(key, x2d):
+        amax = jnp.max(jnp.abs(x2d), axis=0)
+        stats[key] = jnp.maximum(stats[key], amax) if key in stats else amax
+
+    h = params["embed"][tokens]
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    causal = jnp.tril(jnp.ones((s, s), bool))[None, None]
+
+    for li, layer in enumerate(params["layers"]):
+        x = rms_norm(h, layer["ln1"], cfg.eps)
+        x2 = x.reshape(-1, cfg.d_model)
+        for name in ("wq", "wk", "wv"):
+            record(f"L{li}.{name}", x2)
+        q = (x @ layer["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (x @ layer["wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = (x @ layer["wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = _attn_weights(scores, causal)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, cfg.d_model)
+        record(f"L{li}.wo", ctx.reshape(-1, cfg.d_model))
+        h = h + ctx @ layer["wo"]
+
+        x = rms_norm(h, layer["ln2"], cfg.eps)
+        x2 = x.reshape(-1, cfg.d_model)
+        record(f"L{li}.wg", x2)
+        record(f"L{li}.wu", x2)
+        gate = jax.nn.silu(x @ layer["wg"])
+        up = x @ layer["wu"]
+        inner = gate * up
+        record(f"L{li}.wd", inner.reshape(-1, cfg.d_ff))
+        h = h + inner @ layer["wd"]
+
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Serving graphs: prefill + decode with device-resident KV.
+# KV layout: [L, 2, B, H, Smax, Dh] (2 = key/value planes).
+# ---------------------------------------------------------------------------
+
+
+def _qkv(cfg, slayer, x2d, b, t):
+    q = apply_linear(slayer["wq"], x2d).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = apply_linear(slayer["wk"], x2d).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    v = apply_linear(slayer["wv"], x2d).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    return q, k, v
+
+
+def prefill_fn(cfg: ModelConfig, specs: dict, tokens: jnp.ndarray,
+               true_lens: jnp.ndarray):
+    """tokens int32 [B, S_p] (right-padded), true_lens int32 [B]
+    -> (last-valid logits f32 [B, V], kv f32 [L, 2, B, H, Smax, Dh])."""
+    b, s = tokens.shape
+    smax = cfg.max_seq
+    h = specs["embed"][tokens]
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    causal = jnp.tril(jnp.ones((s, s), bool))[None, None]
+
+    kv_layers = []
+    for slayer in specs["layers"]:
+        x = rms_norm(h, slayer["ln1"], cfg.eps)
+        q, k, v = _qkv(cfg, slayer, x.reshape(b * s, cfg.d_model), b, s)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = _attn_weights(scores, causal)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, cfg.d_model)
+        h = h + apply_linear(slayer["wo"], ctx).reshape(b, s, cfg.d_model)
+
+        x = rms_norm(h, slayer["ln2"], cfg.eps)
+        x2 = x.reshape(b * s, cfg.d_model)
+        inner = jax.nn.silu(apply_linear(slayer["wg"], x2)) * apply_linear(slayer["wu"], x2)
+        h = h + apply_linear(slayer["wd"], inner).reshape(b, s, cfg.d_model)
+
+        # KV entries for positions [0, S); zero beyond (later decode steps
+        # overwrite slots >= true_len before they become attendable).
+        pad = ((0, 0), (0, 0), (0, smax - s), (0, 0))
+        k_c = jnp.pad(k.transpose(0, 2, 1, 3), pad)  # [B, H, Smax, Dh]
+        v_c = jnp.pad(v.transpose(0, 2, 1, 3), pad)
+        kv_layers.append(jnp.stack([k_c, v_c], axis=0))  # [2, B, H, Smax, Dh]
+
+    kv = jnp.stack(kv_layers, axis=0)
+    h = rms_norm(h, specs["lnf"], cfg.eps)
+    # Select each row's last real position (true_len - 1).
+    idx = (true_lens - 1).astype(jnp.int32)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]  # [B, D]
+    logits = h_last @ specs["embed"].T
+    return logits, kv
+
+
+def decode_fn(cfg: ModelConfig, specs: dict, tokens: jnp.ndarray,
+              kv: jnp.ndarray, pos: jnp.ndarray):
+    """One decode step with per-element positions.
+
+    tokens int32 [B], kv f32 [L, 2, B, H, Smax, Dh], pos int32 [B]
+    -> (logits f32 [B, V], new kv). Writes K/V at pos[b], attends to
+    slots <= pos[b].
+    """
+    b = tokens.shape[0]
+    smax = cfg.max_seq
+    h = specs["embed"][tokens]  # [B, D]
+    pos_f = pos[:, None]  # [B, 1] for rope's T axis
+
+    new_layers = []
+    for li, slayer in enumerate(specs["layers"]):
+        x = rms_norm(h, slayer["ln1"], cfg.eps)
+        q, k, v = _qkv(cfg, slayer, x, b, 1)  # [B, 1, H, Dh]
+        q = rope(q, pos_f, cfg.rope_theta)[:, 0]  # [B, H, Dh]
+        k = rope(k, pos_f, cfg.rope_theta)[:, 0]
+        v = v[:, 0]
+
+        def upd(plane_b, new_b, p):
+            # plane_b [H, Smax, Dh], new_b [H, Dh]
+            return jax.lax.dynamic_update_slice(plane_b, new_b[:, None, :], (0, p, 0))
+
+        k_cache = jax.vmap(upd)(kv[li, 0], k, pos)  # [B, H, Smax, Dh]
+        v_cache = jax.vmap(upd)(kv[li, 1], v, pos)
+        new_layers.append(jnp.stack([k_cache, v_cache], axis=0))
+
+        scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / np.sqrt(cfg.head_dim)
+        mask = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, :]  # [B, 1, Smax]
+        att = _attn_weights(scores, mask)
+        ctx = jnp.einsum("bhs,bhsd->bhd", att, v_cache).reshape(b, cfg.d_model)
+        h = h + apply_linear(slayer["wo"], ctx)
+
+        x = rms_norm(h, slayer["ln2"], cfg.eps)
+        inner = jax.nn.silu(apply_linear(slayer["wg"], x)) * apply_linear(slayer["wu"], x)
+        h = h + apply_linear(slayer["wd"], inner)
+
+    kv_new = jnp.stack(new_layers, axis=0)
+    h = rms_norm(h, specs["lnf"], cfg.eps)
+    logits = h @ specs["embed"].T
+    return logits, kv_new
+
+
+def make_prefill(cfg: ModelConfig, specs: dict):
+    """Close over specs -> jit-able fn(tokens, true_lens)."""
+    return functools.partial(prefill_fn, cfg, specs)
+
+
+def make_decode(cfg: ModelConfig, specs: dict):
+    return functools.partial(decode_fn, cfg, specs)
+
+
+def kv_shape(cfg: ModelConfig, batch: int) -> tuple[int, ...]:
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+def state_len(cfg: ModelConfig, batch: int) -> int:
+    """Flat serving-state length: logits [B, V] then kv (DESIGN.md §3)."""
+    return batch * cfg.vocab + int(np.prod(kv_shape(cfg, batch)))
+
+
+# ---------------------------------------------------------------------------
+# Spec flattening: arrays out, static structure (kinds/flags) closed over.
+# jax.tree flattening would treat the str/bool fields as leaves, so we walk
+# the structure ourselves. Deterministic order = the order produced here,
+# recorded in the manifest and mirrored by the Rust weight loader.
+# ---------------------------------------------------------------------------
+
+
+def flatten_specs(specs: dict):
+    """-> (names, arrays, rebuild) where rebuild(arrays) reconstructs specs."""
+    names: list[str] = []
+    arrays: list[jnp.ndarray] = []
+    paths: list[tuple] = []
+
+    def visit(node, path):
+        if isinstance(node, dict):
+            for key in sorted(node):
+                visit(node[key], path + (key,))
+        elif isinstance(node, (list, tuple)):
+            for i, item in enumerate(node):
+                visit(item, path + (i,))
+        elif isinstance(node, (jnp.ndarray, np.ndarray)):
+            names.append(".".join(str(p) for p in path))
+            arrays.append(jnp.asarray(node))
+            paths.append(path)
+        # str / bool / float statics stay in the closed-over structure
+
+    visit(specs, ())
+
+    def rebuild(arrs):
+        import copy
+        out = copy.deepcopy(_strip_arrays(specs))
+        for path, arr in zip(paths, arrs):
+            node = out
+            for p in path[:-1]:
+                node = node[p]
+            node[path[-1]] = arr
+        return out
+
+    return names, arrays, rebuild
+
+
+def _strip_arrays(node):
+    if isinstance(node, dict):
+        return {k: _strip_arrays(v) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_strip_arrays(v) for v in node]
+    if isinstance(node, tuple):
+        return [_strip_arrays(v) for v in node]
+    if isinstance(node, (jnp.ndarray, np.ndarray)):
+        return None  # placeholder filled by rebuild
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Serving graphs with the flat-state ABI (de-risked in rust/tests/derisk.rs):
+#   prefill(weights..., tokens [B,Sp], true_lens [B]) -> f32[B*V + NKV]
+#   decode (weights..., tokens [B], state, pos [B])   -> f32[B*V + NKV]
+#   readout(state)                                    -> f32[B, V]
+# Logits first so the readout executable is a prefix slice; KV never leaves
+# the device.
+# ---------------------------------------------------------------------------
+
+
+def serve_prefill(cfg: ModelConfig, specs: dict):
+    names, arrays, rebuild = flatten_specs(specs)
+
+    def fn(arrs, tokens, true_lens):
+        sp = rebuild(arrs)
+        logits, kv = prefill_fn(cfg, sp, tokens, true_lens)
+        return jnp.concatenate([logits.ravel(), kv.ravel()])
+
+    return fn, names, arrays
+
+
+def serve_decode(cfg: ModelConfig, specs: dict, batch: int):
+    names, arrays, rebuild = flatten_specs(specs)
+    nlogits = batch * cfg.vocab
+    kshape = kv_shape(cfg, batch)
+
+    def fn(arrs, tokens, state, pos):
+        sp = rebuild(arrs)
+        kv = state[nlogits:].reshape(kshape)
+        logits, kv_new = decode_fn(cfg, sp, tokens, kv, pos)
+        return jnp.concatenate([logits.ravel(), kv_new.ravel()])
+
+    return fn, names, arrays
+
+
+def serve_readout(cfg: ModelConfig, batch: int):
+    nlogits = batch * cfg.vocab
+
+    def fn(state):
+        return state[:nlogits].reshape(batch, cfg.vocab)
+
+    return fn

@@ -1,0 +1,165 @@
+"""Post-training quantization pipeline (the paper's Sec. 3.2 / 4.1 protocol).
+
+Given trained fp parameters and calibration data, produce the per-variant
+quantized "spec" pytrees consumed by model.make_prefill/make_decode:
+
+  * fp16            — fp baseline (fp32 on this substrate; see DESIGN.md §2)
+  * int8            — W8A8: per-channel int8 weights, per-token int8 acts
+  * w4a8            — baseline W4A8: per-channel int4 (packed) weights
+  * w4a8_smooth     — SmoothQuant (alpha = 0.5) folded, then W4A8
+  * w4a8_hadamard   — Hadamard rotation folded, then W4A8
+
+All quantization is symmetric with calibrated scales and no retraining,
+matching the paper's setup. The same unified pipeline quantizes every
+variant so comparisons are apples-to-apples (paper Sec. 4.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+VARIANTS = ("fp16", "int8", "w4a8", "w4a8_smooth", "w4a8_hadamard")
+
+SMOOTH_ALPHA = 0.5
+
+
+def calibrate(cfg: M.ModelConfig, params: dict, calib_tokens: jnp.ndarray,
+              batch: int = 16) -> dict[str, np.ndarray]:
+    """Per-linear input-channel abs-max over the calibration set.
+
+    calib_tokens: int32 [N, S] prompts drawn from downstream task data
+    (the paper calibrates on downstream task data, Sec. 4.1).
+    """
+    stats: dict[str, np.ndarray] = {}
+    for i in range(0, calib_tokens.shape[0], batch):
+        chunk = calib_tokens[i : i + batch]
+        got = M.capture_linear_inputs(cfg, params, chunk)
+        for key, amax in got.items():
+            amax = np.asarray(amax)
+            stats[key] = np.maximum(stats[key], amax) if key in stats else amax
+    return stats
+
+
+def _quant_spec_int8(w: jnp.ndarray, smooth_inv=None) -> dict:
+    wq, ws = ref.quant_weight_int8(w)
+    spec = {"kind": "int8", "wq": wq, "ws": ws}
+    if smooth_inv is not None:
+        spec["smooth_inv"] = jnp.asarray(smooth_inv, jnp.float32)
+    return spec
+
+
+def _quant_spec_w4a8(w: jnp.ndarray, smooth_inv=None, had=False) -> dict:
+    wq, ws = ref.quant_weight_int4(w)
+    spec = {"kind": "w4a8", "wp": ref.pack_int4(wq), "ws": ws, "had": had}
+    if smooth_inv is not None:
+        spec["smooth_inv"] = jnp.asarray(smooth_inv, jnp.float32)
+    return spec
+
+
+def quantize(cfg: M.ModelConfig, params: dict, variant: str,
+             calib_stats: dict[str, np.ndarray] | None = None) -> dict:
+    """Build the spec pytree for one variant.
+
+    Embedding / unembedding / norms stay fp (standard practice; the paper
+    quantizes the transformer linears).
+    """
+    if variant == "fp16":
+        return M.fp_specs(params)
+    if variant in ("int8",):
+        make = _quant_spec_int8
+    elif variant.startswith("w4a8"):
+        make = _quant_spec_w4a8
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    needs_calib = variant == "w4a8_smooth"
+    if needs_calib and calib_stats is None:
+        raise ValueError("w4a8_smooth requires calibration statistics")
+
+    out = {"embed": params["embed"], "lnf": params["lnf"], "layers": []}
+    for li, layer in enumerate(params["layers"]):
+        sl = {"ln1": layer["ln1"], "ln2": layer["ln2"]}
+        for name in M.LINEAR_NAMES:
+            w = layer[name]
+            if variant == "w4a8_smooth":
+                s = ref.smooth_scales(
+                    jnp.asarray(calib_stats[f"L{li}.{name}"]), w, SMOOTH_ALPHA
+                )
+                w_folded = ref.fold_smooth(w, s)
+                sl[name] = make(w_folded, smooth_inv=1.0 / s)
+            elif variant == "w4a8_hadamard":
+                sl[name] = make(ref.fold_hadamard(w), had=True)
+            else:
+                sl[name] = make(w)
+        out["layers"].append(sl)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 support: channel-wise |value| distributions per W4A8 configuration.
+# ---------------------------------------------------------------------------
+
+
+def channel_distributions(cfg: M.ModelConfig, params: dict,
+                          calib_stats: dict[str, np.ndarray],
+                          layer: int = 0, linear: str = "wg") -> dict:
+    """Per-input-channel abs-max of the *quantizer input* under each W4A8
+    configuration — the quantity Fig. 1 plots. For the baseline this is the
+    raw weight column amax; SmoothQuant and Hadamard report the transformed
+    weight, whose flattened distribution is the paper's claim."""
+    w = params["layers"][layer][linear]
+    key = f"L{layer}.{linear}"
+    act_amax = jnp.asarray(calib_stats[key])
+
+    def chan_amax(mat):
+        return np.asarray(jnp.max(jnp.abs(mat), axis=1))
+
+    s = ref.smooth_scales(act_amax, w, SMOOTH_ALPHA)
+    return {
+        "layer": layer,
+        "linear": linear,
+        "weight_baseline": chan_amax(w).tolist(),
+        "weight_smooth": chan_amax(ref.fold_smooth(w, s)).tolist(),
+        "weight_hadamard": chan_amax(ref.fold_hadamard(w)).tolist(),
+        "act_baseline": np.asarray(act_amax).tolist(),
+        "act_smooth": np.asarray(act_amax / s).tolist(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Quantization-error metrics (unit-test + EXPERIMENTS.md support).
+# ---------------------------------------------------------------------------
+
+
+def weight_quant_error(w: jnp.ndarray, variant: str,
+                       act_amax: np.ndarray | None = None) -> float:
+    """Relative Frobenius reconstruction error of the weight under a
+    variant's quantizer (activation side excluded)."""
+    if variant == "int8":
+        wq, ws = ref.quant_weight_int8(w)
+        deq = wq.astype(jnp.float32) * ws
+        ref_w = w
+    elif variant == "w4a8":
+        wq, ws = ref.quant_weight_int4(w)
+        deq = wq.astype(jnp.float32) * ws
+        ref_w = w
+    elif variant == "w4a8_smooth":
+        s = ref.smooth_scales(jnp.asarray(act_amax), w, SMOOTH_ALPHA)
+        wf = ref.fold_smooth(w, s)
+        wq, ws = ref.quant_weight_int4(wf)
+        deq = wq.astype(jnp.float32) * ws
+        ref_w = wf
+    elif variant == "w4a8_hadamard":
+        wf = ref.fold_hadamard(w)
+        wq, ws = ref.quant_weight_int4(wf)
+        deq = wq.astype(jnp.float32) * ws
+        ref_w = wf
+    else:
+        raise ValueError(variant)
+    num = jnp.linalg.norm(deq - ref_w)
+    den = jnp.linalg.norm(ref_w)
+    return float(num / den)

@@ -1,0 +1,148 @@
+"""Benchmark + training-corpus generator for the MiniLang substrate.
+
+Produces the two evaluation suites standing in for the paper's benchmarks:
+
+  * HumanEval-S — 164 tasks, programs of length 2-3 (compositional, harder)
+  * MBPP-S      — 257 tasks, programs of length 1-2 (simpler)
+
+and the training corpus used by train.py. All sampling is seeded; the suites
+are disjoint from the training stream by construction (signature dedup), so
+benchmark accuracy measures generalisation, as with real HumanEval/MBPP.
+"""
+
+from __future__ import annotations
+
+import random
+
+from . import minilang as ml
+
+N_EXAMPLES = 3    # I/O examples shown in the prompt
+N_TESTS = 3       # held-out test cases used for pass@1 scoring
+
+# Ops sampled into tasks. The full ISA (minilang.OPS) stays in the vocab and
+# VM; generation restricts to a distinguishable subset — near-duplicate ops
+# (ADD2 vs ADD1, ROTR vs ROTL, SORTD vs SORT, SUB1) make 3-example induction
+# needlessly ambiguous at simulated-model scale.
+ACTIVE_OPS = ["ADD1", "MUL2", "NEG", "REV", "SORT", "ROTL", "SWAP", "CUMSUM"]
+
+
+def _rand_seq(rng: random.Random) -> tuple[int, ...]:
+    return tuple(rng.randrange(ml.MOD) for _ in range(ml.SEQ_LEN))
+
+
+def _sample_program(rng: random.Random, min_len: int, max_len: int,
+                    p_long: float | None = None) -> list[str]:
+    """Sample a program; reject immediate-inverse pairs (REV REV etc.),
+    which collapse to shorter behaviour and distort difficulty bands.
+
+    p_long: when given (and the range is non-trivial), probability of
+    drawing max_len rather than uniform — the difficulty dial that separates
+    HumanEval-S from MBPP-S."""
+    inverse = {("REV", "REV"), ("NEG", "NEG"), ("SWAP", "SWAP"),
+               ("ROTL", "ROTR"), ("ROTR", "ROTL"),
+               ("ADD1", "SUB1"), ("SUB1", "ADD1")}
+    while True:
+        if p_long is not None and max_len > min_len:
+            n = max_len if rng.random() < p_long else min_len
+        else:
+            n = rng.randint(min_len, max_len)
+        ops = [rng.choice(ACTIVE_OPS) for _ in range(n)]
+        if any((a, b) in inverse for a, b in zip(ops, ops[1:])):
+            continue
+        return ops
+
+
+def sample_task(rng: random.Random, min_len: int, max_len: int,
+                p_long: float | None = None) -> dict:
+    """A task = program + prompt examples + held-out tests.
+
+    Rejection criteria keep tasks well-posed:
+      * program must act non-trivially on at least one prompt example
+        (otherwise the examples cannot identify any behaviour);
+      * prompt inputs must be pairwise distinct.
+    """
+    while True:
+        ops = _sample_program(rng, min_len, max_len, p_long)
+        inputs = []
+        seen = set()
+        for _ in range(N_EXAMPLES + N_TESTS):
+            xs = _rand_seq(rng)
+            while xs in seen:
+                xs = _rand_seq(rng)
+            seen.add(xs)
+            inputs.append(xs)
+        pairs = [(xs, ml.run_program(ops, xs)) for xs in inputs]
+        if all(xs == ys for xs, ys in pairs[:N_EXAMPLES]):
+            continue  # examples show the identity: ill-posed
+        return {
+            "program": ops,
+            "examples": pairs[:N_EXAMPLES],
+            "tests": pairs[N_EXAMPLES:],
+            "hard": len(ops) >= 2,
+        }
+
+
+def _signature(task: dict) -> tuple:
+    return tuple(task["examples"])
+
+
+def make_benchmark(name: str, n_tasks: int, min_len: int, max_len: int,
+                   seed: int, exclude: set | None = None,
+                   p_long: float | None = None) -> dict:
+    """Generate a deduplicated benchmark suite."""
+    rng = random.Random(seed)
+    exclude = set() if exclude is None else exclude
+    tasks, sigs = [], set()
+    while len(tasks) < n_tasks:
+        t = sample_task(rng, min_len, max_len, p_long)
+        sig = _signature(t)
+        if sig in sigs or sig in exclude:
+            continue
+        sigs.add(sig)
+        t["id"] = len(tasks)
+        tasks.append(t)
+    return {"name": name, "tasks": tasks, "sigs": sigs}
+
+
+def benchmark_json(bench: dict) -> dict:
+    """JSON-serializable form consumed by the Rust dataset loader."""
+    return {
+        "name": bench["name"],
+        "seq_len": ml.SEQ_LEN,
+        "mod": ml.MOD,
+        "tasks": [
+            {
+                "id": t["id"],
+                "program": t["program"],
+                "hard": t["hard"],
+                "examples": [[list(i), list(o)] for i, o in t["examples"]],
+                "tests": [[list(i), list(o)] for i, o in t["tests"]],
+            }
+            for t in bench["tasks"]
+        ],
+    }
+
+
+def training_stream(seed: int, exclude: set, n: int,
+                    mode_weights=(1, 1, 1)) -> list[dict]:
+    """Training examples: a task + a sampled CoT mode. Tasks colliding with
+    benchmark signatures are rejected so the suites stay held out."""
+    rng = random.Random(seed)
+    modes = ["no_think", "auto_think", "slow_think"]
+    out = []
+    while len(out) < n:
+        t = sample_task(rng, 1, 2, p_long=0.5)
+        if _signature(t) in exclude:
+            continue
+        t["mode"] = rng.choices(modes, weights=mode_weights)[0]
+        out.append(t)
+    return out
+
+
+def render_training_example(task: dict) -> tuple[list[int], list[int]]:
+    """(prompt_ids, completion_ids) for one training example."""
+    prompt = ml.encode_prompt(task["mode"], task["examples"])
+    completion = ml.encode_completion(
+        task["mode"], task["program"], task["examples"][0][0], task["hard"]
+    )
+    return prompt, completion

@@ -1,0 +1,184 @@
+"""Build-time training of the pangu-lite models on the MiniLang corpus.
+
+The real openPangu-Embedded checkpoints are proprietary; the reproduction
+trains its simulated scales from scratch (DESIGN.md §2). Training is a plain
+next-token cross-entropy run over rendered (prompt, completion) pairs with
+all three CoT directives mixed into the stream, so the modes are selectable
+at inference time by the prompt directive alone — the paper's mechanism.
+
+No optax in this environment: AdamW + cosine schedule are implemented here.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import minilang as ml
+from . import model as M
+from . import taskgen
+
+TRAIN_SEQ = 72  # prompt (41) + longest slow_think completion (<= 24) + slack
+
+# Extra loss weight on the program tokens (PROG op... END): the trace and
+# format tokens dominate raw token counts, but task success depends on the
+# program — weighting sharpens induction without changing the data.
+PROGRAM_LOSS_WEIGHT = 3.0
+
+
+# ---------------------------------------------------------------------------
+# Data rendering
+# ---------------------------------------------------------------------------
+
+
+def render_batch(stream: list[dict], start: int, batch: int):
+    """-> (tokens int32 [B, TRAIN_SEQ], loss_mask f32 [B, TRAIN_SEQ]).
+
+    tokens = prompt ++ completion ++ PAD; the mask selects positions whose
+    *target* (next token) lies in the completion."""
+    toks = np.zeros((batch, TRAIN_SEQ), np.int32)
+    mask = np.zeros((batch, TRAIN_SEQ), np.float32)
+    for i in range(batch):
+        task = stream[(start + i) % len(stream)]
+        prompt, completion = taskgen.render_training_example(task)
+        seq = (prompt + completion)[:TRAIN_SEQ]
+        toks[i, : len(seq)] = seq
+        # Position j predicts token j+1: completion tokens occupy
+        # [len(prompt), len(seq)), so mask predictor positions
+        # [len(prompt)-1, len(seq)-1).
+        mask[i, len(prompt) - 1 : len(seq) - 1] = 1.0
+        # Upweight predictions of the program segment (PROG onwards).
+        prog_at = completion.index(ml.TOK["PROG"])
+        mask[i, len(prompt) + prog_at - 1 : len(seq) - 1] = PROGRAM_LOSS_WEIGHT
+    return jnp.asarray(toks), jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------------------
+# Loss / optimizer
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg, tokens, mask):
+    logits = M.forward_seq(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    m = mask[:, :-1]
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - lr * (step + wd * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, total, peak):
+    warmup = max(1, total // 20)
+    w = jnp.minimum((step + 1.0) / warmup, 1.0)
+    progress = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return peak * w * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "total", "peak"))
+def train_step(params, opt, tokens, mask, step, *, cfg, total, peak):
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens, mask)
+    grads, _ = clip_by_global_norm(grads, 1.0)
+    lr = lr_schedule(step.astype(jnp.float32), total, peak)
+    params, opt = adamw_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def train(cfg: M.ModelConfig, stream: list[dict], *, steps: int, batch: int,
+          peak_lr: float = 3e-3, seed: int = 0, log_every: int = 50,
+          log=print) -> dict:
+    params = M.init_params(cfg, seed)
+    opt = adamw_init(params)
+    t0 = time.time()
+    losses = []
+    for step in range(steps):
+        tokens, mask = render_batch(stream, step * batch, batch)
+        params, opt, loss = train_step(
+            params, opt, tokens, mask, jnp.asarray(step), cfg=cfg,
+            total=steps, peak=peak_lr,
+        )
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            log(f"[train:{cfg.name}] step {step:4d}/{steps} "
+                f"loss {float(loss):.4f}  ({time.time() - t0:.0f}s)")
+    return {"params": params, "losses": losses, "seconds": time.time() - t0}
+
+
+# ---------------------------------------------------------------------------
+# Greedy evaluation (Python twin of the Rust engine, for tests/reporting)
+# ---------------------------------------------------------------------------
+
+
+def greedy_generate(cfg: M.ModelConfig, specs: dict, prompt_ids: list[int],
+                    max_new: int = 64) -> list[int]:
+    """Single-sequence greedy decode through prefill_fn/decode_fn."""
+    s = cfg.prompt_len
+    toks = np.full((1, s), ml.TOK["PAD"], np.int32)
+    toks[0, : len(prompt_ids)] = prompt_ids
+    true_lens = jnp.asarray([len(prompt_ids)], jnp.int32)
+    logits, kv = M.prefill_fn(cfg, specs, jnp.asarray(toks), true_lens)
+    out = []
+    pos = len(prompt_ids)
+    tok = int(jnp.argmax(logits[0]))
+    for _ in range(max_new):
+        out.append(tok)
+        if tok == ml.TOK["END"] or pos >= cfg.max_seq - 1:
+            break
+        logits, kv = M.decode_fn(
+            cfg, specs, jnp.asarray([tok], jnp.int32), kv,
+            jnp.asarray([pos], jnp.int32),
+        )
+        tok = int(jnp.argmax(logits[0]))
+        pos += 1
+    return out
+
+
+def eval_accuracy(cfg: M.ModelConfig, specs: dict, tasks: list[dict],
+                  mode: str, max_new: int = 64) -> float:
+    """pass@1 over tasks: generated program must satisfy all held-out tests."""
+    n_pass = 0
+    for task in tasks:
+        prompt = ml.encode_prompt(mode, task["examples"])
+        gen = greedy_generate(cfg, specs, prompt, max_new)
+        ops = ml.extract_program(gen)
+        if ops is None:
+            continue
+        ok = all(ml.run_program(ops, tuple(i)) == tuple(o) for i, o in task["tests"])
+        n_pass += ok
+    return n_pass / max(1, len(tasks))

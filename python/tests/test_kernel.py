@@ -1,0 +1,211 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas kernel (interpret=True) is swept against its pure-jnp oracle in
+ref.py — exact equality on integer paths, float tolerance on dequant
+epilogues. Hypothesis drives shape/value sweeps (test_kernel_properties.py
+holds the heavier property sweeps; these are the deterministic fixtures).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.hadamard import hadamard
+from compile.kernels.quant_act import quant_act
+from compile.kernels.w4a8_gemm import w4a8_gemm
+from compile.kernels.w8a8_gemm import w8a8_gemm
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quant_act
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k", [(1, 64), (7, 128), (128, 128), (130, 256), (256, 512)])
+def test_quant_act_matches_ref(m, k):
+    x = _rand((m, k), seed=m * 1000 + k)
+    xq, xs = quant_act(x)
+    xq_r, xs_r = ref.quant_act(x)
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(xq_r))
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xs_r), rtol=1e-6)
+
+
+def test_quant_act_roundtrip_error_bound():
+    # |dequant(quant(x)) - x| <= scale/2 per element (round-to-nearest).
+    x = _rand((33, 128), seed=5, scale=3.0)
+    xq, xs = quant_act(x)
+    deq = np.asarray(xq, np.float32) * np.asarray(xs)
+    err = np.abs(deq - np.asarray(x))
+    bound = np.asarray(xs) / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_quant_act_zero_rows_safe():
+    x = jnp.zeros((4, 64), jnp.float32)
+    xq, xs = quant_act(x)
+    assert np.asarray(xq).sum() == 0
+    assert (np.asarray(xs) > 0).all()  # eps floor, no div-by-zero
+
+
+def test_quant_act_extreme_values():
+    x = jnp.asarray(np.array([[1e6, -1e6, 0.5, 0.0] * 16], np.float32))
+    xq, _ = quant_act(x)
+    assert np.asarray(xq).max() == 127
+    assert np.asarray(xq).min() == -127
+
+
+# ---------------------------------------------------------------------------
+# w8a8 GEMM
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 64, 64), (8, 128, 128), (37, 128, 256),
+                                   (128, 256, 128), (200, 256, 512)])
+def test_w8a8_matches_ref(m, k, n):
+    x = _rand((m, k), seed=m + k + n)
+    w = _rand((k, n), seed=m * k + n)
+    xq, xs = ref.quant_act(x)
+    wq, ws = ref.quant_weight_int8(w)
+    out = w8a8_gemm(xq, xs, wq, ws)
+    out_r = ref.w8a8_matmul(xq, xs, wq, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), rtol=1e-5, atol=1e-6)
+
+
+def test_w8a8_integer_accumulation_exact():
+    # The int32 accumulator must be exact: compare against int64 numpy.
+    rng = np.random.default_rng(0)
+    xq = rng.integers(-127, 128, size=(16, 256), dtype=np.int8)
+    wq = rng.integers(-127, 128, size=(256, 128), dtype=np.int8)
+    xs = np.ones((16, 1), np.float32)
+    ws = np.ones((1, 128), np.float32)
+    out = np.asarray(w8a8_gemm(jnp.asarray(xq), jnp.asarray(xs),
+                               jnp.asarray(wq), jnp.asarray(ws)))
+    exact = xq.astype(np.int64) @ wq.astype(np.int64)
+    np.testing.assert_array_equal(out.astype(np.int64), exact)
+
+
+def test_w8a8_approximates_fp_gemm():
+    x = _rand((32, 128), seed=1)
+    w = _rand((128, 128), seed=2)
+    xq, xs = ref.quant_act(x)
+    wq, ws = ref.quant_weight_int8(w)
+    out = np.asarray(w8a8_gemm(xq, xs, wq, ws))
+    fp = np.asarray(x) @ np.asarray(w)
+    rel = np.linalg.norm(out - fp) / np.linalg.norm(fp)
+    assert rel < 0.02, f"int8 GEMM relative error {rel}"
+
+
+# ---------------------------------------------------------------------------
+# int4 packing + w4a8 GEMM
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip_all_values():
+    # Every int4 value in every nibble position.
+    vals = np.arange(-8, 8, dtype=np.int8)
+    wq = jnp.asarray(np.stack([np.repeat(vals, 2), np.tile(vals, 2)], axis=1))
+    packed = ref.pack_int4(wq)
+    assert packed.shape == (16, 2)
+    np.testing.assert_array_equal(np.asarray(ref.unpack_int4(packed)), np.asarray(wq))
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 64, 64), (9, 128, 128), (64, 256, 256)])
+def test_w4a8_matches_ref(m, k, n):
+    x = _rand((m, k), seed=m + 2 * k + n)
+    w = _rand((k, n), seed=3 * m + k + n)
+    xq, xs = ref.quant_act(x)
+    wq, ws = ref.quant_weight_int4(w)
+    packed = ref.pack_int4(wq)
+    out = w4a8_gemm(xq, xs, packed, ws)
+    out_r = ref.w4a8_matmul(xq, xs, packed, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), rtol=1e-5, atol=1e-6)
+
+
+def test_w4a8_error_larger_than_w8a8():
+    # The paper's central accuracy ordering, at the GEMM level.
+    x = _rand((64, 256), seed=10)
+    w = _rand((256, 256), seed=11)
+    fp = np.asarray(x) @ np.asarray(w)
+    xq, xs = ref.quant_act(x)
+    wq8, ws8 = ref.quant_weight_int8(w)
+    e8 = np.linalg.norm(np.asarray(w8a8_gemm(xq, xs, wq8, ws8)) - fp)
+    wq4, ws4 = ref.quant_weight_int4(w)
+    e4 = np.linalg.norm(np.asarray(w4a8_gemm(xq, xs, ref.pack_int4(wq4), ws4)) - fp)
+    assert e4 > 2 * e8
+
+
+# ---------------------------------------------------------------------------
+# Hadamard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,d", [(1, 64), (5, 128), (33, 256), (128, 512)])
+def test_hadamard_matches_ref(m, d):
+    x = _rand((m, d), seed=m + d)
+    out = hadamard(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.hadamard(x)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_hadamard_orthogonal():
+    # H H = I (normalized symmetric): double rotation restores input.
+    x = _rand((16, 128), seed=42)
+    np.testing.assert_allclose(np.asarray(hadamard(hadamard(x))), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_hadamard_preserves_norm():
+    x = _rand((8, 256), seed=3)
+    n0 = np.linalg.norm(np.asarray(x), axis=1)
+    n1 = np.linalg.norm(np.asarray(hadamard(x)), axis=1)
+    np.testing.assert_allclose(n0, n1, rtol=1e-5)
+
+
+def test_hadamard_spreads_outliers():
+    # A one-hot row (extreme outlier) becomes uniform magnitude — the
+    # mechanism behind Fig. 1's smoothed distribution.
+    x = np.zeros((1, 128), np.float32)
+    x[0, 7] = 100.0
+    out = np.asarray(hadamard(jnp.asarray(x)))
+    assert np.allclose(np.abs(out), 100.0 / np.sqrt(128), atol=1e-4)
+
+
+def test_hadamard_gemm_equivalence():
+    # (X H)(H W) == X W in fp: the mathematical-equivalence claim of Eq. 4.
+    x = _rand((16, 128), seed=6)
+    w = _rand((128, 64), seed=7)
+    y_rot = np.asarray(hadamard(x)) @ np.asarray(ref.fold_hadamard(w))
+    y = np.asarray(x) @ np.asarray(w)
+    np.testing.assert_allclose(y_rot, y, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant folding
+# ---------------------------------------------------------------------------
+
+
+def test_smooth_fold_equivalence():
+    # (X S^-1)(S W) == X W in fp: the mathematical-equivalence claim of Eq. 3.
+    x = _rand((16, 128), seed=8)
+    w = _rand((128, 64), seed=9)
+    act_amax = jnp.max(jnp.abs(x), axis=0)
+    s = ref.smooth_scales(act_amax, w, 0.5)
+    y_s = (np.asarray(x) / np.asarray(s)) @ np.asarray(ref.fold_smooth(w, s))
+    np.testing.assert_allclose(y_s, np.asarray(x) @ np.asarray(w), rtol=1e-3, atol=1e-4)
+
+
+def test_smooth_reduces_act_range_on_outliers():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    x[:, 3] *= 50.0  # outlier channel, as in Fig. 1 baseline
+    w = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    act_amax = jnp.max(jnp.abs(jnp.asarray(x)), axis=0)
+    s = np.asarray(ref.smooth_scales(act_amax, w, 0.5))
+    smoothed = x / s
+    assert np.abs(smoothed).max() < np.abs(x).max() / 3

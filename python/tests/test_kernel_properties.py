@@ -1,0 +1,116 @@
+"""Hypothesis property sweeps over the Pallas kernels (shapes/dtypes/values).
+
+The system prompt for this reproduction mandates hypothesis-driven sweeps of
+the kernel surface: arbitrary (m, k, n) within the model's envelope, adversarial
+value distributions (outliers, zeros, denormal-ish), asserting allclose against
+ref.py every time.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hadamard import hadamard
+from compile.kernels.quant_act import quant_act
+from compile.kernels.w4a8_gemm import w4a8_gemm
+from compile.kernels.w8a8_gemm import w8a8_gemm
+
+# Model envelope: K, N are multiples of 64 up to 512; M arbitrary small.
+dims_mk = st.tuples(
+    st.integers(min_value=1, max_value=160),
+    st.sampled_from([64, 128, 256, 512]),
+)
+
+values = st.sampled_from(["normal", "outliers", "tiny", "mixed"])
+
+
+def _gen(shape, kind, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    if kind == "outliers":
+        mask = rng.random(size=shape) < 0.01
+        x = np.where(mask, x * 100.0, x)
+    elif kind == "tiny":
+        x = x * 1e-5
+    elif kind == "mixed":
+        x[: shape[0] // 2] *= 50.0
+    return jnp.asarray(x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mk=dims_mk, kind=values, seed=st.integers(0, 2**31 - 1))
+def test_quant_act_property(mk, kind, seed):
+    m, k = mk
+    x = _gen((m, k), kind, seed)
+    xq, xs = quant_act(x)
+    xq_r, xs_r = ref.quant_act(x)
+    np.testing.assert_array_equal(np.asarray(xq), np.asarray(xq_r))
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xs_r), rtol=1e-6)
+    # Invariant: |q| <= 127 always.
+    assert np.abs(np.asarray(xq)).max() <= 127
+
+
+@settings(max_examples=20, deadline=None)
+@given(mk=dims_mk, n=st.sampled_from([64, 128, 256]), kind=values,
+       seed=st.integers(0, 2**31 - 1))
+def test_w8a8_property(mk, n, kind, seed):
+    m, k = mk
+    x = _gen((m, k), kind, seed)
+    w = _gen((k, n), "normal", seed ^ 0xABCD)
+    xq, xs = ref.quant_act(x)
+    wq, ws = ref.quant_weight_int8(w)
+    out = w8a8_gemm(xq, xs, wq, ws)
+    out_r = ref.w8a8_matmul(xq, xs, wq, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mk=dims_mk, n=st.sampled_from([64, 128, 256]), kind=values,
+       seed=st.integers(0, 2**31 - 1))
+def test_w4a8_property(mk, n, kind, seed):
+    m, k = mk
+    x = _gen((m, k), kind, seed)
+    w = _gen((k, n), "normal", seed ^ 0x1234)
+    xq, xs = ref.quant_act(x)
+    wq, ws = ref.quant_weight_int4(w)
+    packed = ref.pack_int4(wq)
+    out = w4a8_gemm(xq, xs, packed, ws)
+    out_r = ref.w4a8_matmul(xq, xs, packed, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 130), d=st.sampled_from([64, 128, 256, 512]),
+       kind=values, seed=st.integers(0, 2**31 - 1))
+def test_hadamard_property(m, d, kind, seed):
+    x = _gen((m, d), kind, seed)
+    out = hadamard(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.hadamard(x)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.sampled_from([64, 128, 256]), n=st.sampled_from([32, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_pack_roundtrip_property(k, n, seed):
+    rng = np.random.default_rng(seed)
+    wq = jnp.asarray(rng.integers(-8, 8, size=(k, n), dtype=np.int8))
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_int4(ref.pack_int4(wq))), np.asarray(wq)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.25, 0.75))
+def test_smooth_equivalence_property(seed, alpha):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    act_amax = jnp.max(jnp.abs(x), axis=0)
+    s = ref.smooth_scales(act_amax, w, alpha)
+    y_s = (np.asarray(x) / np.asarray(s)) @ np.asarray(ref.fold_smooth(w, s))
+    np.testing.assert_allclose(y_s, np.asarray(x) @ np.asarray(w),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,163 @@
+"""MiniLang DSL + taskgen unit tests (the benchmark substrate)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import minilang as ml
+from compile import taskgen
+
+
+# ---------------------------------------------------------------------------
+# DSL semantics
+# ---------------------------------------------------------------------------
+
+
+def test_op_closure():
+    # Every op maps Z_16^5 -> Z_16^5.
+    xs = (0, 5, 15, 8, 3)
+    for name, fn in ml.OPS.items():
+        out = fn(xs)
+        assert len(out) == ml.SEQ_LEN, name
+        assert all(0 <= v < ml.MOD for v in out), name
+
+
+def test_specific_semantics():
+    xs = (1, 2, 3, 4, 5)
+    assert ml.OPS["ADD1"](xs) == (2, 3, 4, 5, 6)
+    assert ml.OPS["SUB1"]((0, 1, 2, 3, 4)) == (15, 0, 1, 2, 3)  # wraps mod 16
+    assert ml.OPS["MUL2"]((8, 1, 2, 3, 4)) == (0, 2, 4, 6, 8)   # 16 mod 16 = 0
+    assert ml.OPS["NEG"]((0, 1, 15, 8, 2)) == (0, 15, 1, 8, 14)
+    assert ml.OPS["REV"](xs) == (5, 4, 3, 2, 1)
+    assert ml.OPS["SORT"]((3, 1, 2, 5, 4)) == (1, 2, 3, 4, 5)
+    assert ml.OPS["SORTD"]((3, 1, 2, 5, 4)) == (5, 4, 3, 2, 1)
+    assert ml.OPS["ROTL"](xs) == (2, 3, 4, 5, 1)
+    assert ml.OPS["ROTR"](xs) == (5, 1, 2, 3, 4)
+    assert ml.OPS["SWAP"](xs) == (5, 2, 3, 4, 1)
+    assert ml.OPS["CUMSUM"]((1, 2, 3, 4, 5)) == (1, 3, 6, 10, 15)
+
+
+def test_run_program_composition():
+    xs = (1, 2, 3, 4, 5)
+    assert ml.run_program(["ADD1", "REV"], xs) == tuple(reversed([2, 3, 4, 5, 6]))
+    assert ml.run_program([], xs) == xs
+
+
+def test_program_trace_states():
+    tr = ml.program_trace(["ADD1", "MUL2"], (1, 2, 3, 4, 5))
+    assert tr[0] == ("ADD1", (2, 3, 4, 5, 6))
+    assert tr[1] == ("MUL2", (4, 6, 8, 10, 12))
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary / encoding
+# ---------------------------------------------------------------------------
+
+
+def test_vocab_size_and_uniqueness():
+    assert len(ml.VOCAB) == ml.VOCAB_SIZE == 64
+    assert len(set(ml.VOCAB)) == 64
+
+
+def test_prompt_encoding_fits_budget():
+    rng = random.Random(0)
+    for _ in range(50):
+        t = taskgen.sample_task(rng, 1, 3)
+        for mode in ml.MODE_TOKENS:
+            ids = ml.encode_prompt(mode, t["examples"])
+            assert len(ids) <= ml.PROMPT_LEN
+            assert ids[0] == ml.TOK["BOS"]
+            assert ids[-1] == ml.TOK["ASK"]
+
+
+def test_completion_encoding_fits_budget():
+    rng = random.Random(1)
+    for _ in range(50):
+        t = taskgen.sample_task(rng, 1, 3)
+        for mode in ml.MODE_TOKENS:
+            comp = ml.encode_completion(mode, t["program"],
+                                        t["examples"][0][0], t["hard"])
+            prompt = ml.encode_prompt(mode, t["examples"])
+            assert len(prompt) + len(comp) <= ml.MAX_SEQ
+            assert comp[-1] == ml.TOK["END"]
+
+
+def test_completion_mode_structure():
+    rng = random.Random(2)
+    t = taskgen.sample_task(rng, 2, 3)  # hard task
+    no = ml.encode_completion("no_think", t["program"], t["examples"][0][0], t["hard"])
+    slow = ml.encode_completion("slow_think", t["program"], t["examples"][0][0], t["hard"])
+    auto = ml.encode_completion("auto_think", t["program"], t["examples"][0][0], t["hard"])
+    assert ml.TOK["TRACE"] not in no
+    assert slow[0] == ml.TOK["TRACE"]
+    assert auto == slow  # hard -> auto uses the trace
+    easy = taskgen.sample_task(rng, 1, 1)
+    auto_easy = ml.encode_completion("auto_think", easy["program"],
+                                     easy["examples"][0][0], easy["hard"])
+    assert ml.TOK["TRACE"] not in auto_easy  # easy -> no trace
+
+
+def test_extract_program_roundtrip():
+    comp = ml.encode_completion("slow_think", ["REV", "ADD1"], (1, 2, 3, 4, 5), True)
+    assert ml.extract_program(comp) == ["REV", "ADD1"]
+    comp2 = ml.encode_completion("no_think", ["SORT"], (1, 2, 3, 4, 5), False)
+    assert ml.extract_program(comp2) == ["SORT"]
+
+
+def test_extract_program_malformed():
+    assert ml.extract_program([]) is None
+    assert ml.extract_program([ml.TOK["PROG"]]) is None  # no END
+    assert ml.extract_program([ml.TOK["PROG"], ml.TOK["END"]]) is None  # empty
+    assert ml.extract_program([ml.TOK["PROG"], ml.TOK["IN"], ml.TOK["END"]]) is None
+    assert ml.extract_program([ml.TOK["REV"], ml.TOK["END"]]) is None  # no PROG
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(ml.OP_NAMES), min_size=1, max_size=4),
+       st.booleans())
+def test_extract_inverts_encode(ops, hard):
+    for mode in ("no_think", "slow_think", "auto_think"):
+        comp = ml.encode_completion(mode, ops, (1, 2, 3, 4, 5), hard)
+        assert ml.extract_program(comp) == ops
+
+
+# ---------------------------------------------------------------------------
+# taskgen
+# ---------------------------------------------------------------------------
+
+
+def test_benchmark_determinism_and_sizes():
+    b1 = taskgen.make_benchmark("x", 20, 2, 3, seed=5)
+    b2 = taskgen.make_benchmark("x", 20, 2, 3, seed=5)
+    assert taskgen.benchmark_json(b1) == taskgen.benchmark_json(b2)
+    assert len(b1["tasks"]) == 20
+
+
+def test_benchmark_tests_consistent_with_program():
+    b = taskgen.make_benchmark("x", 30, 1, 3, seed=6)
+    for t in b["tasks"]:
+        for xs, ys in t["examples"] + t["tests"]:
+            assert ml.run_program(t["program"], tuple(xs)) == tuple(ys)
+
+
+def test_benchmark_difficulty_bands():
+    he = taskgen.make_benchmark("he", 30, 2, 3, seed=7)
+    mb = taskgen.make_benchmark("mb", 30, 1, 2, seed=8)
+    assert all(len(t["program"]) >= 2 for t in he["tasks"])
+    assert all(len(t["program"]) <= 2 for t in mb["tasks"])
+
+
+def test_training_stream_excludes_benchmarks():
+    he = taskgen.make_benchmark("he", 50, 1, 3, seed=9)
+    stream = taskgen.training_stream(seed=10, exclude=he["sigs"], n=200)
+    sigs = {taskgen._signature(t) for t in stream}
+    assert not (sigs & he["sigs"])
+
+
+def test_training_stream_mode_mix():
+    stream = taskgen.training_stream(seed=11, exclude=set(), n=600)
+    modes = {m: sum(t["mode"] == m for t in stream) for m in
+             ("no_think", "auto_think", "slow_think")}
+    for m, c in modes.items():
+        assert c > 120, f"mode {m} underrepresented: {c}"

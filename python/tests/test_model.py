@@ -1,0 +1,186 @@
+"""L2 model tests: shapes, prefill/decode consistency, quantized divergence."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import minilang as ml
+from compile import model as M
+from compile import quantlib as Q
+
+CFG = M.ModelConfig("test", d_model=64, n_layers=2, n_heads=2, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=3)
+
+
+@pytest.fixture(scope="module")
+def fp(params):
+    return M.fp_specs(params)
+
+
+def _prompt_batch(b, plen, lens):
+    rng = np.random.default_rng(0)
+    toks = np.full((b, plen), ml.TOK["PAD"], np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(3, 40, size=l)
+        toks[i, 0] = ml.TOK["BOS"]
+    return jnp.asarray(toks), jnp.asarray(np.array(lens, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Shapes / basics
+# ---------------------------------------------------------------------------
+
+
+def test_param_count_formula(params):
+    total = np.asarray(params["embed"]).size + np.asarray(params["lnf"]).size
+    for layer in params["layers"]:
+        total += sum(np.asarray(v).size for v in layer.values())
+    assert total == CFG.params_count()
+
+
+def test_forward_seq_shapes(params):
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 64, size=(3, 10), dtype=np.int32))
+    logits = M.forward_seq(CFG, params, toks)
+    assert logits.shape == (3, 10, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_shapes(fp):
+    toks, lens = _prompt_batch(4, CFG.prompt_len, [5, 9, 27, 12])
+    logits, kv = M.prefill_fn(CFG, fp, toks, lens)
+    assert logits.shape == (4, CFG.vocab)
+    assert kv.shape == M.kv_shape(CFG, 4)
+
+
+# ---------------------------------------------------------------------------
+# Consistency: prefill/decode must agree with full-sequence forward
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_matches_forward_seq(params, fp):
+    prompt = [ml.TOK["BOS"], 17, 22, 9, 30, 8]
+    toks = np.full((1, CFG.prompt_len), ml.TOK["PAD"], np.int32)
+    toks[0, : len(prompt)] = prompt
+    lg, _ = M.prefill_fn(CFG, fp, jnp.asarray(toks),
+                         jnp.asarray([len(prompt)], np.int32))
+    full = M.forward_seq(CFG, params, jnp.asarray(np.array(prompt, np.int32)[None]))
+    np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(full[0, -1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_chain_matches_forward_seq(params, fp):
+    # Prefill a prompt then decode 4 fixed tokens; logits at each step must
+    # match the full-sequence forward pass on the growing sequence.
+    prompt = [ml.TOK["BOS"], 20, 21, 22, 23]
+    extra = [24, 25, 26, 27]
+    toks = np.full((1, CFG.prompt_len), ml.TOK["PAD"], np.int32)
+    toks[0, : len(prompt)] = prompt
+    lg, kv = M.prefill_fn(CFG, fp, jnp.asarray(toks),
+                          jnp.asarray([len(prompt)], np.int32))
+    pos = len(prompt)
+    seq = list(prompt)
+    for t in extra:
+        seq.append(t)
+        lg, kv = M.decode_fn(CFG, fp, jnp.asarray([t], np.int32), kv,
+                             jnp.asarray([pos], np.int32))
+        full = M.forward_seq(CFG, params, jnp.asarray(np.array(seq, np.int32)[None]))
+        np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(full[0, -1]),
+                                   rtol=1e-3, atol=1e-4)
+        pos += 1
+
+
+def test_batched_decode_with_mixed_positions(params, fp):
+    # Two sequences at different positions must evolve independently —
+    # the property continuous batching relies on.
+    p1 = [ml.TOK["BOS"], 10, 11]
+    p2 = [ml.TOK["BOS"], 30, 31, 32, 33, 34]
+    toks = np.full((2, CFG.prompt_len), ml.TOK["PAD"], np.int32)
+    toks[0, : len(p1)] = p1
+    toks[1, : len(p2)] = p2
+    lens = jnp.asarray([len(p1), len(p2)], np.int32)
+    _, kv = M.prefill_fn(CFG, fp, jnp.asarray(toks), lens)
+    lg, _ = M.decode_fn(CFG, fp, jnp.asarray([40, 41], np.int32), kv,
+                        jnp.asarray([len(p1), len(p2)], np.int32))
+    # Row 0 must equal the single-sequence result for p1 + [40].
+    toks1 = np.full((1, CFG.prompt_len), ml.TOK["PAD"], np.int32)
+    toks1[0, : len(p1)] = p1
+    _, kv1 = M.prefill_fn(CFG, fp, jnp.asarray(toks1),
+                          jnp.asarray([len(p1)], np.int32))
+    lg1, _ = M.decode_fn(CFG, fp, jnp.asarray([40], np.int32), kv1,
+                         jnp.asarray([len(p1)], np.int32))
+    np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(lg1[0]),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantized variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def calib(params):
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, 64, size=(8, 16), dtype=np.int32))
+    return Q.calibrate(CFG, params, toks)
+
+
+@pytest.mark.parametrize("variant", ["int8", "w4a8", "w4a8_smooth", "w4a8_hadamard"])
+def test_quantized_prefill_close_to_fp(params, fp, calib, variant):
+    specs = Q.quantize(CFG, params, variant, calib)
+    toks, lens = _prompt_batch(2, CFG.prompt_len, [6, 11])
+    lg_fp, _ = M.prefill_fn(CFG, fp, toks, lens)
+    lg_q, _ = M.prefill_fn(CFG, specs, toks, lens)
+    # Random-init weights: logits are O(1); divergence must stay bounded.
+    diff = np.abs(np.asarray(lg_q) - np.asarray(lg_fp)).max()
+    limit = 0.2 if variant == "int8" else 1.5
+    assert diff < limit, f"{variant} diverged: {diff}"
+
+
+def test_int8_beats_w4a8_on_logits(params, fp, calib):
+    toks, lens = _prompt_batch(4, CFG.prompt_len, [6, 11, 20, 9])
+    lg_fp, _ = M.prefill_fn(CFG, fp, toks, lens)
+
+    def err(variant):
+        sp = Q.quantize(CFG, params, variant, calib)
+        lg, _ = M.prefill_fn(CFG, sp, toks, lens)
+        return np.linalg.norm(np.asarray(lg) - np.asarray(lg_fp))
+
+    assert err("int8") < err("w4a8")
+
+
+def test_state_len_formula():
+    assert M.state_len(CFG, 4) == 4 * CFG.vocab + int(np.prod(M.kv_shape(CFG, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Spec flattening (the AOT weight ABI)
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_specs_deterministic(fp):
+    n1, a1, _ = M.flatten_specs(fp)
+    n2, a2, _ = M.flatten_specs(fp)
+    assert n1 == n2
+    assert len(n1) == len(a1)
+
+
+def test_flatten_rebuild_identity(params, calib):
+    specs = Q.quantize(CFG, params, "w4a8_smooth", calib)
+    names, arrays, rebuild = M.flatten_specs(specs)
+    rebuilt = rebuild(arrays)
+    n2, a2, _ = M.flatten_specs(rebuilt)
+    assert names == n2
+    for x, y in zip(arrays, a2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # static structure survives
+    assert rebuilt["layers"][0]["wq"]["kind"] == "w4a8"
+
+
+def test_flatten_names_unique(fp):
+    names, _, _ = M.flatten_specs(fp)
+    assert len(set(names)) == len(names)
+

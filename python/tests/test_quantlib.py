@@ -1,0 +1,105 @@
+"""PTQ pipeline tests: calibration, folding, variant construction, Fig.1 data."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import quantlib as Q
+from compile.kernels import ref
+
+CFG = M.ModelConfig("test", d_model=64, n_layers=2, n_heads=2, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=8)
+
+
+@pytest.fixture(scope="module")
+def calib(params):
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, 64, size=(12, 20), dtype=np.int32))
+    return Q.calibrate(CFG, params, toks, batch=4)
+
+
+def test_calibrate_covers_all_linears(calib):
+    expected = {f"L{li}.{n}" for li in range(CFG.n_layers) for n in M.LINEAR_NAMES}
+    assert set(calib) == expected
+    for k, v in calib.items():
+        dim = CFG.d_ff if k.endswith(".wd") else CFG.d_model
+        assert v.shape == (dim,), k
+        assert (v >= 0).all()
+
+
+def test_calibrate_batch_invariance(params):
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, 64, size=(12, 20), dtype=np.int32))
+    a = Q.calibrate(CFG, params, toks, batch=3)
+    b = Q.calibrate(CFG, params, toks, batch=12)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+@pytest.mark.parametrize("variant", Q.VARIANTS)
+def test_quantize_structure(params, calib, variant):
+    specs = Q.quantize(CFG, params, variant, calib)
+    assert len(specs["layers"]) == CFG.n_layers
+    for layer in specs["layers"]:
+        for name in M.LINEAR_NAMES:
+            spec = layer[name]
+            if variant == "fp16":
+                assert spec["kind"] == "fp"
+            elif variant == "int8":
+                assert spec["kind"] == "int8"
+                assert spec["wq"].dtype == jnp.int8
+            else:
+                assert spec["kind"] == "w4a8"
+                k_in = M.linear_dims(CFG, name)[0]
+                assert spec["wp"].shape[0] == k_in // 2
+                assert spec.get("had", False) == (variant == "w4a8_hadamard")
+                if variant == "w4a8_smooth":
+                    assert "smooth_inv" in spec
+
+
+def test_smooth_requires_calibration(params):
+    with pytest.raises(ValueError):
+        Q.quantize(CFG, params, "w4a8_smooth", None)
+
+
+def test_unknown_variant_rejected(params):
+    with pytest.raises(ValueError):
+        Q.quantize(CFG, params, "int2", None)
+
+
+def test_weight_error_ordering(params, calib):
+    # Smooth/Hadamard must not hurt reconstruction vs raw W4A8 on an
+    # outlier-heavy weight (the Table 2 mechanism at weight level).
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(128, 64)).astype(np.float32)
+    w[5, :] *= 40.0  # hot input channel
+    act = np.abs(rng.normal(size=(128,)).astype(np.float32)) + 0.1
+    w = jnp.asarray(w)
+    e_base = Q.weight_quant_error(w, "w4a8")
+    e_had = Q.weight_quant_error(w, "w4a8_hadamard")
+    e_int8 = Q.weight_quant_error(w, "int8")
+    assert e_int8 < e_base
+    assert e_had < e_base  # rotation spreads the hot channel
+
+
+def test_channel_distributions_schema(params, calib):
+    d = Q.channel_distributions(CFG, params, calib, layer=1, linear="wu")
+    assert d["layer"] == 1 and d["linear"] == "wu"
+    for key in ("weight_baseline", "weight_smooth", "weight_hadamard",
+                "act_baseline", "act_smooth"):
+        assert len(d[key]) == CFG.d_model
+        assert all(v >= 0 for v in d[key])
+
+
+def test_channel_distributions_smoothing_effect(params, calib):
+    # After smoothing, the activation-side channel range must shrink
+    # relative to baseline whenever outliers exist (Fig. 1's visual claim).
+    d = Q.channel_distributions(CFG, params, calib, layer=0, linear="wg")
+    base = np.array(d["act_baseline"])
+    smooth = np.array(d["act_smooth"])
+    assert smooth.max() / max(smooth.min(), 1e-6) <= base.max() / max(base.min(), 1e-6) * 1.01

@@ -1,0 +1,87 @@
+"""Training-loop unit tests (fast: tiny model, few steps)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import minilang as ml
+from compile import model as M
+from compile import taskgen
+from compile import train as T
+
+CFG = M.ModelConfig("tiny", d_model=64, n_layers=2, n_heads=2, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return taskgen.training_stream(seed=3, exclude=set(), n=400)
+
+
+def test_render_batch_shapes_and_mask(stream):
+    toks, mask = T.render_batch(stream, 0, 8)
+    assert toks.shape == (8, T.TRAIN_SEQ)
+    assert mask.shape == (8, T.TRAIN_SEQ)
+    m = np.asarray(mask)
+    t = np.asarray(toks)
+    for i in range(8):
+        nz = np.nonzero(m[i])[0]
+        assert nz.size > 0
+        # The last masked position predicts END.
+        assert t[i, nz[-1] + 1] == ml.TOK["END"]
+        # Mask starts exactly where the completion begins (position of the
+        # token after ASK, minus one for next-token prediction).
+        ask_pos = int(np.nonzero(t[i] == ml.TOK["ASK"])[0][0])
+        assert nz[0] == ask_pos
+
+
+def test_render_batch_wraps_stream(stream):
+    toks1, _ = T.render_batch(stream, 0, 4)
+    toks2, _ = T.render_batch(stream, len(stream), 4)
+    np.testing.assert_array_equal(np.asarray(toks1), np.asarray(toks2))
+
+
+def test_loss_decreases():
+    stream = taskgen.training_stream(seed=5, exclude=set(), n=600)
+    res = T.train(CFG, stream, steps=30, batch=16, log=lambda *_: None)
+    first = np.mean(res["losses"][:5])
+    last = np.mean(res["losses"][-5:])
+    assert last < first * 0.8, f"loss did not improve: {first} -> {last}"
+
+
+def test_adamw_moves_params():
+    params = M.init_params(CFG, 0)
+    opt = T.adamw_init(params)
+    toks, mask = T.render_batch(taskgen.training_stream(seed=1, exclude=set(), n=32), 0, 8)
+    new_params, _, loss = T.train_step(
+        params, opt, toks, mask, jnp.asarray(0), cfg=CFG, total=10, peak=1e-3
+    )
+    assert float(loss) > 0
+    moved = np.abs(np.asarray(new_params["embed"]) - np.asarray(params["embed"])).max()
+    assert moved > 0
+
+
+def test_lr_schedule_shape():
+    total = 100
+    lrs = [float(T.lr_schedule(jnp.asarray(float(s)), total, 1.0)) for s in range(total)]
+    peak_at = int(np.argmax(lrs))
+    assert peak_at <= total // 10          # warmup peaks early
+    assert lrs[-1] < 0.2                    # decays
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_greedy_generate_terminates():
+    params = M.init_params(CFG, 2)
+    specs = M.fp_specs(params)
+    t = taskgen.sample_task(__import__("random").Random(0), 1, 2)
+    prompt = ml.encode_prompt("no_think", t["examples"])
+    gen = T.greedy_generate(CFG, specs, prompt, max_new=16)
+    assert 1 <= len(gen) <= 16
+
+
+def test_eval_accuracy_random_model_near_zero():
+    params = M.init_params(CFG, 4)
+    specs = M.fp_specs(params)
+    rng = __import__("random").Random(7)
+    tasks = [taskgen.sample_task(rng, 1, 2) for _ in range(5)]
+    acc = T.eval_accuracy(CFG, specs, tasks, "no_think", max_new=12)
+    assert acc <= 0.4  # untrained model can't reliably solve tasks

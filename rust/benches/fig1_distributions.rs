@@ -1,0 +1,22 @@
+//! Bench: Fig. 1 — channel-wise |value| distributions under W4A8 configs
+//! (baseline vs SmoothQuant vs Hadamard), from the calibration dump.
+//!
+//!     cargo bench --bench fig1_distributions
+
+use pangu_atlas_quant::harness::{fig1, Harness};
+use pangu_atlas_quant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut h = match Harness::open(&dir) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("skipping fig1 bench (artifacts unavailable): {e}");
+            return;
+        }
+    };
+    let report = fig1::run(&mut h).expect("fig1");
+    let path = h.write_report("fig1", &report).expect("write report");
+    println!("report written: {}", path.display());
+}

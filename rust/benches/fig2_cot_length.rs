@@ -1,0 +1,28 @@
+//! Bench: Fig. 2 — average CoT output length per mode/model/precision.
+//!
+//!     cargo bench --bench fig2_cot_length [-- --quick 40]
+
+use pangu_atlas_quant::harness::{fig2, Harness};
+use pangu_atlas_quant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut h = match Harness::open(&dir) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("skipping fig2 bench (artifacts unavailable): {e}");
+            return;
+        }
+    };
+    // Time-bounded by default: full benchmarks take many minutes on this
+    // 1-core substrate. Pass --full for the complete run, --quick N to tune.
+    h.quick = if args.flag("full") {
+        None
+    } else {
+        Some(args.get("quick").and_then(|q| q.parse().ok()).unwrap_or(32))
+    };
+    let report = fig2::run(&mut h).expect("fig2");
+    let path = h.write_report("fig2", &report).expect("write report");
+    println!("report written: {}", path.display());
+}

@@ -1,0 +1,79 @@
+//! Microbenchmarks of the L3 hot-path components (benchkit): quant mirror
+//! GEMMs, Hadamard transform, repetition detector, sampler, JSON, batcher.
+//! These run without artifacts — the §Perf profiling substrate for the
+//! coordinator layer.
+//!
+//!     cargo bench --bench microbench
+
+use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
+use pangu_atlas_quant::coordinator::sampling;
+use pangu_atlas_quant::quant::{hadamard, int4, int8};
+use pangu_atlas_quant::util::benchkit::{BenchConfig, Group};
+use pangu_atlas_quant::util::json::Json;
+use pangu_atlas_quant::util::prng::Rng;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let quick = BenchConfig::quick();
+    let mut rng = Rng::new(7);
+
+    // ---- quant mirror -----------------------------------------------
+    let mut g = Group::new("quant-mirror");
+    let (m, k, n) = (8, 256, 512);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    g.run("quant_act_per_token 8x256", &cfg, || {
+        std::hint::black_box(int8::quant_act_per_token(&x, m, k));
+    });
+    g.run("quant_weight_int8 256x512", &quick, || {
+        std::hint::black_box(int8::quant_weight_per_channel(&w, k, n));
+    });
+    let (xq, xs) = int8::quant_act_per_token(&x, m, k);
+    let (wq, ws) = int8::quant_weight_per_channel(&w, k, n);
+    g.run("w8a8_matmul 8x256x512", &quick, || {
+        std::hint::black_box(int8::w8a8_matmul(&xq, &xs, &wq, &ws, m, k, n));
+    });
+    let (wq4, _) = int4::quant_weight_per_channel(&w, k, n);
+    g.run("int4_pack 256x512", &cfg, || {
+        std::hint::black_box(int4::pack(&wq4, k, n));
+    });
+    let packed = int4::pack(&wq4, k, n);
+    g.run("int4_unpack 128x512", &cfg, || {
+        std::hint::black_box(int4::unpack(&packed, k / 2, n));
+    });
+    let mut h = x.clone();
+    g.run("fwht 8x256", &cfg, || {
+        hadamard::fwht_rows(&mut h, m, k);
+        std::hint::black_box(&h);
+    });
+    g.finish();
+
+    // ---- serving hot loop pieces --------------------------------------
+    let mut g = Group::new("serving-hot-loop");
+    let logits: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    g.run("greedy sample vocab=64", &cfg, || {
+        std::hint::black_box(sampling::greedy(&logits));
+    });
+    let mut srng = Rng::new(3);
+    g.run("temperature sample vocab=64", &cfg, || {
+        std::hint::black_box(sampling::sample(&logits, 0.8, 8, &mut srng));
+    });
+    let tokens: Vec<u32> = (0..96).map(|i| (i % 37) as u32).collect();
+    let rep_cfg = RepetitionConfig::default();
+    g.run("repetition detect len=96", &cfg, || {
+        std::hint::black_box(detect(&tokens, &rep_cfg));
+    });
+    g.finish();
+
+    // ---- substrates ----------------------------------------------------
+    let mut g = Group::new("substrates");
+    let doc = r#"{"rows":[{"a":1,"b":[1,2,3],"c":"text"},{"a":2,"b":[4,5,6],"c":"more"}]}"#;
+    g.run("json parse 80B", &cfg, || {
+        std::hint::black_box(Json::parse(doc).unwrap());
+    });
+    let parsed = Json::parse(doc).unwrap();
+    g.run("json serialize", &cfg, || {
+        std::hint::black_box(parsed.to_string());
+    });
+    g.finish();
+}

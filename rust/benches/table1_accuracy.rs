@@ -1,0 +1,29 @@
+//! Bench: Table 1 — accuracy under CoT modes, FP16 vs INT8, both scales.
+//! Full-benchmark evaluation unless --quick N.
+//!
+//!     cargo bench --bench table1_accuracy [-- --quick 40]
+
+use pangu_atlas_quant::harness::{table1, Harness};
+use pangu_atlas_quant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut h = match Harness::open(&dir) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("skipping table1 bench (artifacts unavailable): {e}");
+            return;
+        }
+    };
+    // Time-bounded by default: full benchmarks take many minutes on this
+    // 1-core substrate. Pass --full for the complete run, --quick N to tune.
+    h.quick = if args.flag("full") {
+        None
+    } else {
+        Some(args.get("quick").and_then(|q| q.parse().ok()).unwrap_or(32))
+    };
+    let report = table1::run(&mut h).expect("table1");
+    let path = h.write_report("table1", &report).expect("write report");
+    println!("report written: {}", path.display());
+}

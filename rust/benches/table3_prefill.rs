@@ -1,0 +1,23 @@
+//! Bench: Table 3 — prefill latency sweep FP16 vs INT8 across batch sizes.
+//! Regenerates the paper's efficiency table on this substrate.
+//!
+//!     cargo bench --bench table3_prefill
+
+use pangu_atlas_quant::harness::{table3, Harness};
+use pangu_atlas_quant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut h = match Harness::open(&dir) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("skipping table3 bench (artifacts unavailable): {e}");
+            return;
+        }
+    };
+    let iters = args.usize_or("iters", 5);
+    let report = table3::run(&mut h, iters).expect("table3");
+    let path = h.write_report("table3", &report).expect("write report");
+    println!("report written: {}", path.display());
+}

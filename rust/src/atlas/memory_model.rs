@@ -1,0 +1,135 @@
+//! Prefill memory model (Table 3's memory column).
+//!
+//! total(B) = weights + kv(B) + activation workspace(B) + runtime overhead.
+//!
+//! The paper's FP16/INT8 deltas are batch-independent (45.31-39.01 =
+//! 16.84-10.55 ≈ 6.3 GB), i.e. exactly the weight-precision delta — the
+//! model reproduces that structure by construction: only `weight_bytes`
+//! depends on precision (activations/KV remain FP16 on the A2 path, with
+//! INT8 GEMM operands counted in the workspace term).
+
+use super::{AtlasSpec, ModelDims};
+use crate::quant::Precision;
+
+const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryBreakdown {
+    pub weights_gib: f64,
+    pub kv_gib: f64,
+    pub workspace_gib: f64,
+    pub overhead_gib: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total_gib(&self) -> f64 {
+        self.weights_gib + self.kv_gib + self.workspace_gib + self.overhead_gib
+    }
+}
+
+/// Fixed runtime overhead (CANN runtime, graph workspace, collectives).
+const RUNTIME_OVERHEAD_GIB: f64 = 1.6;
+
+/// Activation workspace multiplier: live activation planes per token during
+/// prefill (hidden states, attention score blocks, MLP inner) — calibrated
+/// to the paper's per-batch slope (~0.95 GB/seq at S=2048 for 7B).
+const ACT_PLANES: f64 = 40.0;
+
+pub fn prefill_memory(dims: &ModelDims, precision: Precision, batch: usize) -> MemoryBreakdown {
+    let weights_gib = dims.params * precision.weight_bytes_per_param() / GIB;
+    // KV cache: 2 (K,V) x L x H_kv x Dh x S x 2 bytes (fp16 KV), per sequence.
+    let kv_per_seq =
+        2.0 * dims.n_layers as f64 * (dims.kv_heads * dims.head_dim) as f64 * dims.seq_len as f64
+            * 2.0;
+    let kv_gib = kv_per_seq * batch as f64 / GIB;
+    // Activation workspace: ACT_PLANES live f16 planes of [S, d_model].
+    let ws_per_seq = ACT_PLANES * dims.seq_len as f64 * dims.d_model as f64 * 2.0;
+    // Activation planes stay FP16 on the A2 path regardless of GEMM
+    // precision (the int operand copies replace fp copies one-for-one in
+    // the fused quantize->GEMM->dequant region), so the workspace term is
+    // precision-independent — which is exactly why the paper's FP16-INT8
+    // delta is constant across batch sizes (45.31-39.01 = 16.84-10.55).
+    let workspace_gib = ws_per_seq * batch as f64 / GIB;
+    MemoryBreakdown {
+        weights_gib,
+        kv_gib,
+        workspace_gib,
+        overhead_gib: RUNTIME_OVERHEAD_GIB,
+    }
+}
+
+/// Check a configuration fits the device.
+pub fn fits(spec: &AtlasSpec, dims: &ModelDims, precision: Precision, batch: usize) -> bool {
+    prefill_memory(dims, precision, batch).total_gib() <= spec.hbm_gib
+}
+
+/// Savings percentage of INT8 (or other low-bit) vs FP16 at a batch size.
+pub fn savings_pct(dims: &ModelDims, precision: Precision, batch: usize) -> f64 {
+    let fp = prefill_memory(dims, Precision::Fp16, batch).total_gib();
+    let q = prefill_memory(dims, precision, batch).total_gib();
+    100.0 * (fp - q) / fp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B7: fn() -> ModelDims = ModelDims::openpangu_7b;
+
+    #[test]
+    fn weight_delta_is_batch_independent() {
+        // The paper's structural property: FP16-INT8 delta constant in B.
+        let d = B7();
+        let delta2 = prefill_memory(&d, Precision::Fp16, 2).total_gib()
+            - prefill_memory(&d, Precision::Int8, 2).total_gib();
+        let delta32 = prefill_memory(&d, Precision::Fp16, 32).total_gib()
+            - prefill_memory(&d, Precision::Int8, 32).total_gib();
+        assert!((delta2 - delta32).abs() < 0.5, "{delta2} vs {delta32}");
+        // ~= params * 1 byte ≈ 6.5 GiB
+        assert!((delta2 - 6.5).abs() < 1.0, "delta {delta2}");
+    }
+
+    #[test]
+    fn totals_in_paper_band() {
+        // Not exact-match targets — the published endpoints ± tolerance.
+        let d = B7();
+        let fp32b = prefill_memory(&d, Precision::Fp16, 32).total_gib();
+        let i8_32b = prefill_memory(&d, Precision::Int8, 32).total_gib();
+        assert!((fp32b - 45.31).abs() < 5.0, "fp16@32 {fp32b}");
+        assert!((i8_32b - 39.01).abs() < 5.0, "int8@32 {i8_32b}");
+        let fp2 = prefill_memory(&d, Precision::Fp16, 2).total_gib();
+        let i8_2 = prefill_memory(&d, Precision::Int8, 2).total_gib();
+        assert!((fp2 - 16.84).abs() < 3.0, "fp16@2 {fp2}");
+        assert!((i8_2 - 10.55).abs() < 3.0, "int8@2 {i8_2}");
+    }
+
+    #[test]
+    fn savings_grow_as_batch_shrinks() {
+        let d = B7();
+        let s2 = savings_pct(&d, Precision::Int8, 2);
+        let s32 = savings_pct(&d, Precision::Int8, 32);
+        assert!(s2 > s32, "savings: b2 {s2} <= b32 {s32}");
+        assert!((s2 - 37.3).abs() < 8.0, "b2 savings {s2} vs paper 37.3");
+        assert!(s32 > 8.0 && s32 < 20.0, "b32 savings {s32} vs paper ~13.9");
+    }
+
+    #[test]
+    fn w4a8_saves_more_than_int8() {
+        let d = B7();
+        for b in [2usize, 8, 32] {
+            assert!(
+                savings_pct(&d, Precision::W4A8, b) > savings_pct(&d, Precision::Int8, b),
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fits_device() {
+        let spec = AtlasSpec::default();
+        let d = B7();
+        assert!(fits(&spec, &d, Precision::Fp16, 32));
+        assert!(fits(&spec, &d, Precision::Int8, 32));
+        assert!(!fits(&spec, &d, Precision::Fp16, 64)); // would blow HBM
+    }
+}

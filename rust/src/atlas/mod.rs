@@ -1,0 +1,77 @@
+//! Analytical Atlas A2 (Ascend 910B-class) model.
+//!
+//! The physical NPU is unavailable in this reproduction (DESIGN.md §2), so
+//! Table 3's *memory* column and the expected NPU *speedup shape* are
+//! produced by this first-principles model at true openPangu-Embedded-7B
+//! dimensions, while the latency column is *measured* on the CPU-PJRT
+//! substrate. The model is calibrated against the paper's published
+//! endpoints and validated by unit tests on the trends (savings grow as
+//! batch shrinks; speedup grows with batch).
+
+pub mod memory_model;
+pub mod perf_model;
+
+/// Atlas A2 hardware constants (Ascend 910B-class, public figures).
+#[derive(Debug, Clone, Copy)]
+pub struct AtlasSpec {
+    /// HBM capacity in GiB.
+    pub hbm_gib: f64,
+    /// HBM bandwidth in GB/s.
+    pub hbm_gbps: f64,
+    /// Cube-unit FP16 throughput in TFLOPS.
+    pub fp16_tflops: f64,
+    /// Cube-unit INT8 throughput in TOPS.
+    pub int8_tops: f64,
+}
+
+impl Default for AtlasSpec {
+    fn default() -> Self {
+        AtlasSpec {
+            hbm_gib: 64.0,
+            hbm_gbps: 1600.0,
+            fp16_tflops: 376.0,
+            int8_tops: 752.0,
+        }
+    }
+}
+
+/// True openPangu-Embedded-7B architecture scale (the dimensions the paper
+/// deploys; our serving substrate runs the simulated scales instead).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub params: f64,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (GQA): openPangu-Embedded uses grouped-query attention.
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// Prefill sequence length used in the efficiency evaluation.
+    pub seq_len: usize,
+}
+
+impl ModelDims {
+    pub fn openpangu_7b() -> ModelDims {
+        ModelDims {
+            params: 7.0e9,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            seq_len: 2048,
+        }
+    }
+
+    pub fn openpangu_1b() -> ModelDims {
+        ModelDims {
+            params: 1.0e9,
+            n_layers: 20,
+            d_model: 2048,
+            n_heads: 16,
+            kv_heads: 4,
+            head_dim: 128,
+            seq_len: 2048,
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Prefill-latency roofline model (Table 3's speedup shape on the NPU).
+//!
+//! time(B) = max(compute, weight traffic + activation traffic) + fixed
+//! non-GEMM overhead (attention softmax, norms, kernel launch). INT8 doubles
+//! cube throughput and halves weight traffic; the overhead term is
+//! precision-independent — which is exactly why the paper's speedup grows
+//! with batch (1.2x at B=2 -> 1.5x at B=32): at small batch the shared
+//! overhead and weight streaming dominate.
+
+use super::{AtlasSpec, ModelDims};
+use crate::quant::Precision;
+
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyBreakdown {
+    pub compute_ms: f64,
+    pub memory_ms: f64,
+    pub overhead_ms: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_ms(&self) -> f64 {
+        self.compute_ms.max(self.memory_ms) + self.overhead_ms
+    }
+}
+
+/// Fraction of prefill work that stays FP16 regardless of GEMM precision
+/// (attention score/softmax/context path + norms), as a fraction of the
+/// FP16 GEMM compute time at the same batch.
+const NONQUANT_FRACTION: f64 = 0.35;
+
+/// Fixed per-launch overhead in milliseconds (graph launch, host sync).
+const LAUNCH_MS: f64 = 12.0;
+
+/// Achievable fraction of peak (cube efficiency on real shapes).
+const MFU: f64 = 0.45;
+
+/// INT8 cube efficiency penalty at small batch: the doubled-rate int8 pipe
+/// needs larger M-tiles to stay fed, so its advantage ramps with batch —
+/// the mechanism behind the paper's 1.2x (B=2) -> 1.5x (B=32) speedup curve.
+fn int8_batch_efficiency(batch: usize) -> f64 {
+    0.62 + 0.38 * (batch.min(32) as f64 / 32.0)
+}
+
+pub fn prefill_latency(
+    spec: &AtlasSpec,
+    dims: &ModelDims,
+    precision: Precision,
+    batch: usize,
+) -> LatencyBreakdown {
+    let tokens = batch as f64 * dims.seq_len as f64;
+    let flops = 2.0 * dims.params * tokens;
+    let peak = match precision {
+        Precision::Fp16 => spec.fp16_tflops * 1e12,
+        // int8 cube path; int4 weights still accumulate via the int8 pipe.
+        _ => spec.int8_tops * 1e12 * int8_batch_efficiency(batch),
+    };
+    let gemm_ms = flops / (peak * MFU) * 1e3;
+    // Non-quantizable FP16 work scales with tokens, independent of GEMM precision.
+    let fp16_peak = spec.fp16_tflops * 1e12;
+    let nonquant_ms = NONQUANT_FRACTION * flops / (fp16_peak * MFU) * 1e3;
+
+    // Memory: weights streamed once per prefill pass + activations.
+    let weight_bytes = dims.params * precision.weight_bytes_per_param();
+    let act_bytes = tokens * dims.d_model as f64 * 2.0 * 24.0; // live planes traffic
+    let memory_ms = (weight_bytes + act_bytes) / (spec.hbm_gbps * 1e9) * 1e3;
+
+    LatencyBreakdown {
+        compute_ms: gemm_ms + nonquant_ms,
+        memory_ms,
+        overhead_ms: LAUNCH_MS,
+    }
+}
+
+/// Speedup of a precision vs FP16 at a batch size.
+pub fn speedup_vs_fp16(spec: &AtlasSpec, dims: &ModelDims, p: Precision, batch: usize) -> f64 {
+    let fp = prefill_latency(spec, dims, Precision::Fp16, batch).total_ms();
+    let q = prefill_latency(spec, dims, p, batch).total_ms();
+    fp / q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> (AtlasSpec, ModelDims) {
+        (AtlasSpec::default(), ModelDims::openpangu_7b())
+    }
+
+    #[test]
+    fn speedup_grows_with_batch() {
+        let (spec, dims) = ctx();
+        let s2 = speedup_vs_fp16(&spec, &dims, Precision::Int8, 2);
+        let s8 = speedup_vs_fp16(&spec, &dims, Precision::Int8, 8);
+        let s32 = speedup_vs_fp16(&spec, &dims, Precision::Int8, 32);
+        assert!(s2 < s8 && s8 < s32, "monotone: {s2} {s8} {s32}");
+    }
+
+    #[test]
+    fn speedup_endpoints_near_paper() {
+        // Paper: ~1.2x at B=2, ~1.5x at B=32.
+        let (spec, dims) = ctx();
+        let s2 = speedup_vs_fp16(&spec, &dims, Precision::Int8, 2);
+        let s32 = speedup_vs_fp16(&spec, &dims, Precision::Int8, 32);
+        assert!((s2 - 1.2).abs() < 0.25, "b2 speedup {s2}");
+        assert!((s32 - 1.5).abs() < 0.3, "b32 speedup {s32}");
+        assert!(s32 > s2 + 0.1);
+    }
+
+    #[test]
+    fn latency_scales_superlinearly_down_with_batch() {
+        let (spec, dims) = ctx();
+        let t2 = prefill_latency(&spec, &dims, Precision::Fp16, 2).total_ms();
+        let t32 = prefill_latency(&spec, &dims, Precision::Fp16, 32).total_ms();
+        assert!(t32 > t2, "{t32} vs {t2}");
+        assert!(t32 < 16.0 * t2, "fixed overhead must amortize");
+    }
+
+    #[test]
+    fn w4a8_not_slower_than_int8() {
+        let (spec, dims) = ctx();
+        for b in [2usize, 32] {
+            let i8t = prefill_latency(&spec, &dims, Precision::Int8, b).total_ms();
+            let w4t = prefill_latency(&spec, &dims, Precision::W4A8, b).total_ms();
+            assert!(w4t <= i8t + 1e-9, "b={b}");
+        }
+    }
+}

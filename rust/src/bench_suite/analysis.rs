@@ -1,0 +1,134 @@
+//! CoT output analyses: length statistics (Fig. 2) and per-run evaluation
+//! records that the table/figure harnesses aggregate.
+
+use super::repetition::{detect, RepetitionConfig, RepetitionReport};
+use super::scoring::Outcome;
+use crate::tokenizer::{CotMode, Tokenizer};
+
+/// Everything recorded about one task's generation in an evaluation run.
+#[derive(Debug, Clone)]
+pub struct GenerationRecord {
+    pub task_id: usize,
+    pub mode: CotMode,
+    pub outcome: Outcome,
+    pub tokens: Vec<u32>,
+    pub repetition: RepetitionReport,
+    /// Whether the generation contains a TRACE section (reasoning emitted).
+    pub has_trace: bool,
+}
+
+impl GenerationRecord {
+    pub fn new(tk: &Tokenizer, task_id: usize, mode: CotMode, outcome: Outcome,
+               tokens: Vec<u32>) -> GenerationRecord {
+        let repetition = detect(&tokens, &RepetitionConfig::default());
+        let has_trace = tokens.contains(&tk.trace);
+        GenerationRecord { task_id, mode, outcome, tokens, repetition, has_trace }
+    }
+
+    /// "Word count" in the paper's Fig. 2 sense: emitted tokens.
+    pub fn length(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Aggregate over one evaluation run (model x variant x mode x benchmark).
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub n: usize,
+    pub passed: usize,
+    pub malformed: usize,
+    pub total_len: usize,
+    pub repetitive: usize,
+    pub with_trace: usize,
+    pub rep_passed: usize,
+    pub nonrep_passed: usize,
+}
+
+impl RunSummary {
+    pub fn add(&mut self, r: &GenerationRecord) {
+        self.n += 1;
+        self.total_len += r.length();
+        let passed = r.outcome.passed();
+        self.passed += passed as usize;
+        self.malformed += matches!(r.outcome, Outcome::Malformed) as usize;
+        self.with_trace += r.has_trace as usize;
+        if r.repetition.repetitive {
+            self.repetitive += 1;
+            self.rep_passed += passed as usize;
+        } else {
+            self.nonrep_passed += passed as usize;
+        }
+    }
+
+    pub fn from_records(records: &[GenerationRecord]) -> RunSummary {
+        let mut s = RunSummary::default();
+        for r in records {
+            s.add(r);
+        }
+        s
+    }
+
+    pub fn accuracy_pct(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { 100.0 * self.passed as f64 / self.n as f64 }
+    }
+
+    pub fn avg_length(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.total_len as f64 / self.n as f64 }
+    }
+
+    pub fn repetition_pct(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { 100.0 * self.repetitive as f64 / self.n as f64 }
+    }
+
+    pub fn trace_pct(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { 100.0 * self.with_trace as f64 / self.n as f64 }
+    }
+
+    pub fn rep_accuracy_pct(&self) -> f64 {
+        if self.repetitive == 0 {
+            0.0
+        } else {
+            100.0 * self.rep_passed as f64 / self.repetitive as f64
+        }
+    }
+
+    pub fn nonrep_accuracy_pct(&self) -> f64 {
+        let n = self.n - self.repetitive;
+        if n == 0 { 0.0 } else { 100.0 * self.nonrep_passed as f64 / n as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summary() {
+        let tk = crate::tokenizer::tests::test_tokenizer();
+        let rev = tk.ops["REV"];
+        let clean = GenerationRecord::new(
+            &tk, 0, CotMode::NoThink, Outcome::Pass, vec![tk.prog, rev, tk.end],
+        );
+        assert!(!clean.repetition.repetitive);
+        assert!(!clean.has_trace);
+        assert_eq!(clean.length(), 3);
+
+        let mut loop_toks = vec![tk.trace, tk.step, rev];
+        loop_toks.extend(std::iter::repeat(tk.digit(3)).take(6));
+        let looping = GenerationRecord::new(
+            &tk, 1, CotMode::SlowThink, Outcome::Malformed, loop_toks,
+        );
+        assert!(looping.repetition.repetitive);
+        assert!(looping.has_trace);
+
+        let s = RunSummary::from_records(&[clean, looping]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.passed, 1);
+        assert_eq!(s.malformed, 1);
+        assert!((s.accuracy_pct() - 50.0).abs() < 1e-9);
+        assert!((s.repetition_pct() - 50.0).abs() < 1e-9);
+        assert!((s.trace_pct() - 50.0).abs() < 1e-9);
+        assert_eq!(s.rep_accuracy_pct(), 0.0);
+        assert_eq!(s.nonrep_accuracy_pct(), 100.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Benchmark dataset loading (HumanEval-S / MBPP-S JSON produced by
+//! python/compile/taskgen.py).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One benchmark task: prompt examples shown to the model, held-out tests
+/// used for pass@1 scoring, and the reference program (diagnostics only —
+/// scoring is purely execution-based).
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: usize,
+    pub examples: Vec<(Vec<u8>, Vec<u8>)>,
+    pub tests: Vec<(Vec<u8>, Vec<u8>)>,
+    pub reference: Vec<String>,
+    pub hard: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Benchmark {
+    pub name: String,
+    pub seq_len: usize,
+    pub tasks: Vec<Task>,
+}
+
+fn parse_pairs(v: &Json) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("pair list not an array"))?
+        .iter()
+        .map(|pair| {
+            let xs = pair
+                .idx(0)
+                .to_u32_vec()
+                .ok_or_else(|| anyhow!("bad input vector"))?;
+            let ys = pair
+                .idx(1)
+                .to_u32_vec()
+                .ok_or_else(|| anyhow!("bad output vector"))?;
+            Ok((
+                xs.into_iter().map(|v| v as u8).collect(),
+                ys.into_iter().map(|v| v as u8).collect(),
+            ))
+        })
+        .collect()
+}
+
+impl Benchmark {
+    pub fn from_json(j: &Json) -> Result<Benchmark> {
+        let name = j.req_str("name")?.to_string();
+        let seq_len = j.req_usize("seq_len")?;
+        let tasks = j
+            .req_arr("tasks")?
+            .iter()
+            .map(|t| {
+                Ok(Task {
+                    id: t.req_usize("id")?,
+                    examples: parse_pairs(t.get("examples"))?,
+                    tests: parse_pairs(t.get("tests"))?,
+                    reference: t
+                        .req_arr("program")?
+                        .iter()
+                        .map(|o| {
+                            o.as_str()
+                                .map(String::from)
+                                .ok_or_else(|| anyhow!("bad op name"))
+                        })
+                        .collect::<Result<_>>()?,
+                    hard: t.get("hard").as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Benchmark { name, seq_len, tasks })
+    }
+
+    pub fn load(path: &Path) -> Result<Benchmark> {
+        Benchmark::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Sanity validation: every example/test pair must be consistent with
+    /// the reference program under the Rust VM — the cross-language golden
+    /// check tying vm.rs to the Python interpreter.
+    pub fn validate(&self) -> Result<()> {
+        use super::vm::Program;
+        for task in &self.tasks {
+            let prog = Program::parse(&task.reference)?;
+            for (xs, ys) in task.examples.iter().chain(&task.tests) {
+                let got = prog.run(xs, 16)?;
+                if &got != ys {
+                    return Err(anyhow!(
+                        "task {}: reference program disagrees with dataset ({:?} -> {:?}, expected {:?})",
+                        task.id, xs, got, ys
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "name": "mini", "seq_len": 5, "mod": 16,
+              "tasks": [
+                {"id": 0, "program": ["REV"], "hard": false,
+                 "examples": [[[1,2,3,4,5],[5,4,3,2,1]]],
+                 "tests": [[[0,0,1,2,3],[3,2,1,0,0]]]},
+                {"id": 1, "program": ["ADD1","SORT"], "hard": true,
+                 "examples": [[[3,1,2,5,4],[2,3,4,5,6]]],
+                 "tests": [[[15,0,1,2,3],[0,1,2,3,4]]]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let b = Benchmark::from_json(&sample_json()).unwrap();
+        assert_eq!(b.name, "mini");
+        assert_eq!(b.tasks.len(), 2);
+        assert_eq!(b.tasks[1].reference, vec!["ADD1", "SORT"]);
+        assert!(b.tasks[1].hard);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_inconsistency() {
+        let mut b = Benchmark::from_json(&sample_json()).unwrap();
+        b.tasks[0].tests[0].1 = vec![9, 9, 9, 9, 9];
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Benchmark::from_json(&Json::parse(r#"{"name":"x"}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark substrate: MiniLang VM, dataset loading, pass@1 scoring, and
+//! the CoT analyses (output length, repetitive generation) behind the
+//! paper's Fig. 2 / Fig. 4.
+
+pub mod analysis;
+pub mod dataset;
+pub mod repetition;
+pub mod scoring;
+pub mod vm;

@@ -1,0 +1,168 @@
+//! Repetitive-generation detector (paper Sec. 4.4 / Fig. 4).
+//!
+//! The paper defines repetitive generation as "terminal output segments
+//! containing identical phrases repeated until sequence termination". The
+//! detector finds the shortest period p such that the generation's tail is
+//! (at least `min_repeats`) consecutive copies of its last-p-token phrase.
+
+/// Detection parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RepetitionConfig {
+    /// Longest phrase length considered.
+    pub max_period: usize,
+    /// Minimum consecutive copies (including the final one) to count.
+    pub min_repeats: usize,
+}
+
+impl Default for RepetitionConfig {
+    fn default() -> Self {
+        RepetitionConfig { max_period: 8, min_repeats: 3 }
+    }
+}
+
+/// Result of scanning one generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepetitionReport {
+    pub repetitive: bool,
+    /// Phrase length of the detected repetition (0 if none).
+    pub period: usize,
+    /// Number of consecutive terminal copies.
+    pub repeats: usize,
+}
+
+/// Scan a generation's token ids. The trailing PAD/END markers should be
+/// stripped by the caller (the engine hands us the raw emitted tokens).
+pub fn detect(tokens: &[u32], cfg: &RepetitionConfig) -> RepetitionReport {
+    let n = tokens.len();
+    for period in 1..=cfg.max_period.min(n / cfg.min_repeats) {
+        let phrase = &tokens[n - period..];
+        // Degenerate all-same-token phrases of period>1 are found at period 1.
+        let mut repeats = 1;
+        let mut end = n - period;
+        while end >= period && &tokens[end - period..end] == phrase {
+            repeats += 1;
+            end -= period;
+        }
+        if repeats >= cfg.min_repeats {
+            return RepetitionReport { repetitive: true, period, repeats };
+        }
+    }
+    RepetitionReport { repetitive: false, period: 0, repeats: 0 }
+}
+
+/// Fig. 4 aggregation: repetition frequency + the accuracy split between
+/// repetitive and non-repetitive samples.
+#[derive(Debug, Clone, Default)]
+pub struct RepetitionStats {
+    pub total: usize,
+    pub repetitive: usize,
+    pub rep_passed: usize,
+    pub nonrep_passed: usize,
+}
+
+impl RepetitionStats {
+    pub fn add(&mut self, repetitive: bool, passed: bool) {
+        self.total += 1;
+        if repetitive {
+            self.repetitive += 1;
+            self.rep_passed += passed as usize;
+        } else {
+            self.nonrep_passed += passed as usize;
+        }
+    }
+
+    /// Percentage of samples exhibiting repetitive generation.
+    pub fn ratio_pct(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.repetitive as f64 / self.total as f64
+        }
+    }
+
+    /// Accuracy among repetitive samples (paper: 18.24%).
+    pub fn rep_accuracy_pct(&self) -> f64 {
+        if self.repetitive == 0 {
+            0.0
+        } else {
+            100.0 * self.rep_passed as f64 / self.repetitive as f64
+        }
+    }
+
+    /// Accuracy among non-repetitive samples (paper: 87.39%).
+    pub fn nonrep_accuracy_pct(&self) -> f64 {
+        let n = self.total - self.repetitive;
+        if n == 0 {
+            0.0
+        } else {
+            100.0 * self.nonrep_passed as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RepetitionConfig {
+        RepetitionConfig::default()
+    }
+
+    #[test]
+    fn detects_single_token_loop() {
+        let r = detect(&[1, 2, 3, 7, 7, 7, 7, 7], &cfg());
+        assert!(r.repetitive);
+        assert_eq!(r.period, 1);
+        assert_eq!(r.repeats, 5);
+    }
+
+    #[test]
+    fn detects_phrase_loop() {
+        // phrase (4 5 6) repeated 3x at the tail
+        let r = detect(&[9, 9, 4, 5, 6, 4, 5, 6, 4, 5, 6], &cfg());
+        assert!(r.repetitive);
+        assert_eq!(r.period, 3);
+        assert_eq!(r.repeats, 3);
+    }
+
+    #[test]
+    fn clean_output_not_flagged() {
+        let r = detect(&[1, 2, 3, 4, 5, 6, 7, 8, 9], &cfg());
+        assert!(!r.repetitive);
+    }
+
+    #[test]
+    fn two_copies_not_enough() {
+        let r = detect(&[1, 2, 3, 4, 5, 4, 5], &cfg());
+        assert!(!r.repetitive, "{r:?}");
+    }
+
+    #[test]
+    fn repetition_mid_sequence_not_terminal_is_ignored() {
+        // 7 7 7 7 early, clean tail: the paper's definition is *terminal*.
+        let r = detect(&[7, 7, 7, 7, 1, 2, 3, 4, 5, 6, 8, 9], &cfg());
+        assert!(!r.repetitive);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(!detect(&[], &cfg()).repetitive);
+        assert!(!detect(&[1], &cfg()).repetitive);
+        assert!(!detect(&[1, 1], &cfg()).repetitive); // only 2 repeats
+        assert!(detect(&[1, 1, 1], &cfg()).repetitive);
+    }
+
+    #[test]
+    fn stats_aggregation_matches_paper_shape() {
+        let mut s = RepetitionStats::default();
+        // 2 repetitive (0 passed), 8 clean (7 passed)
+        s.add(true, false);
+        s.add(true, false);
+        for i in 0..8 {
+            s.add(false, i != 0);
+        }
+        assert!((s.ratio_pct() - 20.0).abs() < 1e-9);
+        assert_eq!(s.rep_accuracy_pct(), 0.0);
+        assert!((s.nonrep_accuracy_pct() - 87.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,142 @@
+//! Execution-based pass@1 scoring (the HumanEval protocol): a generation
+//! passes iff the extracted program maps every held-out test input to its
+//! expected output under the MiniLang VM.
+
+use super::dataset::Task;
+use super::vm::Program;
+use crate::tokenizer::Tokenizer;
+
+/// Outcome for one task's generation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Outcome {
+    /// Program extracted and all tests passed.
+    Pass,
+    /// Program extracted but some test failed.
+    WrongAnswer,
+    /// No well-formed program in the generation (missing PROG/END, foreign
+    /// tokens, ran past the budget...).
+    Malformed,
+}
+
+impl Outcome {
+    pub fn passed(&self) -> bool {
+        matches!(self, Outcome::Pass)
+    }
+}
+
+/// Score one generation (token ids of the completion) against a task.
+pub fn score_generation(tk: &Tokenizer, task: &Task, generated: &[u32]) -> Outcome {
+    let Some(op_names) = tk.extract_program(generated) else {
+        return Outcome::Malformed;
+    };
+    let Ok(prog) = Program::parse(&op_names) else {
+        return Outcome::Malformed;
+    };
+    for (xs, ys) in &task.tests {
+        match prog.run(xs, 16) {
+            Ok(got) if &got == ys => {}
+            _ => return Outcome::WrongAnswer,
+        }
+    }
+    Outcome::Pass
+}
+
+/// Aggregate accuracy over (task, generation) pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Score {
+    pub total: usize,
+    pub passed: usize,
+    pub wrong: usize,
+    pub malformed: usize,
+}
+
+impl Score {
+    pub fn add(&mut self, o: &Outcome) {
+        self.total += 1;
+        match o {
+            Outcome::Pass => self.passed += 1,
+            Outcome::WrongAnswer => self.wrong += 1,
+            Outcome::Malformed => self.malformed += 1,
+        }
+    }
+
+    /// pass@1 percentage (the paper's accuracy metric).
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.passed as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::dataset::Benchmark;
+    use crate::util::json::Json;
+
+    fn fixture() -> (Tokenizer, Task) {
+        let tk = crate::tokenizer::tests::test_tokenizer();
+        let b = Benchmark::from_json(
+            &Json::parse(
+                r#"{"name":"x","seq_len":5,"tasks":[
+                  {"id":0,"program":["REV"],"hard":false,
+                   "examples":[[[1,2,3,4,5],[5,4,3,2,1]]],
+                   "tests":[[[0,1,2,3,4],[4,3,2,1,0]],[[9,8,7,6,5],[5,6,7,8,9]]]}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        (tk, b.tasks[0].clone())
+    }
+
+    #[test]
+    fn pass_on_correct_program() {
+        let (tk, task) = fixture();
+        let gen = vec![tk.prog, tk.ops["REV"], tk.end];
+        assert_eq!(score_generation(&tk, &task, &gen), Outcome::Pass);
+    }
+
+    #[test]
+    fn equivalent_program_also_passes() {
+        // Execution-based scoring accepts any functionally correct program.
+        let (tk, task) = fixture();
+        let gen = vec![tk.prog, tk.ops["REV"], tk.ops["REV"], tk.ops["REV"], tk.end];
+        assert_eq!(score_generation(&tk, &task, &gen), Outcome::Pass);
+    }
+
+    #[test]
+    fn wrong_answer_on_incorrect_program() {
+        let (tk, task) = fixture();
+        let gen = vec![tk.prog, tk.ops["SORT"], tk.end];
+        assert_eq!(score_generation(&tk, &task, &gen), Outcome::WrongAnswer);
+    }
+
+    #[test]
+    fn malformed_without_prog_or_end() {
+        let (tk, task) = fixture();
+        assert_eq!(score_generation(&tk, &task, &[tk.end]), Outcome::Malformed);
+        let no_end = vec![tk.prog, tk.ops["REV"]];
+        assert_eq!(score_generation(&tk, &task, &no_end), Outcome::Malformed);
+    }
+
+    #[test]
+    fn trace_prefix_is_ignored_by_scorer() {
+        let (tk, task) = fixture();
+        let mut gen = vec![tk.trace, tk.step, tk.ops["SORT"], tk.digit(1), tk.endtrace];
+        gen.extend([tk.prog, tk.ops["REV"], tk.end]);
+        assert_eq!(score_generation(&tk, &task, &gen), Outcome::Pass);
+    }
+
+    #[test]
+    fn score_aggregation() {
+        let mut s = Score::default();
+        s.add(&Outcome::Pass);
+        s.add(&Outcome::Pass);
+        s.add(&Outcome::WrongAnswer);
+        s.add(&Outcome::Malformed);
+        assert_eq!(s.total, 4);
+        assert!((s.accuracy() - 50.0).abs() < 1e-9);
+    }
+}

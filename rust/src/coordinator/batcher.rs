@@ -1,0 +1,184 @@
+//! Dynamic batcher: groups queued requests into waves.
+//!
+//! Policy: a wave launches when (a) the queue can fill the largest bucket,
+//! or (b) the oldest queued request has waited past `max_wait`, or (c)
+//! `flush()` is forced (drain at shutdown / offline eval). The bucket chosen
+//! is the largest configured bucket <= queue length, falling back to the
+//! smallest bucket padded with inactive slots.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Request;
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Batch buckets available from the AOT export (sorted ascending).
+    pub buckets: Vec<usize>,
+    /// Deadline: launch a partial wave once the head request is this old.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { buckets: vec![1, 8], max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// A formed wave: `requests.len() <= bucket`; the engine pads the rest.
+#[derive(Debug)]
+pub struct Wave {
+    pub bucket: usize,
+    pub requests: Vec<Request>,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(!cfg.buckets.is_empty(), "batcher needs at least one bucket");
+        let mut cfg = cfg;
+        cfg.buckets.sort_unstable();
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn largest_bucket(&self) -> usize {
+        *self.cfg.buckets.last().unwrap()
+    }
+
+    /// Bucket for `n` requests: smallest bucket >= n, else the largest.
+    fn bucket_for(&self, n: usize) -> usize {
+        self.cfg
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.largest_bucket())
+    }
+
+    /// Try to form a wave under the launch policy. `now` is injected for
+    /// testability.
+    pub fn poll(&mut self, now: Instant) -> Option<Wave> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.largest_bucket();
+        let stale = now.duration_since(self.queue.front().unwrap().arrived) >= self.cfg.max_wait;
+        if full || stale {
+            Some(self.take_wave())
+        } else {
+            None
+        }
+    }
+
+    /// Force-launch whatever is queued (offline eval / shutdown drain).
+    pub fn flush(&mut self) -> Option<Wave> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.take_wave())
+        }
+    }
+
+    fn take_wave(&mut self) -> Wave {
+        let n = self.queue.len().min(self.largest_bucket());
+        let bucket = self.bucket_for(n);
+        let take = n.min(bucket);
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        Wave { bucket, requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::CotMode;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, "7b-sim", "int8", CotMode::NoThink, vec![])
+    }
+
+    fn batcher(buckets: &[usize], wait_ms: u64) -> Batcher {
+        Batcher::new(BatcherConfig {
+            buckets: buckets.to_vec(),
+            max_wait: Duration::from_millis(wait_ms),
+        })
+    }
+
+    #[test]
+    fn full_bucket_launches_immediately() {
+        let mut b = batcher(&[1, 4], 1000);
+        for i in 0..4 {
+            b.push(req(i));
+        }
+        let w = b.poll(Instant::now()).expect("wave");
+        assert_eq!(w.bucket, 4);
+        assert_eq!(w.requests.len(), 4);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn partial_wave_waits_for_deadline() {
+        let mut b = batcher(&[1, 4], 50);
+        b.push(req(0));
+        b.push(req(1));
+        assert!(b.poll(Instant::now()).is_none(), "must wait");
+        let later = Instant::now() + Duration::from_millis(60);
+        let w = b.poll(later).expect("deadline wave");
+        assert_eq!(w.requests.len(), 2);
+        assert_eq!(w.bucket, 4, "smallest bucket >= 2");
+    }
+
+    #[test]
+    fn single_request_uses_smallest_fitting_bucket() {
+        let mut b = batcher(&[1, 8], 0);
+        b.push(req(0));
+        let w = b.poll(Instant::now()).unwrap();
+        assert_eq!(w.bucket, 1);
+        assert_eq!(w.requests.len(), 1);
+    }
+
+    #[test]
+    fn excess_queue_leaves_remainder() {
+        let mut b = batcher(&[1, 4], 0);
+        for i in 0..6 {
+            b.push(req(i));
+        }
+        let w = b.poll(Instant::now()).unwrap();
+        assert_eq!(w.requests.len(), 4);
+        assert_eq!(b.queued(), 2);
+        // FIFO order preserved
+        assert_eq!(w.requests[0].id, 0);
+        assert_eq!(w.requests[3].id, 3);
+    }
+
+    #[test]
+    fn flush_drains_partial() {
+        let mut b = batcher(&[1, 8], 100_000);
+        b.push(req(0));
+        b.push(req(1));
+        b.push(req(2));
+        let w = b.flush().unwrap();
+        assert_eq!(w.requests.len(), 3);
+        assert_eq!(w.bucket, 8);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn empty_poll_is_none() {
+        let mut b = batcher(&[1], 0);
+        assert!(b.poll(Instant::now()).is_none());
+    }
+}

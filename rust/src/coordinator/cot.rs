@@ -1,0 +1,113 @@
+//! CoT mode controller: prompt directives and per-mode generation budgets.
+//!
+//! The paper's three reasoning paradigms are selected purely by the prompt
+//! directive (Sec. 4.1: "enabled at inference time by appending the
+//! corresponding directive to the input prompt"); the controller also sizes
+//! the generation budget so slow/auto traces fit in the KV window.
+
+use crate::tokenizer::{CotMode, Tokenizer};
+
+/// Per-mode budget policy.
+#[derive(Debug, Clone, Copy)]
+pub struct CotPolicy {
+    /// Base budget for answer-only generations.
+    pub no_think_budget: usize,
+    /// Budget for trace-bearing generations.
+    pub trace_budget: usize,
+}
+
+impl Default for CotPolicy {
+    fn default() -> Self {
+        // no_think: PROG + <=2 ops + END = 4 tokens (+ margin);
+        // slow/auto: TRACE + 2 x (STEP op 5-digit state) + ENDTRACE +
+        //            PROG ops END <= 24 (+ margin).
+        CotPolicy { no_think_budget: 12, trace_budget: 40 }
+    }
+}
+
+impl CotPolicy {
+    /// Max new tokens for a request in `mode`, clamped to KV capacity.
+    pub fn budget(&self, mode: CotMode, prompt_len: usize, max_seq: usize) -> usize {
+        let want = match mode {
+            CotMode::NoThink => self.no_think_budget,
+            // auto_think may or may not trace; budget for the trace case.
+            CotMode::AutoThink | CotMode::SlowThink => self.trace_budget,
+        };
+        want.min(max_seq.saturating_sub(prompt_len + 1))
+    }
+}
+
+/// Build the full prompt ids for a request (directive + examples).
+pub fn build_prompt(
+    tk: &Tokenizer,
+    mode: CotMode,
+    examples: &[(Vec<u8>, Vec<u8>)],
+) -> Vec<u32> {
+    tk.encode_prompt(mode, examples)
+}
+
+/// Classify a finished generation's reasoning shape (Fig. 2 bookkeeping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceShape {
+    /// No TRACE section (direct answer).
+    Direct,
+    /// TRACE ... ENDTRACE then program.
+    Traced,
+    /// TRACE started but never closed (degenerate generation).
+    UnclosedTrace,
+}
+
+pub fn trace_shape(tk: &Tokenizer, tokens: &[u32]) -> TraceShape {
+    let has_open = tokens.contains(&tk.trace);
+    let has_close = tokens.contains(&tk.endtrace);
+    match (has_open, has_close) {
+        (false, _) => TraceShape::Direct,
+        (true, true) => TraceShape::Traced,
+        (true, false) => TraceShape::UnclosedTrace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_by_mode() {
+        let p = CotPolicy::default();
+        assert!(p.budget(CotMode::NoThink, 48, 96) < p.budget(CotMode::SlowThink, 48, 96));
+        assert_eq!(p.budget(CotMode::AutoThink, 48, 96), p.budget(CotMode::SlowThink, 48, 96));
+    }
+
+    #[test]
+    fn budget_clamped_to_kv_window() {
+        let p = CotPolicy::default();
+        // prompt 90 of 96: at most 5 new tokens fit.
+        assert!(p.budget(CotMode::SlowThink, 90, 96) <= 5);
+        assert_eq!(p.budget(CotMode::SlowThink, 96, 96), 0);
+    }
+
+    #[test]
+    fn prompt_carries_directive() {
+        let tk = crate::tokenizer::tests::test_tokenizer();
+        let ex = vec![(vec![1, 2, 3, 4, 5], vec![2, 3, 4, 5, 6])];
+        for mode in CotMode::ALL {
+            let ids = build_prompt(&tk, mode, &ex);
+            assert_eq!(ids[1], tk.mode_token(mode));
+        }
+    }
+
+    #[test]
+    fn trace_shapes() {
+        let tk = crate::tokenizer::tests::test_tokenizer();
+        let rev = tk.ops["REV"];
+        assert_eq!(trace_shape(&tk, &[tk.prog, rev, tk.end]), TraceShape::Direct);
+        assert_eq!(
+            trace_shape(&tk, &[tk.trace, tk.step, rev, tk.endtrace, tk.prog, rev, tk.end]),
+            TraceShape::Traced
+        );
+        assert_eq!(
+            trace_shape(&tk, &[tk.trace, tk.step, rev, rev, rev]),
+            TraceShape::UnclosedTrace
+        );
+    }
+}

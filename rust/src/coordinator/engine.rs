@@ -1,0 +1,309 @@
+//! Generation engine: drives one wave through a [`Backend`].
+//!
+//! The engine owns the serving hot loop:
+//!   prefill -> (readout -> sample -> decode)* -> responses
+//! Finished slots stay in the wave decoding PAD (masked from outputs) until
+//! every slot finishes — the wave-scheduling model documented in mod.rs.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::cot::{self, CotPolicy};
+use crate::coordinator::kv::KvSlots;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::sampling;
+use crate::runtime::backend::Backend;
+use crate::tokenizer::Tokenizer;
+use crate::util::prng::Rng;
+
+/// Per-wave execution report (metrics / batch-efficiency accounting).
+#[derive(Debug, Clone, Default)]
+pub struct WaveReport {
+    pub bucket: usize,
+    pub live: usize,
+    pub decode_steps: usize,
+    /// Sum over slots of steps spent after the slot finished.
+    pub padded_slot_steps: usize,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+impl WaveReport {
+    /// Fraction of slot-steps that carried live tokens (1.0 = no padding
+    /// waste). The wave scheduler's efficiency metric.
+    pub fn batch_efficiency(&self) -> f64 {
+        let total = self.decode_steps * self.bucket;
+        if total == 0 {
+            return 1.0;
+        }
+        let idle = self.padded_slot_steps
+            + self.decode_steps * (self.bucket - self.live);
+        1.0 - idle as f64 / total as f64
+    }
+}
+
+pub struct Engine<'t> {
+    pub tokenizer: &'t Tokenizer,
+    pub policy: CotPolicy,
+}
+
+impl<'t> Engine<'t> {
+    pub fn new(tokenizer: &'t Tokenizer) -> Engine<'t> {
+        Engine { tokenizer, policy: CotPolicy::default() }
+    }
+
+    /// Run one wave to completion. `requests.len()` must be <= bucket.
+    pub fn run_wave<B: Backend>(
+        &self,
+        backend: &mut B,
+        bucket: usize,
+        requests: &[Request],
+    ) -> Result<(Vec<Response>, WaveReport)> {
+        let live = requests.len();
+        anyhow::ensure!(live <= bucket, "wave overflow: {live} > {bucket}");
+        let tk = self.tokenizer;
+        let prompt_len = backend.prompt_len();
+        let max_seq = backend.max_seq();
+        let vocab = backend.vocab();
+        let pad = tk.pad as i32;
+
+        // ---- build padded prompt batch -------------------------------
+        let mut tokens = vec![pad; bucket * prompt_len];
+        let mut lens = vec![1i32; bucket]; // inactive rows: 1-token PAD prompt
+        let mut budgets = vec![0usize; bucket];
+        let mut kv = KvSlots::new(bucket, max_seq);
+        for (slot, req) in requests.iter().enumerate() {
+            let ids = cot::build_prompt(tk, req.mode, &req.examples);
+            anyhow::ensure!(ids.len() <= prompt_len, "prompt exceeds prefill window");
+            for (j, &t) in ids.iter().enumerate() {
+                tokens[slot * prompt_len + j] = t as i32;
+            }
+            lens[slot] = ids.len() as i32;
+            let cap = self.policy.budget(req.mode, ids.len(), max_seq);
+            budgets[slot] = req.params.max_new.min(cap.max(1));
+            let got = kv.allocate(ids.len())?;
+            debug_assert_eq!(got, slot);
+        }
+        for slot in live..bucket {
+            let got = kv.allocate(1)?;
+            debug_assert_eq!(got, slot);
+        }
+
+        // ---- prefill ---------------------------------------------------
+        let t_wave = Instant::now();
+        let mut state = backend.prefill(bucket, &tokens, &lens)?;
+        let prefill_ms = t_wave.elapsed().as_secs_f64() * 1e3;
+
+        // ---- decode loop ----------------------------------------------
+        let mut outputs: Vec<Vec<u32>> = vec![Vec::new(); bucket];
+        let mut truncated = vec![false; bucket];
+        let mut padded_steps = vec![0usize; bucket];
+        let mut rngs: Vec<Rng> = (0..bucket)
+            .map(|s| {
+                requests
+                    .get(s)
+                    .map(|r| Rng::new(r.params.seed ^ r.id))
+                    .unwrap_or_else(|| Rng::new(0))
+            })
+            .collect();
+        // Inactive padding slots are finished from the start.
+        for slot in live..bucket {
+            kv.finish(slot)?;
+        }
+
+        let t_decode = Instant::now();
+        let mut decode_steps = 0usize;
+        loop {
+            // Sample the next token per slot from the state's logits.
+            let logits = backend.logits(&state)?;
+            let mut next = vec![pad; bucket];
+            for slot in 0..bucket {
+                if !matches!(kv.state(slot), crate::coordinator::kv::SlotState::Active { .. }) {
+                    if slot < live {
+                        padded_steps[slot] += 1;
+                    }
+                    continue;
+                }
+                let row = &logits[slot * vocab..(slot + 1) * vocab];
+                let req = &requests[slot];
+                let tok = sampling::sample(
+                    row,
+                    req.params.temperature,
+                    req.params.top_k,
+                    &mut rngs[slot],
+                );
+                outputs[slot].push(tok);
+                next[slot] = tok as i32;
+                let done_end = tok == tk.end;
+                let done_budget = outputs[slot].len() >= budgets[slot];
+                if done_end {
+                    kv.finish(slot)?;
+                } else if done_budget {
+                    truncated[slot] = true;
+                    kv.finish(slot)?;
+                }
+            }
+            if !kv.any_active() {
+                break;
+            }
+            // Advance all still-active slots through one decode step;
+            // finished slots decode PAD at their frozen position.
+            let mut pos = vec![0i32; bucket];
+            for slot in 0..bucket {
+                pos[slot] = kv.position(slot).unwrap_or(1) as i32;
+            }
+            state = backend.decode(state, &next, &pos)?;
+            decode_steps += 1;
+            for slot in 0..bucket {
+                if matches!(kv.state(slot), crate::coordinator::kv::SlotState::Active { .. }) {
+                    let _ = kv.advance(slot)?;
+                }
+            }
+        }
+        let decode_ms = t_decode.elapsed().as_secs_f64() * 1e3;
+
+        // ---- responses -------------------------------------------------
+        let responses = requests
+            .iter()
+            .enumerate()
+            .map(|(slot, req)| Response {
+                id: req.id,
+                tokens: std::mem::take(&mut outputs[slot]),
+                truncated: truncated[slot],
+                latency_ms: req.arrived.elapsed().as_secs_f64() * 1e3,
+                service_ms: t_wave.elapsed().as_secs_f64() * 1e3,
+                padded_steps: padded_steps[slot],
+            })
+            .collect();
+        let report = WaveReport {
+            bucket,
+            live,
+            decode_steps,
+            padded_slot_steps: padded_steps.iter().sum(),
+            prefill_ms,
+            decode_ms,
+        };
+        Ok((responses, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::MockBackend;
+    use crate::tokenizer::CotMode;
+
+    // Vocab convention in these tests: tokenizer built from the shared
+    // test vocab; MockBackend scripts reference its ids.
+
+    fn engine_fixture() -> Tokenizer {
+        crate::tokenizer::tests::test_tokenizer()
+    }
+
+    fn request(tk: &Tokenizer, id: u64, mode: CotMode) -> Request {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+            (vec![2, 2, 3, 3, 4], vec![4, 3, 3, 2, 2]),
+        ];
+        let _ = tk;
+        Request::new(id, "m", "fp16", mode, ex)
+    }
+
+    #[test]
+    fn wave_generates_scripted_completion() {
+        let tk = engine_fixture();
+        let prog = tk.prog;
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![prog, rev, end]);
+        let eng = Engine::new(&tk);
+        let reqs = vec![request(&tk, 1, CotMode::NoThink), request(&tk, 2, CotMode::NoThink)];
+        let (resps, report) = eng.run_wave(&mut be, 8, &reqs).unwrap();
+        assert_eq!(resps.len(), 2);
+        for r in &resps {
+            assert_eq!(r.tokens, vec![prog, rev, end]);
+            assert!(!r.truncated);
+        }
+        assert_eq!(report.live, 2);
+        assert_eq!(report.bucket, 8);
+        // 3 emitted tokens -> 2 decode steps (prefill provides the first).
+        assert_eq!(report.decode_steps, 2);
+    }
+
+    #[test]
+    fn budget_truncation_marks_response() {
+        let tk = engine_fixture();
+        let rev = tk.ops["REV"];
+        // Never emits END: loops REV forever.
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![rev; 500]);
+        let eng = Engine::new(&tk);
+        let mut req = request(&tk, 1, CotMode::NoThink);
+        req.params.max_new = 5;
+        let (resps, _) = eng.run_wave(&mut be, 1, &[req]).unwrap();
+        assert!(resps[0].truncated);
+        assert_eq!(resps[0].tokens.len(), 5);
+    }
+
+    #[test]
+    fn mixed_lengths_drain_correctly() {
+        let tk = engine_fixture();
+        let prog = tk.prog;
+        let end = tk.end;
+        let rev = tk.ops["REV"];
+        let sort = tk.ops["SORT"];
+        // Script depends on prompt content: slow-mode prompts (directive at
+        // index 1) get a longer completion.
+        let slow_tok = tk.mode_token(CotMode::SlowThink) as i32;
+        let trace = tk.trace;
+        let endtrace = tk.endtrace;
+        let step = tk.step;
+        let mut be = MockBackend::new(64, 48, 96, move |prompt: &[i32]| {
+            if prompt.len() > 1 && prompt[1] == slow_tok {
+                vec![trace, step, sort, endtrace, prog, sort, end]
+            } else {
+                vec![prog, rev, end]
+            }
+        });
+        let eng = Engine::new(&tk);
+        let reqs = vec![
+            request(&tk, 1, CotMode::NoThink),
+            request(&tk, 2, CotMode::SlowThink),
+        ];
+        let (resps, report) = eng.run_wave(&mut be, 8, &reqs).unwrap();
+        assert_eq!(resps[0].tokens.len(), 3);
+        assert_eq!(resps[1].tokens.len(), 7);
+        assert_eq!(resps[1].tokens[0], trace);
+        // Short slot idled while the long one decoded.
+        assert!(resps[0].padded_steps > 0);
+        assert_eq!(report.decode_steps, 6);
+        assert!(report.batch_efficiency() < 1.0);
+    }
+
+    #[test]
+    fn empty_bucket_slots_do_not_emit() {
+        let tk = engine_fixture();
+        let prog = tk.prog;
+        let end = tk.end;
+        let rev = tk.ops["REV"];
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![prog, rev, end]);
+        let eng = Engine::new(&tk);
+        let reqs = vec![request(&tk, 9, CotMode::NoThink)];
+        let (resps, report) = eng.run_wave(&mut be, 8, &reqs).unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(report.live, 1);
+        assert!(report.batch_efficiency() < 0.5, "7 of 8 slots idle");
+    }
+
+    #[test]
+    fn wave_overflow_rejected() {
+        let tk = engine_fixture();
+        let prog = tk.prog;
+        let end = tk.end;
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![prog, end]);
+        let eng = Engine::new(&tk);
+        let reqs: Vec<Request> = (0..3).map(|i| request(&tk, i, CotMode::NoThink)).collect();
+        assert!(eng.run_wave(&mut be, 2, &reqs).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! KV slot accounting for a batch bucket.
+//!
+//! Tracks, per wave, which batch slots carry live sequences, their current
+//! positions, and the KV window bound — the coordinator-side mirror of the
+//! device-resident cache. Invariants (property-tested): a slot is never
+//! double-allocated, positions never exceed the window, freed slots are
+//! reusable.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    Free,
+    /// Live sequence: next token writes at `pos`.
+    Active { pos: usize },
+    /// Finished but still occupying the wave (decodes PAD until drain).
+    Finished { pos: usize },
+}
+
+/// Slot table for one wave over a fixed batch bucket.
+#[derive(Debug, Clone)]
+pub struct KvSlots {
+    slots: Vec<SlotState>,
+    max_seq: usize,
+}
+
+impl KvSlots {
+    pub fn new(bucket: usize, max_seq: usize) -> KvSlots {
+        KvSlots { slots: vec![SlotState::Free; bucket], max_seq }
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn state(&self, slot: usize) -> SlotState {
+        self.slots[slot]
+    }
+
+    /// Claim a free slot for a sequence whose prompt occupies [0, prompt_len).
+    pub fn allocate(&mut self, prompt_len: usize) -> Result<usize> {
+        if prompt_len >= self.max_seq {
+            bail!("prompt {prompt_len} exceeds KV window {}", self.max_seq);
+        }
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if matches!(s, SlotState::Free) {
+                *s = SlotState::Active { pos: prompt_len };
+                return Ok(i);
+            }
+        }
+        bail!("no free KV slot in bucket of {}", self.slots.len());
+    }
+
+    /// Advance an active slot by one decoded token; returns false when the
+    /// window is exhausted (caller must finish the sequence).
+    pub fn advance(&mut self, slot: usize) -> Result<bool> {
+        match self.slots[slot] {
+            SlotState::Active { pos } => {
+                let next = pos + 1;
+                if next >= self.max_seq {
+                    self.slots[slot] = SlotState::Finished { pos };
+                    Ok(false)
+                } else {
+                    self.slots[slot] = SlotState::Active { pos: next };
+                    Ok(true)
+                }
+            }
+            other => bail!("advance on non-active slot {slot}: {other:?}"),
+        }
+    }
+
+    pub fn position(&self, slot: usize) -> Option<usize> {
+        match self.slots[slot] {
+            SlotState::Active { pos } | SlotState::Finished { pos } => Some(pos),
+            SlotState::Free => None,
+        }
+    }
+
+    pub fn finish(&mut self, slot: usize) -> Result<()> {
+        match self.slots[slot] {
+            SlotState::Active { pos } => {
+                self.slots[slot] = SlotState::Finished { pos };
+                Ok(())
+            }
+            SlotState::Finished { .. } => Ok(()),
+            SlotState::Free => bail!("finish on free slot {slot}"),
+        }
+    }
+
+    /// Release every slot (wave drained).
+    pub fn reset(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = SlotState::Free;
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, SlotState::Active { .. }))
+            .count()
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.active_count() > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_until_full() {
+        let mut kv = KvSlots::new(3, 96);
+        assert_eq!(kv.allocate(10).unwrap(), 0);
+        assert_eq!(kv.allocate(12).unwrap(), 1);
+        assert_eq!(kv.allocate(9).unwrap(), 2);
+        assert!(kv.allocate(5).is_err());
+        assert_eq!(kv.active_count(), 3);
+    }
+
+    #[test]
+    fn advance_and_window_bound() {
+        let mut kv = KvSlots::new(1, 12);
+        let s = kv.allocate(10).unwrap();
+        assert!(kv.advance(s).unwrap()); // pos 11
+        assert!(!kv.advance(s).unwrap()); // would hit 12 == max_seq -> finished
+        assert_eq!(kv.state(s), SlotState::Finished { pos: 11 });
+        assert!(kv.advance(s).is_err());
+    }
+
+    #[test]
+    fn prompt_too_long_rejected() {
+        let mut kv = KvSlots::new(1, 48);
+        assert!(kv.allocate(48).is_err());
+        assert!(kv.allocate(47).is_ok());
+    }
+
+    #[test]
+    fn finish_and_reset() {
+        let mut kv = KvSlots::new(2, 96);
+        let a = kv.allocate(5).unwrap();
+        kv.finish(a).unwrap();
+        assert!(!kv.any_active());
+        assert!(kv.finish(a).is_ok()); // idempotent
+        kv.reset();
+        assert_eq!(kv.state(a), SlotState::Free);
+        assert!(kv.finish(a).is_err());
+        assert_eq!(kv.allocate(5).unwrap(), 0); // reusable
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving metrics registry: counters + latency records, rendered as a
+//! text report (the stack has no external metrics sink in this environment).
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.samples.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        self.samples.get(name).filter(|v| !v.is_empty()).map(|v| Summary::of(v))
+    }
+
+    /// Throughput helper: counter / elapsed seconds.
+    pub fn rate(&self, name: &str, elapsed_s: f64) -> f64 {
+        if elapsed_s <= 0.0 {
+            0.0
+        } else {
+            self.counter(name) as f64 / elapsed_s
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("--- metrics ---\n");
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<36} {v}\n"));
+        }
+        for (k, v) in &self.samples {
+            if v.is_empty() {
+                continue;
+            }
+            let s = Summary::of(v);
+            out.push_str(&format!(
+                "{k:<36} n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3}\n",
+                s.n, s.mean, s.p50, s.p90, s.p99
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_rates() {
+        let mut m = Metrics::new();
+        m.inc("tokens", 10);
+        m.inc("tokens", 5);
+        assert_eq!(m.counter("tokens"), 15);
+        assert_eq!(m.counter("missing"), 0);
+        assert!((m.rate("tokens", 3.0) - 5.0).abs() < 1e-12);
+        assert_eq!(m.rate("tokens", 0.0), 0.0);
+    }
+
+    #[test]
+    fn summaries() {
+        let mut m = Metrics::new();
+        for v in [1.0, 2.0, 3.0] {
+            m.observe("latency_ms", v);
+        }
+        let s = m.summary("latency_ms").unwrap();
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!(m.summary("nothing").is_none());
+    }
+
+    #[test]
+    fn render_contains_entries() {
+        let mut m = Metrics::new();
+        m.inc("waves", 2);
+        m.observe("wave_ms", 12.5);
+        let r = m.render();
+        assert!(r.contains("waves"));
+        assert!(r.contains("wave_ms"));
+    }
+}

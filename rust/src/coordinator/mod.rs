@@ -1,0 +1,30 @@
+//! L3 serving coordinator — the paper's deployment framework, shaped like a
+//! vLLM-style serving stack specialized for quantized variants:
+//!
+//!   * [`request`]  — request/response types + generation parameters
+//!   * [`cot`]      — CoT mode controller (directive tokens, per-mode budgets)
+//!   * [`sampling`] — greedy / temperature / top-k samplers
+//!   * [`kv`]       — KV slot accounting within a batch bucket
+//!   * [`batcher`]  — dynamic batcher: FIFO + deadline, bucket sizing
+//!   * [`engine`]   — generation engine driving a [`crate::runtime::backend::Backend`]
+//!   * [`server`]   — request loop: channel front-end, per-variant queues
+//!   * [`metrics`]  — counters + latency summaries
+//!
+//! Scheduling model: the flat-state ABI keeps the whole batch's KV in one
+//! device buffer, so scheduling is *wave-based* — the batcher forms a wave
+//! of up to `bucket` requests (mixing CoT modes freely; a wave is bound to
+//! one (model, variant) pair), the engine prefills the wave, decodes until
+//! every slot finishes (finished slots decode PAD tokens that are masked
+//! from outputs), then the next wave starts. Slot-level admission as in
+//! vLLM would need a KV-merge primitive between device states, which the
+//! PJRT buffer ABI does not expose; the trade-off is quantified by the
+//! batch-efficiency metric and discussed in DESIGN.md.
+
+pub mod batcher;
+pub mod cot;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod sampling;
+pub mod server;

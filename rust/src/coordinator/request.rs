@@ -1,0 +1,102 @@
+//! Request / response types for the serving front-end.
+
+use std::time::Instant;
+
+use crate::tokenizer::CotMode;
+
+/// Generation parameters for one request.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    /// Maximum new tokens (the CoT controller caps this per mode).
+    pub max_new: usize,
+    /// Softmax temperature; 0.0 = greedy.
+    pub temperature: f32,
+    /// Top-k truncation when sampling (ignored for greedy).
+    pub top_k: usize,
+    /// Sampling seed (reproducible runs).
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams { max_new: 48, temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+/// A code-generation request: MiniLang I/O examples + a CoT mode.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Target model scale ("1b-sim" / "7b-sim").
+    pub model: String,
+    /// Quantization variant key ("fp16", "int8", ...).
+    pub variant: String,
+    pub mode: CotMode,
+    pub examples: Vec<(Vec<u8>, Vec<u8>)>,
+    pub params: GenParams,
+    /// Enqueue timestamp (latency accounting).
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(
+        id: u64,
+        model: &str,
+        variant: &str,
+        mode: CotMode,
+        examples: Vec<(Vec<u8>, Vec<u8>)>,
+    ) -> Request {
+        Request {
+            id,
+            model: model.to_string(),
+            variant: variant.to_string(),
+            mode,
+            examples,
+            params: GenParams::default(),
+            arrived: Instant::now(),
+        }
+    }
+
+    /// Queue key: requests sharing an engine (model x variant) batch together.
+    pub fn route_key(&self) -> (String, String) {
+        (self.model.clone(), self.variant.clone())
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Emitted tokens (END included when the model emitted it).
+    pub tokens: Vec<u32>,
+    /// True when generation hit the budget instead of emitting END.
+    pub truncated: bool,
+    /// Wall time from enqueue to completion.
+    pub latency_ms: f64,
+    /// Wall time from prefill start to completion (service time).
+    pub service_ms: f64,
+    /// Decode steps spent in the wave while this slot was already finished
+    /// (batch-efficiency diagnostics).
+    pub padded_steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_key_groups_by_model_and_variant() {
+        let a = Request::new(1, "7b-sim", "int8", CotMode::NoThink, vec![]);
+        let b = Request::new(2, "7b-sim", "int8", CotMode::SlowThink, vec![]);
+        let c = Request::new(3, "7b-sim", "fp16", CotMode::NoThink, vec![]);
+        assert_eq!(a.route_key(), b.route_key());
+        assert_ne!(a.route_key(), c.route_key());
+    }
+
+    #[test]
+    fn default_params_are_greedy() {
+        let p = GenParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert!(p.max_new > 0);
+    }
+}

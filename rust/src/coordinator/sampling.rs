@@ -1,0 +1,88 @@
+//! Token samplers over host logits (vocab is 64: host-side sampling costs
+//! nothing relative to a device roundtrip).
+
+use crate::util::prng::Rng;
+
+/// Greedy argmax.
+pub fn greedy(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Temperature + optional top-k sampling. temperature <= 0 reduces to greedy.
+pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        return greedy(logits);
+    }
+    // Top-k mask (0 = no truncation).
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(top_k);
+    }
+    // Softmax over the kept set (max-subtracted for stability).
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - m) / temperature) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)] as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, -2.0, 2.9]), 1);
+        assert_eq!(greedy(&[-5.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0, 10.0, 0.0];
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, 0.0, 0, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0, 5.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, 0.5, 0, &mut rng) == 1)
+            .count();
+        assert!(hits > 190, "hits {hits}");
+    }
+
+    #[test]
+    fn top_k_excludes_tail() {
+        let mut rng = Rng::new(3);
+        let logits = [1.0, 1.1, 0.9, -10.0];
+        for _ in 0..100 {
+            let t = sample(&logits, 2.0, 2, &mut rng);
+            assert!(t == 0 || t == 1, "sampled excluded token {t}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let mut rng = Rng::new(4);
+        let logits = [1.0, 1.2, 0.8];
+        let mut counts = [0usize; 3];
+        for _ in 0..600 {
+            counts[sample(&logits, 5.0, 0, &mut rng) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 100), "{counts:?}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Serving front-end: channel-based request loop over per-(model, variant)
+//! queues — the router + batcher + engine composition.
+//!
+//! Threading model: the PJRT runtime wraps raw device handles that are not
+//! Send, so the server loop runs on the thread that owns the [`Runtime`]
+//! (typically main), while any number of client threads submit requests
+//! through the [`ServerHandle`] channel and block on their per-request
+//! response channel. This replaces the tokio reactor of the reference
+//! architecture (tokio is unavailable offline; DESIGN.md §5).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, Response};
+use crate::runtime::backend::DeviceBackend;
+use crate::runtime::Runtime;
+use crate::tokenizer::Tokenizer;
+
+/// A request paired with its response channel.
+pub struct Envelope {
+    pub request: Request,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Client-side handle (cheap to clone across threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Envelope>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Response>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Envelope { request, reply })
+            .map_err(|_| anyhow::anyhow!("server is gone"))?;
+        Ok(rx)
+    }
+}
+
+pub struct Server<'t> {
+    runtime: Runtime,
+    tokenizer: &'t Tokenizer,
+    batch_cfg: BatcherConfig,
+    rx: mpsc::Receiver<Envelope>,
+    queues: BTreeMap<(String, String), (Batcher, Vec<mpsc::Sender<Response>>)>,
+    pub metrics: Metrics,
+}
+
+impl<'t> Server<'t> {
+    pub fn new(
+        runtime: Runtime,
+        tokenizer: &'t Tokenizer,
+        batch_cfg: BatcherConfig,
+    ) -> (Server<'t>, ServerHandle) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Server {
+                runtime,
+                tokenizer,
+                batch_cfg,
+                rx,
+                queues: BTreeMap::new(),
+                metrics: Metrics::new(),
+            },
+            ServerHandle { tx },
+        )
+    }
+
+    fn enqueue(&mut self, env: Envelope) {
+        let key = env.request.route_key();
+        let cfg = self.batch_cfg.clone();
+        let (batcher, replies) = self
+            .queues
+            .entry(key)
+            .or_insert_with(|| (Batcher::new(cfg), Vec::new()));
+        replies.push(env.reply);
+        batcher.push(env.request);
+        self.metrics.inc("requests_received", 1);
+    }
+
+    /// Run waves until `deadline_idle` passes with no traffic, or the
+    /// submitting side closed. Returns processed-request count.
+    pub fn run_until_idle(&mut self, deadline_idle: Duration) -> Result<usize> {
+        let mut processed = 0usize;
+        let mut last_activity = Instant::now();
+        loop {
+            // Drain incoming envelopes without blocking the decode loop.
+            loop {
+                match self.rx.try_recv() {
+                    Ok(env) => {
+                        self.enqueue(env);
+                        last_activity = Instant::now();
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        // Finish what is queued, then exit.
+                        processed += self.flush_all()?;
+                        return Ok(processed);
+                    }
+                }
+            }
+            // Launch ready waves.
+            let keys: Vec<_> = self.queues.keys().cloned().collect();
+            let mut launched = false;
+            for key in keys {
+                let wave = {
+                    let (batcher, _) = self.queues.get_mut(&key).unwrap();
+                    batcher.poll(Instant::now())
+                };
+                if let Some(wave) = wave {
+                    processed += self.run_wave(&key, wave)?;
+                    launched = true;
+                    last_activity = Instant::now();
+                }
+            }
+            if !launched {
+                if last_activity.elapsed() >= deadline_idle {
+                    processed += self.flush_all()?;
+                    return Ok(processed);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    fn flush_all(&mut self) -> Result<usize> {
+        let mut processed = 0;
+        let keys: Vec<_> = self.queues.keys().cloned().collect();
+        for key in keys {
+            loop {
+                let wave = {
+                    let (batcher, _) = self.queues.get_mut(&key).unwrap();
+                    batcher.flush()
+                };
+                match wave {
+                    Some(w) => processed += self.run_wave(&key, w)?,
+                    None => break,
+                }
+            }
+        }
+        Ok(processed)
+    }
+
+    fn run_wave(
+        &mut self,
+        key: &(String, String),
+        wave: crate::coordinator::batcher::Wave,
+    ) -> Result<usize> {
+        let n = wave.requests.len();
+        let engine = Engine::new(self.tokenizer);
+        let mut backend = DeviceBackend::new(&mut self.runtime, &key.0, &key.1)?;
+        let (responses, report) = engine.run_wave(&mut backend, wave.bucket, &wave.requests)?;
+        self.metrics.inc("waves", 1);
+        self.metrics.inc("requests_served", n as u64);
+        self.metrics
+            .inc("tokens_generated", responses.iter().map(|r| r.tokens.len() as u64).sum());
+        self.metrics.observe("wave_prefill_ms", report.prefill_ms);
+        self.metrics.observe("wave_decode_ms", report.decode_ms);
+        self.metrics.observe("batch_efficiency", report.batch_efficiency());
+        for r in &responses {
+            self.metrics.observe("request_latency_ms", r.latency_ms);
+        }
+        // Deliver responses (repliers were pushed in the same order the
+        // batcher consumed requests: match by id).
+        let (_, replies) = self.queues.get_mut(key).unwrap();
+        let senders: Vec<_> = replies.drain(..n.min(replies.len())).collect();
+        for (resp, tx) in responses.into_iter().zip(senders) {
+            let _ = tx.send(resp); // receiver may have given up; fine
+        }
+        Ok(n)
+    }
+
+    /// Access the runtime after serving (stats, benches).
+    pub fn into_runtime(self) -> Runtime {
+        self.runtime
+    }
+}

@@ -1,0 +1,75 @@
+//! Fig. 2: average CoT output length per benchmark / mode / model /
+//! precision. The paper's claims: quantization barely moves output length;
+//! the 7B model produces consistently shorter traces than the 1B.
+
+use anyhow::Result;
+
+use super::Harness;
+use crate::tokenizer::CotMode;
+use crate::util::json::Json;
+
+pub fn run(h: &mut Harness) -> Result<Json> {
+    println!("\nFig. 2: average output length (tokens) per mode/model/precision");
+    println!("{:-<78}", "");
+    println!(
+        "{:<12} {:<10} {:<10} {:>14} {:>12}",
+        "Benchmark", "Model", "Precision", "no|auto|slow", ""
+    );
+    println!("{:-<78}", "");
+    let mut rows = Vec::new();
+    for bench in ["humaneval_s", "mbpp_s"] {
+        for model in ["1b-sim", "7b-sim"] {
+            for variant in ["fp16", "int8"] {
+                let mut lens = Vec::new();
+                for mode in CotMode::ALL {
+                    lens.push(h.summary(model, variant, mode, bench)?.avg_length());
+                }
+                println!(
+                    "{:<12} {:<10} {:<10} {:>6.1} {:>6.1} {:>6.1}",
+                    bench, model, variant.to_uppercase(), lens[0], lens[1], lens[2]
+                );
+                rows.push(Json::obj(vec![
+                    ("bench", Json::str(bench)),
+                    ("model", Json::str(model)),
+                    ("precision", Json::str(variant)),
+                    ("len_no_think", Json::num(lens[0])),
+                    ("len_auto_think", Json::num(lens[1])),
+                    ("len_slow_think", Json::num(lens[2])),
+                ]));
+            }
+        }
+        println!("{:-<78}", "");
+    }
+    // Shape checks printed for EXPERIMENTS.md: slow > no_think; INT8 ~ FP16.
+    let mut slow_vs_no = Vec::new();
+    let mut int8_shift = Vec::new();
+    for r in &rows {
+        let slow = r.get("len_slow_think").as_f64().unwrap_or(0.0);
+        let no = r.get("len_no_think").as_f64().unwrap_or(0.0);
+        if no > 0.0 {
+            slow_vs_no.push(slow / no);
+        }
+    }
+    for pair in rows.chunks(2) {
+        if let [fp, q] = pair {
+            for key in ["len_no_think", "len_auto_think", "len_slow_think"] {
+                let a = fp.get(key).as_f64().unwrap_or(0.0);
+                let b = q.get(key).as_f64().unwrap_or(0.0);
+                if a > 0.0 {
+                    int8_shift.push((b - a).abs() / a);
+                }
+            }
+        }
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "slow/no length ratio: {:.2}x | mean |INT8-FP16| length shift: {:.1}% (paper: limited effect)",
+        avg(&slow_vs_no),
+        avg(&int8_shift) * 100.0
+    );
+    Ok(Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("slow_over_no", Json::num(avg(&slow_vs_no))),
+        ("int8_length_shift", Json::num(avg(&int8_shift))),
+    ]))
+}

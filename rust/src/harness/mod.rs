@@ -1,0 +1,156 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md §4 experiment index) against the serving stack.
+//!
+//! Each `table*`/`fig*` function prints the paper-shaped rows and returns a
+//! JSON report for EXPERIMENTS.md. Evaluation runs drive the real engine
+//! (waves over the PJRT runtime) with greedy decoding, exactly as the
+//! serving path does.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::bench_suite::analysis::{GenerationRecord, RunSummary};
+use crate::bench_suite::dataset::Benchmark;
+use crate::bench_suite::scoring;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::Request;
+use crate::runtime::backend::DeviceBackend;
+use crate::runtime::Runtime;
+use crate::tokenizer::{CotMode, Tokenizer};
+use crate::util::json::Json;
+
+pub struct Harness {
+    pub runtime: Runtime,
+    pub tokenizer: Tokenizer,
+    pub dir: PathBuf,
+    benchmarks: BTreeMap<String, Benchmark>,
+    /// Cache of evaluation runs keyed by (model, variant, mode, bench).
+    runs: BTreeMap<(String, String, String, String), Vec<GenerationRecord>>,
+    /// Task budget per run (None = full benchmark).
+    pub quick: Option<usize>,
+}
+
+impl Harness {
+    pub fn open(dir: &Path) -> Result<Harness> {
+        let runtime = Runtime::open(dir)?;
+        let tokenizer = Tokenizer::from_manifest(&runtime.manifest.raw)?;
+        let mut benchmarks = BTreeMap::new();
+        for (name, rel) in runtime.manifest.datasets.clone() {
+            let b = Benchmark::load(&dir.join(&rel))
+                .with_context(|| format!("loading benchmark {name}"))?;
+            b.validate()
+                .with_context(|| format!("cross-validating benchmark {name} against the VM"))?;
+            benchmarks.insert(name, b);
+        }
+        Ok(Harness {
+            runtime,
+            tokenizer,
+            dir: dir.to_path_buf(),
+            benchmarks,
+            runs: BTreeMap::new(),
+            quick: None,
+        })
+    }
+
+    pub fn benchmark(&self, name: &str) -> Result<&Benchmark> {
+        self.benchmarks
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("benchmark {name:?} not loaded"))
+    }
+
+    /// Evaluate one (model, variant, mode, bench) cell, cached.
+    pub fn eval(
+        &mut self,
+        model: &str,
+        variant: &str,
+        mode: CotMode,
+        bench: &str,
+    ) -> Result<&Vec<GenerationRecord>> {
+        let key = (
+            model.to_string(),
+            variant.to_string(),
+            mode.name().to_string(),
+            bench.to_string(),
+        );
+        if !self.runs.contains_key(&key) {
+            let records = self.run_eval(model, variant, mode, bench)?;
+            self.runs.insert(key.clone(), records);
+        }
+        Ok(&self.runs[&key])
+    }
+
+    fn run_eval(
+        &mut self,
+        model: &str,
+        variant: &str,
+        mode: CotMode,
+        bench_name: &str,
+    ) -> Result<Vec<GenerationRecord>> {
+        let bench = self.benchmarks[bench_name].clone();
+        let bucket = *self
+            .runtime
+            .manifest
+            .serve_buckets
+            .iter()
+            .max()
+            .unwrap_or(&8);
+        let n = self.quick.map_or(bench.tasks.len(), |q| q.min(bench.tasks.len()));
+        let tk = self.tokenizer.clone();
+        let engine = Engine::new(&tk);
+        let mut records = Vec::with_capacity(n);
+        let t0 = Instant::now();
+        for chunk in bench.tasks[..n].chunks(bucket) {
+            let requests: Vec<Request> = chunk
+                .iter()
+                .map(|task| {
+                    Request::new(task.id as u64, model, variant, mode, task.examples.clone())
+                })
+                .collect();
+            let mut backend = DeviceBackend::new(&mut self.runtime, model, variant)?;
+            let (responses, _) = engine.run_wave(&mut backend, bucket, &requests)?;
+            for (task, resp) in chunk.iter().zip(responses) {
+                let outcome = scoring::score_generation(&tk, task, &resp.tokens);
+                records.push(GenerationRecord::new(
+                    &tk, task.id, mode, outcome, resp.tokens,
+                ));
+            }
+        }
+        crate::log_info!(
+            "harness",
+            "{model}/{variant}/{}/{bench_name}: {n} tasks in {:.1}s -> {:.2}%",
+            mode.name(),
+            t0.elapsed().as_secs_f64(),
+            RunSummary::from_records(&records).accuracy_pct()
+        );
+        Ok(records)
+    }
+
+    pub fn summary(
+        &mut self,
+        model: &str,
+        variant: &str,
+        mode: CotMode,
+        bench: &str,
+    ) -> Result<RunSummary> {
+        Ok(RunSummary::from_records(self.eval(model, variant, mode, bench)?))
+    }
+
+    /// Write a JSON report under <artifacts>/reports/.
+    pub fn write_report(&self, name: &str, report: &Json) -> Result<PathBuf> {
+        let dir = self.dir.join("reports");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, report.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;

@@ -1,0 +1,74 @@
+//! Table 1: accuracy on HumanEval-S / MBPP-S for both model scales under
+//! all three CoT modes, FP16 vs INT8.
+
+use anyhow::Result;
+
+use super::Harness;
+use crate::tokenizer::CotMode;
+use crate::util::json::Json;
+
+pub const MODELS: [&str; 2] = ["1b-sim", "7b-sim"];
+pub const PRECISIONS: [&str; 2] = ["fp16", "int8"];
+pub const BENCHES: [&str; 2] = ["humaneval_s", "mbpp_s"];
+
+pub fn run(h: &mut Harness) -> Result<Json> {
+    println!("\nTable 1: accuracy under CoT modes, FP16 vs INT8 (pass@1 %)");
+    println!("{:-<74}", "");
+    println!(
+        "{:<8} {:<12} {:<10} {:>12} {:>10}",
+        "Model", "CoT Mode", "Precision", "HumanEval-S", "MBPP-S"
+    );
+    println!("{:-<74}", "");
+    let mut rows = Vec::new();
+    for model in MODELS {
+        for mode in CotMode::ALL {
+            for variant in PRECISIONS {
+                let he = h.summary(model, variant, mode, "humaneval_s")?;
+                let mb = h.summary(model, variant, mode, "mbpp_s")?;
+                println!(
+                    "{:<8} {:<12} {:<10} {:>12.2} {:>10.2}",
+                    model,
+                    mode.name(),
+                    variant.to_uppercase(),
+                    he.accuracy_pct(),
+                    mb.accuracy_pct()
+                );
+                rows.push(Json::obj(vec![
+                    ("model", Json::str(model)),
+                    ("mode", Json::str(mode.name())),
+                    ("precision", Json::str(variant)),
+                    ("humaneval_s", Json::num(he.accuracy_pct())),
+                    ("mbpp_s", Json::num(mb.accuracy_pct())),
+                    ("he_n", Json::num(he.n as f64)),
+                    ("mb_n", Json::num(mb.n as f64)),
+                ]));
+            }
+        }
+        println!("{:-<74}", "");
+    }
+    // Retention check (the paper's headline: INT8 keeps >90% of FP16).
+    let mut retention = Vec::new();
+    for model in MODELS {
+        for mode in CotMode::ALL {
+            for bench in BENCHES {
+                let fp = h.summary(model, "fp16", mode, bench)?.accuracy_pct();
+                let q = h.summary(model, "int8", mode, bench)?.accuracy_pct();
+                if fp > 0.0 {
+                    retention.push(q / fp);
+                }
+            }
+        }
+    }
+    let min_ret = retention.iter().copied().fold(f64::INFINITY, f64::min);
+    let avg_ret = retention.iter().sum::<f64>() / retention.len().max(1) as f64;
+    println!(
+        "INT8 accuracy retention vs FP16: mean {:.1}%, min {:.1}% (paper: >90%)",
+        avg_ret * 100.0,
+        min_ret * 100.0
+    );
+    Ok(Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("retention_mean", Json::num(avg_ret)),
+        ("retention_min", Json::num(min_ret)),
+    ]))
+}

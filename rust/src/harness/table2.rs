@@ -1,0 +1,70 @@
+//! Table 2: 7B accuracy under the W4A8 configurations (baseline /
+//! SmoothQuant / Hadamard) vs FP16.
+
+use anyhow::Result;
+
+use super::Harness;
+use crate::tokenizer::CotMode;
+use crate::util::json::Json;
+
+pub const MODEL: &str = "7b-sim";
+pub const PRECISIONS: [&str; 4] = ["fp16", "w4a8", "w4a8_smooth", "w4a8_hadamard"];
+
+pub fn run(h: &mut Harness) -> Result<Json> {
+    println!("\nTable 2: 7b-sim accuracy under W4A8 configurations (pass@1 %)");
+    println!("{:-<74}", "");
+    println!(
+        "{:<12} {:<15} {:>12} {:>10}",
+        "CoT Mode", "Precision", "HumanEval-S", "MBPP-S"
+    );
+    println!("{:-<74}", "");
+    let mut rows = Vec::new();
+    for mode in CotMode::ALL {
+        for variant in PRECISIONS {
+            let he = h.summary(MODEL, variant, mode, "humaneval_s")?;
+            let mb = h.summary(MODEL, variant, mode, "mbpp_s")?;
+            let label = crate::quant::Precision::parse(variant)?.label();
+            println!(
+                "{:<12} {:<15} {:>12.2} {:>10.2}",
+                mode.name(),
+                label,
+                he.accuracy_pct(),
+                mb.accuracy_pct()
+            );
+            rows.push(Json::obj(vec![
+                ("mode", Json::str(mode.name())),
+                ("precision", Json::str(variant)),
+                ("humaneval_s", Json::num(he.accuracy_pct())),
+                ("mbpp_s", Json::num(mb.accuracy_pct())),
+            ]));
+        }
+        println!("{:-<74}", "");
+    }
+    // Shape check: do the calibration-aware variants recover accuracy
+    // relative to baseline W4A8 (averaged over modes and benches)?
+    let avg = |h: &mut Harness, v: &str| -> Result<f64> {
+        let mut acc = 0.0;
+        let mut n = 0.0;
+        for mode in CotMode::ALL {
+            for bench in ["humaneval_s", "mbpp_s"] {
+                acc += h.summary(MODEL, v, mode, bench)?.accuracy_pct();
+                n += 1.0;
+            }
+        }
+        Ok(acc / n)
+    };
+    let base = avg(h, "w4a8")?;
+    let smooth = avg(h, "w4a8_smooth")?;
+    let had = avg(h, "w4a8_hadamard")?;
+    let fp = avg(h, "fp16")?;
+    println!(
+        "averages: FP16 {fp:.2} | W4A8 {base:.2} | +smooth {smooth:.2} | +Hadamard {had:.2}"
+    );
+    Ok(Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("avg_fp16", Json::num(fp)),
+        ("avg_w4a8", Json::num(base)),
+        ("avg_smooth", Json::num(smooth)),
+        ("avg_hadamard", Json::num(had)),
+    ]))
+}

@@ -1,0 +1,96 @@
+//! Table 3: prefill latency + memory across batch sizes, FP16 vs INT8.
+//!
+//! Latency is *measured* on this substrate (CPU PJRT executing the AOT'd
+//! quantized graphs); memory comes from the analytical Atlas A2 model at
+//! true openPangu-7B dimensions plus the measured artifact sizes. The NPU
+//! roofline model's predicted speedups are printed alongside for the
+//! paper-shape comparison (DESIGN.md §4).
+
+use anyhow::Result;
+
+use super::Harness;
+use crate::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
+use crate::quant::Precision;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+pub const MODEL: &str = "7b-sim";
+
+/// Measure mean prefill wall time for one (variant, batch) on the runtime.
+pub fn measure_prefill_ms(
+    h: &mut Harness,
+    variant: &str,
+    batch: usize,
+    iters: usize,
+) -> Result<Summary> {
+    let prompt_len = h.runtime.manifest.prompt_len;
+    let tk = &h.tokenizer;
+    // Representative prompt: a real benchmark task, replicated per slot.
+    let bench = h.benchmark("humaneval_s")?;
+    let ids = tk.encode_prompt(crate::tokenizer::CotMode::NoThink, &bench.tasks[0].examples);
+    let mut tokens = vec![tk.pad as i32; batch * prompt_len];
+    let mut lens = vec![0i32; batch];
+    for b in 0..batch {
+        for (j, &t) in ids.iter().enumerate() {
+            tokens[b * prompt_len + j] = t as i32;
+        }
+        lens[b] = ids.len() as i32;
+    }
+    // Warm up (compile + first exec), then time.
+    let _ = h.runtime.prefill(MODEL, variant, batch, &tokens, &lens)?;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        let state = h.runtime.prefill(MODEL, variant, batch, &tokens, &lens)?;
+        // Force completion the same way at every batch size: fetch logits.
+        let _ = h.runtime.readout(MODEL, &state)?;
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(Summary::of(&samples))
+}
+
+pub fn run(h: &mut Harness, iters: usize) -> Result<Json> {
+    let batches: Vec<usize> = {
+        let mut b = h.runtime.manifest.latency_buckets.clone();
+        b.sort_unstable();
+        b.reverse(); // paper's column order: 32 .. 2
+        b
+    };
+    let spec = AtlasSpec::default();
+    let dims = ModelDims::openpangu_7b();
+
+    println!("\nTable 3: prefill latency (measured, this substrate) + memory (Atlas model)");
+    println!("{:-<100}", "");
+    println!(
+        "{:<10} {:>6} | {:>14} {:>14} {:>9} | {:>12} {:>12} {:>9} | {:>11}",
+        "", "batch", "FP16 ms", "INT8 ms", "speedup", "FP16 GB", "INT8 GB", "saving%", "NPU pred x"
+    );
+    println!("{:-<100}", "");
+    let mut rows = Vec::new();
+    for &b in &batches {
+        let fp = measure_prefill_ms(h, "fp16", b, iters)?;
+        let q = measure_prefill_ms(h, "int8", b, iters)?;
+        let speedup = fp.mean / q.mean;
+        let mem_fp = memory_model::prefill_memory(&dims, Precision::Fp16, b).total_gib();
+        let mem_q = memory_model::prefill_memory(&dims, Precision::Int8, b).total_gib();
+        let saving = 100.0 * (mem_fp - mem_q) / mem_fp;
+        let npu = perf_model::speedup_vs_fp16(&spec, &dims, Precision::Int8, b);
+        println!(
+            "{:<10} {:>6} | {:>14.2} {:>14.2} {:>8.2}x | {:>12.2} {:>12.2} {:>8.1}% | {:>10.2}x",
+            "7b-sim", b, fp.mean, q.mean, speedup, mem_fp, mem_q, saving, npu
+        );
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("fp16_ms", Json::num(fp.mean)),
+            ("int8_ms", Json::num(q.mean)),
+            ("measured_speedup", Json::num(speedup)),
+            ("fp16_mem_gib", Json::num(mem_fp)),
+            ("int8_mem_gib", Json::num(mem_q)),
+            ("mem_saving_pct", Json::num(saving)),
+            ("npu_pred_speedup", Json::num(npu)),
+        ]));
+    }
+    println!("{:-<100}", "");
+    println!("paper endpoints: speedup 1.2x(B=2) -> 1.5x(B=32); memory 45.31->39.01 GB (B=32), 16.84->10.55 GB (B=2)");
+    Ok(Json::obj(vec![("rows", Json::Arr(rows))]))
+}

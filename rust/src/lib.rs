@@ -1,0 +1,14 @@
+//! pangu-atlas-quant: post-training quantization serving stack.
+//!
+//! Reproduction of "Post-Training Quantization of OpenPangu Models for
+//! Efficient Deployment on Atlas A2" as a three-layer Rust + JAX + Pallas
+//! system. See DESIGN.md for the system inventory.
+
+pub mod atlas;
+pub mod bench_suite;
+pub mod coordinator;
+pub mod harness;
+pub mod quant;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;

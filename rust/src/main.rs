@@ -1,0 +1,238 @@
+//! pangu-serve: CLI for the quantized serving stack.
+//!
+//! Subcommands:
+//!   info                         — manifest / artifact summary
+//!   validate                     — artifact + dataset integrity checks
+//!   generate                     — one-off generation for a benchmark task
+//!   serve                        — demo serving loop over synthetic traffic
+//!   repro <exp>                  — regenerate a paper table/figure
+//!                                  (table1|table2|table3|fig1|fig2|fig4|all)
+//! Common flags: --artifacts DIR (default ./artifacts), --quick N,
+//!               --model M, --variant V, --mode MODE, --iters N
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use pangu_atlas_quant::bench_suite::dataset::Benchmark;
+use pangu_atlas_quant::coordinator::batcher::BatcherConfig;
+use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::harness::{self, Harness};
+use pangu_atlas_quant::runtime::Runtime;
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
+use pangu_atlas_quant::util::cli::Args;
+use pangu_atlas_quant::util::json::Json;
+
+const SUBCOMMANDS: [&str; 5] = ["info", "validate", "generate", "serve", "repro"];
+
+fn main() {
+    let args = Args::from_env(&SUBCOMMANDS);
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(args),
+        Some("validate") => validate(args),
+        Some("generate") => generate(args),
+        Some("serve") => serve(args),
+        Some("repro") => repro(args),
+        _ => {
+            println!(
+                "pangu-serve — quantized serving stack for openPangu-style models\n\n\
+                 usage: pangu-serve <info|validate|generate|serve|repro> [flags]\n\
+                 repro experiments: table1 table2 table3 fig1 fig2 fig4 all\n\
+                 flags: --artifacts DIR --quick N --model M --variant V --mode MODE --iters N"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    let m = &rt.manifest;
+    println!("artifacts: {}", artifacts_dir(args).display());
+    for (name, info) in &m.models {
+        println!(
+            "model {name}: d={} L={} H={} ff={} vocab={} params={}",
+            info.d_model, info.n_layers, info.n_heads, info.d_ff, info.vocab, info.params
+        );
+        println!("  variants: {}", m.variants_of(name).join(", "));
+    }
+    println!("serve buckets: {:?}  latency buckets: {:?}", m.serve_buckets, m.latency_buckets);
+    println!("prompt_len {}  max_seq {}", m.prompt_len, m.max_seq);
+    println!("executables: {}", m.executables.len());
+    for (name, rel) in &m.datasets {
+        println!("dataset {name}: {rel}");
+    }
+    Ok(())
+}
+
+fn validate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::open(&dir)?;
+    let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
+    println!("manifest OK: {} executables", rt.manifest.executables.len());
+    println!("tokenizer OK: vocab {}", tk.vocab_size());
+    // Datasets: parse + cross-validate against the Rust VM.
+    for (name, rel) in rt.manifest.datasets.clone() {
+        let b = Benchmark::load(&dir.join(&rel))?;
+        b.validate()?;
+        println!("dataset {name}: {} tasks, VM cross-check OK", b.tasks.len());
+    }
+    // Weights: every referenced bundle must parse.
+    let mut total = 0usize;
+    for e in &rt.manifest.executables {
+        if let Some(key) = &e.weights {
+            let rel = rt.manifest.weight_file(key)?;
+            let ts = pangu_atlas_quant::runtime::weights::read_pten(&dir.join(rel))?;
+            total += ts.len();
+        }
+    }
+    println!("weight bundles OK ({total} tensor references)");
+    // HLO files exist.
+    for e in &rt.manifest.executables {
+        anyhow::ensure!(dir.join(&e.hlo).exists(), "missing HLO {}", e.hlo);
+    }
+    println!("all HLO files present");
+    println!("validate: PASS");
+    Ok(())
+}
+
+fn parse_mode(args: &Args) -> Result<CotMode> {
+    CotMode::parse(args.get_or("mode", "slow_think"))
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut h = Harness::open(&dir)?;
+    let model = args.get_or("model", "7b-sim").to_string();
+    let variant = args.get_or("variant", "int8").to_string();
+    let mode = parse_mode(args)?;
+    let task_id = args.usize_or("task", 0);
+    let bench = h.benchmark(args.get_or("bench", "humaneval_s"))?.clone();
+    let task = bench
+        .tasks
+        .get(task_id)
+        .ok_or_else(|| anyhow!("task {task_id} out of range"))?;
+    println!("task {task_id}: reference program {:?}", task.reference);
+    for (xs, ys) in &task.examples {
+        println!("  example {xs:?} -> {ys:?}");
+    }
+    let tk = h.tokenizer.clone();
+    let engine = pangu_atlas_quant::coordinator::engine::Engine::new(&tk);
+    let req = Request::new(0, &model, &variant, mode, task.examples.clone());
+    let mut backend =
+        pangu_atlas_quant::runtime::backend::DeviceBackend::new(&mut h.runtime, &model, &variant)?;
+    let (resps, report) = engine.run_wave(&mut backend, 1, &[req])?;
+    let resp = &resps[0];
+    println!("\n[{model}/{variant}/{}] generated {} tokens in {:.1} ms:", mode.name(),
+             resp.tokens.len(), report.prefill_ms + report.decode_ms);
+    println!("  {}", tk.render(&resp.tokens));
+    let outcome = pangu_atlas_quant::bench_suite::scoring::score_generation(&tk, task, &resp.tokens);
+    println!("  outcome: {outcome:?}");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::open(&dir)?;
+    let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
+    let buckets = rt.manifest.serve_buckets.clone();
+    let n_req = args.usize_or("requests", 32);
+    let model = args.get_or("model", "7b-sim").to_string();
+    let variant = args.get_or("variant", "int8").to_string();
+    let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["humaneval_s"]))?;
+
+    let (mut server, handle) = Server::new(
+        rt,
+        &tk,
+        BatcherConfig { buckets, max_wait: Duration::from_millis(10) },
+    );
+    // Client thread: submit synthetic traffic drawn from the benchmark.
+    let tasks: Vec<_> = bench.tasks.iter().take(n_req).cloned().collect();
+    let mv = (model.clone(), variant.clone());
+    let client = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for (i, task) in tasks.iter().enumerate() {
+            let mode = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink][i % 3];
+            let req = Request::new(i as u64, &mv.0, &mv.1, mode, task.examples.clone());
+            rxs.push(handle.submit(req).unwrap());
+        }
+        let mut latencies = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            latencies.push(resp.latency_ms);
+        }
+        latencies
+    });
+    let t0 = std::time::Instant::now();
+    let processed = server.run_until_idle(Duration::from_millis(300))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let latencies = client.join().map_err(|_| anyhow!("client panicked"))?;
+    println!("{}", server.metrics.render());
+    let s = pangu_atlas_quant::util::stats::Summary::of(&latencies);
+    println!(
+        "served {processed} requests in {wall:.2}s  ({:.1} req/s, {:.1} tok/s)",
+        processed as f64 / wall,
+        server.metrics.rate("tokens_generated", wall)
+    );
+    println!("request latency ms: mean {:.1} p50 {:.1} p99 {:.1}", s.mean, s.p50, s.p99);
+    Ok(())
+}
+
+fn repro(args: &Args) -> Result<()> {
+    let exp = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let mut h = Harness::open(&artifacts_dir(args))?;
+    if let Some(q) = args.get("quick") {
+        h.quick = Some(q.parse().map_err(|_| anyhow!("--quick expects an integer"))?);
+    }
+    let iters = args.usize_or("iters", 5);
+    let mut reports: Vec<(&str, Json)> = Vec::new();
+    let run_one = |h: &mut Harness, name: &str, iters: usize| -> Result<Json> {
+        match name {
+            "table1" => harness::table1::run(h),
+            "table2" => harness::table2::run(h),
+            "table3" => harness::table3::run(h, iters),
+            "fig1" => harness::fig1::run(h),
+            "fig2" => harness::fig2::run(h),
+            "fig4" => harness::fig4::run(h),
+            _ => Err(anyhow!("unknown experiment {name:?}")),
+        }
+    };
+    if exp == "all" {
+        for name in ["table1", "table2", "table3", "fig1", "fig2", "fig4"] {
+            let r = run_one(&mut h, name, iters)?;
+            reports.push((name, r));
+        }
+    } else {
+        let r = run_one(&mut h, exp, iters)?;
+        reports.push((match exp {
+            "table1" => "table1",
+            "table2" => "table2",
+            "table3" => "table3",
+            "fig1" => "fig1",
+            "fig2" => "fig2",
+            _ => "fig4",
+        }, r));
+    }
+    for (name, r) in &reports {
+        let path = h.write_report(name, r)?;
+        println!("report written: {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! Normalized Walsh–Hadamard transform (paper Eq. 4), Rust twin of the
+//! Pallas butterfly kernel. Used for artifact validation and the Fig. 1
+//! harness; the request path runs the AOT'd kernel.
+
+/// In-place FWHT over the last axis of a row-major [m, d] matrix, then
+/// scale by 1/sqrt(d). d must be a power of two. Sylvester ordering,
+/// identical to kernels/hadamard.py.
+pub fn fwht_rows(x: &mut [f32], m: usize, d: usize) {
+    assert_eq!(x.len(), m * d);
+    assert!(d.is_power_of_two(), "d={d} not a power of two");
+    let norm = 1.0 / (d as f32).sqrt();
+    for row in 0..m {
+        let xs = &mut x[row * d..(row + 1) * d];
+        let mut h = 1;
+        while h < d {
+            let mut base = 0;
+            while base < d {
+                for i in base..base + h {
+                    let a = xs[i];
+                    let b = xs[i + h];
+                    xs[i] = a + b;
+                    xs[i + h] = a - b;
+                }
+                base += 2 * h;
+            }
+            h *= 2;
+        }
+        for v in xs.iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+/// Out-of-place convenience.
+pub fn hadamard(x: &[f32], m: usize, d: usize) -> Vec<f32> {
+    let mut out = x.to_vec();
+    fwht_rows(&mut out, m, d);
+    out
+}
+
+/// Fold the rotation into a [k, n] weight: W' = H W (column-wise transform
+/// along K). Twin of ref.fold_hadamard.
+pub fn fold_into_weight(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert!(k.is_power_of_two());
+    // Transform each column: transpose -> fwht rows -> transpose back.
+    let mut t = vec![0f32; k * n];
+    for row in 0..k {
+        for col in 0..n {
+            t[col * k + row] = w[row * n + col];
+        }
+    }
+    fwht_rows(&mut t, n, k);
+    let mut out = vec![0f32; k * n];
+    for col in 0..n {
+        for row in 0..k {
+            out[row * n + col] = t[col * k + row];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_matrix_definition_d4() {
+        // H4 (Sylvester, normalized) applied to e0..e3 gives columns of H4/2.
+        let mut x = vec![
+            1.0, 0.0, 0.0, 0.0,
+            0.0, 1.0, 0.0, 0.0,
+        ];
+        fwht_rows(&mut x, 2, 4);
+        // H row for e0: all +1/2; for e1: [+,-,+,-]/2
+        assert_eq!(&x[..4], &[0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(&x[4..], &[0.5, -0.5, 0.5, -0.5]);
+    }
+
+    #[test]
+    fn involution() {
+        let mut rng = Rng::new(2);
+        let (m, d) = (3, 64);
+        let x: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let once = hadamard(&x, m, d);
+        let twice = hadamard(&once, m, d);
+        for (a, b) in twice.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn norm_preserved() {
+        let mut rng = Rng::new(4);
+        let d = 128;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let y = hadamard(&x, 1, d);
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        let n1: f32 = y.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn outlier_spreading() {
+        let d = 64;
+        let mut x = vec![0f32; d];
+        x[13] = 80.0;
+        let y = hadamard(&x, 1, d);
+        let expect = 80.0 / (d as f32).sqrt();
+        assert!(y.iter().all(|v| (v.abs() - expect).abs() < 1e-4));
+    }
+
+    #[test]
+    fn fold_equivalence() {
+        // (x H)(H w) == x . w  for every (row, col) pair
+        let mut rng = Rng::new(6);
+        let (k, n) = (32, 8);
+        let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let xh = hadamard(&x, 1, k);
+        let wf = fold_into_weight(&w, k, n);
+        for j in 0..n {
+            let y0: f32 = (0..k).map(|l| x[l] * w[l * n + j]).sum();
+            let y1: f32 = (0..k).map(|l| xh[l] * wf[l * n + j]).sum();
+            assert!((y0 - y1).abs() < 1e-3, "col {j}: {y0} vs {y1}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Symmetric INT8 quantization (paper Eq. 1-2), Rust twin of ref.py.
+
+pub const QMAX: f32 = 127.0;
+pub const EPS: f32 = 1e-8;
+
+/// Per-channel (column) symmetric quantization of a row-major [k, n] matrix.
+/// Returns (q, scales[n]) with dequant(q[i,j]) = q[i,j] * scales[j].
+pub fn quant_weight_per_channel(w: &[f32], k: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    let mut amax = vec![0f32; n];
+    for row in 0..k {
+        for col in 0..n {
+            amax[col] = amax[col].max(w[row * n + col].abs());
+        }
+    }
+    let scales: Vec<f32> = amax.iter().map(|a| a.max(EPS) / QMAX).collect();
+    let mut q = vec![0i8; k * n];
+    for row in 0..k {
+        for col in 0..n {
+            q[row * n + col] = quantize_one(w[row * n + col], scales[col]);
+        }
+    }
+    (q, scales)
+}
+
+/// Per-token (row) symmetric quantization of [m, k] activations.
+pub fn quant_act_per_token(x: &[f32], m: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), m * k);
+    let mut q = vec![0i8; m * k];
+    let mut scales = vec![0f32; m];
+    for row in 0..m {
+        let slice = &x[row * k..(row + 1) * k];
+        let amax = slice.iter().fold(0f32, |a, v| a.max(v.abs()));
+        let s = amax.max(EPS) / QMAX;
+        scales[row] = s;
+        for (j, &v) in slice.iter().enumerate() {
+            q[row * k + j] = quantize_one(v, s);
+        }
+    }
+    (q, scales)
+}
+
+#[inline]
+pub fn quantize_one(v: f32, scale: f32) -> i8 {
+    let q = (v / scale).round();
+    q.clamp(-QMAX, QMAX) as i8
+}
+
+/// Dequantize a per-channel-quantized matrix.
+pub fn dequant_per_channel(q: &[i8], scales: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    for row in 0..k {
+        for col in 0..n {
+            out[row * n + col] = q[row * n + col] as f32 * scales[col];
+        }
+    }
+    out
+}
+
+/// INT8 GEMM with i32 accumulation + per-token x per-channel dequant —
+/// the reference the AOT kernel path is validated against in integration
+/// tests (and the CPU fallback used by the mock runtime).
+pub fn w8a8_matmul(
+    xq: &[i8], xs: &[f32], wq: &[i8], ws: &[f32], m: usize, k: usize, n: usize,
+) -> Vec<f32> {
+    assert_eq!(xq.len(), m * k);
+    assert_eq!(wq.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            for l in 0..k {
+                acc += xq[i * k + l] as i32 * wq[l * n + j] as i32;
+            }
+            out[i * n + j] = acc as f32 * xs[i] * ws[j];
+        }
+    }
+    out
+}
+
+/// Relative Frobenius reconstruction error ||deq - w|| / ||w||.
+pub fn reconstruction_error(w: &[f32], q: &[i8], scales: &[f32], k: usize, n: usize) -> f64 {
+    let deq = dequant_per_channel(q, scales, k, n);
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (a, b) in deq.iter().zip(w) {
+        num += ((a - b) as f64).powi(2);
+        den += (*b as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_mat(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn weight_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let (k, n) = (64, 32);
+        let w = rand_mat(&mut rng, k * n, 1.0);
+        let (q, s) = quant_weight_per_channel(&w, k, n);
+        // |error| <= scale/2 per element
+        for row in 0..k {
+            for col in 0..n {
+                let deq = q[row * n + col] as f32 * s[col];
+                assert!((deq - w[row * n + col]).abs() <= s[col] / 2.0 + 1e-6);
+            }
+        }
+        assert!(reconstruction_error(&w, &q, &s, k, n) < 0.01);
+    }
+
+    #[test]
+    fn act_per_token_scales_independent() {
+        let x = vec![
+            1.0, -2.0, 0.5, // row amax 2
+            100.0, 50.0, -100.0, // row amax 100
+        ];
+        let (q, s) = quant_act_per_token(&x, 2, 3);
+        assert!((s[0] - 2.0 / 127.0).abs() < 1e-7);
+        assert!((s[1] - 100.0 / 127.0).abs() < 1e-7);
+        assert_eq!(q[1], -127);
+        assert_eq!(q[3], 127);
+    }
+
+    #[test]
+    fn zero_input_safe() {
+        let (q, s) = quant_act_per_token(&[0.0; 8], 2, 4);
+        assert!(q.iter().all(|&v| v == 0));
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn gemm_matches_fp_within_tolerance() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (4, 32, 8);
+        let x = rand_mat(&mut rng, m * k, 1.0);
+        let w = rand_mat(&mut rng, k * n, 1.0);
+        let (xq, xs) = quant_act_per_token(&x, m, k);
+        let (wq, ws) = quant_weight_per_channel(&w, k, n);
+        let got = w8a8_matmul(&xq, &xs, &wq, &ws, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut fp = 0f32;
+                for l in 0..k {
+                    fp += x[i * k + l] * w[l * n + j];
+                }
+                assert!(
+                    (got[i * n + j] - fp).abs() < 0.2,
+                    "({i},{j}): {} vs {fp}", got[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_one_clamps() {
+        assert_eq!(quantize_one(1e9, 1.0), 127);
+        assert_eq!(quantize_one(-1e9, 1.0), -127);
+        assert_eq!(quantize_one(0.4, 1.0), 0);
+        assert_eq!(quantize_one(0.6, 1.0), 1);
+    }
+}

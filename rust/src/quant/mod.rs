@@ -1,0 +1,110 @@
+//! Rust mirror of the PTQ math (python/compile/quantlib.py + kernels/ref.py).
+//!
+//! The request path never quantizes (weights arrive pre-quantized in the
+//! PTEN artifacts; activations are quantized inside the AOT graphs), but the
+//! coordinator still needs this module for:
+//!   * artifact validation (packed int4 round-trips, scale sanity),
+//!   * the Fig. 1 distribution harness,
+//!   * the Atlas memory model's per-precision byte accounting,
+//!   * property tests tying the Rust understanding of the formats to the
+//!     Python one.
+
+pub mod hadamard;
+pub mod int4;
+pub mod int8;
+pub mod smooth;
+
+/// Quantization precision of a serving variant (paper Sec. 4.1 configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full-precision baseline ("FP16" in the paper; fp32 on this substrate).
+    Fp16,
+    /// W8A8: int8 weights + int8 per-token activations.
+    Int8,
+    /// W4A8 baseline: packed int4 weights.
+    W4A8,
+    /// W4A8 + SmoothQuant (alpha = 0.5).
+    W4A8Smooth,
+    /// W4A8 + Hadamard rotation.
+    W4A8Hadamard,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 5] = [
+        Precision::Fp16,
+        Precision::Int8,
+        Precision::W4A8,
+        Precision::W4A8Smooth,
+        Precision::W4A8Hadamard,
+    ];
+
+    /// Variant key used in artifact names (matches python aot.py).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+            Precision::W4A8 => "w4a8",
+            Precision::W4A8Smooth => "w4a8_smooth",
+            Precision::W4A8Hadamard => "w4a8_hadamard",
+        }
+    }
+
+    /// Paper-facing label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::Fp16 => "FP16",
+            Precision::Int8 => "INT8",
+            Precision::W4A8 => "W4A8",
+            Precision::W4A8Smooth => "W4A8-smooth",
+            Precision::W4A8Hadamard => "W4A8-Hadamard",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        Precision::ALL
+            .iter()
+            .copied()
+            .find(|p| p.key() == s || p.label().eq_ignore_ascii_case(s))
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {s:?}"))
+    }
+
+    /// Weight bytes per parameter element (paper's memory accounting:
+    /// FP16 = 2 bytes on the Atlas; int8 = 1; int4 = 0.5).
+    pub fn weight_bytes_per_param(&self) -> f64 {
+        match self {
+            Precision::Fp16 => 2.0,
+            Precision::Int8 => 1.0,
+            _ => 0.5,
+        }
+    }
+
+    /// Activation bytes per element on the NPU execution path.
+    pub fn act_bytes_per_elem(&self) -> f64 {
+        match self {
+            Precision::Fp16 => 2.0,
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_and_labels_roundtrip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.key()).unwrap(), p);
+            assert_eq!(Precision::parse(p.label()).unwrap(), p);
+        }
+        assert!(Precision::parse("int2").is_err());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(Precision::Fp16.weight_bytes_per_param(), 2.0);
+        assert_eq!(Precision::Int8.weight_bytes_per_param(), 1.0);
+        assert_eq!(Precision::W4A8.weight_bytes_per_param(), 0.5);
+        assert_eq!(Precision::W4A8Hadamard.act_bytes_per_elem(), 1.0);
+    }
+}

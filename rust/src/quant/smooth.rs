@@ -1,0 +1,80 @@
+//! SmoothQuant (paper Eq. 3), Rust twin of ref.smooth_scales / fold_smooth.
+
+/// s_j = max|X_j|^alpha / max|W_j|^(1-alpha), clipped — the per-input-channel
+/// difficulty migration factor. `w` is row-major [k, n]; `act_amax` is [k].
+pub fn smooth_scales(act_amax: &[f32], w: &[f32], k: usize, n: usize, alpha: f32) -> Vec<f32> {
+    assert_eq!(act_amax.len(), k);
+    assert_eq!(w.len(), k * n);
+    (0..k)
+        .map(|row| {
+            let w_amax = (0..n).fold(0f32, |a, col| a.max(w[row * n + col].abs()));
+            let s = act_amax[row].max(1e-8).powf(alpha) / w_amax.max(1e-8).powf(1.0 - alpha);
+            s.clamp(1e-2, 1e2)
+        })
+        .collect()
+}
+
+/// W' = diag(s) W (rows scaled).
+pub fn fold_into_weight(w: &[f32], s: &[f32], k: usize, n: usize) -> Vec<f32> {
+    (0..k * n).map(|i| w[i] * s[i / n]).collect()
+}
+
+/// X' = X diag(s)^-1 (columns of the activation scaled down).
+pub fn apply_to_activation(x: &[f32], s: &[f32], m: usize, k: usize) -> Vec<f32> {
+    (0..m * k).map(|i| x[i] / s[i % k]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn equivalence_in_fp() {
+        // (X S^-1)(S W) == X W
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (4, 16, 8);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let amax: Vec<f32> = (0..k)
+            .map(|col| (0..m).fold(0f32, |a, row| a.max(x[row * k + col].abs())))
+            .collect();
+        let s = smooth_scales(&amax, &w, k, n, 0.5);
+        let xs = apply_to_activation(&x, &s, m, k);
+        let wf = fold_into_weight(&w, &s, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let y0: f32 = (0..k).map(|l| x[i * k + l] * w[l * n + j]).sum();
+                let y1: f32 = (0..k).map(|l| xs[i * k + l] * wf[l * n + j]).sum();
+                assert!((y0 - y1).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_channel_range_shrinks() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (32, 16, 8);
+        let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        for row in 0..m {
+            x[row * k + 5] *= 60.0; // hot channel 5 (Fig. 1 baseline shape)
+        }
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let amax: Vec<f32> = (0..k)
+            .map(|col| (0..m).fold(0f32, |a, row| a.max(x[row * k + col].abs())))
+            .collect();
+        let s = smooth_scales(&amax, &w, k, n, 0.5);
+        let xs = apply_to_activation(&x, &s, m, k);
+        let max_before = x.iter().fold(0f32, |a, v| a.max(v.abs()));
+        let max_after = xs.iter().fold(0f32, |a, v| a.max(v.abs()));
+        assert!(max_after < max_before / 3.0, "{max_before} -> {max_after}");
+    }
+
+    #[test]
+    fn scales_clipped() {
+        let s = smooth_scales(&[1e9], &[1e-12], 1, 1, 0.5);
+        assert!(s[0] <= 1e2);
+        let s = smooth_scales(&[1e-12], &[1e9], 1, 1, 0.5);
+        assert!(s[0] >= 1e-2);
+    }
+}

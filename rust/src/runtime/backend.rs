@@ -1,0 +1,227 @@
+//! Backend abstraction: the generation engine talks to this trait, so the
+//! coordinator (batcher/scheduler/KV logic) is testable against a
+//! deterministic mock without artifacts, and the same engine code drives the
+//! real PJRT runtime in production.
+
+use anyhow::{anyhow, Result};
+
+use super::{DeviceState, Runtime};
+
+/// Opaque per-batch serving state.
+pub enum StateHandle {
+    Device(DeviceState),
+    Mock(MockState),
+}
+
+impl StateHandle {
+    pub fn batch(&self) -> usize {
+        match self {
+            StateHandle::Device(s) => s.batch,
+            StateHandle::Mock(s) => s.scripts.len(),
+        }
+    }
+}
+
+/// Step-level backend ABI (one prefill / one decode step / one readout).
+pub trait Backend {
+    fn vocab(&self) -> usize;
+    fn prompt_len(&self) -> usize;
+    fn max_seq(&self) -> usize;
+    /// Right-padded prompt batch -> state holding first-token logits.
+    fn prefill(&mut self, batch: usize, tokens: &[i32], lens: &[i32]) -> Result<StateHandle>;
+    /// One decode step at per-slot positions.
+    fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle>;
+    /// Fetch logits [batch * vocab] from the state.
+    fn logits(&mut self, state: &StateHandle) -> Result<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// Real backend: one (model, variant) pair over the PJRT runtime.
+// ---------------------------------------------------------------------------
+
+pub struct DeviceBackend<'r> {
+    pub runtime: &'r mut Runtime,
+    pub model: String,
+    pub variant: String,
+    vocab: usize,
+    prompt_len: usize,
+    max_seq: usize,
+}
+
+impl<'r> DeviceBackend<'r> {
+    pub fn new(runtime: &'r mut Runtime, model: &str, variant: &str) -> Result<DeviceBackend<'r>> {
+        let info = runtime.manifest.model(model)?;
+        let vocab = info.vocab;
+        let prompt_len = runtime.manifest.prompt_len;
+        let max_seq = runtime.manifest.max_seq;
+        Ok(DeviceBackend {
+            runtime,
+            model: model.to_string(),
+            variant: variant.to_string(),
+            vocab,
+            prompt_len,
+            max_seq,
+        })
+    }
+}
+
+impl Backend for DeviceBackend<'_> {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn prefill(&mut self, batch: usize, tokens: &[i32], lens: &[i32]) -> Result<StateHandle> {
+        Ok(StateHandle::Device(self.runtime.prefill(
+            &self.model,
+            &self.variant,
+            batch,
+            tokens,
+            lens,
+        )?))
+    }
+
+    fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle> {
+        let StateHandle::Device(s) = state else {
+            return Err(anyhow!("device backend got mock state"));
+        };
+        Ok(StateHandle::Device(self.runtime.decode(
+            &self.model,
+            &self.variant,
+            s,
+            tokens,
+            pos,
+        )?))
+    }
+
+    fn logits(&mut self, state: &StateHandle) -> Result<Vec<f32>> {
+        let StateHandle::Device(s) = state else {
+            return Err(anyhow!("device backend got mock state"));
+        };
+        self.runtime.readout(&self.model, s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock backend: deterministic scripted model for coordinator tests.
+// ---------------------------------------------------------------------------
+
+/// Per-slot emission script (remaining tokens to emit).
+pub struct MockState {
+    pub scripts: Vec<Vec<u32>>,
+    /// Next token each slot will emit (what logits argmax returns).
+    pub cursor: Vec<usize>,
+}
+
+/// A mock "model": prompts map to completions via the provided rule.
+/// The default rule echoes `PROG <first op guess> END`-style scripts is up
+/// to the test; the backend itself just plays the script back one token per
+/// decode step, exposing exactly the Backend ABI (including padded rows).
+pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
+    pub script_of: F,
+    pub vocab: usize,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    /// Decode-step counter (scheduler tests assert batching efficiency).
+    pub steps: usize,
+    pub prefills: usize,
+}
+
+impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
+    pub fn new(vocab: usize, prompt_len: usize, max_seq: usize, script_of: F) -> Self {
+        MockBackend { script_of, vocab, prompt_len, max_seq, steps: 0, prefills: 0 }
+    }
+}
+
+impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn prefill(&mut self, batch: usize, tokens: &[i32], lens: &[i32]) -> Result<StateHandle> {
+        anyhow::ensure!(tokens.len() == batch * self.prompt_len);
+        anyhow::ensure!(lens.len() == batch);
+        self.prefills += 1;
+        let mut scripts = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let prompt = &tokens[b * self.prompt_len..(b + 1) * self.prompt_len];
+            let real = &prompt[..lens[b] as usize];
+            scripts.push((self.script_of)(real));
+        }
+        Ok(StateHandle::Mock(MockState { cursor: vec![0; batch], scripts }))
+    }
+
+    fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle> {
+        let StateHandle::Mock(mut s) = state else {
+            return Err(anyhow!("mock backend got device state"));
+        };
+        anyhow::ensure!(tokens.len() == s.scripts.len() && pos.len() == tokens.len());
+        self.steps += 1;
+        for c in s.cursor.iter_mut() {
+            *c += 1;
+        }
+        Ok(StateHandle::Mock(s))
+    }
+
+    fn logits(&mut self, state: &StateHandle) -> Result<Vec<f32>> {
+        let StateHandle::Mock(s) = state else {
+            return Err(anyhow!("mock backend got device state"));
+        };
+        let b = s.scripts.len();
+        let mut logits = vec![-10.0f32; b * self.vocab];
+        for (slot, script) in s.scripts.iter().enumerate() {
+            // Emit script[cursor]; past the end emit token 2 (END by vocab
+            // convention in tests).
+            let tok = script.get(s.cursor[slot]).copied().unwrap_or(2);
+            logits[slot * self.vocab + tok as usize] = 10.0;
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_plays_script() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| {
+            vec![prompt[0] as u32, 5, 2] // echo first token, then 5, then END
+        });
+        let tokens = vec![3, 0, 0, 0, /* row2 */ 6, 1, 0, 0];
+        let state = be.prefill(2, &tokens, &[1, 2]).unwrap();
+        let lg = be.logits(&state).unwrap();
+        let argmax = |row: &[f32]| row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax(&lg[0..8]), 3);
+        assert_eq!(argmax(&lg[8..16]), 6);
+        let state = be.decode(state, &[3, 6], &[1, 2]).unwrap();
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 5);
+        let state = be.decode(state, &[5, 5], &[2, 3]).unwrap();
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 2); // END
+        assert_eq!(be.steps, 2);
+        assert_eq!(be.prefills, 1);
+    }
+
+    #[test]
+    fn mock_rejects_shape_mismatch() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
+        assert!(be.prefill(2, &[0; 4], &[1, 1]).is_err());
+    }
+}

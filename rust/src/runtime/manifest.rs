@@ -1,0 +1,217 @@
+//! artifacts/manifest.json schema (authored by python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Dimensions of one simulated model scale.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub params: usize,
+}
+
+/// One AOT-exported executable.
+#[derive(Debug, Clone)]
+pub struct ExeEntry {
+    pub name: String,
+    pub model: String,
+    /// None for variant-independent executables (readout).
+    pub variant: Option<String>,
+    pub phase: String,
+    pub batch: usize,
+    pub hlo: String,
+    pub weights: Option<String>,
+    pub state_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub raw: Json,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub variants: BTreeMap<String, Vec<String>>,
+    pub executables: Vec<ExeEntry>,
+    pub serve_buckets: Vec<usize>,
+    pub latency_buckets: Vec<usize>,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    pub datasets: BTreeMap<String, String>,
+    weight_files: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Manifest::from_json(Json::parse_file(path)?)
+    }
+
+    pub fn from_json(raw: Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, m) in raw
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    d_model: m.req_usize("d_model")?,
+                    n_layers: m.req_usize("n_layers")?,
+                    n_heads: m.req_usize("n_heads")?,
+                    d_ff: m.req_usize("d_ff")?,
+                    head_dim: m.req_usize("head_dim")?,
+                    vocab: m.req_usize("vocab")?,
+                    params: m.req_usize("params")?,
+                },
+            );
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in raw
+            .get("variants")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+        {
+            variants.insert(
+                name.clone(),
+                v.as_arr()
+                    .ok_or_else(|| anyhow!("variants not array"))?
+                    .iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect(),
+            );
+        }
+        let executables = raw
+            .req_arr("executables")?
+            .iter()
+            .map(|e| {
+                Ok(ExeEntry {
+                    name: e.req_str("name")?.to_string(),
+                    model: e.req_str("model")?.to_string(),
+                    variant: e.get("variant").as_str().map(String::from),
+                    phase: e.req_str("phase")?.to_string(),
+                    batch: e.req_usize("batch")?,
+                    hlo: e.req_str("hlo")?.to_string(),
+                    weights: e.get("weights").as_str().map(String::from),
+                    state_len: e.req_usize("state_len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let buckets = raw.get("buckets");
+        let to_usizes = |j: &Json| -> Vec<usize> {
+            j.as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        let mut weight_files = BTreeMap::new();
+        if let Some(obj) = raw.get("weights").as_obj() {
+            for (k, v) in obj {
+                if let Some(f) = v.get("file").as_str() {
+                    weight_files.insert(k.clone(), f.to_string());
+                }
+            }
+        }
+        let mut datasets = BTreeMap::new();
+        if let Some(obj) = raw.get("datasets").as_obj() {
+            for (k, v) in obj {
+                if let Some(f) = v.as_str() {
+                    datasets.insert(k.clone(), f.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            models,
+            variants,
+            executables,
+            serve_buckets: to_usizes(buckets.get("serve")),
+            latency_buckets: to_usizes(buckets.get("latency")),
+            prompt_len: raw.get("seq").req_usize("prompt_len")?,
+            max_seq: raw.get("seq").req_usize("max_seq")?,
+            datasets,
+            weight_files,
+            raw,
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExeEntry> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("executable {name:?} not in manifest"))
+    }
+
+    pub fn weight_file(&self, key: &str) -> Result<String> {
+        self.weight_files
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("weight bundle {key:?} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn variants_of(&self, model: &str) -> &[String] {
+        self.variants.get(model).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        Json::parse(
+            r#"{
+          "models": {"m": {"d_model": 64, "n_layers": 2, "n_heads": 2,
+                           "d_ff": 128, "head_dim": 32, "vocab": 64, "params": 1000}},
+          "variants": {"m": ["fp16", "int8"]},
+          "buckets": {"serve": [1, 8], "latency": [2, 4]},
+          "seq": {"prompt_len": 32, "max_seq": 96, "train_seq": 64},
+          "executables": [
+            {"name": "m_fp16_prefill_b1", "model": "m", "variant": "fp16",
+             "phase": "prefill", "batch": 1, "hlo": "exe/x.hlo.txt",
+             "weights": "m_fp16", "state_len": 100},
+            {"name": "m_readout_b1", "model": "m", "variant": null,
+             "phase": "readout", "batch": 1, "hlo": "exe/r.hlo.txt",
+             "weights": null, "state_len": 100}
+          ],
+          "weights": {"m_fp16": {"file": "weights/m_fp16.pten", "tensors": []}},
+          "datasets": {"humaneval_s": "datasets/h.json"}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_complete_manifest() {
+        let m = Manifest::from_json(mini_manifest()).unwrap();
+        assert_eq!(m.models["m"].d_ff, 128);
+        assert_eq!(m.variants_of("m"), &["fp16", "int8"]);
+        assert_eq!(m.serve_buckets, vec![1, 8]);
+        assert_eq!(m.prompt_len, 32);
+        let e = m.executable("m_fp16_prefill_b1").unwrap();
+        assert_eq!(e.batch, 1);
+        assert_eq!(e.weights.as_deref(), Some("m_fp16"));
+        let r = m.executable("m_readout_b1").unwrap();
+        assert_eq!(r.variant, None);
+        assert_eq!(m.weight_file("m_fp16").unwrap(), "weights/m_fp16.pten");
+        assert_eq!(m.datasets["humaneval_s"], "datasets/h.json");
+    }
+
+    #[test]
+    fn missing_executable_is_error() {
+        let m = Manifest::from_json(mini_manifest()).unwrap();
+        assert!(m.executable("nope").is_err());
+        assert!(m.weight_file("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,254 @@
+//! Serving runtime: loads AOT artifacts (HLO text + PTEN weights), compiles
+//! them on the PJRT CPU client once, and exposes the flat-state step ABI
+//! (DESIGN.md §3, de-risked in rust/tests/derisk.rs):
+//!
+//!   prefill(weights.., tokens[B,Sp], lens[B]) -> state f32[B*V + NKV]
+//!   decode (weights.., tokens[B], state, pos[B]) -> state'
+//!   readout(state) -> logits f32[B, V]
+//!
+//! Weights live on device for the process lifetime; the KV-bearing state
+//! never round-trips to the host; per-step host traffic is token ids in and
+//! B*V logits out.
+
+pub mod backend;
+pub mod manifest;
+pub mod weights;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use manifest::{ExeEntry, Manifest};
+
+/// Device-resident serving state (logits prefix + KV cache) for one batch.
+pub struct DeviceState {
+    pub buf: xla::PjRtBuffer,
+    pub batch: usize,
+    pub state_len: usize,
+    /// Host literals of the step inputs that produced this state. PJRT may
+    /// still be reading them asynchronously when execute returns, so they
+    /// ride along until the next step (or the state drops).
+    _host: Vec<xla::Literal>,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    /// weights_key -> uploaded device buffers (PTEN order == HLO param order).
+    weight_bufs: HashMap<String, Vec<xla::PjRtBuffer>>,
+    /// Host literals backing the uploads. PJRT's buffer_from_host_literal
+    /// may read the host memory asynchronously, so these must outlive the
+    /// buffers (dropping them early is a use-after-free — found the hard
+    /// way; see rust/tests/derisk.rs::artifact_prefill_executes).
+    weight_lits: HashMap<String, Vec<xla::Literal>>,
+    /// executable name -> compiled PJRT executable.
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative counters (metrics surface).
+    pub stats: RuntimeStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub prefills: usize,
+    pub decode_steps: usize,
+    pub readouts: usize,
+    pub host_bytes_in: usize,
+    pub host_bytes_out: usize,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            weight_bufs: HashMap::new(),
+            weight_lits: HashMap::new(),
+            exes: HashMap::new(),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    /// Compile (and cache) an executable by manifest name.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.executable(name)?.clone();
+        let path = self.dir.join(&entry.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        self.exes.insert(name.to_string(), exe);
+        self.stats.compiles += 1;
+        if let Some(key) = entry.weights.as_deref() {
+            self.ensure_weights(key)?;
+        }
+        Ok(())
+    }
+
+    /// Upload (and cache) a PTEN weight bundle to device buffers.
+    pub fn ensure_weights(&mut self, key: &str) -> Result<()> {
+        if self.weight_bufs.contains_key(key) {
+            return Ok(());
+        }
+        let rel = &self.manifest.weight_file(key)?;
+        let tensors = weights::read_pten(&self.dir.join(rel))?;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        let mut lits = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            let lit = t.to_literal()?;
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("upload {}: {e}", t.name))?;
+            bufs.push(buf);
+            lits.push(lit); // keep alive: upload may be async
+        }
+        crate::log_info!(
+            "runtime",
+            "weights `{key}`: {} tensors ({:.1} MiB) uploaded",
+            tensors.len(),
+            tensors.iter().map(|t| t.data.len()).sum::<usize>() as f64 / (1 << 20) as f64
+        );
+        self.weight_bufs.insert(key.to_string(), bufs);
+        self.weight_lits.insert(key.to_string(), lits);
+        Ok(())
+    }
+
+    fn exe_name(&self, model: &str, variant: &str, phase: &str, batch: usize) -> String {
+        match phase {
+            "readout" => format!("{model}_readout_b{batch}"),
+            _ => format!("{model}_{variant}_{phase}_b{batch}"),
+        }
+    }
+
+    /// Upload i32 host data; returns (literal, buffer) — the literal MUST
+    /// stay alive until the execute consuming the buffer has completed
+    /// (async host reads; see weight_lits above).
+    fn upload_i32(&self, vals: &[i32], dims: &[i64]) -> Result<(xla::Literal, xla::PjRtBuffer)> {
+        let lit = xla::Literal::vec1(vals);
+        let lit = if dims.len() > 1 { lit.reshape(dims)? } else { lit };
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok((lit, buf))
+    }
+
+    /// Run prefill for a batch of right-padded prompts.
+    pub fn prefill(
+        &mut self,
+        model: &str,
+        variant: &str,
+        batch: usize,
+        tokens: &[i32],
+        true_lens: &[i32],
+    ) -> Result<DeviceState> {
+        let name = self.exe_name(model, variant, "prefill", batch);
+        self.ensure_compiled(&name)?;
+        let entry = self.manifest.executable(&name)?.clone();
+        let prompt_len = tokens.len() / batch;
+        anyhow::ensure!(tokens.len() == batch * prompt_len && true_lens.len() == batch);
+        let (tok_lit, tok_buf) = self.upload_i32(tokens, &[batch as i64, prompt_len as i64])?;
+        let (len_lit, len_buf) = self.upload_i32(true_lens, &[batch as i64])?;
+        let wkey = entry.weights.as_deref().ok_or_else(|| anyhow!("prefill without weights"))?;
+        let wbufs = &self.weight_bufs[wkey];
+        let mut inputs: Vec<&xla::PjRtBuffer> = wbufs.iter().collect();
+        inputs.push(&tok_buf);
+        inputs.push(&len_buf);
+        let exe = &self.exes[&name];
+        let mut outs = exe.execute_b(&inputs).map_err(|e| anyhow!("prefill exec: {e}"))?;
+        let buf = outs
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| anyhow!("prefill produced no output"))?;
+        self.stats.prefills += 1;
+        self.stats.host_bytes_in += tokens.len() * 4 + true_lens.len() * 4;
+        Ok(DeviceState {
+            buf,
+            batch,
+            state_len: entry.state_len,
+            _host: vec![tok_lit, len_lit],
+        })
+    }
+
+    /// Run one decode step; consumes and returns the device state.
+    pub fn decode(
+        &mut self,
+        model: &str,
+        variant: &str,
+        state: DeviceState,
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<DeviceState> {
+        let batch = state.batch;
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch);
+        let name = self.exe_name(model, variant, "decode", batch);
+        self.ensure_compiled(&name)?;
+        let entry = self.manifest.executable(&name)?.clone();
+        let (tok_lit, tok_buf) = self.upload_i32(tokens, &[batch as i64])?;
+        let (pos_lit, pos_buf) = self.upload_i32(pos, &[batch as i64])?;
+        let wkey = entry.weights.as_deref().ok_or_else(|| anyhow!("decode without weights"))?;
+        let wbufs = &self.weight_bufs[wkey];
+        let mut inputs: Vec<&xla::PjRtBuffer> = wbufs.iter().collect();
+        inputs.push(&tok_buf);
+        inputs.push(&state.buf);
+        inputs.push(&pos_buf);
+        let exe = &self.exes[&name];
+        let mut outs = exe.execute_b(&inputs).map_err(|e| anyhow!("decode exec: {e}"))?;
+        let buf = outs
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| anyhow!("decode produced no output"))?;
+        self.stats.decode_steps += 1;
+        self.stats.host_bytes_in += tokens.len() * 8;
+        Ok(DeviceState {
+            buf,
+            batch,
+            state_len: entry.state_len,
+            _host: vec![tok_lit, pos_lit],
+        })
+    }
+
+    /// Fetch the logits prefix [B, V] from a device state.
+    pub fn readout(&mut self, model: &str, state: &DeviceState) -> Result<Vec<f32>> {
+        let name = format!("{model}_readout_b{}", state.batch);
+        self.ensure_compiled(&name)?;
+        let exe = &self.exes[&name];
+        let outs = exe
+            .execute_b(&[&state.buf])
+            .map_err(|e| anyhow!("readout exec: {e}"))?;
+        let logits = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readout copy: {e}"))?
+            .to_vec::<f32>()?;
+        self.stats.readouts += 1;
+        self.stats.host_bytes_out += logits.len() * 4;
+        Ok(logits)
+    }
+
+    /// Full state download (tests / diagnostics only — NOT the hot path).
+    pub fn download_state(&self, state: &DeviceState) -> Result<Vec<f32>> {
+        Ok(state.buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// List executables available for a (model, variant) pair.
+    pub fn available(&self, model: &str, variant: &str) -> Vec<&ExeEntry> {
+        self.manifest
+            .executables
+            .iter()
+            .filter(|e| e.model == model && e.variant.as_deref() == Some(variant))
+            .collect()
+    }
+}

@@ -1,0 +1,196 @@
+//! PTEN weight-bundle reader (format spec: python/compile/artifactio.py).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+const MAGIC: &[u8; 5] = b"PTEN\x01";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+    I32,
+}
+
+impl Dtype {
+    fn from_u8(v: u8) -> Result<Dtype> {
+        Ok(match v {
+            0 => Dtype::F32,
+            1 => Dtype::I8,
+            2 => Dtype::I32,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+
+    pub fn element_size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I8 => xla::ElementType::S8,
+            Dtype::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// One tensor from a PTEN bundle (raw little-endian bytes).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Convert to an XLA literal (zero interpretation: raw bytes straight in).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.dims,
+            &self.data,
+        )
+        .map_err(|e| anyhow!("literal for {}: {e}", self.name))
+    }
+
+    /// Interpret as f32 values (validation paths).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.dtype == Dtype::F32, "{} is not f32", self.name);
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Interpret as i8 values.
+    pub fn as_i8(&self) -> Result<Vec<i8>> {
+        anyhow::ensure!(self.dtype == Dtype::I8, "{} is not i8", self.name);
+        Ok(self.data.iter().map(|&b| b as i8).collect())
+    }
+}
+
+fn read_exact<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Read a PTEN bundle. Tensor order is significant: it matches the HLO
+/// parameter order of every executable built from this bundle.
+pub fn read_pten(path: &Path) -> Result<Vec<Tensor>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let magic = read_exact::<5>(&mut r)?;
+    if &magic != MAGIC {
+        bail!("{}: bad PTEN magic", path.display());
+    }
+    let n = u32::from_le_bytes(read_exact::<4>(&mut r)?) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = u16::from_le_bytes(read_exact::<2>(&mut r)?) as usize;
+        let mut name_buf = vec![0u8; name_len];
+        r.read_exact(&mut name_buf)?;
+        let name = String::from_utf8(name_buf).context("tensor name not utf-8")?;
+        let dtype = Dtype::from_u8(read_exact::<1>(&mut r)?[0])?;
+        let ndim = read_exact::<1>(&mut r)?[0] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32::from_le_bytes(read_exact::<4>(&mut r)?) as usize);
+        }
+        let nbytes = u64::from_le_bytes(read_exact::<8>(&mut r)?) as usize;
+        let expect = dims.iter().product::<usize>() * dtype.element_size();
+        if nbytes != expect {
+            bail!("{name}: payload {nbytes} bytes, expected {expect} for {dims:?}");
+        }
+        let mut data = vec![0u8; nbytes];
+        r.read_exact(&mut data)?;
+        out.push(Tensor { name, dtype, dims, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_pten(path: &Path, tensors: &[(&str, Dtype, Vec<usize>, Vec<u8>)]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, dt, dims, data) in tensors {
+            f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            let tag = match dt {
+                Dtype::F32 => 0u8,
+                Dtype::I8 => 1,
+                Dtype::I32 => 2,
+            };
+            f.write_all(&[tag, dims.len() as u8]).unwrap();
+            for d in dims {
+                f.write_all(&(*d as u32).to_le_bytes()).unwrap();
+            }
+            f.write_all(&(data.len() as u64).to_le_bytes()).unwrap();
+            f.write_all(data).unwrap();
+        }
+    }
+
+    #[test]
+    fn reads_mixed_dtypes() {
+        let dir = std::env::temp_dir().join("pten_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.pten");
+        let f32_data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        write_pten(
+            &path,
+            &[
+                ("a.b.c", Dtype::F32, vec![3], f32_data),
+                ("q", Dtype::I8, vec![2, 2], vec![0xFF, 0x01, 0x80, 0x7F]),
+            ],
+        );
+        let ts = read_pten(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a.b.c");
+        assert_eq!(ts[0].as_f32().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(ts[1].dims, vec![2, 2]);
+        assert_eq!(ts[1].as_i8().unwrap(), vec![-1, 1, -128, 127]);
+        assert!(ts[1].as_f32().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_size_mismatch() {
+        let dir = std::env::temp_dir().join("pten_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.pten");
+        std::fs::write(&bad, b"NOPE!").unwrap();
+        assert!(read_pten(&bad).is_err());
+
+        let mismatch = dir.join("mismatch.pten");
+        let mut f = std::fs::File::create(&mismatch).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"x").unwrap();
+        f.write_all(&[0u8, 1]).unwrap(); // f32, 1-dim
+        f.write_all(&4u32.to_le_bytes()).unwrap(); // dims [4]
+        f.write_all(&3u64.to_le_bytes()).unwrap(); // wrong: should be 16
+        f.write_all(&[0, 0, 0]).unwrap();
+        drop(f);
+        assert!(read_pten(&mismatch).is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! MiniLang vocabulary codec. The vocabulary is authored by the Python
+//! compile path (python/compile/minilang.py) and shipped in
+//! artifacts/manifest.json; this module provides the Rust-side encoder /
+//! decoder plus prompt construction (the CoT directive mechanism).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// CoT reasoning modes (paper Sec. 1): selected per request by prepending
+/// the corresponding directive token to the prompt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CotMode {
+    NoThink,
+    AutoThink,
+    SlowThink,
+}
+
+impl CotMode {
+    pub const ALL: [CotMode; 3] = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CotMode::NoThink => "no_think",
+            CotMode::AutoThink => "auto_think",
+            CotMode::SlowThink => "slow_think",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CotMode> {
+        match s {
+            "no_think" | "nothink" => Ok(CotMode::NoThink),
+            "auto_think" | "auto" => Ok(CotMode::AutoThink),
+            "slow_think" | "slow" => Ok(CotMode::SlowThink),
+            _ => Err(anyhow!("unknown CoT mode {s:?}")),
+        }
+    }
+
+    fn directive(&self) -> &'static str {
+        match self {
+            CotMode::NoThink => "MODE_NOTHINK",
+            CotMode::AutoThink => "MODE_AUTO",
+            CotMode::SlowThink => "MODE_SLOW",
+        }
+    }
+}
+
+/// Token-id vocabulary with the structural ids used by the serving engine.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    names: Vec<String>,
+    ids: HashMap<String, u32>,
+    pub pad: u32,
+    pub bos: u32,
+    pub end: u32,
+    pub ask: u32,
+    pub prog: u32,
+    pub trace: u32,
+    pub endtrace: u32,
+    pub step: u32,
+    pub sep: u32,
+    pub tok_in: u32,
+    pub tok_out: u32,
+    /// DIGIT token ids: digit_base + v encodes value v.
+    pub digit_base: u32,
+    pub value_mod: u32,
+    /// Op name -> token id.
+    pub ops: HashMap<String, u32>,
+}
+
+impl Tokenizer {
+    /// Build from the manifest's vocab list + minilang block.
+    pub fn from_manifest(manifest: &Json) -> Result<Tokenizer> {
+        let vocab = manifest
+            .get("vocab")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing vocab"))?;
+        let names: Vec<String> = vocab
+            .iter()
+            .map(|v| v.as_str().map(String::from).ok_or_else(|| anyhow!("vocab entry not a string")))
+            .collect::<Result<_>>()?;
+        let ids: HashMap<String, u32> = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i as u32))
+            .collect();
+        let get = |n: &str| -> Result<u32> {
+            ids.get(n).copied().ok_or_else(|| anyhow!("vocab missing token {n}"))
+        };
+        let value_mod = manifest.get("minilang").req_usize("mod")? as u32;
+        let op_names = manifest.get("minilang").req_arr("ops")?;
+        let mut ops = HashMap::new();
+        for op in op_names {
+            let name = op.as_str().ok_or_else(|| anyhow!("op not a string"))?;
+            ops.insert(name.to_string(), get(name)?);
+        }
+        Ok(Tokenizer {
+            pad: get("PAD")?,
+            bos: get("BOS")?,
+            end: get("END")?,
+            ask: get("ASK")?,
+            prog: get("PROG")?,
+            trace: get("TRACE")?,
+            endtrace: get("ENDTRACE")?,
+            step: get("STEP")?,
+            sep: get("SEP")?,
+            tok_in: get("IN")?,
+            tok_out: get("OUT")?,
+            digit_base: get("D0")?,
+            value_mod,
+            ops,
+            names,
+            ids,
+        })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn name(&self, id: u32) -> &str {
+        self.names
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("?")
+    }
+
+    pub fn id(&self, name: &str) -> Option<u32> {
+        self.ids.get(name).copied()
+    }
+
+    pub fn digit(&self, v: u8) -> u32 {
+        debug_assert!((v as u32) < self.value_mod);
+        self.digit_base + v as u32
+    }
+
+    pub fn digit_value(&self, id: u32) -> Option<u8> {
+        if id >= self.digit_base && id < self.digit_base + self.value_mod {
+            Some((id - self.digit_base) as u8)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_op(&self, id: u32) -> bool {
+        self.ops.values().any(|&v| v == id)
+    }
+
+    pub fn mode_token(&self, mode: CotMode) -> u32 {
+        self.ids[mode.directive()]
+    }
+
+    /// Prompt layout (must match python minilang.encode_prompt):
+    /// BOS MODE (IN xs OUT ys | SEP)* ASK
+    pub fn encode_prompt(&self, mode: CotMode, examples: &[(Vec<u8>, Vec<u8>)]) -> Vec<u32> {
+        let mut ids = vec![self.bos, self.mode_token(mode)];
+        for (i, (xs, ys)) in examples.iter().enumerate() {
+            if i > 0 {
+                ids.push(self.sep);
+            }
+            ids.push(self.tok_in);
+            ids.extend(xs.iter().map(|&v| self.digit(v)));
+            ids.push(self.tok_out);
+            ids.extend(ys.iter().map(|&v| self.digit(v)));
+        }
+        ids.push(self.ask);
+        ids
+    }
+
+    /// Decode a token sequence to space-separated names (diagnostics).
+    pub fn render(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&t| self.name(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Extract the program from a generated completion: op tokens between
+    /// the *last* PROG and the first following END (mirror of
+    /// minilang.extract_program).
+    pub fn extract_program(&self, ids: &[u32]) -> Option<Vec<String>> {
+        let start = ids.iter().rposition(|&t| t == self.prog)?;
+        let mut ops = Vec::new();
+        for &t in &ids[start + 1..] {
+            if t == self.end {
+                return if ops.is_empty() { None } else { Some(ops) };
+            }
+            let name = self.name(t);
+            if !self.ops.contains_key(name) {
+                return None;
+            }
+            ops.push(name.to_string());
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn test_tokenizer() -> Tokenizer {
+        // Mirror of python minilang.VOCAB construction.
+        let special = [
+            "PAD", "BOS", "END", "MODE_NOTHINK", "MODE_AUTO", "MODE_SLOW", "IN", "OUT", "SEP",
+            "ASK", "TRACE", "ENDTRACE", "STEP", "PROG",
+        ];
+        let ops = [
+            "ADD1", "ADD2", "CUMSUM", "MUL2", "NEG", "REV", "ROTL", "ROTR", "SORT", "SORTD",
+            "SUB1", "SWAP",
+        ];
+        let mut vocab: Vec<Json> = special.iter().map(|s| Json::str(*s)).collect();
+        vocab.extend((0..16).map(|i| Json::str(format!("D{i}"))));
+        vocab.extend(ops.iter().map(|s| Json::str(*s)));
+        while vocab.len() < 64 {
+            vocab.push(Json::str(format!("UNUSED{}", vocab.len())));
+        }
+        let manifest = Json::obj(vec![
+            ("vocab", Json::Arr(vocab)),
+            (
+                "minilang",
+                Json::obj(vec![
+                    ("mod", Json::num(16.0)),
+                    ("seq_len", Json::num(5.0)),
+                    ("ops", Json::Arr(ops.iter().map(|s| Json::str(*s)).collect())),
+                ]),
+            ),
+        ]);
+        Tokenizer::from_manifest(&manifest).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_ids() {
+        let tk = test_tokenizer();
+        assert_eq!(tk.vocab_size(), 64);
+        assert_eq!(tk.name(tk.pad), "PAD");
+        assert_eq!(tk.digit_value(tk.digit(7)), Some(7));
+        assert_eq!(tk.digit_value(tk.pad), None);
+        assert!(tk.is_op(tk.ops["REV"]));
+        assert!(!tk.is_op(tk.bos));
+    }
+
+    #[test]
+    fn prompt_layout_matches_python() {
+        let tk = test_tokenizer();
+        let ex = vec![(vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1])];
+        let ids = tk.encode_prompt(CotMode::SlowThink, &ex);
+        assert_eq!(ids[0], tk.bos);
+        assert_eq!(ids[1], tk.mode_token(CotMode::SlowThink));
+        assert_eq!(ids[2], tk.tok_in);
+        assert_eq!(ids[3], tk.digit(1));
+        assert_eq!(ids[8], tk.tok_out);
+        assert_eq!(*ids.last().unwrap(), tk.ask);
+        assert_eq!(ids.len(), 2 + 1 + 5 + 1 + 5 + 1);
+    }
+
+    #[test]
+    fn extract_program_from_trace_output() {
+        let tk = test_tokenizer();
+        let rev = tk.ops["REV"];
+        let add1 = tk.ops["ADD1"];
+        // TRACE STEP REV d d d d d ENDTRACE PROG REV ADD1 END
+        let mut ids = vec![tk.trace, tk.step, rev];
+        ids.extend((0..5).map(|i| tk.digit(i)));
+        ids.extend([tk.endtrace, tk.prog, rev, add1, tk.end]);
+        assert_eq!(tk.extract_program(&ids), Some(vec!["REV".into(), "ADD1".into()]));
+    }
+
+    #[test]
+    fn extract_program_malformed() {
+        let tk = test_tokenizer();
+        assert_eq!(tk.extract_program(&[]), None);
+        assert_eq!(tk.extract_program(&[tk.prog]), None);
+        assert_eq!(tk.extract_program(&[tk.prog, tk.end]), None);
+        assert_eq!(tk.extract_program(&[tk.prog, tk.bos, tk.end]), None);
+        // op tokens but no END
+        let rev = tk.ops["REV"];
+        assert_eq!(tk.extract_program(&[tk.prog, rev]), None);
+    }
+
+    #[test]
+    fn mode_parse_names() {
+        for m in CotMode::ALL {
+            assert_eq!(CotMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(CotMode::parse("fast_think").is_err());
+    }
+}

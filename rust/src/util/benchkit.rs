@@ -1,0 +1,139 @@
+//! benchkit: the in-repo criterion replacement (offline build).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, timed iterations, outlier-robust summary, and a stable text
+//! format that the table/figure harnesses parse-free print.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 200,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            target_time: Duration::from_millis(500),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in milliseconds.
+    pub ms: Summary,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>8.3} ms/iter  (p50 {:>8.3}, p90 {:>8.3}, n={})",
+            self.name, self.ms.mean, self.ms.p50, self.ms.p90, self.iters
+        )
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || start.elapsed() < cfg.target_time)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        ms: Summary::of(&samples),
+    }
+}
+
+/// A bench group: collects results and prints a header/footer, mimicking
+/// the criterion output contract our harness scripts expect.
+pub struct Group {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl Group {
+    pub fn new(title: &str) -> Group {
+        println!("\n=== bench group: {title} ===");
+        Group { title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, cfg: &BenchConfig, f: F) -> &BenchResult {
+        let r = bench(name, cfg, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn finish(self) {
+        println!("=== end group: {} ({} benches) ===", self.title, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 8,
+            target_time: Duration::from_millis(10),
+        };
+        let mut count = 0usize;
+        let r = bench("noop", &cfg, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert!(r.iters >= 5 && r.iters <= 8);
+        assert!(count >= r.iters); // warmup included
+        assert!(r.ms.mean >= 0.0);
+        assert!(r.report_line().contains("noop"));
+    }
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_iters: 3,
+            target_time: Duration::from_millis(1),
+        };
+        let r = bench("sleep", &cfg, || std::thread::sleep(Duration::from_millis(5)));
+        assert!(r.ms.p50 >= 4.0, "measured {} ms", r.ms.p50);
+    }
+}

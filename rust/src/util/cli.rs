@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (offline build: no clap).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `subcommands`: when non-empty, the first non-flag token is matched
+    /// against this list and consumed as the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, subcommands: &[&str]) -> Args {
+        let mut out = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            flags: BTreeMap::new(),
+        };
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: `--key value` unless next is another flag.
+                    let is_kv = matches!(iter.peek(), Some(n) if !n.starts_with("--"));
+                    if is_kv {
+                        out.flags.insert(body.to_string(), iter.next().unwrap());
+                    } else {
+                        out.flags.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            } else if out.subcommand.is_none()
+                && !subcommands.is_empty()
+                && subcommands.contains(&arg.as_str())
+            {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), subcommands)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, subs: &[&str]) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), subs)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --batch 8 --model 7b-sim --verbose", &["serve", "repro"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert_eq!(a.get("model"), Some("7b-sim"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--key=value --n=3", &[]);
+        assert_eq!(a.get("key"), Some("value"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("repro table1 --quick", &["repro"]);
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["table1"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("", &[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.get_or("absent", "x"), "x");
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--quick --batch 4", &[]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.usize_or("batch", 0), 4);
+    }
+}

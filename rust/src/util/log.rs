@@ -1,0 +1,96 @@
+//! Tiny leveled logger (offline build: no tracing/env_logger).
+//!
+//! Level from `PANGU_LOG` (error|warn|info|debug|trace), default info.
+//! Timestamps are relative to process start — enough for serving traces.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let parsed = match std::env::var("PANGU_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let secs = t0.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{secs:>9.3}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+    }
+}

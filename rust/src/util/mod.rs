@@ -1,0 +1,10 @@
+//! Self-contained substrate utilities (offline environment: no serde, no
+//! clap, no criterion, no rand — these modules replace them).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;

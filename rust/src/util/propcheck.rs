@@ -1,0 +1,140 @@
+//! propcheck: the in-repo property-testing harness (offline build: no
+//! proptest). Random case generation from a seeded [`Rng`], failure
+//! reporting with the reproducing seed, and greedy input shrinking for
+//! `Vec<T>`-shaped cases.
+
+use super::prng::Rng;
+
+/// Run `prop` against `cases` random inputs drawn by `gen`. On failure,
+/// panics with the case index and seed so the exact case can be replayed.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {i} (seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`], but for vector-shaped inputs: on failure, greedily
+/// shrinks the failing vector (halving removal) before reporting.
+pub fn check_vec<T: Clone + std::fmt::Debug, G, P>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: G,
+    mut prop: P,
+) where
+    G: FnMut(&mut Rng) -> Vec<T>,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            let (shrunk, msg) = shrink(&input, &mut prop, first_msg);
+            panic!(
+                "property `{name}` failed at case {i} (seed {case_seed:#x}):\n  {msg}\n  shrunk input ({} of {} elems): {shrunk:?}",
+                shrunk.len(),
+                input.len()
+            );
+        }
+    }
+}
+
+fn shrink<T: Clone, P>(input: &[T], prop: &mut P, mut msg: String) -> (Vec<T>, String)
+where
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    let mut cur: Vec<T> = input.to_vec();
+    let mut chunk = cur.len() / 2;
+    while chunk > 0 {
+        let mut i = 0;
+        while i + chunk <= cur.len() {
+            let mut cand = cur.clone();
+            cand.drain(i..i + chunk);
+            if cand.is_empty() {
+                i += chunk;
+                continue;
+            }
+            match prop(&cand) {
+                Err(m) => {
+                    cur = cand;
+                    msg = m;
+                    // restart scan at same chunk size
+                    i = 0;
+                }
+                Ok(()) => i += chunk,
+            }
+        }
+        chunk /= 2;
+    }
+    (cur, msg)
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A, ctx: &str) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("sum-commutes", 50, 1, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            n += 1;
+            ensure_eq(a + b, b + a, "commutativity")
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 10, 2, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Property: no element equals 7. Generator plants a 7 among noise;
+        // the shrunk counterexample should be very small.
+        let input: Vec<u64> = vec![1, 2, 7, 3, 4, 5, 6, 8, 9, 10];
+        let mut prop = |xs: &[u64]| ensure(!xs.contains(&7), "contains 7".to_string());
+        let (shrunk, _) = shrink(&input, &mut prop, "contains 7".into());
+        assert_eq!(shrunk, vec![7]);
+    }
+
+    #[test]
+    fn ensure_helpers() {
+        assert!(ensure(true, "x").is_ok());
+        assert!(ensure(false, "x").is_err());
+        assert!(ensure_eq(1, 1, "c").is_ok());
+        assert!(ensure_eq(1, 2, "c").is_err());
+    }
+}

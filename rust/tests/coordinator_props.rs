@@ -1,0 +1,225 @@
+//! Property tests (propcheck) over coordinator invariants: routing,
+//! batching, KV state management, packing round-trips, VM totality.
+
+use pangu_atlas_quant::bench_suite::vm::{Op, Program};
+use pangu_atlas_quant::coordinator::batcher::{Batcher, BatcherConfig};
+use pangu_atlas_quant::coordinator::kv::{KvSlots, SlotState};
+use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::quant::{int4, int8};
+use pangu_atlas_quant::tokenizer::CotMode;
+use pangu_atlas_quant::util::propcheck::{check, check_vec, ensure, ensure_eq};
+
+// ---------------------------------------------------------------------------
+// KV slots
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kv_slots_never_double_allocate() {
+    check(
+        "kv-unique-slots",
+        100,
+        0xA11,
+        |rng| {
+            let bucket = rng.range(1, 16);
+            let n_alloc = rng.range(1, bucket);
+            (bucket, n_alloc)
+        },
+        |&(bucket, n_alloc)| {
+            let mut kv = KvSlots::new(bucket, 96);
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..n_alloc {
+                let slot = kv.allocate(10).map_err(|e| e.to_string())?;
+                ensure(seen.insert(slot), format!("slot {slot} allocated twice"))?;
+                ensure(slot < bucket, "slot out of range")?;
+            }
+            ensure_eq(kv.active_count(), n_alloc, "active count")
+        },
+    );
+}
+
+#[test]
+fn prop_kv_positions_bounded_by_window() {
+    check(
+        "kv-window-bound",
+        100,
+        0xB22,
+        |rng| {
+            let max_seq = rng.range(8, 64);
+            let prompt = rng.range(1, max_seq - 1);
+            let steps = rng.range(0, 2 * max_seq);
+            (max_seq, prompt, steps)
+        },
+        |&(max_seq, prompt, steps)| {
+            let mut kv = KvSlots::new(1, max_seq);
+            let s = kv.allocate(prompt).map_err(|e| e.to_string())?;
+            for _ in 0..steps {
+                match kv.state(s) {
+                    SlotState::Active { pos } => {
+                        ensure(pos < max_seq, format!("pos {pos} >= window {max_seq}"))?;
+                        let _ = kv.advance(s).map_err(|e| e.to_string())?;
+                    }
+                    SlotState::Finished { pos } => {
+                        ensure(pos < max_seq, "finished past window")?;
+                        break;
+                    }
+                    SlotState::Free => return Err("slot freed mid-run".into()),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batcher
+// ---------------------------------------------------------------------------
+
+fn mk_request(id: u64) -> Request {
+    Request::new(id, "7b-sim", "int8", CotMode::NoThink, vec![])
+}
+
+#[test]
+fn prop_batcher_preserves_fifo_and_never_overflows() {
+    check_vec(
+        "batcher-fifo",
+        60,
+        0xC33,
+        |rng| {
+            let n = rng.range(1, 40);
+            (0..n as u64).collect::<Vec<u64>>()
+        },
+        |ids| {
+            let mut b = Batcher::new(BatcherConfig {
+                buckets: vec![1, 4, 8],
+                max_wait: std::time::Duration::from_millis(0),
+            });
+            for &id in ids {
+                b.push(mk_request(id));
+            }
+            let mut drained = Vec::new();
+            while let Some(w) = b.flush() {
+                ensure(w.requests.len() <= w.bucket, "wave overflows bucket")?;
+                ensure(
+                    [1usize, 4, 8].contains(&w.bucket),
+                    format!("unknown bucket {}", w.bucket),
+                )?;
+                drained.extend(w.requests.iter().map(|r| r.id));
+            }
+            ensure_eq(drained.len(), ids.len(), "all requests drained")?;
+            ensure(drained.windows(2).all(|w| w[0] < w[1]), "FIFO order broken")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Quantization round trips (Rust mirror, arbitrary values)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_int4_pack_roundtrip() {
+    check(
+        "int4-pack-roundtrip",
+        100,
+        0xD44,
+        |rng| {
+            let k = 2 * rng.range(1, 64);
+            let n = rng.range(1, 16);
+            let vals: Vec<i8> = (0..k * n).map(|_| rng.range(0, 15) as i8 - 8).collect();
+            (k, n, vals)
+        },
+        |(k, n, vals)| {
+            let packed = int4::pack(vals, *k, *n);
+            ensure_eq(packed.len(), k / 2 * n, "packed size")?;
+            let back = int4::unpack(&packed, k / 2, *n);
+            ensure(back == *vals, "unpack != original")
+        },
+    );
+}
+
+#[test]
+fn prop_int8_quant_error_bound() {
+    check(
+        "int8-error-bound",
+        60,
+        0xE55,
+        |rng| {
+            let k = rng.range(2, 32);
+            let n = rng.range(1, 8);
+            let scale = 10f32.powi(rng.range(0, 6) as i32 - 3);
+            let vals: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * scale).collect();
+            (k, n, vals)
+        },
+        |(k, n, vals)| {
+            let (q, s) = int8::quant_weight_per_channel(vals, *k, *n);
+            for row in 0..*k {
+                for col in 0..*n {
+                    let deq = q[row * n + col] as f32 * s[col];
+                    let err = (deq - vals[row * n + col]).abs();
+                    ensure(
+                        err <= s[col] / 2.0 + 1e-6,
+                        format!("error {err} > half-scale {}", s[col] / 2.0),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// MiniLang VM totality: any program over any input halts in domain.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_vm_total_and_closed() {
+    check(
+        "vm-total",
+        200,
+        0xF66,
+        |rng| {
+            let ops: Vec<Op> = (0..rng.range(0, 8))
+                .map(|_| Op::ALL[rng.range(0, Op::ALL.len() - 1)])
+                .collect();
+            let input: Vec<u8> = (0..rng.range(1, 12)).map(|_| rng.range(0, 15) as u8).collect();
+            (ops, input)
+        },
+        |(ops, input)| {
+            let out = Program(ops.clone())
+                .run(input, 16)
+                .map_err(|e| e.to_string())?;
+            ensure_eq(out.len(), input.len(), "length preserved")?;
+            ensure(out.iter().all(|&v| v < 16), "value escaped domain")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Sampler: always returns a valid token id; greedy matches max.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sampler_in_range() {
+    use pangu_atlas_quant::coordinator::sampling;
+    use pangu_atlas_quant::util::prng::Rng;
+    check(
+        "sampler-range",
+        100,
+        0xAB7,
+        |rng| {
+            let v = rng.range(2, 64);
+            let logits: Vec<f32> = (0..v).map(|_| rng.normal() as f32 * 3.0).collect();
+            let temp = rng.f32() * 2.0;
+            let top_k = rng.range(0, v);
+            (logits, temp, top_k, rng.next_u64())
+        },
+        |(logits, temp, top_k, seed)| {
+            let mut r = Rng::new(*seed);
+            let t = sampling::sample(logits, *temp, *top_k, &mut r);
+            ensure((t as usize) < logits.len(), "token out of vocab")?;
+            if *temp == 0.0 {
+                ensure_eq(t, sampling::greedy(logits), "greedy mismatch")?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,118 @@
+//! De-risk integration test for the AOT interface decisions (DESIGN.md §3):
+//!   * HLO text with multiple parameters keeps jit argument order
+//!   * single flat f32 output (logits ++ kv-state) -> one non-tuple buffer
+//!   * i8 parameters accepted via untyped literals
+//!   * the output buffer feeds back as the state input via execute_b
+//!     (device-resident KV pattern) without any host round trip
+//!   * partial host copy of just the logits prefix via copy_raw_to_host_sync
+//!
+//! Skips (passes trivially) when the generated HLO file is absent.
+
+use anyhow::Result;
+
+#[test]
+fn flat_state_roundtrip_and_buffer_feedback() -> Result<()> {
+    let path = "/tmp/derisk/fn.hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not generated");
+        return Ok(());
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+
+    // fn(w f32[4,4], wq i8[4,4], tok i32[2], state f32[16]) -> f32[16]
+    //   out[0..8]  = [sum(kv,axis=1), max(kv,axis=1), 0, 0, 0, 0]
+    //   out[8..16] = new kv = old kv + (w[tok] + wq[tok])
+    let w: Vec<f32> = (0..16).map(|i| i as f32).collect();
+    let w_lit = xla::Literal::vec1(&w).reshape(&[4, 4])?;
+    let wq_lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        &[4, 4],
+        &[1u8; 16],
+    )?;
+    let tok = xla::Literal::vec1(&[1i32, 3i32]);
+    let state0 = xla::Literal::vec1(&[0f32; 16]);
+
+    let w_b = client.buffer_from_host_literal(None, &w_lit)?;
+    let wq_b = client.buffer_from_host_literal(None, &wq_lit)?;
+    let tok_b = client.buffer_from_host_literal(None, &tok)?;
+    let state_b = client.buffer_from_host_literal(None, &state0)?;
+
+    // Tiny readout executable: state f32[16] -> logits f32[8] (prefix slice).
+    let ro_proto = xla::HloModuleProto::from_text_file("/tmp/derisk/readout.hlo.txt")?;
+    let readout = client.compile(&xla::XlaComputation::from_proto(&ro_proto))?;
+
+    let outs = exe.execute_b(&[&w_b, &wq_b, &tok_b, &state_b])?;
+    assert_eq!(outs[0].len(), 1, "expected one flat output buffer");
+
+    // Logits via the readout executable: only 8 floats cross to host.
+    let ro = readout.execute_b(&[&outs[0][0]])?;
+    let logits = ro[0][0].to_literal_sync()?.to_vec::<f32>()?;
+    // kv row0 = [4,5,6,7]+1 = [5,6,7,8]: sum 26 max 8; row1 = [13,14,15,16]: sum 58 max 16
+    assert_eq!(&logits[..4], &[26.0, 58.0, 8.0, 16.0]);
+
+    // Feed the state back (device-resident): sums double.
+    let outs2 = exe.execute_b(&[&w_b, &wq_b, &tok_b, &outs[0][0]])?;
+    let ro2 = readout.execute_b(&[&outs2[0][0]])?;
+    let logits2 = ro2[0][0].to_literal_sync()?.to_vec::<f32>()?;
+    assert_eq!(&logits2[..4], &[52.0, 116.0, 16.0, 32.0]);
+
+    println!("derisk flat-state roundtrip OK");
+    Ok(())
+}
+
+#[test]
+fn artifact_prefill_executes() -> Result<()> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return Ok(());
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto =
+        xla::HloModuleProto::from_text_file(dir.join("exe/1b-sim_fp16_prefill_b8.hlo.txt").to_str().unwrap())?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    eprintln!("compiled");
+    let tensors = pangu_atlas_quant::runtime::weights::read_pten(&dir.join("weights/1b-sim_fp16.pten"))?;
+    eprintln!("read {} tensors", tensors.len());
+    let mut bufs = Vec::new();
+    let mut lits = Vec::new(); // keep host literals alive: the PJRT upload
+                               // may read them asynchronously
+    for t in &tensors {
+        let lit = t.to_literal()?;
+        bufs.push(client.buffer_from_host_literal(None, &lit)?);
+        lits.push(lit);
+    }
+    eprintln!("uploaded");
+    let tokens = vec![0i32; 8 * 48];
+    eprintln!("a: vec1");
+    let tok_r1 = xla::Literal::vec1(&tokens);
+    eprintln!("b: reshape");
+    let tok_lit = tok_r1.reshape(&[8, 48])?;
+    eprintln!("c: len lit");
+    let len_lit = xla::Literal::vec1(&[5i32, 5, 5, 5, 5, 5, 5, 5]);
+    eprintln!("d: tok upload");
+    let tok_b = client.buffer_from_host_literal(None, &tok_lit)?;
+    eprintln!("e: len upload");
+    let len_b = client.buffer_from_host_literal(None, &len_lit)?;
+    eprintln!("inputs ready");
+    let mut inputs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    inputs.push(&tok_b);
+    inputs.push(&len_b);
+    let outs = exe.execute_b(&inputs)?;
+    eprintln!("executed: {} outputs", outs[0].len());
+    let shape = outs[0][0].on_device_shape()?;
+    eprintln!("shape: {shape:?}");
+    // readout path (engine hot loop)
+    let ro_proto = xla::HloModuleProto::from_text_file(
+        dir.join("exe/1b-sim_readout_b8.hlo.txt").to_str().unwrap())?;
+    let ro = client.compile(&xla::XlaComputation::from_proto(&ro_proto))?;
+    eprintln!("readout compiled");
+    let ro_outs = ro.execute_b(&[&outs[0][0]])?;
+    eprintln!("readout executed");
+    let logits = ro_outs[0][0].to_literal_sync()?.to_vec::<f32>()?;
+    eprintln!("logits fetched: {} values, first {:?}", logits.len(), &logits[..4]);
+    let lit = outs[0][0].to_literal_sync()?;
+    eprintln!("big state fetch ok: len {}", lit.element_count());
+    Ok(())
+}
