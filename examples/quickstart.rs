@@ -6,8 +6,8 @@
 use anyhow::Result;
 
 use pangu_atlas_quant::bench_suite::scoring;
-use pangu_atlas_quant::coordinator::engine::Engine;
 use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use pangu_atlas_quant::harness::Harness;
 use pangu_atlas_quant::runtime::backend::DeviceBackend;
 use pangu_atlas_quant::tokenizer::CotMode;
@@ -32,11 +32,14 @@ fn main() -> Result<()> {
 
     // 3. Generate under each CoT mode with the INT8 variant.
     let tk = h.tokenizer.clone();
-    let engine = Engine::new(&tk);
+    let scheduler = Scheduler::new(
+        &tk,
+        SchedulerConfig { bucket: 1, gate: AdmitGate::Continuous },
+    );
     for mode in CotMode::ALL {
         let req = Request::new(1, "7b-sim", "int8", mode, task.examples.clone());
         let mut backend = DeviceBackend::new(&mut h.runtime, "7b-sim", "int8")?;
-        let (resps, report) = engine.run_wave(&mut backend, 1, &[req])?;
+        let (resps, report) = scheduler.run_batch(&mut backend, &[req])?;
         let resp = &resps[0];
         let outcome = scoring::score_generation(&tk, &task, &resp.tokens);
         println!(

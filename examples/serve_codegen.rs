@@ -1,7 +1,7 @@
 //! End-to-end serving driver (the required E2E validation example):
-//! loads the trained 7b-sim model, serves batched HumanEval-S requests
-//! through the full router -> batcher -> engine -> PJRT stack from client
-//! threads, and reports latency / throughput / accuracy.
+//! loads the trained 7b-sim model, serves HumanEval-S requests through the
+//! full router -> admission -> continuous scheduler -> PJRT stack from
+//! client threads, and reports latency / TTFT / throughput / accuracy.
 //!
 //!     cargo run --release --example serve_codegen -- \
 //!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4]
@@ -14,9 +14,11 @@ use anyhow::{anyhow, Result};
 
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring::{self, Outcome};
-use pangu_atlas_quant::coordinator::batcher::BatcherConfig;
+use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::runtime::backend::DeviceProvider;
 use pangu_atlas_quant::runtime::Runtime;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::cli::Args;
@@ -32,19 +34,20 @@ fn main() -> Result<()> {
 
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
-    let buckets = rt.manifest.serve_buckets.clone();
+    let bucket = rt.manifest.serve_buckets.iter().copied().max().unwrap_or(8);
     let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["humaneval_s"]))?;
     bench.validate()?;
 
     println!(
         "serving {n_requests} HumanEval-S requests on {model}/{variant} \
-         from {n_clients} client threads (buckets {buckets:?})"
+         from {n_clients} client threads (continuous batching, bucket {bucket})"
     );
 
     let (mut server, handle) = Server::new(
-        rt,
+        DeviceProvider::new(rt),
         &tk,
-        BatcherConfig { buckets, max_wait: Duration::from_millis(15) },
+        SchedulerConfig { bucket, gate: AdmitGate::Continuous },
+        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(15) },
     );
 
     // Client threads: each submits a slice of the benchmark, cycling modes.
@@ -100,7 +103,7 @@ fn main() -> Result<()> {
     }
 
     println!("\n{}", server.metrics.render());
-    let rt = server.into_runtime();
+    let rt = server.into_provider().into_runtime();
     let s = Summary::of(&latencies);
     let tokens = rt.stats.decode_steps;
     println!("=== E2E serving report ===");

@@ -1,13 +1,19 @@
 //! Microbenchmarks of the L3 hot-path components (benchkit): quant mirror
-//! GEMMs, Hadamard transform, repetition detector, sampler, JSON, batcher.
-//! These run without artifacts — the §Perf profiling substrate for the
-//! coordinator layer.
+//! GEMMs, Hadamard transform, repetition detector, sampler, JSON, and the
+//! continuous-batching scheduler loop over the mock backend. These run
+//! without artifacts — the §Perf profiling substrate for the coordinator
+//! layer.
 //!
 //!     cargo bench --bench microbench
 
 use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
+use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::sampling;
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use pangu_atlas_quant::quant::{hadamard, int4, int8};
+use pangu_atlas_quant::runtime::backend::MockBackend;
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::benchkit::{BenchConfig, Group};
 use pangu_atlas_quant::util::json::Json;
 use pangu_atlas_quant::util::prng::Rng;
@@ -63,6 +69,39 @@ fn main() {
     g.run("repetition detect len=96", &cfg, || {
         std::hint::black_box(detect(&tokens, &rep_cfg));
     });
+    g.finish();
+
+    // ---- continuous-batching scheduler over the mock backend -----------
+    let mut g = Group::new("scheduler");
+    let tk = Tokenizer::minilang_default();
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    let examples = vec![(vec![1u8, 2, 3, 4, 5], vec![5u8, 4, 3, 2, 1])];
+    let mk_requests = |n: usize| -> Vec<Request> {
+        (0..n)
+            .map(|i| Request::new(i as u64, "7b-sim", "int8", modes[i % 3], examples.clone()))
+            .collect()
+    };
+    g.run("admission pick (mode-aware, q=64)", &cfg, || {
+        let mut q = AdmissionQueue::new(AdmitConfig::default());
+        for r in mk_requests(64) {
+            q.push(r);
+        }
+        while let Some(r) = q.admit(std::time::Instant::now()) {
+            std::hint::black_box(r.id);
+        }
+    });
+    for gate in [AdmitGate::Continuous, AdmitGate::WaveBarrier] {
+        let name = format!("session 32 reqs bucket=8 ({gate:?})");
+        g.run(&name, &quick, || {
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 22);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            let sched = Scheduler::new(&tk, SchedulerConfig { bucket: 8, gate });
+            let (resps, report) =
+                sched.run_batch(&mut be, &mk_requests(32)).expect("mock session");
+            assert_eq!(resps.len(), 32);
+            std::hint::black_box(report.occupancy());
+        });
+    }
     g.finish();
 
     // ---- substrates ----------------------------------------------------

@@ -1,0 +1,193 @@
+//! Admission policy: which queued request fills which freed slot.
+//!
+//! The wave-era `Batcher` grouped requests into fixed waves; under
+//! continuous batching the scheduler instead asks the queue for one request
+//! every time a slot frees up. Policy:
+//!
+//!   * FIFO by default — arrival order is admission order.
+//!   * Mode-aware (optional): short-completion modes (`no_think`) are
+//!     admitted ahead of trace-bearing ones (`slow_think`) because they
+//!     recycle the slot sooner, which raises occupancy under mixed traffic
+//!     (the paper's Fig. 2 length gap is exactly why this matters).
+//!   * Anti-starvation: once the queue head has waited past `max_wait`,
+//!     admission falls back to strict FIFO until the backlog is fresh again.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Request;
+use crate::tokenizer::CotMode;
+
+#[derive(Debug, Clone)]
+pub struct AdmitConfig {
+    /// Prefer short-mode requests when filling a freed slot.
+    pub mode_aware: bool,
+    /// Aging bound: a head request older than this forces FIFO admission.
+    pub max_wait: Duration,
+}
+
+impl Default for AdmitConfig {
+    fn default() -> Self {
+        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(50) }
+    }
+}
+
+/// Expected completion-length rank per CoT mode (paper Fig. 2 ordering).
+fn mode_rank(mode: CotMode) -> u8 {
+    match mode {
+        CotMode::NoThink => 0,
+        CotMode::AutoThink => 1,
+        CotMode::SlowThink => 2,
+    }
+}
+
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    cfg: AdmitConfig,
+    queue: VecDeque<Request>,
+}
+
+impl AdmissionQueue {
+    pub fn new(cfg: AdmitConfig) -> AdmissionQueue {
+        AdmissionQueue { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Launch readiness for a *new* session over a `bucket`-slot batch:
+    /// either the queue can fill the bucket in one prefill, or the head
+    /// request has aged past `max_wait` (the wave-era batching deadline —
+    /// without it, burst arrivals right after a session starts would each
+    /// pay the device backend's join-emulation cost instead of sharing one
+    /// prefill).
+    pub fn ready(&self, bucket: usize, now: Instant) -> bool {
+        self.queue.len() >= bucket
+            || self.queue.front().map_or(false, |r| {
+                now.checked_duration_since(r.arrived).unwrap_or(Duration::ZERO)
+                    >= self.cfg.max_wait
+            })
+    }
+
+    /// Pick the next request to fill one freed slot. `now` is injected for
+    /// testability.
+    pub fn admit(&mut self, now: Instant) -> Option<Request> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        if !self.cfg.mode_aware {
+            return self.queue.pop_front();
+        }
+        // Anti-starvation: a stale head is admitted unconditionally.
+        let head_wait = now
+            .checked_duration_since(self.queue.front().unwrap().arrived)
+            .unwrap_or(Duration::ZERO);
+        if head_wait >= self.cfg.max_wait {
+            return self.queue.pop_front();
+        }
+        // Cheapest mode wins; ties go to the earliest arrival (queue order).
+        let idx = self
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, r)| (mode_rank(r.mode), *i))
+            .map(|(i, _)| i)
+            .unwrap();
+        self.queue.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, mode: CotMode) -> Request {
+        Request::new(id, "7b-sim", "int8", mode, vec![])
+    }
+
+    fn queue(mode_aware: bool, wait_ms: u64) -> AdmissionQueue {
+        AdmissionQueue::new(AdmitConfig {
+            mode_aware,
+            max_wait: Duration::from_millis(wait_ms),
+        })
+    }
+
+    #[test]
+    fn fifo_within_one_mode() {
+        let mut q = queue(true, 1000);
+        for i in 0..4 {
+            q.push(req(i, CotMode::SlowThink));
+        }
+        let now = Instant::now();
+        for i in 0..4 {
+            assert_eq!(q.admit(now).unwrap().id, i);
+        }
+        assert!(q.admit(now).is_none());
+    }
+
+    #[test]
+    fn short_mode_overtakes_long_mode() {
+        let mut q = queue(true, 1000);
+        q.push(req(0, CotMode::SlowThink));
+        q.push(req(1, CotMode::NoThink));
+        q.push(req(2, CotMode::AutoThink));
+        let now = Instant::now();
+        assert_eq!(q.admit(now).unwrap().id, 1, "no_think first");
+        assert_eq!(q.admit(now).unwrap().id, 2, "auto_think second");
+        assert_eq!(q.admit(now).unwrap().id, 0, "slow_think last");
+    }
+
+    #[test]
+    fn stale_head_is_never_starved() {
+        let mut q = queue(true, 50);
+        q.push(req(0, CotMode::SlowThink));
+        q.push(req(1, CotMode::NoThink));
+        // Once the slow_think head has aged past max_wait it goes first even
+        // though a cheaper mode is queued behind it.
+        let later = Instant::now() + Duration::from_millis(60);
+        assert_eq!(q.admit(later).unwrap().id, 0);
+        assert_eq!(q.admit(later).unwrap().id, 1);
+    }
+
+    #[test]
+    fn strict_fifo_when_mode_awareness_disabled() {
+        let mut q = queue(false, 0);
+        q.push(req(0, CotMode::SlowThink));
+        q.push(req(1, CotMode::NoThink));
+        let now = Instant::now();
+        assert_eq!(q.admit(now).unwrap().id, 0);
+        assert_eq!(q.admit(now).unwrap().id, 1);
+    }
+
+    #[test]
+    fn launch_readiness_fills_bucket_or_ages_out() {
+        let mut q = queue(true, 50);
+        let now = Instant::now();
+        assert!(!q.ready(2, now), "empty queue is never ready");
+        q.push(req(0, CotMode::NoThink));
+        assert!(!q.ready(2, now), "one request must wait for the deadline");
+        assert!(q.ready(1, now), "full bucket launches immediately");
+        let later = now + Duration::from_millis(60);
+        assert!(q.ready(2, later), "aged head forces a launch");
+        q.push(req(1, CotMode::NoThink));
+        assert!(q.ready(2, now), "bucket can be filled");
+    }
+
+    #[test]
+    fn counts_and_empty() {
+        let mut q = queue(true, 0);
+        assert!(q.is_empty());
+        assert!(q.admit(Instant::now()).is_none());
+        q.push(req(0, CotMode::NoThink));
+        assert_eq!(q.queued(), 1);
+    }
+}

@@ -1,10 +1,12 @@
 //! KV slot accounting for a batch bucket.
 //!
-//! Tracks, per wave, which batch slots carry live sequences, their current
-//! positions, and the KV window bound — the coordinator-side mirror of the
-//! device-resident cache. Invariants (property-tested): a slot is never
-//! double-allocated, positions never exceed the window, freed slots are
-//! reusable.
+//! Tracks which batch slots carry live sequences, their current positions,
+//! and the KV window bound — the coordinator-side mirror of the
+//! device-resident cache. The continuous scheduler cycles slots through
+//! Free -> Active -> Finished -> Free (via [`KvSlots::release`]), so a slot
+//! is re-allocated at a fresh position as soon as its previous occupant is
+//! evicted. Invariants (property-tested): a slot is never double-allocated,
+//! positions never exceed the window, released slots are reusable.
 
 use anyhow::{bail, Result};
 
@@ -87,7 +89,19 @@ impl KvSlots {
         }
     }
 
-    /// Release every slot (wave drained).
+    /// Release one slot back to Free (continuous scheduler evicted it).
+    /// The slot is immediately re-allocatable at a new position.
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        match self.slots[slot] {
+            SlotState::Active { .. } | SlotState::Finished { .. } => {
+                self.slots[slot] = SlotState::Free;
+                Ok(())
+            }
+            SlotState::Free => bail!("release on free slot {slot}"),
+        }
+    }
+
+    /// Release every slot (batch drained).
     pub fn reset(&mut self) {
         for s in self.slots.iter_mut() {
             *s = SlotState::Free;
@@ -99,6 +113,18 @@ impl KvSlots {
             .iter()
             .filter(|s| matches!(s, SlotState::Active { .. }))
             .count()
+    }
+
+    /// Slots holding a sequence (Active or Finished-but-not-released).
+    pub fn occupied_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| !matches!(s, SlotState::Free))
+            .count()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.slots.len() - self.occupied_count()
     }
 
     pub fn any_active(&self) -> bool {
@@ -135,6 +161,28 @@ mod tests {
         let mut kv = KvSlots::new(1, 48);
         assert!(kv.allocate(48).is_err());
         assert!(kv.allocate(47).is_ok());
+    }
+
+    #[test]
+    fn release_reuses_slot_at_new_position() {
+        let mut kv = KvSlots::new(2, 96);
+        let a = kv.allocate(10).unwrap();
+        let b = kv.allocate(20).unwrap();
+        assert_eq!((a, b), (0, 1));
+        kv.advance(a).unwrap();
+        kv.finish(a).unwrap();
+        assert_eq!(kv.occupied_count(), 2);
+        kv.release(a).unwrap();
+        assert_eq!(kv.state(a), SlotState::Free);
+        assert_eq!(kv.occupied_count(), 1);
+        assert_eq!(kv.free_count(), 1);
+        // Re-allocate the released slot with a different prompt length.
+        let c = kv.allocate(7).unwrap();
+        assert_eq!(c, a, "released slot is the first free one");
+        assert_eq!(kv.state(c), SlotState::Active { pos: 7 });
+        // Releasing an active slot is allowed (abandoned request).
+        kv.release(b).unwrap();
+        assert!(kv.release(b).is_err(), "double release");
     }
 
     #[test]

@@ -1,30 +1,36 @@
 //! L3 serving coordinator — the paper's deployment framework, shaped like a
 //! vLLM-style serving stack specialized for quantized variants:
 //!
-//!   * [`request`]  — request/response types + generation parameters
-//!   * [`cot`]      — CoT mode controller (directive tokens, per-mode budgets)
-//!   * [`sampling`] — greedy / temperature / top-k samplers
-//!   * [`kv`]       — KV slot accounting within a batch bucket
-//!   * [`batcher`]  — dynamic batcher: FIFO + deadline, bucket sizing
-//!   * [`engine`]   — generation engine driving a [`crate::runtime::backend::Backend`]
-//!   * [`server`]   — request loop: channel front-end, per-variant queues
-//!   * [`metrics`]  — counters + latency summaries
+//!   * [`request`]   — request/response types + generation parameters
+//!   * [`cot`]       — CoT mode controller (directive tokens, per-mode budgets)
+//!   * [`sampling`]  — greedy / temperature / top-k samplers
+//!   * [`kv`]        — KV slot accounting (Free -> Active -> Finished -> Free)
+//!   * [`admission`] — admission policy: which queued request fills which
+//!                     freed slot (FIFO + mode-aware, anti-starvation aging)
+//!   * [`scheduler`] — continuous-batching decode loop driving a
+//!                     [`crate::runtime::backend::Backend`]
+//!   * [`server`]    — request loop: channel front-end, per-variant queues,
+//!                     generic over backend construction
+//!   * [`metrics`]   — counters + latency summaries
 //!
-//! Scheduling model: the flat-state ABI keeps the whole batch's KV in one
-//! device buffer, so scheduling is *wave-based* — the batcher forms a wave
-//! of up to `bucket` requests (mixing CoT modes freely; a wave is bound to
-//! one (model, variant) pair), the engine prefills the wave, decodes until
-//! every slot finishes (finished slots decode PAD tokens that are masked
-//! from outputs), then the next wave starts. Slot-level admission as in
-//! vLLM would need a KV-merge primitive between device states, which the
-//! PJRT buffer ABI does not expose; the trade-off is quantified by the
-//! batch-efficiency metric and discussed in DESIGN.md.
+//! Scheduling model: *continuous batching at slot granularity*. The
+//! scheduler owns a long-lived decode loop over a fixed batch bucket;
+//! every step it retires finished slots (streaming their responses out
+//! immediately) and refills freed slots from the admission queue via the
+//! backend's `join` operation. The mock backend implements `join` natively;
+//! the PJRT device backend emulates it by re-prefilling occupied rows and
+//! replaying their decoded tokens, because the flat-state buffer ABI has no
+//! KV-merge primitive — the emulation cost is the price of the shared ABI
+//! and is confined to mid-flight admissions. The old wave discipline
+//! (admit only when the batch is empty) survives as
+//! `scheduler::AdmitGate::WaveBarrier`, the measured baseline that
+//! `SchedReport::occupancy` is compared against.
 
-pub mod batcher;
+pub mod admission;
 pub mod cot;
-pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod sampling;
+pub mod scheduler;
 pub mod server;

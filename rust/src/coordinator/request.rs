@@ -63,7 +63,8 @@ impl Request {
     }
 }
 
-/// Completed generation.
+/// Completed generation. Under the continuous scheduler a response is
+/// delivered the moment its slot finishes, not at a wave barrier.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
@@ -73,11 +74,10 @@ pub struct Response {
     pub truncated: bool,
     /// Wall time from enqueue to completion.
     pub latency_ms: f64,
-    /// Wall time from prefill start to completion (service time).
+    /// Wall time from slot admission to completion (service time).
     pub service_ms: f64,
-    /// Decode steps spent in the wave while this slot was already finished
-    /// (batch-efficiency diagnostics).
-    pub padded_steps: usize,
+    /// Wall time from enqueue to the first sampled token.
+    pub ttft_ms: f64,
 }
 
 #[cfg(test)]

@@ -1,0 +1,732 @@
+//! Continuous-batching scheduler: the serving hot loop.
+//!
+//! Replaces the wave-synchronous `Engine::run_wave` (which pinned every
+//! request in a wave until the slowest slot finished, burning decode steps
+//! on PAD for finished slots). The scheduler owns a long-lived decode loop
+//! over a fixed batch bucket and works at slot granularity:
+//!
+//!   * per step, finished slots are retired immediately — the response is
+//!     delivered to `on_response` the moment its slot finishes, and the KV
+//!     slot is released for reuse;
+//!   * per step, freed slots are refilled from the [`AdmissionQueue`] via
+//!     [`Backend::join`] (mid-flight prefill), so a late-arriving request
+//!     starts decoding while earlier requests are still running;
+//!   * the `pump` callback is invoked every step so the owner (the server
+//!     loop) can drain newly arrived requests into the queue mid-session.
+//!
+//! [`AdmitGate::WaveBarrier`] disables mid-flight admission (a new batch is
+//! only admitted once every slot has drained), reproducing the old wave
+//! discipline — kept as the baseline the continuous path is measured
+//! against; see `SchedReport::occupancy` and the comparison tests.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::admission::AdmissionQueue;
+use crate::coordinator::cot::{self, CotPolicy};
+use crate::coordinator::kv::{KvSlots, SlotState};
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::sampling;
+use crate::runtime::backend::{Backend, StateHandle};
+use crate::tokenizer::Tokenizer;
+use crate::util::prng::Rng;
+
+/// Admission discipline for a scheduler session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitGate {
+    /// Slot-level continuous batching: join freed slots every step.
+    Continuous,
+    /// Wave-compatible baseline: admit only when the whole batch is empty.
+    WaveBarrier,
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Batch bucket the backend executes at (slots available per step).
+    pub bucket: usize,
+    pub gate: AdmitGate,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { bucket: 8, gate: AdmitGate::Continuous }
+    }
+}
+
+/// Per-session execution report: step-level scheduler accounting (the
+/// successor of the wave-era `WaveReport`).
+#[derive(Debug, Clone, Default)]
+pub struct SchedReport {
+    pub bucket: usize,
+    pub decode_steps: usize,
+    /// Sum over decode steps of slots carrying a live sequence.
+    pub live_slot_steps: usize,
+    /// Requests admitted (initial prefill + joins).
+    pub admitted: usize,
+    /// Mid-flight admissions into a running batch.
+    pub joins: usize,
+    pub completed: usize,
+    /// Requests rejected at admission (e.g. prompt exceeds the prefill
+    /// window); each gets an empty truncated response, not a dead channel.
+    pub rejected: usize,
+    /// In-flight requests aborted by a backend failure; each gets its
+    /// partial output back (marked truncated) before the error surfaces.
+    pub aborted: usize,
+    pub tokens_generated: usize,
+    /// Peak concurrent live slots observed at a decode step.
+    pub max_live: usize,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+}
+
+impl SchedReport {
+    /// Total slot-steps spent (the denominator of occupancy): every decode
+    /// step costs the full bucket on the device, live or not.
+    pub fn slot_steps(&self) -> usize {
+        self.decode_steps * self.bucket
+    }
+
+    /// Fraction of slot-steps that carried live tokens (1.0 = no waste).
+    /// Directly comparable to the wave scheduler's batch efficiency: run
+    /// the same workload under [`AdmitGate::WaveBarrier`] to get that
+    /// number.
+    pub fn occupancy(&self) -> f64 {
+        let total = self.slot_steps();
+        if total == 0 {
+            return 1.0;
+        }
+        self.live_slot_steps as f64 / total as f64
+    }
+
+    /// Mean requests admitted per decode step.
+    pub fn admitted_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return self.admitted as f64;
+        }
+        self.admitted as f64 / self.decode_steps as f64
+    }
+}
+
+/// One slot's in-flight request context.
+struct SlotCtx {
+    req: Request,
+    output: Vec<u32>,
+    budget: usize,
+    truncated: bool,
+    rng: Rng,
+    ttft_ms: f64,
+    admitted_at: Instant,
+}
+
+impl SlotCtx {
+    fn new(req: Request, budget: usize) -> SlotCtx {
+        let rng = Rng::new(req.params.seed ^ req.id);
+        SlotCtx {
+            req,
+            output: Vec::new(),
+            budget,
+            truncated: false,
+            rng,
+            ttft_ms: 0.0,
+            admitted_at: Instant::now(),
+        }
+    }
+
+    fn into_response(self) -> Response {
+        Response {
+            id: self.req.id,
+            tokens: self.output,
+            truncated: self.truncated,
+            latency_ms: self.req.arrived.elapsed().as_secs_f64() * 1e3,
+            service_ms: self.admitted_at.elapsed().as_secs_f64() * 1e3,
+            ttft_ms: self.ttft_ms,
+        }
+    }
+}
+
+/// A request that cannot be admitted (malformed prompt) gets an immediate
+/// empty truncated response instead of poisoning the whole session.
+fn reject(req: &Request, report: &mut SchedReport, on_response: &mut dyn FnMut(Response)) {
+    report.rejected += 1;
+    on_response(Response {
+        id: req.id,
+        tokens: Vec::new(),
+        truncated: true,
+        latency_ms: req.arrived.elapsed().as_secs_f64() * 1e3,
+        service_ms: 0.0,
+        ttft_ms: 0.0,
+    });
+}
+
+pub struct Scheduler<'t> {
+    pub tokenizer: &'t Tokenizer,
+    pub policy: CotPolicy,
+    pub cfg: SchedulerConfig,
+}
+
+impl<'t> Scheduler<'t> {
+    pub fn new(tokenizer: &'t Tokenizer, cfg: SchedulerConfig) -> Scheduler<'t> {
+        Scheduler { tokenizer, policy: CotPolicy::default(), cfg }
+    }
+
+    /// Encode a request's prompt and size its generation budget.
+    fn encode(&self, req: &Request, prompt_len: usize, max_seq: usize) -> Result<(Vec<u32>, usize)> {
+        let ids = cot::build_prompt(self.tokenizer, req.mode, &req.examples);
+        anyhow::ensure!(ids.len() <= prompt_len, "prompt exceeds prefill window");
+        let cap = self.policy.budget(req.mode, ids.len(), max_seq);
+        let budget = req.params.max_new.min(cap.max(1));
+        Ok((ids, budget))
+    }
+
+    /// Run one scheduler session: admit from `queue` (refreshed via `pump`
+    /// each step), decode until both the queue and the batch drain, and
+    /// stream each response out through `on_response` the moment its slot
+    /// finishes.
+    pub fn run<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        queue: &mut AdmissionQueue,
+        pump: &mut dyn FnMut(&mut AdmissionQueue),
+        on_response: &mut dyn FnMut(Response),
+    ) -> Result<SchedReport> {
+        let bucket = self.cfg.bucket;
+        anyhow::ensure!(bucket > 0, "scheduler bucket must be positive");
+        let mut report = SchedReport { bucket, ..SchedReport::default() };
+        let mut slots: Vec<Option<SlotCtx>> = (0..bucket).map(|_| None).collect();
+        let result = self.run_core(backend, queue, pump, on_response, &mut slots, &mut report);
+        if result.is_err() {
+            // Backend failure mid-session: every in-flight request still
+            // gets its partial output back (marked truncated) so no caller
+            // hangs on a dead reply channel; the error then surfaces.
+            for slot in slots.iter_mut() {
+                if let Some(mut ctx) = slot.take() {
+                    ctx.truncated = true;
+                    report.aborted += 1;
+                    on_response(ctx.into_response());
+                }
+            }
+        }
+        result?;
+        Ok(report)
+    }
+
+    fn run_core<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        queue: &mut AdmissionQueue,
+        pump: &mut dyn FnMut(&mut AdmissionQueue),
+        on_response: &mut dyn FnMut(Response),
+        slots: &mut [Option<SlotCtx>],
+        report: &mut SchedReport,
+    ) -> Result<()> {
+        let bucket = self.cfg.bucket;
+        let tk = self.tokenizer;
+        let prompt_len = backend.prompt_len();
+        let max_seq = backend.max_seq();
+        let vocab = backend.vocab();
+        let pad = tk.pad as i32;
+
+        let mut kv = KvSlots::new(bucket, max_seq);
+        // Frozen decode position per vacant slot (inert rows still receive a
+        // decode input every step; they re-write this position).
+        let mut hold_pos = vec![1i32; bucket];
+        let mut state: Option<StateHandle> = None;
+
+        loop {
+            pump(queue);
+
+            // ---- admission -------------------------------------------
+            let gate_open = match self.cfg.gate {
+                AdmitGate::Continuous => true,
+                AdmitGate::WaveBarrier => kv.occupied_count() == 0,
+            };
+            if gate_open && !queue.is_empty() {
+                if kv.occupied_count() == 0 {
+                    // Empty batch (first admission, a drained batch, or a
+                    // barrier wave): one whole-bucket prefill is strictly
+                    // cheaper than per-slot joins — any previous state is
+                    // dropped and rebuilt from scratch.
+                    drop(state.take());
+                    let mut tokens = vec![pad; bucket * prompt_len];
+                    let mut lens = vec![1i32; bucket];
+                    let mut admitted = 0usize;
+                    while admitted < bucket {
+                        let Some(req) = queue.admit(Instant::now()) else { break };
+                        let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
+                            Ok(enc) => enc,
+                            Err(_) => {
+                                reject(&req, report, on_response);
+                                continue;
+                            }
+                        };
+                        let slot = kv.allocate(ids.len())?;
+                        for (j, &t) in ids.iter().enumerate() {
+                            tokens[slot * prompt_len + j] = t as i32;
+                        }
+                        lens[slot] = ids.len() as i32;
+                        slots[slot] = Some(SlotCtx::new(req, budget));
+                        report.admitted += 1;
+                        admitted += 1;
+                    }
+                    if admitted == 0 {
+                        // Everything drawn this round was rejected; nothing
+                        // to prefill (state stays empty).
+                        continue;
+                    }
+                    let t0 = Instant::now();
+                    let mut st = backend.prefill(bucket, &tokens, &lens)?;
+                    report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    // Unused rows become vacant (inert) immediately.
+                    for slot in admitted..bucket {
+                        st = backend.evict(st, slot)?;
+                        hold_pos[slot] = lens[slot];
+                    }
+                    state = Some(st);
+                } else if let Some(mut st) = state.take() {
+                    // Mid-flight admission: join freed slots one request at
+                    // a time into the running batch.
+                    while kv.free_count() > 0 && !queue.is_empty() {
+                        let Some(req) = queue.admit(Instant::now()) else { break };
+                        let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
+                            Ok(enc) => enc,
+                            Err(_) => {
+                                reject(&req, report, on_response);
+                                continue;
+                            }
+                        };
+                        let slot = kv.allocate(ids.len())?;
+                        let mut row = vec![pad; prompt_len];
+                        for (j, &t) in ids.iter().enumerate() {
+                            row[j] = t as i32;
+                        }
+                        let t0 = Instant::now();
+                        st = backend.join(st, slot, &row, ids.len() as i32)?;
+                        report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                        slots[slot] = Some(SlotCtx::new(req, budget));
+                        report.admitted += 1;
+                        report.joins += 1;
+                    }
+                    state = Some(st);
+                }
+            }
+
+            let Some(mut st) = state.take() else {
+                // No state was ever created: the queue must be empty (an
+                // empty batch always opens the admission gate).
+                debug_assert!(queue.is_empty());
+                break;
+            };
+
+            // ---- sample every live slot from the current logits ------
+            let logits = backend.logits(&st)?;
+            let mut next = vec![pad; bucket];
+            for slot in 0..bucket {
+                if matches!(kv.state(slot), SlotState::Active { .. }) {
+                    let ctx = slots[slot].as_mut().expect("active slot has context");
+                    let row = &logits[slot * vocab..(slot + 1) * vocab];
+                    let tok = sampling::sample(
+                        row,
+                        ctx.req.params.temperature,
+                        ctx.req.params.top_k,
+                        &mut ctx.rng,
+                    );
+                    if ctx.output.is_empty() {
+                        ctx.ttft_ms = ctx.req.arrived.elapsed().as_secs_f64() * 1e3;
+                    }
+                    ctx.output.push(tok);
+                    next[slot] = tok as i32;
+                    if tok == tk.end {
+                        kv.finish(slot)?;
+                    } else if ctx.output.len() >= ctx.budget {
+                        ctx.truncated = true;
+                        kv.finish(slot)?;
+                    }
+                }
+            }
+
+            // ---- retire finished slots: deliver, release, evict ------
+            for slot in 0..bucket {
+                if let SlotState::Finished { pos } = kv.state(slot) {
+                    hold_pos[slot] = pos as i32;
+                    kv.release(slot)?;
+                    st = backend.evict(st, slot)?;
+                    let ctx = slots[slot].take().expect("finished slot has context");
+                    report.completed += 1;
+                    report.tokens_generated += ctx.output.len();
+                    on_response(ctx.into_response());
+                }
+            }
+
+            // ---- session end / step boundary -------------------------
+            pump(queue);
+            if kv.occupied_count() == 0 && queue.is_empty() {
+                break;
+            }
+            if !kv.any_active() {
+                // Every live slot retired this step; admit before paying
+                // for another decode.
+                state = Some(st);
+                continue;
+            }
+
+            // ---- one decode step -------------------------------------
+            let mut pos = vec![0i32; bucket];
+            for slot in 0..bucket {
+                pos[slot] = kv.position(slot).map(|p| p as i32).unwrap_or(hold_pos[slot]);
+            }
+            let live = kv.active_count();
+            let t0 = Instant::now();
+            st = backend.decode(st, &next, &pos)?;
+            report.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
+            report.decode_steps += 1;
+            report.live_slot_steps += live;
+            report.max_live = report.max_live.max(live);
+            for slot in 0..bucket {
+                if matches!(kv.state(slot), SlotState::Active { .. }) && !kv.advance(slot)? {
+                    // KV window exhausted: force-finish (retired next step).
+                    slots[slot].as_mut().expect("active slot has context").truncated = true;
+                }
+            }
+            state = Some(st);
+        }
+        Ok(())
+    }
+
+    /// Offline convenience: run a fixed set of requests to completion and
+    /// return responses in the input order (plus the session report).
+    pub fn run_batch<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        requests: &[Request],
+    ) -> Result<(Vec<Response>, SchedReport)> {
+        let mut queue = AdmissionQueue::new(crate::coordinator::admission::AdmitConfig {
+            // Offline batches preserve caller order.
+            mode_aware: false,
+            max_wait: std::time::Duration::ZERO,
+        });
+        for req in requests {
+            queue.push(req.clone());
+        }
+        let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
+        let report = self.run(backend, &mut queue, &mut |_| {}, &mut |resp| {
+            responses.push(resp);
+        })?;
+        let order: std::collections::HashMap<u64, usize> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| (req.id, i))
+            .collect();
+        responses.sort_by_key(|r| order.get(&r.id).copied().unwrap_or(usize::MAX));
+        Ok((responses, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::AdmitConfig;
+    use crate::runtime::backend::MockBackend;
+    use crate::tokenizer::CotMode;
+
+    fn fixture() -> Tokenizer {
+        crate::tokenizer::tests::test_tokenizer()
+    }
+
+    fn request(id: u64, mode: CotMode) -> Request {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+            (vec![2, 2, 3, 3, 4], vec![4, 3, 3, 2, 2]),
+        ];
+        Request::new(id, "m", "fp16", mode, ex)
+    }
+
+    fn scheduler(tk: &Tokenizer, bucket: usize, gate: AdmitGate) -> Scheduler<'_> {
+        Scheduler::new(tk, SchedulerConfig { bucket, gate })
+    }
+
+    /// Mode-dependent script: slow_think prompts get a `long` completion,
+    /// everything else a 3-token one (shared helper, see backend.rs).
+    fn mode_scripts(tk: &Tokenizer, long: usize) -> impl Fn(&[i32]) -> Vec<u32> {
+        crate::runtime::backend::minilang_mock_script(tk, long)
+    }
+
+    #[test]
+    fn batch_generates_scripted_completion() {
+        let tk = fixture();
+        let prog = tk.prog;
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![prog, rev, end]);
+        let sched = scheduler(&tk, 8, AdmitGate::Continuous);
+        let reqs = vec![request(1, CotMode::NoThink), request(2, CotMode::NoThink)];
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 2);
+        for r in &resps {
+            assert_eq!(r.tokens, vec![prog, rev, end]);
+            assert!(!r.truncated);
+            assert!(r.ttft_ms >= 0.0);
+        }
+        assert_eq!(resps[0].id, 1);
+        assert_eq!(resps[1].id, 2);
+        assert_eq!(report.admitted, 2);
+        assert_eq!(report.completed, 2);
+        // 3 emitted tokens -> 2 decode steps (prefill provides the first).
+        assert_eq!(report.decode_steps, 2);
+        assert_eq!(report.max_live, 2);
+    }
+
+    #[test]
+    fn budget_truncation_marks_response() {
+        let tk = fixture();
+        let rev = tk.ops["REV"];
+        // Never emits END: loops REV forever.
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![rev; 500]);
+        let sched = scheduler(&tk, 1, AdmitGate::Continuous);
+        let mut req = request(1, CotMode::NoThink);
+        req.params.max_new = 5;
+        let (resps, _) = sched.run_batch(&mut be, &[req]).unwrap();
+        assert!(resps[0].truncated);
+        assert_eq!(resps[0].tokens.len(), 5);
+    }
+
+    #[test]
+    fn mixed_lengths_deliver_short_first() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 7));
+        let sched = scheduler(&tk, 8, AdmitGate::Continuous);
+        let mut queue = AdmissionQueue::new(AdmitConfig { mode_aware: false, ..AdmitConfig::default() });
+        queue.push(request(1, CotMode::NoThink));
+        queue.push(request(2, CotMode::SlowThink));
+        let mut order = Vec::new();
+        let mut lens = std::collections::HashMap::new();
+        let report = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |r| {
+                order.push(r.id);
+                lens.insert(r.id, r.tokens.len());
+            })
+            .unwrap();
+        // Streaming delivery: the short request's response arrives before
+        // the slow_think request finishes.
+        assert_eq!(order, vec![1, 2]);
+        assert_eq!(lens[&1], 3);
+        assert_eq!(lens[&2], 7);
+        assert_eq!(report.decode_steps, 6);
+        assert!(report.occupancy() < 1.0);
+    }
+
+    #[test]
+    fn late_arrival_joins_mid_decode() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let sched = scheduler(&tk, 2, AdmitGate::Continuous);
+        let mut queue = AdmissionQueue::new(AdmitConfig { mode_aware: false, ..AdmitConfig::default() });
+        queue.push(request(1, CotMode::SlowThink)); // long
+        queue.push(request(2, CotMode::NoThink)); // short
+        // Request 3 arrives only after a few scheduler steps.
+        let mut pumps = 0usize;
+        let mut order = Vec::new();
+        let report = sched
+            .run(
+                &mut be,
+                &mut queue,
+                &mut |q| {
+                    pumps += 1;
+                    if pumps == 9 {
+                        q.push(request(3, CotMode::NoThink));
+                    }
+                },
+                &mut |r| order.push(r.id),
+            )
+            .unwrap();
+        assert!(be.joins >= 1, "late request must join mid-flight");
+        assert_eq!(report.joins as usize, be.joins);
+        // Both short requests finish before the long one.
+        assert_eq!(order, vec![2, 3, 1]);
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.admitted, 3);
+    }
+
+    #[test]
+    fn continuous_beats_wave_barrier_on_mixed_traffic() {
+        let tk = fixture();
+        let workload = || {
+            vec![
+                request(0, CotMode::SlowThink), // 12-token straggler
+                request(1, CotMode::NoThink),
+                request(2, CotMode::NoThink),
+                request(3, CotMode::NoThink),
+            ]
+        };
+        let run = |gate: AdmitGate| {
+            let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+            let sched = scheduler(&tk, 2, gate);
+            let (resps, report) = sched.run_batch(&mut be, &workload()).unwrap();
+            assert_eq!(resps.len(), 4);
+            report
+        };
+        let cont = run(AdmitGate::Continuous);
+        let wave = run(AdmitGate::WaveBarrier);
+        assert!(
+            cont.slot_steps() < wave.slot_steps(),
+            "continuous {} slot-steps !< wave {}",
+            cont.slot_steps(),
+            wave.slot_steps()
+        );
+        assert!(
+            cont.occupancy() > wave.occupancy(),
+            "continuous occupancy {:.3} !> wave batch efficiency {:.3}",
+            cont.occupancy(),
+            wave.occupancy()
+        );
+        assert!(cont.joins > 0);
+        assert_eq!(cont.admitted, 4);
+        assert_eq!(wave.admitted, 4);
+    }
+
+    #[test]
+    fn queue_larger_than_bucket_drains_with_slot_reuse() {
+        let tk = fixture();
+        // One slow straggler keeps the batch occupied while five short
+        // requests rotate through the second slot via join.
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 25));
+        let sched = scheduler(&tk, 2, AdmitGate::Continuous);
+        let mut reqs: Vec<Request> = vec![request(0, CotMode::SlowThink)];
+        reqs.extend((1..6).map(|i| request(i, CotMode::NoThink)));
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 6);
+        assert_eq!(report.completed, 6);
+        assert!(report.joins >= 4, "slots must be reused via join");
+        assert_eq!(be.prefills, 1, "one batch prefill, the rest join");
+        assert_eq!(be.joins, report.joins);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "run_batch restores request order");
+            assert!(!r.tokens.is_empty());
+        }
+        assert_eq!(resps[0].tokens.len(), 25);
+    }
+
+    /// Delegating backend that fails decode after `fail_at` steps —
+    /// exercises the abort-drain path.
+    struct FailAfter<F: Fn(&[i32]) -> Vec<u32>> {
+        inner: MockBackend<F>,
+        fail_at: usize,
+    }
+
+    impl<F: Fn(&[i32]) -> Vec<u32>> Backend for FailAfter<F> {
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn prompt_len(&self) -> usize {
+            self.inner.prompt_len()
+        }
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq()
+        }
+        fn prefill(
+            &mut self,
+            batch: usize,
+            tokens: &[i32],
+            lens: &[i32],
+        ) -> anyhow::Result<crate::runtime::backend::StateHandle> {
+            self.inner.prefill(batch, tokens, lens)
+        }
+        fn join(
+            &mut self,
+            state: crate::runtime::backend::StateHandle,
+            slot: usize,
+            prompt: &[i32],
+            len: i32,
+        ) -> anyhow::Result<crate::runtime::backend::StateHandle> {
+            self.inner.join(state, slot, prompt, len)
+        }
+        fn evict(
+            &mut self,
+            state: crate::runtime::backend::StateHandle,
+            slot: usize,
+        ) -> anyhow::Result<crate::runtime::backend::StateHandle> {
+            self.inner.evict(state, slot)
+        }
+        fn decode(
+            &mut self,
+            state: crate::runtime::backend::StateHandle,
+            tokens: &[i32],
+            pos: &[i32],
+        ) -> anyhow::Result<crate::runtime::backend::StateHandle> {
+            anyhow::ensure!(self.inner.steps + 1 < self.fail_at, "injected device failure");
+            self.inner.decode(state, tokens, pos)
+        }
+        fn logits(
+            &mut self,
+            state: &crate::runtime::backend::StateHandle,
+        ) -> anyhow::Result<Vec<f32>> {
+            self.inner.logits(state)
+        }
+    }
+
+    #[test]
+    fn backend_failure_aborts_with_partial_responses() {
+        let tk = fixture();
+        let mut be = FailAfter {
+            inner: MockBackend::new(64, 48, 96, mode_scripts(&tk, 12)),
+            fail_at: 3,
+        };
+        let sched = scheduler(&tk, 2, AdmitGate::Continuous);
+        let mut queue = AdmissionQueue::new(AdmitConfig::default());
+        queue.push(request(1, CotMode::SlowThink));
+        queue.push(request(2, CotMode::SlowThink));
+        let mut aborted = Vec::new();
+        let err = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |r| aborted.push(r))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected device failure"));
+        // Both in-flight requests got their partial output back, truncated,
+        // instead of leaving callers hanging on dead reply channels.
+        assert_eq!(aborted.len(), 2);
+        for r in &aborted {
+            assert!(r.truncated);
+            assert!(!r.tokens.is_empty(), "partial output preserved");
+            assert!(r.tokens.len() < 12, "generation was cut short");
+        }
+    }
+
+    #[test]
+    fn oversized_prompt_rejected_without_poisoning_session() {
+        let tk = fixture();
+        let prog = tk.prog;
+        let end = tk.end;
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![prog, end]);
+        let sched = scheduler(&tk, 2, AdmitGate::Continuous);
+        // 10 examples encode far past the 48-token prefill window.
+        let huge: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..10).map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1])).collect();
+        let reqs = vec![
+            request(1, CotMode::NoThink),
+            Request::new(2, "m", "fp16", CotMode::NoThink, huge),
+            request(3, CotMode::NoThink),
+        ];
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 3, "every caller gets a response");
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.completed, 2);
+        assert!(resps[1].truncated && resps[1].tokens.is_empty(), "rejection is explicit");
+        assert_eq!(resps[0].tokens, vec![prog, end]);
+        assert_eq!(resps[2].tokens, vec![prog, end], "session survives the bad request");
+    }
+
+    #[test]
+    fn empty_queue_is_a_noop_session() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, |_: &[i32]| vec![2]);
+        let sched = scheduler(&tk, 4, AdmitGate::Continuous);
+        let mut queue = AdmissionQueue::new(AdmitConfig::default());
+        let report = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |_| panic!("no responses"))
+            .unwrap();
+        assert_eq!(report.decode_steps, 0);
+        assert_eq!(report.admitted, 0);
+        assert_eq!(be.prefills, 0);
+        assert_eq!(report.occupancy(), 1.0);
+    }
+}

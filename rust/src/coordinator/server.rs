@@ -1,25 +1,35 @@
 //! Serving front-end: channel-based request loop over per-(model, variant)
-//! queues — the router + batcher + engine composition.
+//! queues — the router + admission + continuous-scheduler composition.
+//!
+//! The server is generic over a [`BackendProvider`], so the full serving
+//! loop (channel -> queue -> scheduler -> streamed responses) runs against
+//! [`crate::runtime::backend::MockBackend`] in tests with no runtime or
+//! artifacts, and against the PJRT-backed
+//! [`crate::runtime::backend::DeviceProvider`] in production.
 //!
 //! Threading model: the PJRT runtime wraps raw device handles that are not
-//! Send, so the server loop runs on the thread that owns the [`Runtime`]
+//! Send, so the server loop runs on the thread that owns the provider
 //! (typically main), while any number of client threads submit requests
 //! through the [`ServerHandle`] channel and block on their per-request
-//! response channel. This replaces the tokio reactor of the reference
-//! architecture (tokio is unavailable offline; DESIGN.md §5).
+//! response channel. Responses stream out as slots finish: a short request
+//! batched next to a long one gets its reply as soon as its own slot
+//! drains, not at a wave barrier. Replies are matched to callers by
+//! `Request::id` (ids should be unique among in-flight requests of one
+//! route), so delivery survives any admission reordering the scheduler or
+//! the mode-aware policy introduces.
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::batcher::{Batcher, BatcherConfig};
-use crate::coordinator::engine::Engine;
+use crate::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response};
-use crate::runtime::backend::DeviceBackend;
-use crate::runtime::Runtime;
+use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use crate::runtime::backend::{Backend, BackendProvider};
 use crate::tokenizer::Tokenizer;
 
 /// A request paired with its response channel.
@@ -45,29 +55,43 @@ impl ServerHandle {
     }
 }
 
-pub struct Server<'t> {
-    runtime: Runtime,
+/// One route's admission queue plus its reply channels keyed by request id.
+/// Duplicate in-flight ids queue their senders FIFO, so each of N same-id
+/// submissions still receives exactly one response.
+struct RouteQueue {
+    queue: AdmissionQueue,
+    pending: BTreeMap<u64, VecDeque<mpsc::Sender<Response>>>,
+}
+
+pub struct Server<'t, P: BackendProvider> {
+    provider: P,
     tokenizer: &'t Tokenizer,
-    batch_cfg: BatcherConfig,
+    sched_cfg: SchedulerConfig,
+    admit_cfg: AdmitConfig,
     rx: mpsc::Receiver<Envelope>,
-    queues: BTreeMap<(String, String), (Batcher, Vec<mpsc::Sender<Response>>)>,
+    queues: BTreeMap<(String, String), RouteQueue>,
+    /// Route served by the most recent session (round-robin fairness).
+    last_route: Option<(String, String)>,
     pub metrics: Metrics,
 }
 
-impl<'t> Server<'t> {
+impl<'t, P: BackendProvider> Server<'t, P> {
     pub fn new(
-        runtime: Runtime,
+        provider: P,
         tokenizer: &'t Tokenizer,
-        batch_cfg: BatcherConfig,
-    ) -> (Server<'t>, ServerHandle) {
+        sched_cfg: SchedulerConfig,
+        admit_cfg: AdmitConfig,
+    ) -> (Server<'t, P>, ServerHandle) {
         let (tx, rx) = mpsc::channel();
         (
             Server {
-                runtime,
+                provider,
                 tokenizer,
-                batch_cfg,
+                sched_cfg,
+                admit_cfg,
                 rx,
                 queues: BTreeMap::new(),
+                last_route: None,
                 metrics: Metrics::new(),
             },
             ServerHandle { tx },
@@ -76,23 +100,25 @@ impl<'t> Server<'t> {
 
     fn enqueue(&mut self, env: Envelope) {
         let key = env.request.route_key();
-        let cfg = self.batch_cfg.clone();
-        let (batcher, replies) = self
-            .queues
-            .entry(key)
-            .or_insert_with(|| (Batcher::new(cfg), Vec::new()));
-        replies.push(env.reply);
-        batcher.push(env.request);
+        let cfg = self.admit_cfg.clone();
+        let rq = self.queues.entry(key).or_insert_with(|| RouteQueue {
+            queue: AdmissionQueue::new(cfg),
+            pending: BTreeMap::new(),
+        });
+        rq.pending.entry(env.request.id).or_default().push_back(env.reply);
+        rq.queue.push(env.request);
         self.metrics.inc("requests_received", 1);
     }
 
-    /// Run waves until `deadline_idle` passes with no traffic, or the
-    /// submitting side closed. Returns processed-request count.
+    /// Run scheduler sessions until `deadline_idle` passes with no traffic,
+    /// or the submitting side closed and every queue drained. Returns
+    /// processed-request count.
     pub fn run_until_idle(&mut self, deadline_idle: Duration) -> Result<usize> {
         let mut processed = 0usize;
         let mut last_activity = Instant::now();
+        let mut closed = false;
         loop {
-            // Drain incoming envelopes without blocking the decode loop.
+            // Drain incoming envelopes without blocking.
             loop {
                 match self.rx.try_recv() {
                     Ok(env) => {
@@ -101,85 +127,139 @@ impl<'t> Server<'t> {
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
-                        // Finish what is queued, then exit.
-                        processed += self.flush_all()?;
-                        return Ok(processed);
+                        closed = true;
+                        break;
                     }
                 }
             }
-            // Launch ready waves.
-            let keys: Vec<_> = self.queues.keys().cloned().collect();
-            let mut launched = false;
-            for key in keys {
-                let wave = {
-                    let (batcher, _) = self.queues.get_mut(&key).unwrap();
-                    batcher.poll(Instant::now())
-                };
-                if let Some(wave) = wave {
-                    processed += self.run_wave(&key, wave)?;
-                    launched = true;
-                    last_activity = Instant::now();
-                }
-            }
-            if !launched {
-                if last_activity.elapsed() >= deadline_idle {
-                    processed += self.flush_all()?;
-                    return Ok(processed);
-                }
+            // Round-robin over routes whose queue is launch-ready (full
+            // bucket or aged head — the batching deadline; everything is
+            // ready once the submit side closed). Picking the first key
+            // after the last-served one keeps one busy route from starving
+            // the others across sessions.
+            let bucket = self.sched_cfg.bucket;
+            let now = Instant::now();
+            let candidates: Vec<(String, String)> = self
+                .queues
+                .iter()
+                .filter(|(_, rq)| {
+                    !rq.queue.is_empty() && (closed || rq.queue.ready(bucket, now))
+                })
+                .map(|(k, _)| k.clone())
+                .collect();
+            let key = match self.last_route.as_ref() {
+                Some(last) => candidates
+                    .iter()
+                    .find(|k| *k > last)
+                    .or(candidates.first())
+                    .cloned(),
+                None => candidates.first().cloned(),
+            };
+            if let Some(key) = key {
+                processed += self.run_session(&key)?;
+                self.last_route = Some(key);
+                last_activity = Instant::now();
+            } else if closed
+                || (last_activity.elapsed() >= deadline_idle
+                    && self.queues.values().all(|rq| rq.queue.is_empty()))
+            {
+                return Ok(processed);
+            } else {
                 std::thread::sleep(Duration::from_millis(1));
             }
         }
     }
 
-    fn flush_all(&mut self) -> Result<usize> {
-        let mut processed = 0;
-        let keys: Vec<_> = self.queues.keys().cloned().collect();
-        for key in keys {
-            loop {
-                let wave = {
-                    let (batcher, _) = self.queues.get_mut(&key).unwrap();
-                    batcher.flush()
-                };
-                match wave {
-                    Some(w) => processed += self.run_wave(&key, w)?,
-                    None => break,
-                }
-            }
+    /// One scheduler session over a single (model, variant) route. While
+    /// the session runs, newly arriving requests for the same route join
+    /// the live batch mid-flight; requests for other routes are buffered
+    /// and queued when the session ends.
+    fn run_session(&mut self, key: &(String, String)) -> Result<usize> {
+        let RouteQueue { mut queue, pending } =
+            self.queues.remove(key).expect("session key is queued");
+        let pending = RefCell::new(pending);
+        let mut foreign: Vec<Envelope> = Vec::new();
+        // Same-route arrivals admitted by the pump bypass enqueue(); count
+        // them here so requests_received stays accurate.
+        let mut pumped_in: u64 = 0;
+        let tokenizer = self.tokenizer;
+        let scheduler = Scheduler::new(tokenizer, self.sched_cfg.clone());
+
+        let result = {
+            let Server { ref mut provider, ref rx, ref mut metrics, .. } = *self;
+            provider.with_backend(&key.0, &key.1, &mut |backend: &mut dyn Backend| {
+                scheduler.run(
+                    backend,
+                    &mut queue,
+                    &mut |q| {
+                        // Pump: route fresh arrivals every scheduler step.
+                        // Once another route is waiting, hold back even
+                        // same-route arrivals so this session drains and the
+                        // server can rotate routes (no cross-route
+                        // starvation under sustained traffic).
+                        while let Ok(env) = rx.try_recv() {
+                            if foreign.is_empty() && env.request.route_key() == *key {
+                                pending
+                                    .borrow_mut()
+                                    .entry(env.request.id)
+                                    .or_default()
+                                    .push_back(env.reply);
+                                q.push(env.request);
+                                pumped_in += 1;
+                            } else {
+                                foreign.push(env);
+                            }
+                        }
+                    },
+                    &mut |resp| {
+                        metrics.observe("request_latency_ms", resp.latency_ms);
+                        metrics.observe("ttft_ms", resp.ttft_ms);
+                        // Deliver by id; the receiver may have given up.
+                        let mut map = pending.borrow_mut();
+                        if let Some(txs) = map.get_mut(&resp.id) {
+                            let tx = txs.pop_front();
+                            if txs.is_empty() {
+                                map.remove(&resp.id);
+                            }
+                            if let Some(tx) = tx {
+                                let _ = tx.send(resp);
+                            }
+                        }
+                    },
+                )
+            })
+        };
+
+        // Requeue state and count pump-admitted arrivals before propagating
+        // any backend error: received requests were received regardless of
+        // the session outcome, and queued requests plus reply channels must
+        // survive a failed session. (In-flight requests of a failed session
+        // were already answered by the scheduler's abort drain.)
+        self.metrics.inc("requests_received", pumped_in);
+        self.queues.insert(
+            key.clone(),
+            RouteQueue { queue, pending: pending.into_inner() },
+        );
+        for env in foreign {
+            self.enqueue(env);
         }
-        Ok(processed)
+        let report = result?;
+
+        self.metrics.inc("sessions", 1);
+        self.metrics.inc("requests_served", report.completed as u64);
+        self.metrics.inc("requests_rejected", report.rejected as u64);
+        self.metrics.inc("tokens_generated", report.tokens_generated as u64);
+        self.metrics.inc("decode_steps", report.decode_steps as u64);
+        self.metrics.inc("joins", report.joins as u64);
+        self.metrics.observe("occupancy", report.occupancy());
+        self.metrics.observe("admitted_per_step", report.admitted_per_step());
+        self.metrics.observe("session_prefill_ms", report.prefill_ms);
+        self.metrics.observe("session_decode_ms", report.decode_ms);
+        Ok(report.completed)
     }
 
-    fn run_wave(
-        &mut self,
-        key: &(String, String),
-        wave: crate::coordinator::batcher::Wave,
-    ) -> Result<usize> {
-        let n = wave.requests.len();
-        let engine = Engine::new(self.tokenizer);
-        let mut backend = DeviceBackend::new(&mut self.runtime, &key.0, &key.1)?;
-        let (responses, report) = engine.run_wave(&mut backend, wave.bucket, &wave.requests)?;
-        self.metrics.inc("waves", 1);
-        self.metrics.inc("requests_served", n as u64);
-        self.metrics
-            .inc("tokens_generated", responses.iter().map(|r| r.tokens.len() as u64).sum());
-        self.metrics.observe("wave_prefill_ms", report.prefill_ms);
-        self.metrics.observe("wave_decode_ms", report.decode_ms);
-        self.metrics.observe("batch_efficiency", report.batch_efficiency());
-        for r in &responses {
-            self.metrics.observe("request_latency_ms", r.latency_ms);
-        }
-        // Deliver responses (repliers were pushed in the same order the
-        // batcher consumed requests: match by id).
-        let (_, replies) = self.queues.get_mut(key).unwrap();
-        let senders: Vec<_> = replies.drain(..n.min(replies.len())).collect();
-        for (resp, tx) in responses.into_iter().zip(senders) {
-            let _ = tx.send(resp); // receiver may have given up; fine
-        }
-        Ok(n)
-    }
-
-    /// Access the runtime after serving (stats, benches).
-    pub fn into_runtime(self) -> Runtime {
-        self.runtime
+    /// Recover the provider after serving (runtime stats, benches).
+    pub fn into_provider(self) -> P {
+        self.provider
     }
 }

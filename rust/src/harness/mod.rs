@@ -2,9 +2,11 @@
 //! (DESIGN.md §4 experiment index) against the serving stack.
 //!
 //! Each `table*`/`fig*` function prints the paper-shaped rows and returns a
-//! JSON report for EXPERIMENTS.md. Evaluation runs drive the real engine
-//! (waves over the PJRT runtime) with greedy decoding, exactly as the
-//! serving path does.
+//! JSON report for EXPERIMENTS.md. Evaluation runs drive the real
+//! continuous scheduler (over the PJRT runtime) with greedy decoding,
+//! exactly as the serving path does. Offline evaluation submits
+//! bucket-sized batches, so every request is admitted at the initial
+//! prefill and the device backend never pays the join-emulation re-prefill.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -15,8 +17,8 @@ use anyhow::{Context, Result};
 use crate::bench_suite::analysis::{GenerationRecord, RunSummary};
 use crate::bench_suite::dataset::Benchmark;
 use crate::bench_suite::scoring;
-use crate::coordinator::engine::Engine;
 use crate::coordinator::request::Request;
+use crate::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use crate::runtime::backend::DeviceBackend;
 use crate::runtime::Runtime;
 use crate::tokenizer::{CotMode, Tokenizer};
@@ -99,7 +101,10 @@ impl Harness {
             .unwrap_or(&8);
         let n = self.quick.map_or(bench.tasks.len(), |q| q.min(bench.tasks.len()));
         let tk = self.tokenizer.clone();
-        let engine = Engine::new(&tk);
+        let scheduler = Scheduler::new(
+            &tk,
+            SchedulerConfig { bucket, gate: AdmitGate::Continuous },
+        );
         let mut records = Vec::with_capacity(n);
         let t0 = Instant::now();
         for chunk in bench.tasks[..n].chunks(bucket) {
@@ -110,7 +115,7 @@ impl Harness {
                 })
                 .collect();
             let mut backend = DeviceBackend::new(&mut self.runtime, model, variant)?;
-            let (responses, _) = engine.run_wave(&mut backend, bucket, &requests)?;
+            let (responses, _) = scheduler.run_batch(&mut backend, &requests)?;
             for (task, resp) in chunk.iter().zip(responses) {
                 let outcome = scoring::score_generation(&tk, task, &resp.tokens);
                 records.push(GenerationRecord::new(

@@ -23,11 +23,11 @@ pub fn run(h: &mut Harness) -> Result<Json> {
         for variant in PRECISIONS {
             let he = h.summary(MODEL, variant, mode, "humaneval_s")?;
             let mb = h.summary(MODEL, variant, mode, "mbpp_s")?;
-            let label = crate::quant::Precision::parse(variant)?.label();
+            let precision: crate::quant::Precision = variant.parse()?;
             println!(
                 "{:<12} {:<15} {:>12.2} {:>10.2}",
                 mode.name(),
-                label,
+                precision,
                 he.accuracy_pct(),
                 mb.accuracy_pct()
             );

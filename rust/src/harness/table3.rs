@@ -11,12 +11,14 @@ use anyhow::Result;
 use super::Harness;
 use crate::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
 use crate::quant::Precision;
+use crate::runtime::backend::{Backend, DeviceBackend};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 pub const MODEL: &str = "7b-sim";
 
-/// Measure mean prefill wall time for one (variant, batch) on the runtime.
+/// Measure mean prefill wall time for one (variant, batch) through the
+/// serving Backend ABI (the same prefill+readout the scheduler pays).
 pub fn measure_prefill_ms(
     h: &mut Harness,
     variant: &str,
@@ -36,14 +38,15 @@ pub fn measure_prefill_ms(
         }
         lens[b] = ids.len() as i32;
     }
+    let mut backend = DeviceBackend::new(&mut h.runtime, MODEL, variant)?;
     // Warm up (compile + first exec), then time.
-    let _ = h.runtime.prefill(MODEL, variant, batch, &tokens, &lens)?;
+    let _ = backend.prefill(batch, &tokens, &lens)?;
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t0 = std::time::Instant::now();
-        let state = h.runtime.prefill(MODEL, variant, batch, &tokens, &lens)?;
+        let state = backend.prefill(batch, &tokens, &lens)?;
         // Force completion the same way at every batch size: fetch logits.
-        let _ = h.runtime.readout(MODEL, &state)?;
+        let _ = backend.logits(&state)?;
         samples.push(t0.elapsed().as_secs_f64() * 1e3);
     }
     Ok(Summary::of(&samples))

@@ -16,10 +16,13 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
-use pangu_atlas_quant::coordinator::batcher::BatcherConfig;
+use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
 use pangu_atlas_quant::harness::{self, Harness};
+use pangu_atlas_quant::quant::Precision;
+use pangu_atlas_quant::runtime::backend::{DeviceBackend, DeviceProvider};
 use pangu_atlas_quant::runtime::Runtime;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::cli::Args;
@@ -117,7 +120,8 @@ fn generate(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let mut h = Harness::open(&dir)?;
     let model = args.get_or("model", "7b-sim").to_string();
-    let variant = args.get_or("variant", "int8").to_string();
+    let precision: Precision = args.parsed_or("variant", Precision::Int8)?;
+    let variant = precision.key().to_string();
     let mode = parse_mode(args)?;
     let task_id = args.usize_or("task", 0);
     let bench = h.benchmark(args.get_or("bench", "humaneval_s"))?.clone();
@@ -130,13 +134,15 @@ fn generate(args: &Args) -> Result<()> {
         println!("  example {xs:?} -> {ys:?}");
     }
     let tk = h.tokenizer.clone();
-    let engine = pangu_atlas_quant::coordinator::engine::Engine::new(&tk);
+    let scheduler = Scheduler::new(
+        &tk,
+        SchedulerConfig { bucket: 1, gate: AdmitGate::Continuous },
+    );
     let req = Request::new(0, &model, &variant, mode, task.examples.clone());
-    let mut backend =
-        pangu_atlas_quant::runtime::backend::DeviceBackend::new(&mut h.runtime, &model, &variant)?;
-    let (resps, report) = engine.run_wave(&mut backend, 1, &[req])?;
+    let mut backend = DeviceBackend::new(&mut h.runtime, &model, &variant)?;
+    let (resps, report) = scheduler.run_batch(&mut backend, &[req])?;
     let resp = &resps[0];
-    println!("\n[{model}/{variant}/{}] generated {} tokens in {:.1} ms:", mode.name(),
+    println!("\n[{model}/{precision}/{}] generated {} tokens in {:.1} ms:", mode.name(),
              resp.tokens.len(), report.prefill_ms + report.decode_ms);
     println!("  {}", tk.render(&resp.tokens));
     let outcome = pangu_atlas_quant::bench_suite::scoring::score_generation(&tk, task, &resp.tokens);
@@ -148,16 +154,18 @@ fn serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
-    let buckets = rt.manifest.serve_buckets.clone();
+    let bucket = rt.manifest.serve_buckets.iter().copied().max().unwrap_or(8);
     let n_req = args.usize_or("requests", 32);
     let model = args.get_or("model", "7b-sim").to_string();
-    let variant = args.get_or("variant", "int8").to_string();
+    let precision: Precision = args.parsed_or("variant", Precision::Int8)?;
+    let variant = precision.key().to_string();
     let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["humaneval_s"]))?;
 
     let (mut server, handle) = Server::new(
-        rt,
+        DeviceProvider::new(rt),
         &tk,
-        BatcherConfig { buckets, max_wait: Duration::from_millis(10) },
+        SchedulerConfig { bucket, gate: AdmitGate::Continuous },
+        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(10) },
     );
     // Client thread: submit synthetic traffic drawn from the benchmark.
     let tasks: Vec<_> = bench.tasks.iter().take(n_req).cloned().collect();

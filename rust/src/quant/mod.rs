@@ -87,6 +87,20 @@ impl Precision {
     }
 }
 
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Precision> {
+        Precision::parse(s)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +112,17 @@ mod tests {
             assert_eq!(Precision::parse(p.label()).unwrap(), p);
         }
         assert!(Precision::parse("int2").is_err());
+    }
+
+    #[test]
+    fn fromstr_and_display_roundtrip() {
+        for p in Precision::ALL {
+            // Display shows the paper-facing label, which FromStr accepts.
+            assert_eq!(p.to_string(), p.label());
+            assert_eq!(p.to_string().parse::<Precision>().unwrap(), p);
+            assert_eq!(p.key().parse::<Precision>().unwrap(), p);
+        }
+        assert!("int2".parse::<Precision>().is_err());
     }
 
     #[test]

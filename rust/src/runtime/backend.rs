@@ -1,7 +1,19 @@
-//! Backend abstraction: the generation engine talks to this trait, so the
-//! coordinator (batcher/scheduler/KV logic) is testable against a
-//! deterministic mock without artifacts, and the same engine code drives the
-//! real PJRT runtime in production.
+//! Backend abstraction: the serving coordinator talks to this trait, so the
+//! scheduler / admission / KV logic is testable against a deterministic mock
+//! without artifacts, and the same scheduler code drives the real PJRT
+//! runtime in production.
+//!
+//! The ABI is slot-level: besides whole-batch `prefill` and per-step
+//! `decode`, a backend supports `join` (prefill one new request into a free
+//! slot of a live state, mid-flight) and `evict` (release a finished slot).
+//! That is what lets the continuous-batching scheduler admit and retire
+//! requests at decode-step granularity instead of wave barriers.
+//!
+//! Position contract (validated loudly by [`MockBackend`]): between a slot's
+//! `prefill`/`join` and its next `join`, the per-step decode position must
+//! advance by exactly one while the slot is live, and once it stops
+//! advancing (the slot finished or was evicted) it must hold that position
+//! until the slot is re-joined.
 
 use anyhow::{anyhow, Result};
 
@@ -22,13 +34,24 @@ impl StateHandle {
     }
 }
 
-/// Step-level backend ABI (one prefill / one decode step / one readout).
+/// Step-level backend ABI (prefill / slot join / slot evict / one decode
+/// step / one readout).
 pub trait Backend {
     fn vocab(&self) -> usize;
     fn prompt_len(&self) -> usize;
     fn max_seq(&self) -> usize;
     /// Right-padded prompt batch -> state holding first-token logits.
     fn prefill(&mut self, batch: usize, tokens: &[i32], lens: &[i32]) -> Result<StateHandle>;
+    /// Admit a new request into free `slot` of a live state. `prompt` is a
+    /// full right-padded row of `prompt_len` tokens with `len` real ones.
+    /// After `join`, the slot's row of [`Backend::logits`] holds the new
+    /// request's first-token logits while every other slot's logits are
+    /// unchanged.
+    fn join(&mut self, state: StateHandle, slot: usize, prompt: &[i32], len: i32)
+        -> Result<StateHandle>;
+    /// Release a finished slot; it decodes as an inert row (frozen position)
+    /// until the next `join` claims it.
+    fn evict(&mut self, state: StateHandle, slot: usize) -> Result<StateHandle>;
     /// One decode step at per-slot positions.
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle>;
     /// Fetch logits [batch * vocab] from the state.
@@ -39,6 +62,20 @@ pub trait Backend {
 // Real backend: one (model, variant) pair over the PJRT runtime.
 // ---------------------------------------------------------------------------
 
+/// Host-side shadow of one slot's token history, kept so `join` can rebuild
+/// the device state (the flat PJRT state ABI has no KV-merge primitive, so a
+/// mid-flight join is emulated by re-prefilling every occupied row and
+/// replaying its decoded tokens — see [`DeviceBackend::join`]).
+#[derive(Debug, Clone)]
+struct SlotTrace {
+    /// Right-padded prompt row as last prefilled/joined.
+    prompt_row: Vec<i32>,
+    len: i32,
+    /// (token, position) pairs fed to `decode` since the prompt.
+    decoded: Vec<(i32, i32)>,
+    occupied: bool,
+}
+
 pub struct DeviceBackend<'r> {
     pub runtime: &'r mut Runtime,
     pub model: String,
@@ -46,6 +83,10 @@ pub struct DeviceBackend<'r> {
     vocab: usize,
     prompt_len: usize,
     max_seq: usize,
+    /// Per-slot history of the (single) in-flight state.
+    traces: Vec<SlotTrace>,
+    /// Mid-flight admissions served (each one costs a re-prefill + replay).
+    pub joins: usize,
 }
 
 impl<'r> DeviceBackend<'r> {
@@ -61,7 +102,55 @@ impl<'r> DeviceBackend<'r> {
             vocab,
             prompt_len,
             max_seq,
+            traces: Vec::new(),
+            joins: 0,
         })
+    }
+
+    /// Rebuild the device state from the slot traces: one prefill over every
+    /// row's prompt, then replay the decoded tokens step by step. Rows that
+    /// run out of history re-write their last (token, position) pair — an
+    /// idempotent KV write that also leaves their logits exactly as they
+    /// were. A freshly joined row (no decoded tokens) re-writes its last
+    /// prompt token, so its final logits are its first-token logits.
+    fn rebuild(&mut self) -> Result<DeviceState> {
+        let batch = self.traces.len();
+        let mut tokens = Vec::with_capacity(batch * self.prompt_len);
+        let mut lens = Vec::with_capacity(batch);
+        for t in &self.traces {
+            tokens.extend_from_slice(&t.prompt_row);
+            lens.push(t.len);
+        }
+        let mut state =
+            self.runtime.prefill(&self.model, &self.variant, batch, &tokens, &lens)?;
+        let depth = self
+            .traces
+            .iter()
+            .filter(|t| t.occupied)
+            .map(|t| t.decoded.len())
+            .max()
+            .unwrap_or(0);
+        for step in 0..depth {
+            let mut toks = vec![0i32; batch];
+            let mut pos = vec![0i32; batch];
+            for (b, t) in self.traces.iter().enumerate() {
+                let feed = if !t.occupied {
+                    // Vacant row: any in-window write; the row is garbage by
+                    // definition until the next join rebuilds it.
+                    (t.prompt_row[0], 0)
+                } else if let Some(&d) = t.decoded.get(step) {
+                    d
+                } else if let Some(&(lt, lp)) = t.decoded.last() {
+                    (lt, lp) // idempotent re-write, logits preserved
+                } else {
+                    (t.prompt_row[(t.len - 1).max(0) as usize], (t.len - 1).max(0))
+                };
+                toks[b] = feed.0;
+                pos[b] = feed.1;
+            }
+            state = self.runtime.decode(&self.model, &self.variant, state, &toks, &pos)?;
+        }
+        Ok(state)
     }
 }
 
@@ -79,6 +168,16 @@ impl Backend for DeviceBackend<'_> {
     }
 
     fn prefill(&mut self, batch: usize, tokens: &[i32], lens: &[i32]) -> Result<StateHandle> {
+        anyhow::ensure!(tokens.len() == batch * self.prompt_len);
+        anyhow::ensure!(lens.len() == batch);
+        self.traces = (0..batch)
+            .map(|b| SlotTrace {
+                prompt_row: tokens[b * self.prompt_len..(b + 1) * self.prompt_len].to_vec(),
+                len: lens[b],
+                decoded: Vec::new(),
+                occupied: true,
+            })
+            .collect();
         Ok(StateHandle::Device(self.runtime.prefill(
             &self.model,
             &self.variant,
@@ -88,10 +187,51 @@ impl Backend for DeviceBackend<'_> {
         )?))
     }
 
+    fn join(
+        &mut self,
+        state: StateHandle,
+        slot: usize,
+        prompt: &[i32],
+        len: i32,
+    ) -> Result<StateHandle> {
+        let StateHandle::Device(_old) = state else {
+            return Err(anyhow!("device backend got mock state"));
+        };
+        anyhow::ensure!(slot < self.traces.len(), "join slot {slot} out of range");
+        anyhow::ensure!(!self.traces[slot].occupied, "join into occupied slot {slot}");
+        anyhow::ensure!(prompt.len() == self.prompt_len, "join prompt row must be padded");
+        anyhow::ensure!(len >= 1 && (len as usize) <= self.prompt_len, "bad join len {len}");
+        self.traces[slot] = SlotTrace {
+            prompt_row: prompt.to_vec(),
+            len,
+            decoded: Vec::new(),
+            occupied: true,
+        };
+        self.joins += 1;
+        // The old state is dropped; KV is rebuilt from the traces.
+        Ok(StateHandle::Device(self.rebuild()?))
+    }
+
+    fn evict(&mut self, state: StateHandle, slot: usize) -> Result<StateHandle> {
+        anyhow::ensure!(slot < self.traces.len(), "evict slot {slot} out of range");
+        anyhow::ensure!(self.traces[slot].occupied, "evict on vacant slot {slot}");
+        self.traces[slot].occupied = false;
+        self.traces[slot].decoded.clear();
+        // No device work: the row keeps decoding an inert token at a frozen
+        // position until a join reclaims it (same cost as the wave PAD rows).
+        Ok(state)
+    }
+
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle> {
         let StateHandle::Device(s) = state else {
             return Err(anyhow!("device backend got mock state"));
         };
+        anyhow::ensure!(tokens.len() == s.batch && pos.len() == s.batch);
+        for (b, t) in self.traces.iter_mut().enumerate() {
+            if t.occupied {
+                t.decoded.push((tokens[b], pos[b]));
+            }
+        }
         Ok(StateHandle::Device(self.runtime.decode(
             &self.model,
             &self.variant,
@@ -113,17 +253,27 @@ impl Backend for DeviceBackend<'_> {
 // Mock backend: deterministic scripted model for coordinator tests.
 // ---------------------------------------------------------------------------
 
-/// Per-slot emission script (remaining tokens to emit).
+/// Per-slot emission script plus the position-contract bookkeeping the mock
+/// uses to validate its callers.
 pub struct MockState {
     pub scripts: Vec<Vec<u32>>,
     /// Next token each slot will emit (what logits argmax returns).
     pub cursor: Vec<usize>,
+    /// Slots currently carrying a request (prefilled or joined, not evicted).
+    pub occupied: Vec<bool>,
+    /// Expected position of the slot's next advancing decode.
+    next_pos: Vec<i32>,
+    /// Set once a slot stops advancing; it must then hold position until
+    /// the next `join`.
+    frozen: Vec<bool>,
 }
 
-/// A mock "model": prompts map to completions via the provided rule.
-/// The default rule echoes `PROG <first op guess> END`-style scripts is up
-/// to the test; the backend itself just plays the script back one token per
-/// decode step, exposing exactly the Backend ABI (including padded rows).
+/// A mock "model": prompts map to completions via the provided rule. The
+/// backend plays each script back one token per decode step, exposing
+/// exactly the Backend ABI (including padded rows and slot join/evict), and
+/// fails loudly when a caller breaks the position contract — per-slot `pos`
+/// must be strictly monotone (+1 per step) while the slot advances and
+/// frozen once it stops.
 pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     pub script_of: F,
     pub vocab: usize,
@@ -132,11 +282,23 @@ pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     /// Decode-step counter (scheduler tests assert batching efficiency).
     pub steps: usize,
     pub prefills: usize,
+    /// Mid-flight admissions and releases (continuous-batching accounting).
+    pub joins: usize,
+    pub evictions: usize,
 }
 
 impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
     pub fn new(vocab: usize, prompt_len: usize, max_seq: usize, script_of: F) -> Self {
-        MockBackend { script_of, vocab, prompt_len, max_seq, steps: 0, prefills: 0 }
+        MockBackend {
+            script_of,
+            vocab,
+            prompt_len,
+            max_seq,
+            steps: 0,
+            prefills: 0,
+            joins: 0,
+            evictions: 0,
+        }
     }
 }
 
@@ -163,7 +325,49 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
             let real = &prompt[..lens[b] as usize];
             scripts.push((self.script_of)(real));
         }
-        Ok(StateHandle::Mock(MockState { cursor: vec![0; batch], scripts }))
+        Ok(StateHandle::Mock(MockState {
+            cursor: vec![0; batch],
+            occupied: vec![true; batch],
+            next_pos: lens.to_vec(),
+            frozen: vec![false; batch],
+            scripts,
+        }))
+    }
+
+    fn join(
+        &mut self,
+        state: StateHandle,
+        slot: usize,
+        prompt: &[i32],
+        len: i32,
+    ) -> Result<StateHandle> {
+        let StateHandle::Mock(mut s) = state else {
+            return Err(anyhow!("mock backend got device state"));
+        };
+        anyhow::ensure!(slot < s.scripts.len(), "join slot {slot} out of range");
+        anyhow::ensure!(!s.occupied[slot], "join into occupied slot {slot}");
+        anyhow::ensure!(prompt.len() == self.prompt_len, "join prompt row must be padded");
+        anyhow::ensure!(len >= 1 && (len as usize) <= self.prompt_len, "bad join len {len}");
+        s.scripts[slot] = (self.script_of)(&prompt[..len as usize]);
+        s.cursor[slot] = 0;
+        s.occupied[slot] = true;
+        s.next_pos[slot] = len;
+        s.frozen[slot] = false;
+        self.joins += 1;
+        Ok(StateHandle::Mock(s))
+    }
+
+    fn evict(&mut self, state: StateHandle, slot: usize) -> Result<StateHandle> {
+        let StateHandle::Mock(mut s) = state else {
+            return Err(anyhow!("mock backend got device state"));
+        };
+        anyhow::ensure!(slot < s.scripts.len(), "evict slot {slot} out of range");
+        anyhow::ensure!(s.occupied[slot], "evict on vacant slot {slot}");
+        s.occupied[slot] = false;
+        s.scripts[slot] = Vec::new();
+        s.cursor[slot] = 0;
+        self.evictions += 1;
+        Ok(StateHandle::Mock(s))
     }
 
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle> {
@@ -171,9 +375,33 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
             return Err(anyhow!("mock backend got device state"));
         };
         anyhow::ensure!(tokens.len() == s.scripts.len() && pos.len() == tokens.len());
+        // Position-contract validation: each slot either advances by exactly
+        // one or freezes; a frozen slot stays frozen until re-joined.
+        for slot in 0..s.scripts.len() {
+            let p = pos[slot];
+            if s.frozen[slot] {
+                anyhow::ensure!(
+                    p == s.next_pos[slot] - 1,
+                    "slot {slot}: frozen at {} but decoded at {p}",
+                    s.next_pos[slot] - 1
+                );
+            } else if p == s.next_pos[slot] {
+                s.next_pos[slot] += 1; // strictly monotone advance
+            } else if p == s.next_pos[slot] - 1 {
+                s.frozen[slot] = true; // finished/evicted slot holds position
+            } else {
+                anyhow::bail!(
+                    "slot {slot}: pos {p} breaks monotonicity (expected {} or {})",
+                    s.next_pos[slot],
+                    s.next_pos[slot] - 1
+                );
+            }
+        }
         self.steps += 1;
-        for c in s.cursor.iter_mut() {
-            *c += 1;
+        for (slot, c) in s.cursor.iter_mut().enumerate() {
+            if s.occupied[slot] {
+                *c += 1;
+            }
         }
         Ok(StateHandle::Mock(s))
     }
@@ -185,12 +413,111 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         let b = s.scripts.len();
         let mut logits = vec![-10.0f32; b * self.vocab];
         for (slot, script) in s.scripts.iter().enumerate() {
-            // Emit script[cursor]; past the end emit token 2 (END by vocab
-            // convention in tests).
+            // Emit script[cursor]; past the end (and for vacant slots) emit
+            // token 2 (END by vocab convention in tests).
             let tok = script.get(s.cursor[slot]).copied().unwrap_or(2);
             logits[slot * self.vocab + tok as usize] = 10.0;
         }
         Ok(logits)
+    }
+}
+
+/// Deterministic scripted "model" shared by mock-backed tests and benches:
+/// prompts carrying the slow_think directive produce a `long`-token trace
+/// completion (`TRACE STEP SORT.. ENDTRACE PROG END`), everything else the
+/// 3-token `PROG REV END`. `long` must be >= 6 so the trace framing fits.
+pub fn minilang_mock_script(
+    tk: &crate::tokenizer::Tokenizer,
+    long: usize,
+) -> impl Fn(&[i32]) -> Vec<u32> {
+    assert!(long >= 6, "slow_think script needs at least 6 tokens");
+    let prog = tk.prog;
+    let end = tk.end;
+    let rev = tk.ops["REV"];
+    let sort = tk.ops["SORT"];
+    let slow = tk.mode_token(crate::tokenizer::CotMode::SlowThink) as i32;
+    let trace = tk.trace;
+    let endtrace = tk.endtrace;
+    let step = tk.step;
+    move |prompt: &[i32]| {
+        if prompt.len() > 1 && prompt[1] == slow {
+            let mut s = vec![trace, step];
+            while s.len() < long - 3 {
+                s.push(sort);
+            }
+            s.extend([endtrace, prog, end]);
+            s
+        } else {
+            vec![prog, rev, end]
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend providers: how a Server borrows a backend for one scheduler
+// session, generically over device vs mock construction.
+// ---------------------------------------------------------------------------
+
+/// Scoped backend construction. The server loop is generic over this, so the
+/// full serving path runs against [`MockBackend`] in tests with no
+/// `Runtime`/artifacts, and against [`DeviceBackend`] in production.
+pub trait BackendProvider {
+    fn with_backend<R>(
+        &mut self,
+        model: &str,
+        variant: &str,
+        run: &mut dyn FnMut(&mut dyn Backend) -> Result<R>,
+    ) -> Result<R>;
+}
+
+/// Production provider: constructs a [`DeviceBackend`] over the owned
+/// runtime per session.
+pub struct DeviceProvider {
+    pub runtime: Runtime,
+}
+
+impl DeviceProvider {
+    pub fn new(runtime: Runtime) -> DeviceProvider {
+        DeviceProvider { runtime }
+    }
+
+    /// Access the runtime after serving (stats, benches).
+    pub fn into_runtime(self) -> Runtime {
+        self.runtime
+    }
+}
+
+impl BackendProvider for DeviceProvider {
+    fn with_backend<R>(
+        &mut self,
+        model: &str,
+        variant: &str,
+        run: &mut dyn FnMut(&mut dyn Backend) -> Result<R>,
+    ) -> Result<R> {
+        let mut backend = DeviceBackend::new(&mut self.runtime, model, variant)?;
+        run(&mut backend)
+    }
+}
+
+/// Test provider: hands out the same scripted mock for every route.
+pub struct MockProvider<F: Fn(&[i32]) -> Vec<u32>> {
+    pub backend: MockBackend<F>,
+}
+
+impl<F: Fn(&[i32]) -> Vec<u32>> MockProvider<F> {
+    pub fn new(backend: MockBackend<F>) -> MockProvider<F> {
+        MockProvider { backend }
+    }
+}
+
+impl<F: Fn(&[i32]) -> Vec<u32>> BackendProvider for MockProvider<F> {
+    fn with_backend<R>(
+        &mut self,
+        _model: &str,
+        _variant: &str,
+        run: &mut dyn FnMut(&mut dyn Backend) -> Result<R>,
+    ) -> Result<R> {
+        run(&mut self.backend)
     }
 }
 
@@ -223,5 +550,60 @@ mod tests {
     fn mock_rejects_shape_mismatch() {
         let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
         assert!(be.prefill(2, &[0; 4], &[1, 1]).is_err());
+    }
+
+    #[test]
+    fn join_resets_slot_and_serves_new_script() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| vec![prompt[0] as u32, 2]);
+        let tokens = vec![3, 0, 0, 0, 6, 0, 0, 0];
+        let state = be.prefill(2, &tokens, &[1, 1]).unwrap();
+        // Slot 1 finishes immediately and is evicted.
+        let state = be.evict(state, 1).unwrap();
+        // A new request joins slot 1 mid-flight.
+        let state = be.join(state, 1, &[7, 0, 0, 0], 1).unwrap();
+        let lg = be.logits(&state).unwrap();
+        let argmax = |row: &[f32]| row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax(&lg[0..8]), 3, "slot 0 logits unchanged");
+        assert_eq!(argmax(&lg[8..16]), 7, "slot 1 serves the joined prompt");
+        assert_eq!(be.joins, 1);
+        assert_eq!(be.evictions, 1);
+        // Joined slot decodes from its own prompt length.
+        let state = be.decode(state, &[3, 7], &[1, 1]).unwrap();
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[8..16]), 2);
+        drop(state);
+    }
+
+    #[test]
+    fn join_into_occupied_slot_rejected() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
+        let state = be.prefill(1, &[1, 0, 0, 0], &[1]).unwrap();
+        assert!(be.join(state, 0, &[1, 0, 0, 0], 1).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_position_jump() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![5; 10]);
+        let state = be.prefill(1, &[1, 0, 0, 0], &[2]).unwrap();
+        let state = be.decode(state, &[5], &[2]).unwrap(); // ok: advance
+        assert!(be.decode(state, &[5], &[4]).is_err(), "pos skipped 3");
+    }
+
+    #[test]
+    fn decode_rejects_advance_after_freeze() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![5; 10]);
+        let state = be.prefill(1, &[1, 0, 0, 0], &[2]).unwrap();
+        let state = be.decode(state, &[5], &[2]).unwrap(); // advance -> 3
+        let state = be.decode(state, &[5], &[2]).unwrap(); // hold: frozen at 2
+        assert!(be.decode(state, &[5], &[3]).is_err(), "frozen slot advanced");
+    }
+
+    #[test]
+    fn decode_rejects_regression() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![5; 10]);
+        let state = be.prefill(1, &[1, 0, 0, 0], &[3]).unwrap();
+        let state = be.decode(state, &[5], &[3]).unwrap();
+        let state = be.decode(state, &[5], &[4]).unwrap();
+        assert!(be.decode(state, &[5], &[3]).is_err(), "pos went backwards");
     }
 }

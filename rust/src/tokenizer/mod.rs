@@ -116,6 +116,39 @@ impl Tokenizer {
         })
     }
 
+    /// The standard 64-token MiniLang vocabulary (mirror of python
+    /// minilang.VOCAB). Artifact-backed paths build from the manifest
+    /// instead; this constructor serves mock-backed tests, benches, and
+    /// examples that run without artifacts.
+    pub fn minilang_default() -> Tokenizer {
+        let special = [
+            "PAD", "BOS", "END", "MODE_NOTHINK", "MODE_AUTO", "MODE_SLOW", "IN", "OUT", "SEP",
+            "ASK", "TRACE", "ENDTRACE", "STEP", "PROG",
+        ];
+        let ops = [
+            "ADD1", "ADD2", "CUMSUM", "MUL2", "NEG", "REV", "ROTL", "ROTR", "SORT", "SORTD",
+            "SUB1", "SWAP",
+        ];
+        let mut vocab: Vec<Json> = special.iter().map(|s| Json::str(*s)).collect();
+        vocab.extend((0..16).map(|i| Json::str(format!("D{i}"))));
+        vocab.extend(ops.iter().map(|s| Json::str(*s)));
+        while vocab.len() < 64 {
+            vocab.push(Json::str(format!("UNUSED{}", vocab.len())));
+        }
+        let manifest = Json::obj(vec![
+            ("vocab", Json::Arr(vocab)),
+            (
+                "minilang",
+                Json::obj(vec![
+                    ("mod", Json::num(16.0)),
+                    ("seq_len", Json::num(5.0)),
+                    ("ops", Json::Arr(ops.iter().map(|s| Json::str(*s)).collect())),
+                ]),
+            ),
+        ]);
+        Tokenizer::from_manifest(&manifest).expect("static minilang vocab is well-formed")
+    }
+
     pub fn vocab_size(&self) -> usize {
         self.names.len()
     }
@@ -202,33 +235,7 @@ pub(crate) mod tests {
     use super::*;
 
     pub(crate) fn test_tokenizer() -> Tokenizer {
-        // Mirror of python minilang.VOCAB construction.
-        let special = [
-            "PAD", "BOS", "END", "MODE_NOTHINK", "MODE_AUTO", "MODE_SLOW", "IN", "OUT", "SEP",
-            "ASK", "TRACE", "ENDTRACE", "STEP", "PROG",
-        ];
-        let ops = [
-            "ADD1", "ADD2", "CUMSUM", "MUL2", "NEG", "REV", "ROTL", "ROTR", "SORT", "SORTD",
-            "SUB1", "SWAP",
-        ];
-        let mut vocab: Vec<Json> = special.iter().map(|s| Json::str(*s)).collect();
-        vocab.extend((0..16).map(|i| Json::str(format!("D{i}"))));
-        vocab.extend(ops.iter().map(|s| Json::str(*s)));
-        while vocab.len() < 64 {
-            vocab.push(Json::str(format!("UNUSED{}", vocab.len())));
-        }
-        let manifest = Json::obj(vec![
-            ("vocab", Json::Arr(vocab)),
-            (
-                "minilang",
-                Json::obj(vec![
-                    ("mod", Json::num(16.0)),
-                    ("seq_len", Json::num(5.0)),
-                    ("ops", Json::Arr(ops.iter().map(|s| Json::str(*s)).collect())),
-                ]),
-            ),
-        ]);
-        Tokenizer::from_manifest(&manifest).unwrap()
+        Tokenizer::minilang_default()
     }
 
     #[test]

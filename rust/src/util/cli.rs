@@ -85,6 +85,22 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Parse a flag through `FromStr` (e.g. `--variant int8` into a
+    /// [`crate::quant::Precision`]), falling back to `default` when absent.
+    /// A present-but-unparsable value is an error, not a silent default.
+    pub fn parsed_or<T>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,6 +141,18 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7), 7);
         assert_eq!(a.get_or("absent", "x"), "x");
         assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn parsed_or_typed_flags() {
+        let a = parse("--variant int8 --bad not-a-number", &[]);
+        let p: crate::quant::Precision =
+            a.parsed_or("variant", crate::quant::Precision::Fp16).unwrap();
+        assert_eq!(p, crate::quant::Precision::Int8);
+        let d: crate::quant::Precision =
+            a.parsed_or("missing", crate::quant::Precision::Fp16).unwrap();
+        assert_eq!(d, crate::quant::Precision::Fp16);
+        assert!(a.parsed_or::<usize>("bad", 0).is_err(), "present but unparsable");
     }
 
     #[test]

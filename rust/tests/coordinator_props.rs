@@ -1,8 +1,8 @@
-//! Property tests (propcheck) over coordinator invariants: routing,
-//! batching, KV state management, packing round-trips, VM totality.
+//! Property tests (propcheck) over coordinator invariants: admission,
+//! KV slot lifecycle, packing round-trips, VM totality.
 
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
-use pangu_atlas_quant::coordinator::batcher::{Batcher, BatcherConfig};
+use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::kv::{KvSlots, SlotState};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::quant::{int4, int8};
@@ -71,42 +71,133 @@ fn prop_kv_positions_bounded_by_window() {
 }
 
 // ---------------------------------------------------------------------------
-// Batcher
+// Admission policy
 // ---------------------------------------------------------------------------
 
-fn mk_request(id: u64) -> Request {
-    Request::new(id, "7b-sim", "int8", CotMode::NoThink, vec![])
+fn mk_request(id: u64, mode: CotMode) -> Request {
+    Request::new(id, "7b-sim", "int8", mode, vec![])
 }
 
 #[test]
-fn prop_batcher_preserves_fifo_and_never_overflows() {
+fn prop_admission_conserves_requests_and_orders_within_mode() {
     check_vec(
-        "batcher-fifo",
+        "admission-conservation",
         60,
         0xC33,
         |rng| {
             let n = rng.range(1, 40);
-            (0..n as u64).collect::<Vec<u64>>()
+            (0..n)
+                .map(|_| rng.range(0, 2) as u8) // inclusive: tags 0..=2
+                .collect::<Vec<u8>>()
         },
-        |ids| {
-            let mut b = Batcher::new(BatcherConfig {
-                buckets: vec![1, 4, 8],
-                max_wait: std::time::Duration::from_millis(0),
+        |mode_tags| {
+            let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+            let mut q = AdmissionQueue::new(AdmitConfig {
+                mode_aware: true,
+                max_wait: std::time::Duration::from_secs(3600),
             });
-            for &id in ids {
-                b.push(mk_request(id));
+            for (id, &tag) in mode_tags.iter().enumerate() {
+                q.push(mk_request(id as u64, modes[tag as usize]));
             }
-            let mut drained = Vec::new();
-            while let Some(w) = b.flush() {
-                ensure(w.requests.len() <= w.bucket, "wave overflows bucket")?;
+            let now = std::time::Instant::now();
+            let mut drained: Vec<(u8, u64)> = Vec::new();
+            while let Some(r) = q.admit(now) {
+                let tag = modes.iter().position(|&m| m == r.mode).unwrap() as u8;
+                drained.push((tag, r.id));
+            }
+            ensure_eq(drained.len(), mode_tags.len(), "all requests admitted exactly once")?;
+            let mut ids: Vec<u64> = drained.iter().map(|&(_, id)| id).collect();
+            ids.sort_unstable();
+            ensure(
+                ids == (0..mode_tags.len() as u64).collect::<Vec<_>>(),
+                "no request lost or duplicated",
+            )?;
+            // Within one mode, admission preserves arrival order (FIFO).
+            for tag in 0..3u8 {
+                let per_mode: Vec<u64> = drained
+                    .iter()
+                    .filter(|&&(t, _)| t == tag)
+                    .map(|&(_, id)| id)
+                    .collect();
                 ensure(
-                    [1usize, 4, 8].contains(&w.bucket),
-                    format!("unknown bucket {}", w.bucket),
+                    per_mode.windows(2).all(|w| w[0] < w[1]),
+                    format!("FIFO broken within mode {tag}"),
                 )?;
-                drained.extend(w.requests.iter().map(|r| r.id));
             }
-            ensure_eq(drained.len(), ids.len(), "all requests drained")?;
-            ensure(drained.windows(2).all(|w| w[0] < w[1]), "FIFO order broken")
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_admission_fifo_when_mode_blind() {
+    check_vec(
+        "admission-fifo",
+        40,
+        0xC44,
+        |rng| {
+            let n = rng.range(1, 40);
+            (0..n)
+                .map(|_| rng.range(0, 2) as u8) // inclusive: tags 0..=2
+                .collect::<Vec<u8>>()
+        },
+        |mode_tags| {
+            let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+            let mut q = AdmissionQueue::new(AdmitConfig {
+                mode_aware: false,
+                max_wait: std::time::Duration::ZERO,
+            });
+            for (id, &tag) in mode_tags.iter().enumerate() {
+                q.push(mk_request(id as u64, modes[tag as usize]));
+            }
+            let now = std::time::Instant::now();
+            let mut drained = Vec::new();
+            while let Some(r) = q.admit(now) {
+                drained.push(r.id);
+            }
+            ensure(
+                drained.windows(2).all(|w| w[0] < w[1]),
+                "mode-blind admission must be strict FIFO",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_kv_release_recycles_slots() {
+    check(
+        "kv-release-recycle",
+        80,
+        0xC55,
+        |rng| {
+            let bucket = rng.range(1, 12);
+            let released = rng.range(0, bucket); // inclusive: 0..=bucket
+            (bucket, released)
+        },
+        |&(bucket, released)| {
+            let mut kv = KvSlots::new(bucket, 96);
+            for _ in 0..bucket {
+                kv.allocate(10).map_err(|e| e.to_string())?;
+            }
+            ensure(kv.allocate(10).is_err(), "full bucket must reject")?;
+            for slot in 0..released {
+                kv.finish(slot).map_err(|e| e.to_string())?;
+                kv.release(slot).map_err(|e| e.to_string())?;
+            }
+            ensure_eq(kv.free_count(), released, "released slots are free")?;
+            ensure_eq(kv.occupied_count(), bucket - released, "rest stay occupied")?;
+            // Every released slot is re-allocatable at a fresh position.
+            for i in 0..released {
+                let slot = kv.allocate(20 + i).map_err(|e| e.to_string())?;
+                ensure(slot < bucket, "slot out of range")?;
+                ensure_eq(
+                    kv.state(slot),
+                    SlotState::Active { pos: 20 + i },
+                    "fresh position",
+                )?;
+            }
+            ensure(kv.allocate(10).is_err(), "bucket full again")?;
+            Ok(())
         },
     );
 }

@@ -1,6 +1,10 @@
-//! End-to-end serving test: full stack (channel server -> batcher ->
-//! engine -> PJRT runtime) over real artifacts with concurrent clients.
-//! Skips when artifacts are absent.
+//! End-to-end serving tests.
+//!
+//! The mock-backed tests exercise the FULL server loop (channel ->
+//! admission queue -> continuous scheduler -> streamed responses) with no
+//! `Runtime`/artifacts: the server is generic over its backend provider.
+//! The artifact-backed test at the bottom drives the same stack over the
+//! real PJRT runtime and skips when artifacts are absent.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -8,11 +12,164 @@ use std::time::Duration;
 use anyhow::Result;
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring;
-use pangu_atlas_quant::coordinator::batcher::BatcherConfig;
+use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::runtime::backend::{MockBackend, MockProvider};
 use pangu_atlas_quant::runtime::Runtime;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
+
+// ---------------------------------------------------------------------------
+// Mock-backed server tests (no artifacts, run everywhere)
+// ---------------------------------------------------------------------------
+
+/// Scripted mock model (shared helper): slow_think prompts produce a
+/// `long`-token trace, everything else a 3-token completion.
+fn mock_provider(
+    tk: &Tokenizer,
+    long: usize,
+) -> MockProvider<impl Fn(&[i32]) -> Vec<u32>> {
+    let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(tk, long);
+    MockProvider::new(MockBackend::new(64, 48, 96, script))
+}
+
+fn request(id: u64, mode: CotMode) -> Request {
+    let ex = vec![
+        (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+        (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+    ];
+    Request::new(id, "7b-sim", "int8", mode, ex)
+}
+
+/// Full server loop over MockBackend: a queued request joins mid-decode
+/// once a short request frees its slot, and the short request's response
+/// is delivered (strictly earlier) while the slow_think request is still
+/// decoding.
+#[test]
+fn mock_server_joins_and_streams_responses() -> Result<()> {
+    let tk = Tokenizer::minilang_default();
+    let (mut server, handle) = Server::new(
+        mock_provider(&tk, 16),
+        &tk,
+        SchedulerConfig { bucket: 2, gate: AdmitGate::Continuous },
+        AdmitConfig { mode_aware: false, max_wait: Duration::from_millis(50) },
+    );
+
+    // All three requests are queued before the session starts; the bucket
+    // holds two, so request 2 must join mid-flight when request 1's slot
+    // frees — long before request 0 (slow_think) finishes.
+    let rx0 = handle.submit(request(0, CotMode::SlowThink))?;
+    let rx1 = handle.submit(request(1, CotMode::NoThink))?;
+    let rx2 = handle.submit(request(2, CotMode::NoThink))?;
+    drop(handle);
+
+    let processed = server.run_until_idle(Duration::from_millis(200))?;
+    assert_eq!(processed, 3);
+
+    let r0 = rx0.recv()?;
+    let r1 = rx1.recv()?;
+    let r2 = rx2.recv()?;
+    assert_eq!((r0.id, r1.id, r2.id), (0, 1, 2), "replies matched by id");
+    assert_eq!(r0.tokens.len(), 16);
+    assert_eq!(r1.tokens.len(), 3);
+    assert_eq!(r2.tokens.len(), 3);
+    // Streaming delivery: both short responses completed strictly before
+    // the slow_think one (their latencies are snapshots taken at delivery).
+    assert!(r1.latency_ms < r0.latency_ms, "short delivered before long finished");
+    assert!(r2.latency_ms < r0.latency_ms, "late join delivered before long finished");
+    // The late request really was admitted into the running batch.
+    assert!(server.metrics.counter("joins") >= 1, "no mid-flight join happened");
+    assert_eq!(server.metrics.counter("requests_served"), 3);
+    assert!(server.metrics.counter("sessions") >= 1);
+    let backend = server.into_provider().backend;
+    assert!(backend.joins >= 1);
+    assert_eq!(backend.prefills, 1, "one batch prefill; admissions are joins");
+    Ok(())
+}
+
+/// The acceptance benchmark: the same mixed no_think/slow_think workload
+/// with staggered admission costs fewer total decode slot-steps under the
+/// continuous scheduler than under the wave-equivalent barrier, and its
+/// occupancy beats the wave batch efficiency.
+#[test]
+fn mock_server_continuous_beats_wave_equivalent() -> Result<()> {
+    let run = |gate: AdmitGate| -> Result<(u64, f64)> {
+        let tk = Tokenizer::minilang_default();
+        let (mut server, handle) = Server::new(
+            mock_provider(&tk, 12),
+            &tk,
+            SchedulerConfig { bucket: 2, gate },
+            AdmitConfig { mode_aware: false, max_wait: Duration::from_millis(50) },
+        );
+        let rxs: Vec<_> = [
+            request(0, CotMode::SlowThink), // 12-token straggler
+            request(1, CotMode::NoThink),
+            request(2, CotMode::NoThink),
+            request(3, CotMode::NoThink),
+        ]
+        .into_iter()
+        .map(|r| handle.submit(r).unwrap())
+        .collect();
+        drop(handle);
+        let processed = server.run_until_idle(Duration::from_millis(200))?;
+        assert_eq!(processed, 4);
+        for rx in rxs {
+            assert!(!rx.recv()?.tokens.is_empty());
+        }
+        let steps = server.metrics.counter("decode_steps");
+        let occupancy = server.metrics.summary("occupancy").expect("occupancy observed").mean;
+        Ok((steps, occupancy))
+    };
+    let (cont_steps, cont_occ) = run(AdmitGate::Continuous)?;
+    let (wave_steps, wave_occ) = run(AdmitGate::WaveBarrier)?;
+    // Same bucket both ways, so fewer decode steps == fewer slot-steps.
+    assert!(
+        cont_steps < wave_steps,
+        "continuous {cont_steps} decode steps !< wave {wave_steps}"
+    );
+    assert!(
+        cont_occ > wave_occ,
+        "continuous occupancy {cont_occ:.3} !> wave batch efficiency {wave_occ:.3}"
+    );
+    Ok(())
+}
+
+/// Mode-aware admission: with one slot, queued no_think requests are
+/// admitted ahead of an earlier slow_think request (within the aging
+/// bound), and every reply still reaches its own caller by id.
+#[test]
+fn mock_server_mode_aware_admission_keeps_replies_matched() -> Result<()> {
+    let tk = Tokenizer::minilang_default();
+    let (mut server, handle) = Server::new(
+        mock_provider(&tk, 12),
+        &tk,
+        SchedulerConfig { bucket: 1, gate: AdmitGate::Continuous },
+        AdmitConfig { mode_aware: true, max_wait: Duration::from_secs(10) },
+    );
+    let rx_slow = handle.submit(request(7, CotMode::SlowThink))?;
+    let rx_fast = handle.submit(request(8, CotMode::NoThink))?;
+    drop(handle);
+    server.run_until_idle(Duration::from_millis(200))?;
+    // The no_think request overtook the earlier slow_think in admission
+    // order, yet each caller got its own response (keyed by id, not queue
+    // position).
+    let slow = rx_slow.recv()?;
+    let fast = rx_fast.recv()?;
+    assert_eq!(slow.id, 7);
+    assert_eq!(fast.id, 8);
+    assert_eq!(slow.tokens.len(), 12);
+    assert_eq!(fast.tokens.len(), 3);
+    assert!(
+        fast.latency_ms < slow.latency_ms,
+        "mode-aware admission should finish the short request first"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed test (skips when artifacts are absent)
+// ---------------------------------------------------------------------------
 
 fn artifacts() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -30,11 +187,12 @@ fn serve_mixed_modes_through_channel_server() -> Result<()> {
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
     let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["mbpp_s"]))?;
-    let buckets = rt.manifest.serve_buckets.clone();
+    let bucket = rt.manifest.serve_buckets.iter().copied().max().unwrap_or(8);
     let (mut server, handle) = Server::new(
-        rt,
+        pangu_atlas_quant::runtime::backend::DeviceProvider::new(rt),
         &tk,
-        BatcherConfig { buckets, max_wait: Duration::from_millis(5) },
+        SchedulerConfig { bucket, gate: AdmitGate::Continuous },
+        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(5) },
     );
 
     let tasks: Vec<_> = bench.tasks.iter().take(12).cloned().collect();
@@ -54,11 +212,13 @@ fn serve_mixed_modes_through_channel_server() -> Result<()> {
 
     assert_eq!(processed, 12);
     assert_eq!(responses.len(), 12);
-    // Responses arrive in request order per client (FIFO batching).
+    // Replies are keyed by id, so each receiver holds its own response no
+    // matter how admission reordered the queue.
     for (i, r) in responses.iter().enumerate() {
-        assert_eq!(r.id, i as u64, "response order broken");
+        assert_eq!(r.id, i as u64, "reply delivered to the wrong caller");
         assert!(!r.tokens.is_empty(), "empty generation for request {i}");
         assert!(r.latency_ms >= 0.0);
+        assert!(r.ttft_ms <= r.latency_ms);
     }
     // The stack must produce *some* scoreable outputs (format learned).
     let wellformed = responses
@@ -75,6 +235,7 @@ fn serve_mixed_modes_through_channel_server() -> Result<()> {
         wellformed >= 6,
         "only {wellformed}/12 generations were well-formed"
     );
-    assert!(server.metrics.counter("waves") >= 2);
+    assert!(server.metrics.counter("sessions") >= 1);
+    assert!(server.metrics.counter("decode_steps") > 0);
     Ok(())
 }

@@ -121,25 +121,34 @@ fn variant_logits_diverge_in_order() -> Result<()> {
 
 #[test]
 fn batch_rows_are_independent() -> Result<()> {
-    // Same prompt in slot 0 of a b=8 wave and alone at b=1 must produce
+    // Same prompt in slot 0 of a b=8 batch and alone at b=1 must produce
     // identical greedy tokens — padding slots must not leak.
     let Some(dir) = artifacts() else { return Ok(()) };
+    use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
     let mut h = Harness::open(&dir)?;
     let task = h.benchmark("humaneval_s")?.tasks[2].clone();
     let tk = h.tokenizer.clone();
-    let engine = pangu_atlas_quant::coordinator::engine::Engine::new(&tk);
     let mk = |id| {
         pangu_atlas_quant::coordinator::request::Request::new(
             id, "7b-sim", "int8", CotMode::NoThink, task.examples.clone(),
         )
     };
-    let mut backend =
-        pangu_atlas_quant::runtime::backend::DeviceBackend::new(&mut h.runtime, "7b-sim", "int8")?;
-    let (r1, _) = engine.run_wave(&mut backend, 1, &[mk(1)])?;
-    let mut backend =
-        pangu_atlas_quant::runtime::backend::DeviceBackend::new(&mut h.runtime, "7b-sim", "int8")?;
-    let (r8, _) = engine.run_wave(&mut backend, 8, &[mk(2)])?;
-    assert_eq!(r1[0].tokens, r8[0].tokens, "batch-1 vs batch-8 generation differs");
+    let run_at = |h: &mut Harness, bucket: usize, id: u64| -> Result<Vec<u32>> {
+        let scheduler = Scheduler::new(
+            &tk,
+            SchedulerConfig { bucket, gate: AdmitGate::Continuous },
+        );
+        let mut backend = pangu_atlas_quant::runtime::backend::DeviceBackend::new(
+            &mut h.runtime,
+            "7b-sim",
+            "int8",
+        )?;
+        let (resps, _) = scheduler.run_batch(&mut backend, &[mk(id)])?;
+        Ok(resps[0].tokens.clone())
+    };
+    let r1 = run_at(&mut h, 1, 1)?;
+    let r8 = run_at(&mut h, 8, 2)?;
+    assert_eq!(r1, r8, "batch-1 vs batch-8 generation differs");
     Ok(())
 }
 

@@ -1,0 +1,257 @@
+//! Offline stub of the `xla-rs` PJRT binding surface.
+//!
+//! The serving runtime (`pangu_atlas_quant::runtime`) talks to PJRT through
+//! this API. Real deployments link the actual `xla` crate (which downloads
+//! XLA C++ libraries at build time — impossible in this offline workspace),
+//! so this stub provides the same types and signatures with two behaviours:
+//!
+//!   * host-side `Literal` operations are fully functional (they are plain
+//!     byte-buffer bookkeeping and are exercised by tests), and
+//!   * device-side entry points (`PjRtClient::cpu`, `compile`, `execute_b`)
+//!     return a clear "PJRT unavailable" error, which makes every
+//!     artifact-dependent test skip and every mock-backed path run normally.
+//!
+//! Swap this path dependency for the real bindings to serve compiled
+//! artifacts; no caller code changes.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT unavailable (built with the vendored xla stub; link real xla-rs bindings to execute artifacts)"
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+}
+
+impl ElementType {
+    pub fn element_size(&self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::S8 => 1,
+        }
+    }
+}
+
+/// Host types that can view in and out of a `Literal`.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write_le(&self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn write_le(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        bytes[0] as i8
+    }
+}
+
+/// Host-side typed byte buffer with a shape (fully functional).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(vals.len() * T::TY.element_size());
+        for v in vals {
+            v.write_le(&mut data);
+        }
+        Literal { ty: T::TY, dims: vec![vals.len()], data }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.element_size();
+        if data.len() != expect {
+            return Err(XlaError(format!(
+                "literal payload {} bytes, expected {expect} for {dims:?} {ty:?}",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: usize = dims.iter().map(|&d| d as usize).product();
+        if count != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} ({count} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            dims: dims.iter().map(|&d| d as usize).collect(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(XlaError(format!("to_vec type mismatch: literal is {:?}", self.ty)));
+        }
+        let sz = self.ty.element_size();
+        Ok(self.data.chunks_exact(sz).map(T::read_le).collect())
+    }
+}
+
+/// Parsed HLO module text (stored verbatim; compilation needs real PJRT).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("read HLO {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// Device buffer handle. Uninstantiable through the stub (no device exists);
+/// the type only has to exist so runtime signatures compile unchanged.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+
+    pub fn on_device_shape(&self) -> Result<(ElementType, Vec<usize>)> {
+        Err(unavailable("on_device_shape"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute_b"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.25]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(l.to_vec::<i32>().is_err());
+        let r = l.reshape(&[3, 1]).unwrap();
+        assert_eq!(r.element_count(), 3);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn untyped_literal_validates_size() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S8, &[4], &[0; 4]).is_ok());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[4], &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"));
+    }
+}
