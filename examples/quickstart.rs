@@ -32,10 +32,7 @@ fn main() -> Result<()> {
 
     // 3. Generate under each CoT mode with the INT8 variant.
     let tk = h.tokenizer.clone();
-    let scheduler = Scheduler::new(
-        &tk,
-        SchedulerConfig { bucket: 1, gate: AdmitGate::Continuous },
-    );
+    let scheduler = Scheduler::new(&tk, SchedulerConfig::fixed(1, AdmitGate::Continuous));
     for mode in CotMode::ALL {
         let req = Request::new(1, "7b-sim", "int8", mode, task.examples.clone());
         let mut backend = DeviceBackend::new(&mut h.runtime, "7b-sim", "int8")?;

@@ -34,20 +34,24 @@ fn main() -> Result<()> {
 
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
-    let bucket = rt.manifest.serve_buckets.iter().copied().max().unwrap_or(8);
+    // The manifest's compiled serve buckets form the adaptive ladder.
+    let mut buckets = rt.manifest.serve_buckets.clone();
+    if buckets.is_empty() {
+        buckets = vec![8];
+    }
     let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["humaneval_s"]))?;
     bench.validate()?;
 
     println!(
         "serving {n_requests} HumanEval-S requests on {model}/{variant} \
-         from {n_clients} client threads (continuous batching, bucket {bucket})"
+         from {n_clients} client threads (continuous batching, bucket ladder {buckets:?})"
     );
 
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
-        SchedulerConfig { bucket, gate: AdmitGate::Continuous },
-        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(15) },
+        SchedulerConfig::ladder(buckets, AdmitGate::Continuous),
+        AdmitConfig::with_wait(true, Duration::from_millis(15)),
     );
 
     // Client threads: each submits a slice of the benchmark, cycling modes.

@@ -1,16 +1,23 @@
 //! Microbenchmarks of the L3 hot-path components (benchkit): quant mirror
 //! GEMMs, Hadamard transform, repetition detector, sampler, JSON, and the
-//! continuous-batching scheduler loop over the mock backend. These run
-//! without artifacts — the §Perf profiling substrate for the coordinator
-//! layer.
+//! continuous-batching scheduler loop (fixed bucket and adaptive ladder)
+//! over the mock backend. These run without artifacts — the §Perf
+//! profiling substrate for the coordinator layer.
 //!
 //!     cargo bench --bench microbench
+//!     cargo bench --bench microbench -- --smoke   # CI: 1 iteration each
+//!
+//! `--smoke` runs every bench exactly once with no warmup so CI exercises
+//! the bench code paths (they can't bit-rot) without paying measurement
+//! time.
 
 use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::sampling;
-use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
+use pangu_atlas_quant::coordinator::scheduler::{
+    AdmitGate, LadderConfig, Scheduler, SchedulerConfig,
+};
 use pangu_atlas_quant::quant::{hadamard, int4, int8};
 use pangu_atlas_quant::runtime::backend::MockBackend;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
@@ -19,8 +26,9 @@ use pangu_atlas_quant::util::json::Json;
 use pangu_atlas_quant::util::prng::Rng;
 
 fn main() {
-    let cfg = BenchConfig::default();
-    let quick = BenchConfig::quick();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::default() };
+    let quick = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
     let mut rng = Rng::new(7);
 
     // ---- quant mirror -----------------------------------------------
@@ -95,11 +103,43 @@ fn main() {
         g.run(&name, &quick, || {
             let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 22);
             let mut be = MockBackend::new(64, 48, 96, script);
-            let sched = Scheduler::new(&tk, SchedulerConfig { bucket: 8, gate });
+            let sched = Scheduler::new(&tk, SchedulerConfig::fixed(8, gate));
             let (resps, report) =
                 sched.run_batch(&mut be, &mk_requests(32)).expect("mock session");
             assert_eq!(resps.len(), 32);
             std::hint::black_box(report.occupancy());
+        });
+    }
+    // Adaptive ladder on a light tail: a slow straggler plus a handful of
+    // shorts. The ladder pays the migrate re-shapes; the fixed bucket pays
+    // max-bucket decode every step — the bench tracks both so the
+    // adaptive path's overhead stays visible.
+    let light_requests = || -> Vec<Request> {
+        let mut reqs = vec![Request::new(0, "7b-sim", "int8", CotMode::SlowThink, examples.clone())];
+        reqs.extend(
+            (1..5).map(|i| Request::new(i, "7b-sim", "int8", CotMode::NoThink, examples.clone())),
+        );
+        reqs
+    };
+    for (name, buckets) in [
+        ("light session ladder=[2,4,8]", vec![2usize, 4, 8]),
+        ("light session fixed=8", vec![8usize]),
+    ] {
+        g.run(name, &quick, || {
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            let sched = Scheduler::new(
+                &tk,
+                SchedulerConfig {
+                    buckets: buckets.clone(),
+                    gate: AdmitGate::Continuous,
+                    ladder: LadderConfig { eval_every: 2, shrink_patience: 2 },
+                },
+            );
+            let (resps, report) =
+                sched.run_batch(&mut be, &light_requests()).expect("mock session");
+            assert_eq!(resps.len(), 5);
+            std::hint::black_box(report.slot_steps());
         });
     }
     g.finish();

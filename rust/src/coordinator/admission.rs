@@ -9,8 +9,14 @@
 //!     admitted ahead of trace-bearing ones (`slow_think`) because they
 //!     recycle the slot sooner, which raises occupancy under mixed traffic
 //!     (the paper's Fig. 2 length gap is exactly why this matters).
-//!   * Anti-starvation: once the queue head has waited past `max_wait`,
-//!     admission falls back to strict FIFO until the backlog is fresh again.
+//!   * Anti-starvation: once the queue head has waited past
+//!     `starvation_bound`, admission falls back to strict FIFO until the
+//!     backlog is fresh again.
+//!
+//! The queue also exposes [`AdmissionQueue::demand`], the weighted backlog
+//! signal the scheduler's bucket ladder grows on: a pending `slow_think`
+//! request will hold its slot for far longer than a `no_think` one
+//! (paper Fig. 2), so it justifies a bigger bucket sooner.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -22,13 +28,27 @@ use crate::tokenizer::CotMode;
 pub struct AdmitConfig {
     /// Prefer short-mode requests when filling a freed slot.
     pub mode_aware: bool,
-    /// Aging bound: a head request older than this forces FIFO admission.
-    pub max_wait: Duration,
+    /// Aging bound for the mode-aware pick: once the queue head has waited
+    /// past this, admission is strict FIFO (nothing starves).
+    pub starvation_bound: Duration,
+    /// Batching deadline for launching a *new* session: a non-full bucket
+    /// launches once the head request has waited this long
+    /// ([`AdmissionQueue::ready`]).
+    pub launch_deadline: Duration,
 }
 
 impl Default for AdmitConfig {
     fn default() -> Self {
-        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(50) }
+        // Both knobs default coupled at the pre-split `max_wait` value.
+        AdmitConfig::with_wait(true, Duration::from_millis(50))
+    }
+}
+
+impl AdmitConfig {
+    /// Couple both wait knobs at `wait` — the behavior of the old single
+    /// `max_wait` field.
+    pub fn with_wait(mode_aware: bool, wait: Duration) -> AdmitConfig {
+        AdmitConfig { mode_aware, starvation_bound: wait, launch_deadline: wait }
     }
 }
 
@@ -64,17 +84,29 @@ impl AdmissionQueue {
         self.queue.is_empty()
     }
 
+    /// Weighted backlog for the scheduler's bucket-ladder grow decision:
+    /// every queued request counts one slot, and a `slow_think` request
+    /// counts double because it will pin its slot for a long trace
+    /// (paper Fig. 2) — pending slow traffic justifies a bigger rung
+    /// sooner than the same number of `no_think` requests.
+    pub fn demand(&self) -> usize {
+        self.queue
+            .iter()
+            .map(|r| if r.mode == CotMode::SlowThink { 2 } else { 1 })
+            .sum()
+    }
+
     /// Launch readiness for a *new* session over a `bucket`-slot batch:
     /// either the queue can fill the bucket in one prefill, or the head
-    /// request has aged past `max_wait` (the wave-era batching deadline —
-    /// without it, burst arrivals right after a session starts would each
-    /// pay the device backend's join-emulation cost instead of sharing one
-    /// prefill).
+    /// request has aged past `launch_deadline` (the wave-era batching
+    /// deadline — without it, burst arrivals right after a session starts
+    /// would each pay the device backend's join-emulation cost instead of
+    /// sharing one prefill).
     pub fn ready(&self, bucket: usize, now: Instant) -> bool {
         self.queue.len() >= bucket
             || self.queue.front().map_or(false, |r| {
                 now.checked_duration_since(r.arrived).unwrap_or(Duration::ZERO)
-                    >= self.cfg.max_wait
+                    >= self.cfg.launch_deadline
             })
     }
 
@@ -91,7 +123,7 @@ impl AdmissionQueue {
         let head_wait = now
             .checked_duration_since(self.queue.front().unwrap().arrived)
             .unwrap_or(Duration::ZERO);
-        if head_wait >= self.cfg.max_wait {
+        if head_wait >= self.cfg.starvation_bound {
             return self.queue.pop_front();
         }
         // Cheapest mode wins; ties go to the earliest arrival (queue order).
@@ -115,10 +147,10 @@ mod tests {
     }
 
     fn queue(mode_aware: bool, wait_ms: u64) -> AdmissionQueue {
-        AdmissionQueue::new(AdmitConfig {
+        AdmissionQueue::new(AdmitConfig::with_wait(
             mode_aware,
-            max_wait: Duration::from_millis(wait_ms),
-        })
+            Duration::from_millis(wait_ms),
+        ))
     }
 
     #[test]
@@ -180,6 +212,58 @@ mod tests {
         assert!(q.ready(2, later), "aged head forces a launch");
         q.push(req(1, CotMode::NoThink));
         assert!(q.ready(2, now), "bucket can be filled");
+    }
+
+    /// Regression for the `max_wait` split: the mode-aware pick respects
+    /// the *starvation* bound even when the launch deadline is tuned far
+    /// away from it (the two knobs used to be one coupled field).
+    #[test]
+    fn starvation_bound_is_independent_of_launch_deadline() {
+        let mut q = AdmissionQueue::new(AdmitConfig {
+            mode_aware: true,
+            starvation_bound: Duration::from_millis(50),
+            launch_deadline: Duration::from_secs(3600),
+        });
+        q.push(req(0, CotMode::SlowThink));
+        q.push(req(1, CotMode::NoThink));
+        // Fresh head: cheapest mode still wins.
+        assert_eq!(q.admit(Instant::now()).unwrap().id, 1);
+        q.push(req(2, CotMode::NoThink));
+        // Aged head: FIFO kicks in at starvation_bound, not at the (huge)
+        // launch deadline.
+        let later = Instant::now() + Duration::from_millis(60);
+        assert_eq!(q.admit(later).unwrap().id, 0);
+        assert_eq!(q.admit(later).unwrap().id, 2);
+    }
+
+    #[test]
+    fn launch_deadline_is_independent_of_starvation_bound() {
+        let mut q = AdmissionQueue::new(AdmitConfig {
+            mode_aware: true,
+            starvation_bound: Duration::from_secs(3600),
+            launch_deadline: Duration::from_millis(50),
+        });
+        let now = Instant::now();
+        q.push(req(0, CotMode::NoThink));
+        assert!(!q.ready(2, now), "fresh head must wait for the deadline");
+        let later = now + Duration::from_millis(60);
+        assert!(q.ready(2, later), "launch fires at launch_deadline");
+        // ...while the (huge) starvation bound still governs the pick.
+        q.push(req(1, CotMode::NoThink));
+        assert_eq!(q.admit(later).unwrap().id, 0, "FIFO within one mode");
+    }
+
+    #[test]
+    fn demand_weights_slow_think_double() {
+        let mut q = queue(true, 50);
+        assert_eq!(q.demand(), 0);
+        q.push(req(0, CotMode::NoThink));
+        q.push(req(1, CotMode::AutoThink));
+        assert_eq!(q.demand(), 2);
+        q.push(req(2, CotMode::SlowThink));
+        assert_eq!(q.demand(), 4, "slow_think counts double");
+        q.admit(Instant::now()).unwrap();
+        assert!(q.demand() < 4);
     }
 
     #[test]

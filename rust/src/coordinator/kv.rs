@@ -108,6 +108,52 @@ impl KvSlots {
         }
     }
 
+    /// Resize the slot table to `new_bucket` slots (bucket-ladder
+    /// migration). Occupied slots below the new bound keep their index;
+    /// occupied slots above it are compacted, in index order, into the
+    /// lowest free indices. Returns the `(old, new)` index of every
+    /// occupied slot — the carry plan a backend `migrate` op executes.
+    /// Fails (leaving the table untouched) when the occupied slots cannot
+    /// fit the new bucket, so no live sequence is ever dropped.
+    pub fn resize(&mut self, new_bucket: usize) -> Result<Vec<(usize, usize)>> {
+        if new_bucket == 0 {
+            bail!("bucket must be positive");
+        }
+        let occ = self.occupied_count();
+        if occ > new_bucket {
+            bail!(
+                "cannot resize bucket {} -> {new_bucket}: {occ} slots live",
+                self.slots.len()
+            );
+        }
+        let mut next = vec![SlotState::Free; new_bucket];
+        let mut moves = Vec::with_capacity(occ);
+        let mut spill = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            if matches!(s, SlotState::Free) {
+                continue;
+            }
+            if i < new_bucket {
+                next[i] = *s;
+                moves.push((i, i));
+            } else {
+                spill.push(i);
+            }
+        }
+        let mut cursor = 0usize;
+        for old in spill {
+            while !matches!(next[cursor], SlotState::Free) {
+                cursor += 1;
+            }
+            next[cursor] = self.slots[old];
+            moves.push((old, cursor));
+            cursor += 1;
+        }
+        self.slots = next;
+        moves.sort_by_key(|&(_, new)| new);
+        Ok(moves)
+    }
+
     pub fn active_count(&self) -> usize {
         self.slots
             .iter()
@@ -183,6 +229,58 @@ mod tests {
         // Releasing an active slot is allowed (abandoned request).
         kv.release(b).unwrap();
         assert!(kv.release(b).is_err(), "double release");
+    }
+
+    #[test]
+    fn resize_grow_keeps_indices() {
+        let mut kv = KvSlots::new(2, 96);
+        let a = kv.allocate(10).unwrap();
+        let b = kv.allocate(20).unwrap();
+        let moves = kv.resize(4).unwrap();
+        assert_eq!(moves, vec![(a, a), (b, b)], "grow is an identity carry");
+        assert_eq!(kv.bucket(), 4);
+        assert_eq!(kv.state(a), SlotState::Active { pos: 10 });
+        assert_eq!(kv.state(b), SlotState::Active { pos: 20 });
+        assert_eq!(kv.free_count(), 2);
+        // New capacity is immediately allocatable.
+        assert_eq!(kv.allocate(5).unwrap(), 2);
+    }
+
+    #[test]
+    fn resize_shrink_compacts_spilled_slots() {
+        let mut kv = KvSlots::new(4, 96);
+        for len in [10, 11, 12, 13] {
+            kv.allocate(len).unwrap();
+        }
+        // Free slots 0 and 2; live slots 1 (pos 11) and 3 (pos 13) remain.
+        for slot in [0, 2] {
+            kv.finish(slot).unwrap();
+            kv.release(slot).unwrap();
+        }
+        kv.finish(3).unwrap(); // finished-but-unretired slots are carried too
+        let moves = kv.resize(2).unwrap();
+        // Slot 1 is already in range and keeps its index; slot 3 spills
+        // into the lowest free index (0).
+        assert_eq!(moves, vec![(3, 0), (1, 1)]);
+        assert_eq!(kv.bucket(), 2);
+        assert_eq!(kv.state(0), SlotState::Finished { pos: 13 });
+        assert_eq!(kv.state(1), SlotState::Active { pos: 11 });
+        assert_eq!(kv.free_count(), 0);
+    }
+
+    #[test]
+    fn resize_never_drops_live_slots() {
+        let mut kv = KvSlots::new(4, 96);
+        for _ in 0..3 {
+            kv.allocate(10).unwrap();
+        }
+        let err = kv.resize(2).unwrap_err();
+        assert!(err.to_string().contains("3 slots live"));
+        // Failed resize leaves the table untouched.
+        assert_eq!(kv.bucket(), 4);
+        assert_eq!(kv.occupied_count(), 3);
+        assert!(kv.resize(0).is_err());
+        assert!(kv.resize(3).is_ok());
     }
 
     #[test]

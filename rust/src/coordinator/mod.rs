@@ -13,16 +13,20 @@
 //!                     generic over backend construction
 //!   * [`metrics`]   — counters + latency summaries
 //!
-//! Scheduling model: *continuous batching at slot granularity*. The
-//! scheduler owns a long-lived decode loop over a fixed batch bucket;
+//! Scheduling model: *continuous batching at slot granularity over an
+//! adaptive bucket ladder*. The scheduler owns a long-lived decode loop;
 //! every step it retires finished slots (streaming their responses out
-//! immediately) and refills freed slots from the admission queue via the
-//! backend's `join` operation. The mock backend implements `join` natively;
-//! the PJRT device backend emulates it by re-prefilling occupied rows and
-//! replaying their decoded tokens, because the flat-state buffer ABI has no
-//! KV-merge primitive — the emulation cost is the price of the shared ABI
-//! and is confined to mid-flight admissions. The old wave discipline
-//! (admit only when the batch is empty) survives as
+//! immediately) and refills freed slots from the admission queue — one
+//! arrival via the backend's `join` operation, simultaneous arrivals via
+//! one batched `migrate`. The same `migrate` op moves the session across
+//! the ladder of compiled bucket shapes: queue pressure grows it eagerly,
+//! sustained low occupancy shrinks it with hysteresis, so light traffic
+//! stops paying max-bucket device compute per decode step. The mock
+//! backend implements `join`/`migrate` natively; the PJRT device backend
+//! emulates them by re-prefilling occupied rows and replaying their
+//! decoded tokens (once per `migrate`, however many slots move), because
+//! the flat-state buffer ABI has no KV-merge primitive. The old wave
+//! discipline (admit only when the batch is empty) survives as
 //! `scheduler::AdmitGate::WaveBarrier`, the measured baseline that
 //! `SchedReport::occupancy` is compared against.
 

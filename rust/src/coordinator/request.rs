@@ -78,6 +78,11 @@ pub struct Response {
     pub service_ms: f64,
     /// Wall time from enqueue to the first sampled token.
     pub ttft_ms: f64,
+    /// Decode-step index (within the serving session) at which the first
+    /// token was sampled — a step-clock TTFT that scheduler tests can pin
+    /// deterministically, unlike the wall-clock `ttft_ms`. 0 for rejected
+    /// requests and for requests admitted at the initial prefill.
+    pub first_token_step: usize,
 }
 
 #[cfg(test)]

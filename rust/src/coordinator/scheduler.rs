@@ -3,14 +3,23 @@
 //! Replaces the wave-synchronous `Engine::run_wave` (which pinned every
 //! request in a wave until the slowest slot finished, burning decode steps
 //! on PAD for finished slots). The scheduler owns a long-lived decode loop
-//! over a fixed batch bucket and works at slot granularity:
+//! over an **adaptive ladder of batch buckets** and works at slot
+//! granularity:
 //!
 //!   * per step, finished slots are retired immediately — the response is
 //!     delivered to `on_response` the moment its slot finishes, and the KV
 //!     slot is released for reuse;
-//!   * per step, freed slots are refilled from the [`AdmissionQueue`] via
-//!     [`Backend::join`] (mid-flight prefill), so a late-arriving request
-//!     starts decoding while earlier requests are still running;
+//!   * per step, freed slots are refilled from the [`AdmissionQueue`]:
+//!     a single arrival takes the cheap per-slot [`Backend::join`], while
+//!     simultaneous arrivals share one batched [`Backend::migrate`]
+//!     rebuild (the amortized `join_many` path);
+//!   * the session *migrates across the bucket ladder* as load changes:
+//!     queue pressure beyond the free slots grows it eagerly to the
+//!     smallest rung covering occupied + weighted demand (growth costs no
+//!     decode steps, so burst TTFT matches a fixed max-bucket run), and
+//!     sustained low occupancy shrinks it a rung after
+//!     [`LadderConfig::shrink_patience`] consecutive idle evaluations —
+//!     light traffic stops paying big-bucket device compute per step;
 //!   * the `pump` callback is invoked every step so the owner (the server
 //!     loop) can drain newly arrived requests into the queue mid-session.
 //!
@@ -28,7 +37,7 @@ use crate::coordinator::cot::{self, CotPolicy};
 use crate::coordinator::kv::{KvSlots, SlotState};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::sampling;
-use crate::runtime::backend::{Backend, StateHandle};
+use crate::runtime::backend::{Backend, MigrateSlot, StateHandle};
 use crate::tokenizer::Tokenizer;
 use crate::util::prng::Rng;
 
@@ -41,30 +50,91 @@ pub enum AdmitGate {
     WaveBarrier,
 }
 
+/// Hysteresis knobs for the adaptive bucket ladder. Growth is eager (a
+/// queue that outgrows the free slots lifts the session immediately, so
+/// admission latency never waits on the ladder); shrinking is damped so a
+/// brief lull between bursts does not thrash re-prefills.
+#[derive(Debug, Clone)]
+pub struct LadderConfig {
+    /// Decode steps between shrink evaluations.
+    pub eval_every: usize,
+    /// Consecutive low-occupancy evaluations (empty queue, live slots
+    /// fitting the next rung down) before the session drops a rung.
+    pub shrink_patience: usize,
+}
+
+impl Default for LadderConfig {
+    fn default() -> Self {
+        LadderConfig { eval_every: 4, shrink_patience: 2 }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
-    /// Batch bucket the backend executes at (slots available per step).
-    pub bucket: usize,
+    /// Strictly ascending ladder of batch bucket shapes the backend can
+    /// execute (the manifest's compiled serve buckets, in production). A
+    /// single-element ladder is a fixed bucket — the pre-ladder behavior.
+    pub buckets: Vec<usize>,
     pub gate: AdmitGate,
+    pub ladder: LadderConfig,
+}
+
+impl SchedulerConfig {
+    /// Fixed single-bucket configuration (no migration possible).
+    pub fn fixed(bucket: usize, gate: AdmitGate) -> SchedulerConfig {
+        SchedulerConfig { buckets: vec![bucket], gate, ladder: LadderConfig::default() }
+    }
+
+    /// Adaptive ladder over `buckets` (sorted and deduplicated here).
+    pub fn ladder(mut buckets: Vec<usize>, gate: AdmitGate) -> SchedulerConfig {
+        buckets.sort_unstable();
+        buckets.dedup();
+        SchedulerConfig { buckets, gate, ladder: LadderConfig::default() }
+    }
+
+    /// Largest rung (the capacity bound of the session).
+    pub fn max_bucket(&self) -> usize {
+        self.buckets.last().copied().unwrap_or(0)
+    }
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { bucket: 8, gate: AdmitGate::Continuous }
+        SchedulerConfig::fixed(8, AdmitGate::Continuous)
     }
 }
 
+/// Smallest rung whose bucket covers `demand` slots (top rung when none
+/// does).
+fn rung_for(buckets: &[usize], demand: usize) -> usize {
+    buckets.iter().position(|&b| b >= demand).unwrap_or(buckets.len() - 1)
+}
+
+/// Steps executed at one bucket shape of the ladder.
+#[derive(Debug, Clone, Default)]
+pub struct RungUse {
+    pub bucket: usize,
+    /// Decode steps the device executed at this bucket shape.
+    pub steps: usize,
+    /// Of `steps * bucket` slot-steps, how many carried a live sequence.
+    pub live_slot_steps: usize,
+}
+
 /// Per-session execution report: step-level scheduler accounting (the
-/// successor of the wave-era `WaveReport`).
+/// successor of the wave-era `WaveReport`). Slot-steps are charged at the
+/// bucket shape that *actually executed* each step, per rung.
 #[derive(Debug, Clone, Default)]
 pub struct SchedReport {
-    pub bucket: usize,
+    /// Per-rung step accounting, ascending by bucket. A fixed-bucket
+    /// session has exactly one entry.
+    pub rungs: Vec<RungUse>,
     pub decode_steps: usize,
     /// Sum over decode steps of slots carrying a live sequence.
     pub live_slot_steps: usize,
     /// Requests admitted (initial prefill + joins).
     pub admitted: usize,
-    /// Mid-flight admissions into a running batch.
+    /// Mid-flight admissions into a running batch (per-slot joins and
+    /// batched migrate admissions alike).
     pub joins: usize,
     pub completed: usize,
     /// Requests rejected at admission (e.g. prompt exceeds the prefill
@@ -76,15 +146,34 @@ pub struct SchedReport {
     pub tokens_generated: usize,
     /// Peak concurrent live slots observed at a decode step.
     pub max_live: usize,
+    /// Ladder migrations to a bigger bucket (queue pressure).
+    pub migrations_up: usize,
+    /// Ladder migrations to a smaller bucket (sustained low occupancy).
+    pub migrations_down: usize,
     pub prefill_ms: f64,
     pub decode_ms: f64,
 }
 
 impl SchedReport {
+    /// Charge one decode step executed at `bucket` with `live` live slots.
+    fn charge_step(&mut self, bucket: usize, live: usize) {
+        self.decode_steps += 1;
+        self.live_slot_steps += live;
+        self.max_live = self.max_live.max(live);
+        if let Some(r) = self.rungs.iter_mut().find(|r| r.bucket == bucket) {
+            r.steps += 1;
+            r.live_slot_steps += live;
+        } else {
+            self.rungs.push(RungUse { bucket, steps: 1, live_slot_steps: live });
+            self.rungs.sort_by_key(|r| r.bucket);
+        }
+    }
+
     /// Total slot-steps spent (the denominator of occupancy): every decode
-    /// step costs the full bucket on the device, live or not.
+    /// step costs the bucket the device *actually executed* that step —
+    /// under the adaptive ladder, light-traffic steps charge a small rung.
     pub fn slot_steps(&self) -> usize {
-        self.decode_steps * self.bucket
+        self.rungs.iter().map(|r| r.bucket * r.steps).sum()
     }
 
     /// Fraction of slot-steps that carried live tokens (1.0 = no waste).
@@ -116,6 +205,7 @@ struct SlotCtx {
     truncated: bool,
     rng: Rng,
     ttft_ms: f64,
+    first_token_step: usize,
     admitted_at: Instant,
 }
 
@@ -129,6 +219,7 @@ impl SlotCtx {
             truncated: false,
             rng,
             ttft_ms: 0.0,
+            first_token_step: 0,
             admitted_at: Instant::now(),
         }
     }
@@ -141,6 +232,7 @@ impl SlotCtx {
             latency_ms: self.req.arrived.elapsed().as_secs_f64() * 1e3,
             service_ms: self.admitted_at.elapsed().as_secs_f64() * 1e3,
             ttft_ms: self.ttft_ms,
+            first_token_step: self.first_token_step,
         }
     }
 }
@@ -156,6 +248,7 @@ fn reject(req: &Request, report: &mut SchedReport, on_response: &mut dyn FnMut(R
         latency_ms: req.arrived.elapsed().as_secs_f64() * 1e3,
         service_ms: 0.0,
         ttft_ms: 0.0,
+        first_token_step: 0,
     });
 }
 
@@ -180,9 +273,10 @@ impl<'t> Scheduler<'t> {
     }
 
     /// Run one scheduler session: admit from `queue` (refreshed via `pump`
-    /// each step), decode until both the queue and the batch drain, and
-    /// stream each response out through `on_response` the moment its slot
-    /// finishes.
+    /// each step), decode until both the queue and the batch drain —
+    /// migrating the session across the bucket ladder as load changes —
+    /// and stream each response out through `on_response` the moment its
+    /// slot finishes.
     pub fn run<B: Backend + ?Sized>(
         &self,
         backend: &mut B,
@@ -190,10 +284,18 @@ impl<'t> Scheduler<'t> {
         pump: &mut dyn FnMut(&mut AdmissionQueue),
         on_response: &mut dyn FnMut(Response),
     ) -> Result<SchedReport> {
-        let bucket = self.cfg.bucket;
-        anyhow::ensure!(bucket > 0, "scheduler bucket must be positive");
-        let mut report = SchedReport { bucket, ..SchedReport::default() };
-        let mut slots: Vec<Option<SlotCtx>> = (0..bucket).map(|_| None).collect();
+        anyhow::ensure!(!self.cfg.buckets.is_empty(), "bucket ladder must not be empty");
+        anyhow::ensure!(self.cfg.buckets[0] > 0, "scheduler buckets must be positive");
+        anyhow::ensure!(
+            self.cfg.buckets.windows(2).all(|w| w[0] < w[1]),
+            "bucket ladder must be strictly ascending"
+        );
+        anyhow::ensure!(
+            self.cfg.ladder.eval_every > 0 && self.cfg.ladder.shrink_patience > 0,
+            "ladder hysteresis knobs must be positive"
+        );
+        let mut report = SchedReport::default();
+        let mut slots: Vec<Option<SlotCtx>> = Vec::new();
         let result = self.run_core(backend, queue, pump, on_response, &mut slots, &mut report);
         if result.is_err() {
             // Backend failure mid-session: every in-flight request still
@@ -211,30 +313,177 @@ impl<'t> Scheduler<'t> {
         Ok(report)
     }
 
+    /// Draw the next *admissible* request from the queue: malformed ones
+    /// are rejected inline (each gets its empty truncated response),
+    /// the winner gets a KV slot, a right-padded prompt row, and a slot
+    /// context. `None` once the queue holds nothing admissible.
+    fn draw_admit(
+        &self,
+        queue: &mut AdmissionQueue,
+        kv: &mut KvSlots,
+        prompt_len: usize,
+        max_seq: usize,
+        report: &mut SchedReport,
+        on_response: &mut dyn FnMut(Response),
+    ) -> Result<Option<(usize, Vec<i32>, i32, SlotCtx)>> {
+        let pad = self.tokenizer.pad as i32;
+        loop {
+            let Some(req) = queue.admit(Instant::now()) else { return Ok(None) };
+            let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
+                Ok(enc) => enc,
+                Err(_) => {
+                    reject(&req, report, on_response);
+                    continue;
+                }
+            };
+            let slot = kv.allocate(ids.len())?;
+            let mut row = vec![pad; prompt_len];
+            for (j, &t) in ids.iter().enumerate() {
+                row[j] = t as i32;
+            }
+            report.admitted += 1;
+            return Ok(Some((slot, row, ids.len() as i32, SlotCtx::new(req, budget))));
+        }
+    }
+
+    /// Migrate the live batch to `new_bucket` slots in one batched backend
+    /// rebuild: every occupied KV slot is carried (compacted when
+    /// shrinking), and as many queued requests as fit the new free slots
+    /// are admitted in the same rebuild — the amortized `join_many` path.
+    /// Returns the state plus whether a migrate actually executed: when
+    /// every drawn request is rejected and the shape would not shrink, the
+    /// (pure-carry) rebuild is skipped and the grow is undone, so a burst
+    /// of malformed requests never costs a device re-prefill or a bigger
+    /// rung.
+    #[allow(clippy::too_many_arguments)]
+    fn migrate_to<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        queue: &mut AdmissionQueue,
+        kv: &mut KvSlots,
+        slots: &mut Vec<Option<SlotCtx>>,
+        hold_pos: &mut Vec<i32>,
+        st: StateHandle,
+        new_bucket: usize,
+        report: &mut SchedReport,
+        on_response: &mut dyn FnMut(Response),
+    ) -> Result<(StateHandle, bool)> {
+        let prompt_len = backend.prompt_len();
+        let max_seq = backend.max_seq();
+        let old_bucket = slots.len();
+
+        let moves = kv.resize(new_bucket)?;
+        let mut plan: Vec<MigrateSlot> = (0..new_bucket).map(|_| MigrateSlot::Vacant).collect();
+        let mut new_slots: Vec<Option<SlotCtx>> = (0..new_bucket).map(|_| None).collect();
+        let mut new_hold = vec![1i32; new_bucket];
+        for &(old, new) in &moves {
+            plan[new] = MigrateSlot::Carry { from: old };
+            new_slots[new] = slots[old].take();
+            new_hold[new] = hold_pos[old];
+        }
+        // Re-home the carried contexts before any fallible admission work,
+        // so an error below still leaves every in-flight request reachable
+        // by the abort drain in `run`.
+        *slots = new_slots;
+        *hold_pos = new_hold;
+        // Fill the free slots from the queue: each admission rides the same
+        // batched rebuild instead of paying a per-request join.
+        let mut admits = 0usize;
+        while kv.free_count() > 0 && !queue.is_empty() {
+            let Some((slot, row, len, ctx)) =
+                self.draw_admit(queue, kv, prompt_len, max_seq, report, on_response)?
+            else {
+                break;
+            };
+            plan[slot] = MigrateSlot::Admit { prompt: row, len };
+            slots[slot] = Some(ctx);
+            report.joins += 1;
+            admits += 1;
+        }
+        if admits == 0 && new_bucket >= old_bucket {
+            // Nothing admissible and no shrink: a pure-carry migrate would
+            // pay a full device rebuild for zero admissions. Undo the
+            // (identity-carry) grow and keep the existing state.
+            if new_bucket > old_bucket {
+                kv.resize(old_bucket)?;
+                slots.truncate(old_bucket);
+                hold_pos.truncate(old_bucket);
+            }
+            return Ok((st, false));
+        }
+        let t0 = Instant::now();
+        let st = backend.migrate(st, &plan)?;
+        report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok((st, true))
+    }
+
     fn run_core<B: Backend + ?Sized>(
         &self,
         backend: &mut B,
         queue: &mut AdmissionQueue,
         pump: &mut dyn FnMut(&mut AdmissionQueue),
         on_response: &mut dyn FnMut(Response),
-        slots: &mut [Option<SlotCtx>],
+        slots: &mut Vec<Option<SlotCtx>>,
         report: &mut SchedReport,
     ) -> Result<()> {
-        let bucket = self.cfg.bucket;
+        let buckets = &self.cfg.buckets;
+        let ladder = &self.cfg.ladder;
         let tk = self.tokenizer;
         let prompt_len = backend.prompt_len();
         let max_seq = backend.max_seq();
         let vocab = backend.vocab();
         let pad = tk.pad as i32;
 
+        let mut rung = 0usize;
+        let mut bucket = buckets[rung];
         let mut kv = KvSlots::new(bucket, max_seq);
+        slots.clear();
+        slots.resize_with(bucket, || None);
         // Frozen decode position per vacant slot (inert rows still receive a
         // decode input every step; they re-write this position).
         let mut hold_pos = vec![1i32; bucket];
         let mut state: Option<StateHandle> = None;
+        // Shrink hysteresis: consecutive low-occupancy evaluations.
+        let mut idle_evals = 0usize;
+        let mut last_eval_step = 0usize;
 
         loop {
             pump(queue);
+
+            // ---- ladder shrink: sustained low occupancy drops a rung --
+            if rung > 0
+                && kv.occupied_count() > 0
+                && report.decode_steps >= last_eval_step + ladder.eval_every
+            {
+                last_eval_step = report.decode_steps;
+                if queue.is_empty() && kv.occupied_count() <= buckets[rung - 1] {
+                    idle_evals += 1;
+                } else {
+                    idle_evals = 0;
+                }
+                if idle_evals >= ladder.shrink_patience {
+                    idle_evals = 0;
+                    if let Some(st) = state.take() {
+                        let (st, migrated) = self.migrate_to(
+                            backend,
+                            queue,
+                            &mut kv,
+                            slots,
+                            &mut hold_pos,
+                            st,
+                            buckets[rung - 1],
+                            report,
+                            on_response,
+                        )?;
+                        if migrated {
+                            rung -= 1;
+                            bucket = buckets[rung];
+                            report.migrations_down += 1;
+                        }
+                        state = Some(st);
+                    }
+                }
+            }
 
             // ---- admission -------------------------------------------
             let gate_open = match self.cfg.gate {
@@ -244,29 +493,37 @@ impl<'t> Scheduler<'t> {
             if gate_open && !queue.is_empty() {
                 if kv.occupied_count() == 0 {
                     // Empty batch (first admission, a drained batch, or a
-                    // barrier wave): one whole-bucket prefill is strictly
-                    // cheaper than per-slot joins — any previous state is
-                    // dropped and rebuilt from scratch.
+                    // barrier wave): relaunch at the smallest rung covering
+                    // the weighted queue demand — light traffic starts on a
+                    // small bucket — and pay one whole-bucket prefill,
+                    // strictly cheaper than per-slot joins; any previous
+                    // state is dropped and rebuilt from scratch.
+                    rung = rung_for(buckets, queue.demand());
+                    bucket = buckets[rung];
+                    kv = KvSlots::new(bucket, max_seq);
+                    slots.clear();
+                    slots.resize_with(bucket, || None);
+                    hold_pos = vec![1i32; bucket];
+                    idle_evals = 0;
                     drop(state.take());
                     let mut tokens = vec![pad; bucket * prompt_len];
                     let mut lens = vec![1i32; bucket];
                     let mut admitted = 0usize;
                     while admitted < bucket {
-                        let Some(req) = queue.admit(Instant::now()) else { break };
-                        let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
-                            Ok(enc) => enc,
-                            Err(_) => {
-                                reject(&req, report, on_response);
-                                continue;
-                            }
+                        let Some((slot, row, len, ctx)) = self.draw_admit(
+                            queue,
+                            &mut kv,
+                            prompt_len,
+                            max_seq,
+                            report,
+                            on_response,
+                        )?
+                        else {
+                            break;
                         };
-                        let slot = kv.allocate(ids.len())?;
-                        for (j, &t) in ids.iter().enumerate() {
-                            tokens[slot * prompt_len + j] = t as i32;
-                        }
-                        lens[slot] = ids.len() as i32;
-                        slots[slot] = Some(SlotCtx::new(req, budget));
-                        report.admitted += 1;
+                        tokens[slot * prompt_len..(slot + 1) * prompt_len].copy_from_slice(&row);
+                        lens[slot] = len;
+                        slots[slot] = Some(ctx);
                         admitted += 1;
                     }
                     if admitted == 0 {
@@ -284,28 +541,60 @@ impl<'t> Scheduler<'t> {
                     }
                     state = Some(st);
                 } else if let Some(mut st) = state.take() {
-                    // Mid-flight admission: join freed slots one request at
-                    // a time into the running batch.
-                    while kv.free_count() > 0 && !queue.is_empty() {
-                        let Some(req) = queue.admit(Instant::now()) else { break };
-                        let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
-                            Ok(enc) => enc,
-                            Err(_) => {
-                                reject(&req, report, on_response);
-                                continue;
+                    // Mid-flight admission. Queue pressure beyond the free
+                    // slots grows the session eagerly to the smallest rung
+                    // covering occupied + weighted demand (growth costs no
+                    // decode steps, so burst TTFT matches a fixed
+                    // max-bucket session); two or more simultaneous
+                    // admissions share one batched migrate (the join_many
+                    // path); a single admission takes the per-slot join.
+                    let demand = queue.demand();
+                    let mut target = rung;
+                    if demand > kv.free_count() {
+                        target = rung_for(buckets, kv.occupied_count() + demand).max(rung);
+                    }
+                    let free_at_target = buckets[target] - kv.occupied_count();
+                    let will_join = queue.queued().min(free_at_target);
+                    if target > rung || will_join >= 2 {
+                        let (new_st, migrated) = self.migrate_to(
+                            backend,
+                            queue,
+                            &mut kv,
+                            slots,
+                            &mut hold_pos,
+                            st,
+                            buckets[target],
+                            report,
+                            on_response,
+                        )?;
+                        st = new_st;
+                        if migrated {
+                            if target > rung {
+                                report.migrations_up += 1;
                             }
-                        };
-                        let slot = kv.allocate(ids.len())?;
-                        let mut row = vec![pad; prompt_len];
-                        for (j, &t) in ids.iter().enumerate() {
-                            row[j] = t as i32;
+                            rung = target;
+                            bucket = buckets[rung];
+                            idle_evals = 0;
                         }
-                        let t0 = Instant::now();
-                        st = backend.join(st, slot, &row, ids.len() as i32)?;
-                        report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
-                        slots[slot] = Some(SlotCtx::new(req, budget));
-                        report.admitted += 1;
-                        report.joins += 1;
+                    } else {
+                        while kv.free_count() > 0 && !queue.is_empty() {
+                            let Some((slot, row, len, ctx)) = self.draw_admit(
+                                queue,
+                                &mut kv,
+                                prompt_len,
+                                max_seq,
+                                report,
+                                on_response,
+                            )?
+                            else {
+                                break;
+                            };
+                            let t0 = Instant::now();
+                            st = backend.join(st, slot, &row, len)?;
+                            report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            slots[slot] = Some(ctx);
+                            report.joins += 1;
+                        }
                     }
                     state = Some(st);
                 }
@@ -333,6 +622,7 @@ impl<'t> Scheduler<'t> {
                     );
                     if ctx.output.is_empty() {
                         ctx.ttft_ms = ctx.req.arrived.elapsed().as_secs_f64() * 1e3;
+                        ctx.first_token_step = report.decode_steps;
                     }
                     ctx.output.push(tok);
                     next[slot] = tok as i32;
@@ -379,9 +669,7 @@ impl<'t> Scheduler<'t> {
             let t0 = Instant::now();
             st = backend.decode(st, &next, &pos)?;
             report.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
-            report.decode_steps += 1;
-            report.live_slot_steps += live;
-            report.max_live = report.max_live.max(live);
+            report.charge_step(bucket, live);
             for slot in 0..bucket {
                 if matches!(kv.state(slot), SlotState::Active { .. }) && !kv.advance(slot)? {
                     // KV window exhausted: force-finish (retired next step).
@@ -400,11 +688,11 @@ impl<'t> Scheduler<'t> {
         backend: &mut B,
         requests: &[Request],
     ) -> Result<(Vec<Response>, SchedReport)> {
-        let mut queue = AdmissionQueue::new(crate::coordinator::admission::AdmitConfig {
-            // Offline batches preserve caller order.
-            mode_aware: false,
-            max_wait: std::time::Duration::ZERO,
-        });
+        // Offline batches preserve caller order.
+        let mut queue = AdmissionQueue::new(crate::coordinator::admission::AdmitConfig::with_wait(
+            false,
+            std::time::Duration::ZERO,
+        ));
         for req in requests {
             queue.push(req.clone());
         }
@@ -424,6 +712,8 @@ impl<'t> Scheduler<'t> {
 
 #[cfg(test)]
 mod tests {
+    use std::time::Duration;
+
     use super::*;
     use crate::coordinator::admission::AdmitConfig;
     use crate::runtime::backend::MockBackend;
@@ -443,7 +733,7 @@ mod tests {
     }
 
     fn scheduler(tk: &Tokenizer, bucket: usize, gate: AdmitGate) -> Scheduler<'_> {
-        Scheduler::new(tk, SchedulerConfig { bucket, gate })
+        Scheduler::new(tk, SchedulerConfig::fixed(bucket, gate))
     }
 
     /// Mode-dependent script: slow_think prompts get a `long` completion,
@@ -648,6 +938,13 @@ mod tests {
         ) -> anyhow::Result<crate::runtime::backend::StateHandle> {
             self.inner.evict(state, slot)
         }
+        fn migrate(
+            &mut self,
+            state: crate::runtime::backend::StateHandle,
+            plan: &[crate::runtime::backend::MigrateSlot],
+        ) -> anyhow::Result<crate::runtime::backend::StateHandle> {
+            self.inner.migrate(state, plan)
+        }
         fn decode(
             &mut self,
             state: crate::runtime::backend::StateHandle,
@@ -728,5 +1025,234 @@ mod tests {
         assert_eq!(report.admitted, 0);
         assert_eq!(be.prefills, 0);
         assert_eq!(report.occupancy(), 1.0);
+    }
+
+    // ---- adaptive bucket ladder ---------------------------------------
+
+    fn ladder_scheduler(
+        tk: &Tokenizer,
+        buckets: Vec<usize>,
+        eval_every: usize,
+        shrink_patience: usize,
+    ) -> Scheduler<'_> {
+        Scheduler::new(
+            tk,
+            SchedulerConfig {
+                buckets,
+                gate: AdmitGate::Continuous,
+                ladder: LadderConfig { eval_every, shrink_patience },
+            },
+        )
+    }
+
+    #[test]
+    fn run_rejects_malformed_ladders() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, |_: &[i32]| vec![2]);
+        let mut queue = AdmissionQueue::new(AdmitConfig::default());
+        for buckets in [vec![], vec![0], vec![4, 2], vec![4, 4]] {
+            let sched = ladder_scheduler(&tk, buckets.clone(), 4, 2);
+            assert!(
+                sched.run(&mut be, &mut queue, &mut |_| {}, &mut |_| {}).is_err(),
+                "ladder {buckets:?} must be rejected"
+            );
+        }
+        // SchedulerConfig::ladder sanitizes exactly those shapes.
+        assert_eq!(
+            SchedulerConfig::ladder(vec![4, 2, 4], AdmitGate::Continuous).buckets,
+            vec![2, 4]
+        );
+    }
+
+    #[test]
+    fn light_traffic_starts_on_the_smallest_rung() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let sched = ladder_scheduler(&tk, vec![2, 4, 8], 4, 2);
+        let (resps, report) = sched.run_batch(&mut be, &[request(1, CotMode::NoThink)]).unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(report.rungs.len(), 1, "one request never leaves rung 0");
+        assert_eq!(report.rungs[0].bucket, 2);
+        assert_eq!(report.migrations_up + report.migrations_down, 0);
+        // Every step charged bucket 2, not the max rung 8.
+        assert_eq!(report.slot_steps(), 2 * report.decode_steps);
+    }
+
+    #[test]
+    fn queue_pressure_grows_the_session_in_one_migrate() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 20));
+        let sched = ladder_scheduler(&tk, vec![2, 8], 4, 2);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        queue.push(request(0, CotMode::SlowThink)); // 20-token straggler
+        let mut pumps = 0usize;
+        let mut order = Vec::new();
+        let report = sched
+            .run(
+                &mut be,
+                &mut queue,
+                &mut |q| {
+                    pumps += 1;
+                    if pumps == 5 {
+                        // Burst of four arrivals mid-session: demand 4 over
+                        // one free slot forces a grow to bucket 8.
+                        for id in 1..5 {
+                            q.push(request(id, CotMode::NoThink));
+                        }
+                    }
+                },
+                &mut |r| order.push(r.id),
+            )
+            .unwrap();
+        assert_eq!(report.completed, 5);
+        assert_eq!(report.migrations_up, 1, "one eager grow");
+        assert_eq!(
+            be.migrations,
+            report.migrations_up + report.migrations_down,
+            "backend saw exactly the reported migrations"
+        );
+        assert_eq!(report.joins, 4, "all four burst arrivals share the migrate");
+        assert_eq!(be.joins, 4);
+        assert_eq!(be.prefills, 1, "no per-request prefill after the grow");
+        let grown: Vec<usize> = report.rungs.iter().map(|r| r.bucket).collect();
+        assert_eq!(grown, vec![2, 8], "steps charged at both rungs");
+        assert_eq!(*order.last().unwrap(), 0, "straggler finishes last");
+    }
+
+    #[test]
+    fn sustained_low_occupancy_shrinks_the_session() {
+        let tk = fixture();
+        let run = |buckets: Vec<usize>| {
+            let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 30));
+            let sched = ladder_scheduler(&tk, buckets, 4, 2);
+            let mut reqs = vec![request(0, CotMode::SlowThink)]; // 30 tokens
+            reqs.extend((1..6).map(|i| request(i, CotMode::NoThink))); // 3 tokens
+            let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+            assert_eq!(resps.len(), 6);
+            (resps, report)
+        };
+        let (adaptive_resps, adaptive) = run(vec![2, 8]);
+        let (fixed_resps, fixed) = run(vec![8]);
+        // Weighted demand 7 launches both at bucket 8; once the shorts
+        // drain, only the adaptive session stops paying 8 slots/step.
+        assert!(adaptive.migrations_down >= 1, "drained session must shrink");
+        assert!(
+            adaptive.slot_steps() < fixed.slot_steps(),
+            "adaptive {} slot-steps !< fixed {}",
+            adaptive.slot_steps(),
+            fixed.slot_steps()
+        );
+        assert!(adaptive.occupancy() > fixed.occupancy());
+        // Migration preserves generation byte-for-byte.
+        for (a, f) in adaptive_resps.iter().zip(&fixed_resps) {
+            assert_eq!(a.id, f.id);
+            assert_eq!(a.tokens, f.tokens, "request {} diverged across ladders", a.id);
+        }
+    }
+
+    #[test]
+    fn simultaneous_joins_share_one_batched_migrate() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 20));
+        // Fixed single-rung ladder: the migrate here is purely the
+        // join_many amortization, not a reshape.
+        let sched = scheduler(&tk, 4, AdmitGate::Continuous);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        queue.push(request(0, CotMode::SlowThink)); // keeps the batch alive
+        for id in 1..4 {
+            queue.push(request(id, CotMode::NoThink)); // all finish together
+        }
+        let mut pumps = 0usize;
+        let mut completed = 0usize;
+        let report = sched
+            .run(
+                &mut be,
+                &mut queue,
+                &mut |q| {
+                    pumps += 1;
+                    if pumps == 6 {
+                        // The three shorts retired together last step; three
+                        // fresh arrivals meet three free slots at once.
+                        for id in 4..7 {
+                            q.push(request(id, CotMode::NoThink));
+                        }
+                    }
+                },
+                &mut |_| completed += 1,
+            )
+            .unwrap();
+        assert_eq!(completed, 7);
+        assert_eq!(report.migrations_up + report.migrations_down, 0);
+        assert_eq!(be.migrations, 1, "three joins share one batched rebuild");
+        assert_eq!(report.joins, 3);
+        assert_eq!(be.joins, 3);
+        assert_eq!(be.prefills, 1);
+    }
+
+    #[test]
+    fn malformed_burst_never_pays_a_migrate() {
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let sched = ladder_scheduler(&tk, vec![2, 8], 4, 2);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        queue.push(request(0, CotMode::SlowThink)); // 12-token anchor
+        let huge: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..10).map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1])).collect();
+        let mut pumps = 0usize;
+        let mut responses = Vec::new();
+        let report = sched
+            .run(
+                &mut be,
+                &mut queue,
+                &mut |q| {
+                    pumps += 1;
+                    if pumps == 5 {
+                        // Two oversized prompts land mid-session: their
+                        // queue pressure must not buy a device rebuild or
+                        // a bigger rung — both are rejected, the session
+                        // stays where it was.
+                        for id in [8, 9] {
+                            q.push(Request::new(id, "m", "fp16", CotMode::NoThink, huge.clone()));
+                        }
+                    }
+                },
+                &mut |r| responses.push(r),
+            )
+            .unwrap();
+        assert_eq!(report.rejected, 2);
+        assert_eq!(report.completed, 1);
+        assert_eq!(be.migrations, 0, "all-rejected pressure skipped the rebuild");
+        assert_eq!(report.migrations_up + report.migrations_down, 0);
+        assert!(report.rungs.iter().all(|r| r.bucket == 2), "session never left rung 0");
+        assert_eq!(responses.len(), 3);
+    }
+
+    #[test]
+    fn ladder_session_survives_reject_and_abort_paths() {
+        let tk = fixture();
+        // Backend that fails decode late: ladder bookkeeping must still
+        // drain in-flight requests through the abort path.
+        let mut be = FailAfter {
+            inner: MockBackend::new(64, 48, 96, mode_scripts(&tk, 30)),
+            fail_at: 8,
+        };
+        let sched = ladder_scheduler(&tk, vec![1, 2], 4, 2);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        queue.push(request(1, CotMode::SlowThink));
+        // Oversized prompt: rejected at the ladder's rung-selection prefill
+        // without poisoning the session.
+        let huge: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..10).map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1])).collect();
+        queue.push(Request::new(9, "m", "fp16", CotMode::NoThink, huge));
+        queue.push(request(2, CotMode::SlowThink));
+        let mut got = Vec::new();
+        let err = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |r| got.push(r))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected device failure"));
+        assert_eq!(got.len(), 3, "reject + both in-flight aborts delivered");
+        assert_eq!(got[0].id, 9, "rejection is immediate");
+        assert!(got[0].truncated && got[0].tokens.is_empty());
+        assert!(got[1..].iter().all(|r| r.truncated && !r.tokens.is_empty()));
     }
 }

@@ -134,10 +134,14 @@ impl<'t, P: BackendProvider> Server<'t, P> {
             }
             // Round-robin over routes whose queue is launch-ready (full
             // bucket or aged head — the batching deadline; everything is
-            // ready once the submit side closed). Picking the first key
-            // after the last-served one keeps one busy route from starving
-            // the others across sessions.
-            let bucket = self.sched_cfg.bucket;
+            // ready once the submit side closed). Readiness is sized to the
+            // *smallest* ladder rung: a session is worth launching as soon
+            // as it can fill the cheapest compiled shape, because the
+            // scheduler grows it (with batched admission) if more traffic
+            // lands mid-session. Picking the first key after the
+            // last-served one keeps one busy route from starving the
+            // others across sessions.
+            let bucket = self.sched_cfg.buckets.first().copied().unwrap_or(1);
             let now = Instant::now();
             let candidates: Vec<(String, String)> = self
                 .queues
@@ -250,7 +254,12 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         self.metrics.inc("requests_rejected", report.rejected as u64);
         self.metrics.inc("tokens_generated", report.tokens_generated as u64);
         self.metrics.inc("decode_steps", report.decode_steps as u64);
+        // Charged at the bucket each step actually executed — under the
+        // adaptive ladder this is the device-compute cost metric.
+        self.metrics.inc("slot_steps", report.slot_steps() as u64);
         self.metrics.inc("joins", report.joins as u64);
+        self.metrics.inc("migrations_up", report.migrations_up as u64);
+        self.metrics.inc("migrations_down", report.migrations_down as u64);
         self.metrics.observe("occupancy", report.occupancy());
         self.metrics.observe("admitted_per_step", report.admitted_per_step());
         self.metrics.observe("session_prefill_ms", report.prefill_ms);

@@ -101,10 +101,10 @@ impl Harness {
             .unwrap_or(&8);
         let n = self.quick.map_or(bench.tasks.len(), |q| q.min(bench.tasks.len()));
         let tk = self.tokenizer.clone();
-        let scheduler = Scheduler::new(
-            &tk,
-            SchedulerConfig { bucket, gate: AdmitGate::Continuous },
-        );
+        // Offline evaluation submits bucket-sized batches at the largest
+        // compiled shape; a fixed single-rung config keeps the device
+        // backend from ever paying migration re-prefills here.
+        let scheduler = Scheduler::new(&tk, SchedulerConfig::fixed(bucket, AdmitGate::Continuous));
         let mut records = Vec::with_capacity(n);
         let t0 = Instant::now();
         for chunk in bench.tasks[..n].chunks(bucket) {

@@ -134,10 +134,7 @@ fn generate(args: &Args) -> Result<()> {
         println!("  example {xs:?} -> {ys:?}");
     }
     let tk = h.tokenizer.clone();
-    let scheduler = Scheduler::new(
-        &tk,
-        SchedulerConfig { bucket: 1, gate: AdmitGate::Continuous },
-    );
+    let scheduler = Scheduler::new(&tk, SchedulerConfig::fixed(1, AdmitGate::Continuous));
     let req = Request::new(0, &model, &variant, mode, task.examples.clone());
     let mut backend = DeviceBackend::new(&mut h.runtime, &model, &variant)?;
     let (resps, report) = scheduler.run_batch(&mut backend, &[req])?;
@@ -154,7 +151,13 @@ fn serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
-    let bucket = rt.manifest.serve_buckets.iter().copied().max().unwrap_or(8);
+    // The manifest's compiled serve buckets are the adaptive ladder: the
+    // session starts on the smallest shape that covers the backlog and
+    // migrates rungs as load changes.
+    let mut buckets = rt.manifest.serve_buckets.clone();
+    if buckets.is_empty() {
+        buckets = vec![8];
+    }
     let n_req = args.usize_or("requests", 32);
     let model = args.get_or("model", "7b-sim").to_string();
     let precision: Precision = args.parsed_or("variant", Precision::Int8)?;
@@ -164,8 +167,8 @@ fn serve(args: &Args) -> Result<()> {
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
-        SchedulerConfig { bucket, gate: AdmitGate::Continuous },
-        AdmitConfig { mode_aware: true, max_wait: Duration::from_millis(10) },
+        SchedulerConfig::ladder(buckets, AdmitGate::Continuous),
+        AdmitConfig::with_wait(true, Duration::from_millis(10)),
     );
     // Client thread: submit synthetic traffic drawn from the benchmark.
     let tasks: Vec<_> = bench.tasks.iter().take(n_req).cloned().collect();

@@ -108,6 +108,50 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(11);
+        let (k, n) = (32, 8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 2.0).collect();
+        let (q, s) = quant_weight_per_channel(&w, k, n);
+        for row in 0..k {
+            for col in 0..n {
+                let deq = q[row * n + col] as f32 * s[col];
+                let err = (deq - w[row * n + col]).abs();
+                assert!(err <= s[col] / 2.0 + 1e-6, "({row},{col}): {err} > {}", s[col] / 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_channel_gets_eps_scale_and_exact_zero() {
+        // Column 1 is all zeros: scale falls back to EPS/QMAX and the
+        // zeros survive quantize -> pack -> unpack -> dequantize exactly.
+        let w = vec![
+            1.0, 0.0, //
+            -3.0, 0.0,
+        ];
+        let (q, s) = quant_weight_per_channel(&w, 2, 2);
+        assert_eq!(s[1], EPS / QMAX);
+        assert_eq!((q[1], q[3]), (0, 0));
+        assert_eq!(q[1] as f32 * s[1], 0.0);
+        let packed = pack(&q, 2, 2);
+        assert_eq!(unpack(&packed, 1, 2), q);
+    }
+
+    #[test]
+    fn single_element_channel_saturates_to_qmax() {
+        // k = 1: the single element per column is its own amax, so it
+        // quantizes to ±QMAX (or 0) and round-trips within half a scale.
+        let w = vec![0.5, -8.0, 0.0];
+        let (q, s) = quant_weight_per_channel(&w, 1, 3);
+        assert_eq!(q, vec![7, -7, 0]);
+        for col in 0..3 {
+            let deq = q[col] as f32 * s[col];
+            assert!((deq - w[col]).abs() <= s[col] / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
     fn quant_values_in_int4_range() {
         let mut rng = Rng::new(5);
         let (k, n) = (32, 16);

@@ -136,6 +136,46 @@ mod tests {
     }
 
     #[test]
+    fn all_zero_channel_gets_eps_scale_and_exact_zero() {
+        // Column 1 is all zeros: its scale falls back to EPS/QMAX (never
+        // 0, so no NaN from 0/0) and every value dequantizes to exactly 0.
+        let w = vec![
+            1.0, 0.0, -2.0, //
+            0.5, 0.0, 4.0,
+        ];
+        let (q, s) = quant_weight_per_channel(&w, 2, 3);
+        assert_eq!(s[1], EPS / QMAX);
+        assert!(s.iter().all(|v| v.is_finite() && *v > 0.0));
+        assert_eq!((q[1], q[4]), (0, 0));
+        assert_eq!(q[1] as f32 * s[1], 0.0);
+        // The live columns still honor the half-scale round-trip bound.
+        for row in 0..2 {
+            for col in [0usize, 2] {
+                let deq = q[row * 3 + col] as f32 * s[col];
+                assert!((deq - w[row * 3 + col]).abs() <= s[col] / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn single_element_channel_roundtrips_exactly() {
+        // k = 1: each column's scale comes from its single element, which
+        // therefore quantizes to ±QMAX and dequantizes back exactly.
+        let w = vec![3.25, -0.125, 0.0];
+        let (q, s) = quant_weight_per_channel(&w, 1, 3);
+        assert_eq!(q, vec![127, -127, 0]);
+        for col in 0..3 {
+            let deq = q[col] as f32 * s[col];
+            assert!((deq - w[col]).abs() <= s[col] / 2.0 + 1e-6);
+        }
+        // Same edge for per-token activations: one-element rows.
+        let (qa, sa) = quant_act_per_token(&[5.0, 0.0], 2, 1);
+        assert_eq!(qa, vec![127, 0]);
+        assert!((qa[0] as f32 * sa[0] - 5.0).abs() < 1e-6);
+        assert!(sa[1] > 0.0);
+    }
+
+    #[test]
     fn gemm_matches_fp_within_tolerance() {
         let mut rng = Rng::new(3);
         let (m, k, n) = (4, 32, 8);

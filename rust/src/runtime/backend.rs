@@ -5,15 +5,19 @@
 //!
 //! The ABI is slot-level: besides whole-batch `prefill` and per-step
 //! `decode`, a backend supports `join` (prefill one new request into a free
-//! slot of a live state, mid-flight) and `evict` (release a finished slot).
-//! That is what lets the continuous-batching scheduler admit and retire
-//! requests at decode-step granularity instead of wave barriers.
+//! slot of a live state, mid-flight), `evict` (release a finished slot),
+//! and `migrate` (rebuild every live slot into a new batch bucket shape —
+//! the scheduler's adaptive bucket ladder — while batch-admitting any
+//! number of fresh requests in the same rebuild). That is what lets the
+//! continuous-batching scheduler admit, retire, and re-shape at decode-step
+//! granularity instead of wave barriers.
 //!
 //! Position contract (validated loudly by [`MockBackend`]): between a slot's
 //! `prefill`/`join` and its next `join`, the per-step decode position must
 //! advance by exactly one while the slot is live, and once it stops
 //! advancing (the slot finished or was evicted) it must hold that position
-//! until the slot is re-joined.
+//! until the slot is re-joined. A `migrate` carries the contract state of
+//! every live slot to its new index unchanged.
 
 use anyhow::{anyhow, Result};
 
@@ -34,8 +38,23 @@ impl StateHandle {
     }
 }
 
-/// Step-level backend ABI (prefill / slot join / slot evict / one decode
-/// step / one readout).
+/// One slot of a [`Backend::migrate`] plan: what the corresponding slot of
+/// the *new* batch shape carries.
+#[derive(Debug, Clone)]
+pub enum MigrateSlot {
+    /// Carry live slot `from` of the old state: KV history and pending
+    /// logits are preserved across the reshape.
+    Carry { from: usize },
+    /// Prefill a fresh request into this slot as part of the same batched
+    /// rebuild (the amortized `join_many` path). `prompt` is a full
+    /// right-padded row of `prompt_len` tokens with `len` real ones.
+    Admit { prompt: Vec<i32>, len: i32 },
+    /// Leave the slot vacant (inert row until a later join claims it).
+    Vacant,
+}
+
+/// Step-level backend ABI (prefill / slot join / slot evict / batch migrate
+/// / one decode step / one readout).
 pub trait Backend {
     fn vocab(&self) -> usize;
     fn prompt_len(&self) -> usize;
@@ -52,6 +71,14 @@ pub trait Backend {
     /// Release a finished slot; it decodes as an inert row (frozen position)
     /// until the next `join` claims it.
     fn evict(&mut self, state: StateHandle, slot: usize) -> Result<StateHandle>;
+    /// Rebuild the batch into a new bucket shape (`plan.len()` slots) in
+    /// one batched operation: carried slots keep their KV history, logits,
+    /// and position contract; `Admit` slots come up holding their
+    /// first-token logits (exactly as after `join`, but any number of
+    /// admissions share one rebuild). Every *live* slot of the old state
+    /// must be carried exactly once — a plan that drops a live slot is an
+    /// error, never silent data loss.
+    fn migrate(&mut self, state: StateHandle, plan: &[MigrateSlot]) -> Result<StateHandle>;
     /// One decode step at per-slot positions.
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle>;
     /// Fetch logits [batch * vocab] from the state.
@@ -87,6 +114,9 @@ pub struct DeviceBackend<'r> {
     traces: Vec<SlotTrace>,
     /// Mid-flight admissions served (each one costs a re-prefill + replay).
     pub joins: usize,
+    /// Bucket migrations served (one re-prefill + replay regardless of how
+    /// many slots moved or joined — the amortized `join_many` path).
+    pub migrations: usize,
 }
 
 impl<'r> DeviceBackend<'r> {
@@ -104,6 +134,7 @@ impl<'r> DeviceBackend<'r> {
             max_seq,
             traces: Vec::new(),
             joins: 0,
+            migrations: 0,
         })
     }
 
@@ -222,6 +253,61 @@ impl Backend for DeviceBackend<'_> {
         Ok(state)
     }
 
+    fn migrate(&mut self, state: StateHandle, plan: &[MigrateSlot]) -> Result<StateHandle> {
+        let StateHandle::Device(_old) = state else {
+            return Err(anyhow!("device backend got mock state"));
+        };
+        anyhow::ensure!(!plan.is_empty(), "migrate plan must have at least one slot");
+        let mut carried = vec![false; self.traces.len()];
+        let mut next = Vec::with_capacity(plan.len());
+        for entry in plan {
+            next.push(match entry {
+                MigrateSlot::Carry { from } => {
+                    anyhow::ensure!(*from < self.traces.len(), "carry slot {from} out of range");
+                    anyhow::ensure!(self.traces[*from].occupied, "carry of vacant slot {from}");
+                    anyhow::ensure!(!carried[*from], "slot {from} carried twice");
+                    carried[*from] = true;
+                    self.traces[*from].clone()
+                }
+                MigrateSlot::Admit { prompt, len } => {
+                    anyhow::ensure!(
+                        prompt.len() == self.prompt_len,
+                        "admit prompt row must be padded"
+                    );
+                    anyhow::ensure!(
+                        *len >= 1 && (*len as usize) <= self.prompt_len,
+                        "bad admit len {len}"
+                    );
+                    self.joins += 1;
+                    SlotTrace {
+                        prompt_row: prompt.clone(),
+                        len: *len,
+                        decoded: Vec::new(),
+                        occupied: true,
+                    }
+                }
+                MigrateSlot::Vacant => SlotTrace {
+                    prompt_row: vec![0; self.prompt_len],
+                    len: 1,
+                    decoded: Vec::new(),
+                    occupied: false,
+                },
+            });
+        }
+        let dropped = self
+            .traces
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| t.occupied && !carried[*i])
+            .count();
+        anyhow::ensure!(dropped == 0, "migrate plan drops {dropped} live slots");
+        self.traces = next;
+        self.migrations += 1;
+        // The old state is dropped; the new shape is rebuilt in ONE
+        // prefill + replay, however many slots moved or joined.
+        Ok(StateHandle::Device(self.rebuild()?))
+    }
+
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle> {
         let StateHandle::Device(s) = state else {
             return Err(anyhow!("device backend got mock state"));
@@ -285,6 +371,8 @@ pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     /// Mid-flight admissions and releases (continuous-batching accounting).
     pub joins: usize,
     pub evictions: usize,
+    /// Bucket migrations (adaptive-ladder reshapes / batched joins).
+    pub migrations: usize,
 }
 
 impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
@@ -298,6 +386,7 @@ impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
             prefills: 0,
             joins: 0,
             evictions: 0,
+            migrations: 0,
         }
     }
 }
@@ -368,6 +457,60 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         s.cursor[slot] = 0;
         self.evictions += 1;
         Ok(StateHandle::Mock(s))
+    }
+
+    fn migrate(&mut self, state: StateHandle, plan: &[MigrateSlot]) -> Result<StateHandle> {
+        let StateHandle::Mock(s) = state else {
+            return Err(anyhow!("mock backend got device state"));
+        };
+        anyhow::ensure!(!plan.is_empty(), "migrate plan must have at least one slot");
+        let old_b = s.scripts.len();
+        let new_b = plan.len();
+        let mut carried = vec![false; old_b];
+        let mut next = MockState {
+            scripts: vec![Vec::new(); new_b],
+            cursor: vec![0; new_b],
+            occupied: vec![false; new_b],
+            next_pos: vec![1; new_b],
+            frozen: vec![false; new_b],
+        };
+        for (slot, entry) in plan.iter().enumerate() {
+            match entry {
+                MigrateSlot::Carry { from } => {
+                    anyhow::ensure!(*from < old_b, "carry slot {from} out of range");
+                    anyhow::ensure!(s.occupied[*from], "carry of vacant slot {from}");
+                    anyhow::ensure!(!carried[*from], "slot {from} carried twice");
+                    carried[*from] = true;
+                    // The full position-contract state moves with the slot:
+                    // a carried sequence keeps advancing (or holding) exactly
+                    // where it left off, at its new index.
+                    next.scripts[slot] = s.scripts[*from].clone();
+                    next.cursor[slot] = s.cursor[*from];
+                    next.occupied[slot] = true;
+                    next.next_pos[slot] = s.next_pos[*from];
+                    next.frozen[slot] = s.frozen[*from];
+                }
+                MigrateSlot::Admit { prompt, len } => {
+                    anyhow::ensure!(
+                        prompt.len() == self.prompt_len,
+                        "admit prompt row must be padded"
+                    );
+                    anyhow::ensure!(
+                        *len >= 1 && (*len as usize) <= self.prompt_len,
+                        "bad admit len {len}"
+                    );
+                    next.scripts[slot] = (self.script_of)(&prompt[..*len as usize]);
+                    next.occupied[slot] = true;
+                    next.next_pos[slot] = *len;
+                    self.joins += 1;
+                }
+                MigrateSlot::Vacant => {}
+            }
+        }
+        let dropped = (0..old_b).filter(|&i| s.occupied[i] && !carried[i]).count();
+        anyhow::ensure!(dropped == 0, "migrate plan drops {dropped} live slots");
+        self.migrations += 1;
+        Ok(StateHandle::Mock(next))
     }
 
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle> {
@@ -579,6 +722,81 @@ mod tests {
         let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
         let state = be.prefill(1, &[1, 0, 0, 0], &[1]).unwrap();
         assert!(be.join(state, 0, &[1, 0, 0, 0], 1).is_err());
+    }
+
+    #[test]
+    fn migrate_carries_scripts_and_admits_batch() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| vec![prompt[0] as u32, 5, 2]);
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        // One live slot at bucket 1, one token already decoded.
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let state = be.decode(state, &[3], &[1]).unwrap();
+        // Grow to bucket 4, carrying the live slot to index 0 and admitting
+        // two fresh prompts in the same batched rebuild.
+        let plan = vec![
+            MigrateSlot::Carry { from: 0 },
+            MigrateSlot::Admit { prompt: vec![6, 0, 0, 0], len: 1 },
+            MigrateSlot::Admit { prompt: vec![7, 1, 0, 0], len: 2 },
+            MigrateSlot::Vacant,
+        ];
+        let state = be.migrate(state, &plan).unwrap();
+        assert_eq!(state.batch(), 4);
+        assert_eq!(be.migrations, 1);
+        assert_eq!(be.joins, 2, "batched admits count as joins");
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 5, "carried slot's pending logits preserved");
+        assert_eq!(argmax(&lg[8..16]), 6, "admitted slot serves first-token logits");
+        assert_eq!(argmax(&lg[16..24]), 7);
+        // The carried slot keeps advancing from its old position; the
+        // admitted slots start at their prompt lengths; the vacant row holds.
+        let state = be.decode(state, &[5, 6, 7, 0], &[2, 1, 2, 1]).unwrap();
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 2, "carried slot reached END");
+        assert_eq!(argmax(&lg[8..16]), 5);
+        drop(state);
+    }
+
+    #[test]
+    fn migrate_shrink_compacts_and_validates() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| vec![prompt[0] as u32, 2]);
+        let tokens = vec![3, 0, 0, 0, 6, 0, 0, 0, 4, 0, 0, 0];
+        let state = be.prefill(3, &tokens, &[1, 1, 1]).unwrap();
+        let state = be.evict(state, 1).unwrap();
+        // Shrink 3 -> 2: both live slots carried, the vacant one dropped.
+        let plan = vec![MigrateSlot::Carry { from: 0 }, MigrateSlot::Carry { from: 2 }];
+        let state = be.migrate(state, &plan).unwrap();
+        assert_eq!(state.batch(), 2);
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 3);
+        assert_eq!(argmax(&lg[8..16]), 4, "spilled slot carried to the free index");
+        drop(state);
+    }
+
+    #[test]
+    fn migrate_rejects_dropping_a_live_slot() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
+        let tokens = vec![3, 0, 0, 0, 6, 0, 0, 0];
+        let state = be.prefill(2, &tokens, &[1, 1]).unwrap();
+        // Plan carries only slot 0; slot 1 is live and would be dropped.
+        let err = be.migrate(state, &[MigrateSlot::Carry { from: 0 }]).unwrap_err();
+        assert!(err.to_string().contains("drops 1 live slots"), "{err}");
+    }
+
+    #[test]
+    fn migrate_rejects_double_carry_and_vacant_carry() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let plan = vec![MigrateSlot::Carry { from: 0 }, MigrateSlot::Carry { from: 0 }];
+        assert!(be.migrate(state, &plan).unwrap_err().to_string().contains("carried twice"));
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let state = be.evict(state, 0).unwrap();
+        let plan = vec![MigrateSlot::Carry { from: 0 }];
+        assert!(be.migrate(state, &plan).unwrap_err().to_string().contains("vacant slot"));
     }
 
     #[test]

@@ -37,6 +37,18 @@ impl BenchConfig {
             target_time: Duration::from_millis(500),
         }
     }
+
+    /// CI smoke profile: one measured iteration, no warmup. Bench binaries
+    /// run under this in CI so their code paths cannot bit-rot without the
+    /// timing cost of a real measurement run.
+    pub fn smoke() -> Self {
+        BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target_time: Duration::ZERO,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]

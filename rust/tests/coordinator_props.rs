@@ -1,12 +1,20 @@
 //! Property tests (propcheck) over coordinator invariants: admission,
-//! KV slot lifecycle, packing round-trips, VM totality.
+//! KV slot lifecycle, bucket-ladder migration, packing round-trips, VM
+//! totality.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
 
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::kv::{KvSlots, SlotState};
 use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{
+    AdmitGate, LadderConfig, Scheduler, SchedulerConfig,
+};
 use pangu_atlas_quant::quant::{int4, int8};
-use pangu_atlas_quant::tokenizer::CotMode;
+use pangu_atlas_quant::runtime::backend::MockBackend;
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::propcheck::{check, check_vec, ensure, ensure_eq};
 
 // ---------------------------------------------------------------------------
@@ -70,6 +78,151 @@ fn prop_kv_positions_bounded_by_window() {
     );
 }
 
+#[test]
+fn prop_kv_resize_preserves_every_occupant() {
+    check(
+        "kv-resize-carries-occupants",
+        100,
+        0xB55,
+        |rng| {
+            let bucket = rng.range(1, 12);
+            // Random subset of slots stays occupied through the resize;
+            // the rest are freed first. Spills (occupied slots above the
+            // new bound) exercise the compaction path.
+            let shape: Vec<bool> = (0..bucket).map(|_| rng.chance(0.6)).collect();
+            let occupied = shape.iter().filter(|&&k| k).count();
+            let new_bucket = rng.range(occupied.max(1), 16);
+            (shape, new_bucket)
+        },
+        |(shape, new_bucket)| {
+            let mut kv = KvSlots::new(shape.len(), 96);
+            // Fill every slot first (allocation is first-free, so slot i
+            // lands at position 10 + i), then free the non-kept ones.
+            for i in 0..shape.len() {
+                kv.allocate(10 + i).map_err(|e| e.to_string())?;
+            }
+            let mut want: BTreeMap<usize, SlotState> = BTreeMap::new();
+            for (i, &keep) in shape.iter().enumerate() {
+                if keep {
+                    want.insert(i, SlotState::Active { pos: 10 + i });
+                } else {
+                    kv.finish(i).map_err(|e| e.to_string())?;
+                    kv.release(i).map_err(|e| e.to_string())?;
+                }
+            }
+            let moves = kv.resize(*new_bucket).map_err(|e| e.to_string())?;
+            ensure_eq(kv.bucket(), *new_bucket, "table resized")?;
+            ensure_eq(moves.len(), want.len(), "every occupant moved exactly once")?;
+            ensure_eq(kv.occupied_count(), want.len(), "no occupant dropped")?;
+            // Each move lands the old slot's exact state at the new index,
+            // and no two moves share a destination.
+            let mut dests = std::collections::HashSet::new();
+            let mut sources = std::collections::HashSet::new();
+            for &(old, new) in &moves {
+                ensure(new < *new_bucket, "destination out of range")?;
+                ensure(dests.insert(new), "two occupants share a destination")?;
+                ensure(sources.insert(old), "slot moved twice")?;
+                let state = want
+                    .get(&old)
+                    .ok_or_else(|| format!("moved slot {old} was not occupied"))?;
+                ensure_eq(kv.state(new), *state, "position survives the move")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Bucket-ladder migration: randomized workloads over random ladders.
+//
+// The invariants the migration machinery must hold (it touches KV state
+// correctness):
+//   * per-slot decode positions stay strictly monotone across a migrate —
+//     enforced *inside* MockBackend's position contract, which fails the
+//     session loudly on any violation, so a clean run IS the assertion;
+//   * no live slot is dropped — MockBackend::migrate rejects any plan that
+//     drops a live slot, and completeness is asserted on the responses;
+//   * finished-slot output is byte-identical to a fixed-bucket baseline
+//     run at `max(buckets)`.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ladder_migration_invariants() {
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    let run = |buckets: Vec<usize>,
+               eval_every: usize,
+               patience: usize,
+               arrivals: &[(u8, usize)]|
+     -> Result<BTreeMap<u64, Vec<Vec<u32>>>, String> {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let sched = Scheduler::new(
+            &tk,
+            SchedulerConfig {
+                buckets,
+                gate: AdmitGate::Continuous,
+                ladder: LadderConfig { eval_every, shrink_patience: patience },
+            },
+        );
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        // Request 0 is a slow_think anchor (30 tokens ≈ 60 pump ticks):
+        // it keeps the session alive through every scheduled arrival.
+        queue.push(mk_request(0, CotMode::SlowThink));
+        let mut pumps = 0usize;
+        let mut out: BTreeMap<u64, Vec<Vec<u32>>> = BTreeMap::new();
+        sched
+            .run(
+                &mut be,
+                &mut queue,
+                &mut |q| {
+                    pumps += 1;
+                    for (i, &(tag, tick)) in arrivals.iter().enumerate() {
+                        if tick == pumps {
+                            q.push(mk_request(i as u64 + 1, modes[tag as usize]));
+                        }
+                    }
+                },
+                &mut |r| out.entry(r.id).or_default().push(r.tokens),
+            )
+            .map_err(|e| e.to_string())?;
+        Ok(out)
+    };
+    check(
+        "ladder-migration-invariants",
+        30,
+        0xAD47,
+        |rng| {
+            let sizes = [1usize, 2, 3, 4, 6, 8, 12, 16];
+            let mut buckets: Vec<usize> = (0..rng.range(1, 4))
+                .map(|_| sizes[rng.range(0, sizes.len() - 1)])
+                .collect();
+            buckets.sort_unstable();
+            buckets.dedup();
+            let eval_every = rng.range(1, 4);
+            let patience = rng.range(1, 3);
+            let arrivals: Vec<(u8, usize)> = (0..rng.range(1, 8))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(1, 40)))
+                .collect();
+            (buckets, eval_every, patience, arrivals)
+        },
+        |(buckets, eval_every, patience, arrivals)| {
+            let adaptive = run(buckets.clone(), *eval_every, *patience, arrivals)?;
+            let fixed = run(vec![*buckets.last().unwrap()], *eval_every, *patience, arrivals)?;
+            ensure_eq(adaptive.len(), arrivals.len() + 1, "every request answered")?;
+            for (id, responses) in &adaptive {
+                ensure_eq(responses.len(), 1, &format!("request {id} answered once"))?;
+                ensure(!responses[0].is_empty(), format!("request {id} got tokens"))?;
+            }
+            ensure(
+                adaptive == fixed,
+                "adaptive outputs diverged from the fixed-bucket baseline",
+            )?;
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Admission policy
 // ---------------------------------------------------------------------------
@@ -92,10 +245,10 @@ fn prop_admission_conserves_requests_and_orders_within_mode() {
         },
         |mode_tags| {
             let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
-            let mut q = AdmissionQueue::new(AdmitConfig {
-                mode_aware: true,
-                max_wait: std::time::Duration::from_secs(3600),
-            });
+            let mut q = AdmissionQueue::new(AdmitConfig::with_wait(
+                true,
+                std::time::Duration::from_secs(3600),
+            ));
             for (id, &tag) in mode_tags.iter().enumerate() {
                 q.push(mk_request(id as u64, modes[tag as usize]));
             }
@@ -143,10 +296,10 @@ fn prop_admission_fifo_when_mode_blind() {
         },
         |mode_tags| {
             let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
-            let mut q = AdmissionQueue::new(AdmitConfig {
-                mode_aware: false,
-                max_wait: std::time::Duration::ZERO,
-            });
+            let mut q = AdmissionQueue::new(AdmitConfig::with_wait(
+                false,
+                std::time::Duration::ZERO,
+            ));
             for (id, &tag) in mode_tags.iter().enumerate() {
                 q.push(mk_request(id as u64, modes[tag as usize]));
             }
@@ -244,6 +397,43 @@ fn prop_int8_quant_error_bound() {
             let (q, s) = int8::quant_weight_per_channel(vals, *k, *n);
             for row in 0..*k {
                 for col in 0..*n {
+                    let deq = q[row * n + col] as f32 * s[col];
+                    let err = (deq - vals[row * n + col]).abs();
+                    ensure(
+                        err <= s[col] / 2.0 + 1e-6,
+                        format!("error {err} > half-scale {}", s[col] / 2.0),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int4_quant_error_bound() {
+    check(
+        "int4-error-bound",
+        60,
+        0xE66,
+        |rng| {
+            let k = rng.range(1, 32);
+            let n = rng.range(1, 8);
+            let scale = 10f32.powi(rng.range(0, 6) as i32 - 3);
+            let vals: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * scale).collect();
+            (k, n, vals)
+        },
+        |(k, n, vals)| {
+            let (q, s) = int4::quant_weight_per_channel(vals, *k, *n);
+            for col in 0..*n {
+                ensure(s[col] > 0.0, "scale must stay positive")?;
+            }
+            for row in 0..*k {
+                for col in 0..*n {
+                    ensure(
+                        (-7..=7).contains(&q[row * n + col]),
+                        format!("q out of int4 range: {}", q[row * n + col]),
+                    )?;
                     let deq = q[row * n + col] as f32 * s[col];
                     let err = (deq - vals[row * n + col]).abs();
                     ensure(

@@ -134,10 +134,7 @@ fn batch_rows_are_independent() -> Result<()> {
         )
     };
     let run_at = |h: &mut Harness, bucket: usize, id: u64| -> Result<Vec<u32>> {
-        let scheduler = Scheduler::new(
-            &tk,
-            SchedulerConfig { bucket, gate: AdmitGate::Continuous },
-        );
+        let scheduler = Scheduler::new(&tk, SchedulerConfig::fixed(bucket, AdmitGate::Continuous));
         let mut backend = pangu_atlas_quant::runtime::backend::DeviceBackend::new(
             &mut h.runtime,
             "7b-sim",
