@@ -3,9 +3,12 @@
 //!
 //!     cargo run --release --example quickstart -- [--artifacts DIR]
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use pangu_atlas_quant::bench_suite::scoring;
+use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use pangu_atlas_quant::harness::Harness;
@@ -30,9 +33,15 @@ fn main() -> Result<()> {
     }
     println!("(reference program: {:?})", task.reference);
 
-    // 3. Generate under each CoT mode with the INT8 variant.
+    // 3. Generate under each CoT mode with the INT8 variant. The Atlas
+    //    cost model prices every session, so the report shows measured CPU
+    //    wall time next to the modeled Atlas A2 deployment cost.
     let tk = h.tokenizer.clone();
-    let scheduler = Scheduler::new(&tk, SchedulerConfig::fixed(1, AdmitGate::Continuous));
+    let scheduler = Scheduler::new(
+        &tk,
+        SchedulerConfig::fixed(1, AdmitGate::Continuous)
+            .with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
+    );
     for mode in CotMode::ALL {
         let req = Request::new(1, "7b-sim", "int8", mode, task.examples.clone());
         let mut backend = DeviceBackend::new(&mut h.runtime, "7b-sim", "int8")?;
@@ -40,9 +49,10 @@ fn main() -> Result<()> {
         let resp = &resps[0];
         let outcome = scoring::score_generation(&tk, &task, &resp.tokens);
         println!(
-            "\n[{:<10}] {:>5.1} ms | {:<9} | {}",
+            "\n[{:<10}] {:>5.1} ms (modeled A2: {:>6.1} ms) | {:<9} | {}",
             mode.name(),
             report.prefill_ms + report.decode_ms,
+            report.modeled_total_ms(),
             format!("{outcome:?}"),
             tk.render(&resp.tokens)
         );

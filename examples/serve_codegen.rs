@@ -8,6 +8,7 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -15,6 +16,7 @@ use anyhow::{anyhow, Result};
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring::{self, Outcome};
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
+use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
@@ -47,10 +49,14 @@ fn main() -> Result<()> {
          from {n_clients} client threads (continuous batching, bucket ladder {buckets:?})"
     );
 
+    // Ladder grow/shrink decisions are priced by the Atlas A2 rooflines
+    // (docs/ARCHITECTURE.md, "Choosing a cost model"); the metrics report
+    // includes the resulting modeled_session_ms account.
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
-        SchedulerConfig::ladder(buckets, AdmitGate::Continuous),
+        SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?
+            .with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
         AdmitConfig::with_wait(true, Duration::from_millis(15)),
     );
 

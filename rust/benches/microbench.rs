@@ -11,8 +11,12 @@
 //! the bench code paths (they can't bit-rot) without paying measurement
 //! time.
 
+use std::cell::RefCell;
+use std::sync::Arc;
+
 use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::sampling;
 use pangu_atlas_quant::coordinator::scheduler::{
@@ -121,26 +125,45 @@ fn main() {
         );
         reqs
     };
-    for (name, buckets) in [
-        ("light session ladder=[2,4,8]", vec![2usize, 4, 8]),
-        ("light session fixed=8", vec![8usize]),
+    // Three cost policies over the same workload: the occupancy-only
+    // slot-step ladder, the Atlas-roofline-priced ladder, and a fixed max
+    // bucket. Each bench line gets a note with the modeled-ms account
+    // (SchedReport::modeled_total_ms) next to its raw slot-steps.
+    let ladder_cfg = |buckets: Vec<usize>| SchedulerConfig {
+        buckets,
+        gate: AdmitGate::Continuous,
+        ladder: LadderConfig { eval_every: 2, shrink_patience: 2, ..LadderConfig::default() },
+        ..SchedulerConfig::default()
+    };
+    for (name, cfg) in [
+        ("light session ladder=[2,4,8] slot-step", ladder_cfg(vec![2, 4, 8])),
+        (
+            "light session ladder=[2,4,8] atlas-cost",
+            ladder_cfg(vec![2, 4, 8]).with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
+        ),
+        ("light session fixed=8", ladder_cfg(vec![8])),
     ] {
+        // Capture the last iteration's report so the modeled-ms note costs
+        // no extra workload run.
+        let last = RefCell::new(None);
         g.run(name, &quick, || {
             let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
             let mut be = MockBackend::new(64, 48, 96, script);
-            let sched = Scheduler::new(
-                &tk,
-                SchedulerConfig {
-                    buckets: buckets.clone(),
-                    gate: AdmitGate::Continuous,
-                    ladder: LadderConfig { eval_every: 2, shrink_patience: 2 },
-                },
-            );
+            let sched = Scheduler::new(&tk, cfg.clone());
             let (resps, report) =
                 sched.run_batch(&mut be, &light_requests()).expect("mock session");
             assert_eq!(resps.len(), 5);
-            std::hint::black_box(report.slot_steps());
+            std::hint::black_box(report.modeled_total_ms());
+            *last.borrow_mut() = Some(report);
         });
+        let report = last.into_inner().expect("bench ran at least once");
+        g.note(&format!(
+            "modeled {:.1} ms ({} slot-steps, {} up / {} down migrations)",
+            report.modeled_total_ms(),
+            report.slot_steps(),
+            report.migrations_up,
+            report.migrations_down
+        ));
     }
     g.finish();
 

@@ -7,6 +7,12 @@
 //! substrate. The model is calibrated against the paper's published
 //! endpoints and validated by unit tests on the trends (savings grow as
 //! batch shrinks; speedup grows with batch).
+//!
+//! Besides the paper harness, this layer prices the serving scheduler: the
+//! [`crate::coordinator::cost::AtlasCostModel`] wraps
+//! [`perf_model::prefill_latency`] / [`perf_model::decode_latency`] /
+//! [`memory_model::fits`] so the bucket ladder can pick rungs by modeled
+//! device cost instead of raw slot-step counts.
 
 pub mod memory_model;
 pub mod perf_model;
@@ -39,18 +45,24 @@ impl Default for AtlasSpec {
 /// deploys; our serving substrate runs the simulated scales instead).
 #[derive(Debug, Clone, Copy)]
 pub struct ModelDims {
+    /// Total parameter count.
     pub params: f64,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Attention heads.
     pub n_heads: usize,
     /// KV heads (GQA): openPangu-Embedded uses grouped-query attention.
     pub kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
     /// Prefill sequence length used in the efficiency evaluation.
     pub seq_len: usize,
 }
 
 impl ModelDims {
+    /// The 7B scale the paper deploys (Table 3's subject).
     pub fn openpangu_7b() -> ModelDims {
         ModelDims {
             params: 7.0e9,
@@ -63,6 +75,7 @@ impl ModelDims {
         }
     }
 
+    /// The 1B scale (ablation rows).
     pub fn openpangu_1b() -> ModelDims {
         ModelDims {
             params: 1.0e9,

@@ -1,23 +1,36 @@
-//! Prefill-latency roofline model (Table 3's speedup shape on the NPU).
+//! Latency roofline models (Table 3's speedup shape on the NPU).
 //!
-//! time(B) = max(compute, weight traffic + activation traffic) + fixed
-//! non-GEMM overhead (attention softmax, norms, kernel launch). INT8 doubles
-//! cube throughput and halves weight traffic; the overhead term is
-//! precision-independent — which is exactly why the paper's speedup grows
-//! with batch (1.2x at B=2 -> 1.5x at B=32): at small batch the shared
-//! overhead and weight streaming dominate.
+//! Both phases follow time(B) = max(compute, memory traffic) + fixed
+//! non-GEMM overhead (attention softmax, norms, kernel launch):
+//!
+//! * [`prefill_latency`] — whole-prompt pass; compute-bound at large batch.
+//!   INT8 doubles cube throughput and halves weight traffic; the overhead
+//!   term is precision-independent — which is exactly why the paper's
+//!   speedup grows with batch (1.2x at B=2 -> 1.5x at B=32): at small batch
+//!   the shared overhead and weight streaming dominate.
+//! * [`decode_latency`] — ONE token per live slot; bandwidth-bound at every
+//!   realistic batch, because each step re-streams the full weight set once
+//!   while the cube does only `2·params` FLOPs per token. This is the
+//!   per-step price the scheduler's cost-model ladder
+//!   ([`crate::coordinator::cost::AtlasCostModel`]) charges a batch bucket.
 
 use super::{AtlasSpec, ModelDims};
 use crate::quant::Precision;
 
+/// Roofline decomposition of one device launch (prefill pass or decode step).
 #[derive(Debug, Clone, Copy)]
 pub struct LatencyBreakdown {
+    /// Cube (GEMM) time plus the non-quantizable FP16 work.
     pub compute_ms: f64,
+    /// HBM traffic time (weights, activations, KV).
     pub memory_ms: f64,
+    /// Fixed per-launch overhead (graph launch, host sync).
     pub overhead_ms: f64,
 }
 
 impl LatencyBreakdown {
+    /// Roofline total: compute and memory overlap (the slower one wins),
+    /// the launch overhead does not.
     pub fn total_ms(&self) -> f64 {
         self.compute_ms.max(self.memory_ms) + self.overhead_ms
     }
@@ -41,6 +54,8 @@ fn int8_batch_efficiency(batch: usize) -> f64 {
     0.62 + 0.38 * (batch.min(32) as f64 / 32.0)
 }
 
+/// Latency of one whole-prompt prefill pass over a `batch`-sequence bucket
+/// (each sequence `dims.seq_len` tokens long).
 pub fn prefill_latency(
     spec: &AtlasSpec,
     dims: &ModelDims,
@@ -71,7 +86,52 @@ pub fn prefill_latency(
     }
 }
 
-/// Speedup of a precision vs FP16 at a batch size.
+/// Fixed per-decode-step overhead in milliseconds (kernel launch, token
+/// round-trip). Much smaller than [`LAUNCH_MS`]: a decode step dispatches
+/// one pre-compiled graph, not a whole prefill pipeline.
+const DECODE_LAUNCH_MS: f64 = 1.5;
+
+/// Latency of ONE decode step at a `batch`-slot bucket: one token per slot.
+///
+/// Decode is bandwidth-bound on the A2: every step streams the full weight
+/// set once (halved by INT8, quartered by W4A8) plus each slot's KV history
+/// (FP16 KV, read at the mid-window average position), while the cube does
+/// only `2·params` FLOPs per token. The weight term is batch-independent —
+/// which is why a big bucket costs barely more per step than a small one,
+/// and why the modeled-cost ladder still prefers small buckets: the KV and
+/// compute terms (and the occupancy waste) do scale with the bucket.
+pub fn decode_latency(
+    spec: &AtlasSpec,
+    dims: &ModelDims,
+    precision: Precision,
+    batch: usize,
+) -> LatencyBreakdown {
+    let tokens = batch as f64;
+    let flops = 2.0 * dims.params * tokens;
+    let peak = match precision {
+        Precision::Fp16 => spec.fp16_tflops * 1e12,
+        _ => spec.int8_tops * 1e12 * int8_batch_efficiency(batch),
+    };
+    let gemm_ms = flops / (peak * MFU) * 1e3;
+    let fp16_peak = spec.fp16_tflops * 1e12;
+    let nonquant_ms = NONQUANT_FRACTION * flops / (fp16_peak * MFU) * 1e3;
+
+    // Memory: the whole weight set streams once per step, plus each slot's
+    // KV read (2 planes x L x H_kv x Dh x fp16, averaged over the window).
+    let weight_bytes = dims.params * precision.weight_bytes_per_param();
+    let kv_per_tok =
+        2.0 * dims.n_layers as f64 * (dims.kv_heads * dims.head_dim) as f64 * 2.0;
+    let kv_bytes = tokens * kv_per_tok * (dims.seq_len as f64 / 2.0);
+    let memory_ms = (weight_bytes + kv_bytes) / (spec.hbm_gbps * 1e9) * 1e3;
+
+    LatencyBreakdown {
+        compute_ms: gemm_ms + nonquant_ms,
+        memory_ms,
+        overhead_ms: DECODE_LAUNCH_MS,
+    }
+}
+
+/// Prefill speedup of a precision vs FP16 at a batch size.
 pub fn speedup_vs_fp16(spec: &AtlasSpec, dims: &ModelDims, p: Precision, batch: usize) -> f64 {
     let fp = prefill_latency(spec, dims, Precision::Fp16, batch).total_ms();
     let q = prefill_latency(spec, dims, p, batch).total_ms();
@@ -122,6 +182,46 @@ mod tests {
             let i8t = prefill_latency(&spec, &dims, Precision::Int8, b).total_ms();
             let w4t = prefill_latency(&spec, &dims, Precision::W4A8, b).total_ms();
             assert!(w4t <= i8t + 1e-9, "b={b}");
+        }
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound_and_weight_dominated() {
+        let (spec, dims) = ctx();
+        for b in [1usize, 8, 32] {
+            let d = decode_latency(&spec, &dims, Precision::Fp16, b);
+            assert!(d.memory_ms > d.compute_ms, "decode must be memory-bound at b={b}");
+        }
+        // The weight stream is batch-independent, so a step at B=32 costs
+        // far less than 32x a step at B=1.
+        let t1 = decode_latency(&spec, &dims, Precision::Fp16, 1).total_ms();
+        let t32 = decode_latency(&spec, &dims, Precision::Fp16, 32).total_ms();
+        assert!(t32 > t1, "{t32} vs {t1}");
+        assert!(t32 < 4.0 * t1, "weight stream must amortize: {t32} vs {t1}");
+    }
+
+    #[test]
+    fn decode_int8_beats_fp16_at_every_batch() {
+        // Decode is weight-bandwidth-bound, so halving weight bytes pays
+        // off from B=1 (unlike prefill, where the advantage ramps with B).
+        let (spec, dims) = ctx();
+        for b in [1usize, 2, 8, 32] {
+            let fp = decode_latency(&spec, &dims, Precision::Fp16, b).total_ms();
+            let i8t = decode_latency(&spec, &dims, Precision::Int8, b).total_ms();
+            assert!(i8t < fp, "b={b}: int8 {i8t} !< fp16 {fp}");
+        }
+    }
+
+    #[test]
+    fn decode_latency_monotone_in_batch() {
+        let (spec, dims) = ctx();
+        for p in Precision::ALL {
+            let mut prev = 0.0f64;
+            for b in [1usize, 2, 4, 8, 16, 32, 64] {
+                let t = decode_latency(&spec, &dims, p, b).total_ms();
+                assert!(t >= prev, "{p}: decode({b}) = {t} < decode(prev) = {prev}");
+                prev = t;
+            }
         }
     }
 }

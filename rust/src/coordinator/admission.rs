@@ -76,12 +76,20 @@ impl AdmissionQueue {
         self.queue.push_back(req);
     }
 
+    /// Number of queued requests.
     pub fn queued(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// The FIFO head (oldest arrival), if any — the scheduler reads its
+    /// variant to price cost-model decisions before anything is admitted.
+    pub fn front(&self) -> Option<&Request> {
+        self.queue.front()
     }
 
     /// Weighted backlog for the scheduler's bucket-ladder grow decision:

@@ -1,0 +1,395 @@
+//! Modeled serving-cost layer: what the bucket ladder's grow/shrink
+//! decisions optimize.
+//!
+//! The occupancy-only ladder (PR 2) treated every slot-step as equally
+//! expensive, so it could only walk one rung per patience window and had to
+//! grow unconditionally under queue pressure. On the Atlas A2 that is wrong
+//! in both directions: the paper's Table 3 speedups are *batch-dependent*
+//! (roofline behavior — 1.2x at B=2 growing to 1.5x at B=32), decode steps
+//! are weight-bandwidth-bound (a big bucket costs barely more per step than
+//! a small one), and a ladder migration on the re-prefill backend costs a
+//! full prompt pass. A [`CostModel`] makes those prices explicit, so the
+//! scheduler can:
+//!
+//! * shrink **straight to the modeled-optimal rung** for current demand
+//!   (one migration, not one rung per patience window);
+//! * grow only when the modeled migration cost is **amortized** by the
+//!   projected queue savings (serving the backlog concurrently at the
+//!   bigger rung instead of serially through freed slots);
+//! * report modeled milliseconds next to raw slot-steps
+//!   ([`crate::coordinator::scheduler::SchedReport::modeled_total_ms`]).
+//!
+//! Two implementations ship:
+//!
+//! * [`SlotStepCostModel`] — the trivial model that *recovers the PR 2
+//!   behavior exactly*: a step costs its bucket in slot-step units,
+//!   rebuilds are free (growth always pays off), and shrinking walks one
+//!   rung at a time. It is the [`SchedulerConfig::default`] cost model, so
+//!   existing configurations behave identically.
+//! * [`AtlasCostModel`] — backed by [`crate::atlas::perf_model`] (prefill
+//!   and per-step decode rooflines) and [`crate::atlas::memory_model`]
+//!   (rungs that would not fit HBM are never selected).
+//!
+//! # Example
+//!
+//! ```
+//! use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel};
+//! use pangu_atlas_quant::quant::Precision;
+//!
+//! let model = AtlasCostModel::openpangu_7b();
+//! // Decode is weight-bandwidth-bound: a 32-slot step costs more than a
+//! // 2-slot step, but far less than 16x as much.
+//! let b2 = model.decode_step_ms(Precision::Int8, 2);
+//! let b32 = model.decode_step_ms(Precision::Int8, 32);
+//! assert!(b2 < b32 && b32 < 16.0 * b2);
+//! // INT8 halves the streamed weight bytes, so each step is cheaper than
+//! // FP16 at the same bucket.
+//! assert!(b32 < model.decode_step_ms(Precision::Fp16, 32));
+//! ```
+//!
+//! [`SchedulerConfig::default`]: crate::coordinator::scheduler::SchedulerConfig
+
+use std::fmt;
+
+use crate::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
+use crate::quant::Precision;
+
+/// Inputs to a grow decision ([`CostModel::grow_pays_off`]): the shapes
+/// involved, the backlog, and the already-computed migration price.
+#[derive(Debug, Clone, Copy)]
+pub struct GrowContext {
+    /// Current bucket shape.
+    pub from: usize,
+    /// Candidate bigger shape.
+    pub to: usize,
+    /// Admissible queued requests behind the decision.
+    pub queued: usize,
+    /// Free slots at the current shape.
+    pub free_now: usize,
+    /// Full modeled migration price (base + backend replay).
+    pub migrate_ms: f64,
+    /// Projected per-request service length in decode steps
+    /// ([`crate::coordinator::scheduler::LadderConfig::grow_horizon`]).
+    pub horizon_steps: usize,
+}
+
+/// Prices the scheduler's ladder decisions for one serving session.
+///
+/// All prices are in *modeled milliseconds* of device time under the
+/// session's [`Precision`]. Implementations must be deterministic and
+/// monotone-friendly: the scheduler assumes that calling the same method
+/// with the same arguments twice yields the same price.
+pub trait CostModel: fmt::Debug + Send + Sync {
+    /// Price of ONE decode step executed at a `bucket`-slot shape.
+    fn decode_step_ms(&self, precision: Precision, bucket: usize) -> f64;
+
+    /// Price of one whole-bucket prompt prefill at `bucket` slots.
+    fn prefill_ms(&self, precision: Precision, bucket: usize) -> f64;
+
+    /// Price of migrating a live session from a `from`-slot shape to a
+    /// `to`-slot shape, *excluding* decode replay (the scheduler adds
+    /// `replay_depth x decode_step_ms(to)` from
+    /// [`crate::runtime::backend::Backend::migrate_replay_depth`]).
+    ///
+    /// Default: one full re-prefill at the target shape — exactly what the
+    /// re-prefill device backend pays.
+    fn migrate_ms(&self, precision: Precision, from: usize, to: usize) -> f64 {
+        let _ = from;
+        self.prefill_ms(precision, to)
+    }
+
+    /// Whether a `bucket`-slot shape is admissible at all (e.g. fits HBM).
+    /// Infeasible rungs are never chosen as launch or grow targets.
+    fn rung_feasible(&self, precision: Precision, bucket: usize) -> bool {
+        let _ = (precision, bucket);
+        true
+    }
+
+    /// Shrink target for a session at `buckets[rung]` with `occupied` live
+    /// slots (queue already verified empty by the caller). `None` means
+    /// stay put.
+    ///
+    /// Default: jump **straight to the modeled-cheapest rung** that covers
+    /// the occupants — one migration to the optimum, not a one-rung walk.
+    ///
+    /// Unlike [`CostModel::grow_pays_off`], shrink deliberately does NOT
+    /// amortize the migration price against a fixed horizon: the remaining
+    /// session length is unknown and unbounded, so the per-step premium of
+    /// staying big is an open-ended cost while the migration is a one-time
+    /// one; the `shrink_patience` hysteresis (not a price check) is what
+    /// keeps a brief lull from thrashing re-prefills. An implementation
+    /// serving known-short tails can override this with a horizon check.
+    fn shrink_target(
+        &self,
+        precision: Precision,
+        buckets: &[usize],
+        rung: usize,
+        occupied: usize,
+    ) -> Option<usize> {
+        let need = occupied.max(1);
+        let cur = self.decode_step_ms(precision, buckets[rung]);
+        let best = (0..rung)
+            .filter(|&r| buckets[r] >= need)
+            .min_by(|&a, &b| {
+                self.decode_step_ms(precision, buckets[a])
+                    .total_cmp(&self.decode_step_ms(precision, buckets[b]))
+            })?;
+        (self.decode_step_ms(precision, buckets[best]) < cur).then_some(best)
+    }
+
+    /// Whether growing `ctx.from -> ctx.to` slots pays off for the backlog
+    /// described by `ctx`.
+    ///
+    /// Default: amortization — growing pays off when the migration costs
+    /// less than the modeled time saved by draining the backlog
+    /// concurrently at the big shape instead of serially through freed
+    /// slots at the current one.
+    fn grow_pays_off(&self, precision: Precision, ctx: GrowContext) -> bool {
+        if ctx.queued == 0 {
+            return false;
+        }
+        let waves = ctx.queued.div_ceil(ctx.free_now.max(1));
+        let serial_ms =
+            waves as f64 * ctx.horizon_steps as f64 * self.decode_step_ms(precision, ctx.from);
+        let concurrent_ms =
+            ctx.horizon_steps as f64 * self.decode_step_ms(precision, ctx.to);
+        ctx.migrate_ms <= serial_ms - concurrent_ms
+    }
+}
+
+/// Smallest-cost feasible rung covering `demand` slots: the launch-time
+/// rung pick. When no feasible rung covers the demand, the *largest
+/// feasible* rung is chosen (the backlog is served in waves through slot
+/// turnover rather than on a shape the model says cannot exist); only when
+/// no rung is feasible at all does it fall back to the smallest covering
+/// rung and let the backend surface the failure.
+pub fn cheapest_rung(
+    model: &dyn CostModel,
+    precision: Precision,
+    buckets: &[usize],
+    demand: usize,
+) -> usize {
+    let cheapest_feasible_cover = buckets
+        .iter()
+        .enumerate()
+        .filter(|&(_, &b)| b >= demand && model.rung_feasible(precision, b))
+        .min_by(|&(_, &a), &(_, &b)| {
+            model
+                .decode_step_ms(precision, a)
+                .total_cmp(&model.decode_step_ms(precision, b))
+        });
+    if let Some((r, _)) = cheapest_feasible_cover {
+        return r;
+    }
+    let largest_feasible = buckets
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|&(_, &b)| model.rung_feasible(precision, b));
+    if let Some((r, _)) = largest_feasible {
+        return r;
+    }
+    buckets
+        .iter()
+        .position(|&b| b >= demand)
+        .unwrap_or(buckets.len().saturating_sub(1))
+}
+
+/// The pre-cost-model ladder policy as a degenerate [`CostModel`]: a decode
+/// step costs its bucket (so modeled totals equal
+/// [`crate::coordinator::scheduler::SchedReport::slot_steps`] exactly),
+/// rebuilds are free, growth always pays off, and shrinking walks one rung
+/// per patience window. This is the default in
+/// [`crate::coordinator::scheduler::SchedulerConfig`], so schedulers built
+/// without an explicit cost model behave exactly as before.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotStepCostModel;
+
+impl CostModel for SlotStepCostModel {
+    fn decode_step_ms(&self, _precision: Precision, bucket: usize) -> f64 {
+        bucket as f64
+    }
+
+    fn prefill_ms(&self, _precision: Precision, _bucket: usize) -> f64 {
+        // Prefills/joins/migrates are free in slot-step units — slot_steps()
+        // never counted them either.
+        0.0
+    }
+
+    fn shrink_target(
+        &self,
+        _precision: Precision,
+        buckets: &[usize],
+        rung: usize,
+        occupied: usize,
+    ) -> Option<usize> {
+        // Occupancy-only hysteresis walk: one rung down when the occupants
+        // fit it.
+        if rung > 0 && buckets[rung - 1] >= occupied.max(1) {
+            Some(rung - 1)
+        } else {
+            None
+        }
+    }
+
+    fn grow_pays_off(&self, _precision: Precision, ctx: GrowContext) -> bool {
+        // Growth was unconditional under queue pressure.
+        ctx.queued > 0
+    }
+}
+
+/// Atlas A2 cost model: prices rungs with the paper-calibrated rooflines
+/// ([`perf_model::decode_latency`] / [`perf_model::prefill_latency`]) and
+/// refuses rungs that would not fit HBM ([`memory_model::fits`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AtlasCostModel {
+    /// Device constants (HBM size/bandwidth, cube throughput).
+    pub spec: AtlasSpec,
+    /// Model scale being served.
+    pub dims: ModelDims,
+}
+
+impl AtlasCostModel {
+    /// Cost model over explicit device and model dimensions.
+    pub fn new(spec: AtlasSpec, dims: ModelDims) -> AtlasCostModel {
+        AtlasCostModel { spec, dims }
+    }
+
+    /// Default A2 card serving openPangu-Embedded-7B (the paper's Table 3
+    /// deployment).
+    pub fn openpangu_7b() -> AtlasCostModel {
+        AtlasCostModel::new(AtlasSpec::default(), ModelDims::openpangu_7b())
+    }
+}
+
+impl CostModel for AtlasCostModel {
+    fn decode_step_ms(&self, precision: Precision, bucket: usize) -> f64 {
+        perf_model::decode_latency(&self.spec, &self.dims, precision, bucket).total_ms()
+    }
+
+    fn prefill_ms(&self, precision: Precision, bucket: usize) -> f64 {
+        perf_model::prefill_latency(&self.spec, &self.dims, precision, bucket).total_ms()
+    }
+
+    fn rung_feasible(&self, precision: Precision, bucket: usize) -> bool {
+        memory_model::fits(&self.spec, &self.dims, precision, bucket)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_step_model_recovers_slot_step_accounting() {
+        let m = SlotStepCostModel;
+        for b in [1usize, 2, 8, 32] {
+            assert_eq!(m.decode_step_ms(Precision::Fp16, b), b as f64);
+            assert_eq!(m.prefill_ms(Precision::Int8, b), 0.0);
+            assert_eq!(m.migrate_ms(Precision::Int8, b, 2 * b), 0.0);
+        }
+        // Occupancy-only shrink: one rung at a time, only when it fits.
+        let buckets = [2usize, 4, 8];
+        assert_eq!(m.shrink_target(Precision::Int8, &buckets, 2, 1), Some(1));
+        assert_eq!(m.shrink_target(Precision::Int8, &buckets, 2, 5), None);
+        assert_eq!(m.shrink_target(Precision::Int8, &buckets, 0, 1), None);
+        // Growth is unconditional under backlog.
+        let ctx = |queued, free_now, migrate_ms| GrowContext {
+            from: 2,
+            to: 8,
+            queued,
+            free_now,
+            migrate_ms,
+            horizon_steps: 1,
+        };
+        assert!(m.grow_pays_off(Precision::Int8, ctx(1, 0, 1e9)));
+        assert!(!m.grow_pays_off(Precision::Int8, ctx(0, 2, 0.0)));
+    }
+
+    #[test]
+    fn atlas_model_shrinks_straight_to_the_cheapest_covering_rung() {
+        let m = AtlasCostModel::openpangu_7b();
+        let buckets = [2usize, 4, 8, 16];
+        // One live slot at the top rung: jump straight to rung 0.
+        assert_eq!(m.shrink_target(Precision::Int8, &buckets, 3, 1), Some(0));
+        // Three live slots: bucket 4 is the smallest (= cheapest) cover.
+        assert_eq!(m.shrink_target(Precision::Int8, &buckets, 3, 3), Some(1));
+        // Occupants that only fit the current rung: stay.
+        assert_eq!(m.shrink_target(Precision::Int8, &buckets, 3, 12), None);
+    }
+
+    #[test]
+    fn atlas_model_amortizes_migration_cost() {
+        let m = AtlasCostModel::openpangu_7b();
+        let p = Precision::Int8;
+        let migrate_ms = m.migrate_ms(p, 2, 32);
+        let ctx = |queued, free_now| GrowContext {
+            from: 2,
+            to: 32,
+            queued,
+            free_now,
+            migrate_ms,
+            horizon_steps: 24,
+        };
+        // A huge backlog over zero free slots amortizes even a real
+        // re-prefill migration.
+        assert!(m.grow_pays_off(p, ctx(64, 0)));
+        // One queued request never pays for a full re-prefill: serving it
+        // through the next freed slot is modeled-cheaper.
+        assert!(!m.grow_pays_off(p, ctx(1, 1)));
+    }
+
+    #[test]
+    fn cheapest_rung_skips_infeasible_buckets() {
+        // A tiny HBM makes the big rungs infeasible at FP16.
+        let spec = AtlasSpec { hbm_gib: 22.0, ..AtlasSpec::default() };
+        let m = AtlasCostModel::new(spec, ModelDims::openpangu_7b());
+        let buckets = [2usize, 8, 32];
+        assert!(m.rung_feasible(Precision::Fp16, 2));
+        assert!(!m.rung_feasible(Precision::Fp16, 32));
+        // Demand 5 covers rungs {8, 32}; 8 is feasible and cheapest.
+        assert_eq!(cheapest_rung(&m, Precision::Fp16, &buckets, 5), 1);
+        // Demand 20 covers only rung 32, which does not fit: the largest
+        // FEASIBLE rung serves the backlog in waves — an infeasible shape
+        // is never launched while a feasible one exists.
+        assert_eq!(cheapest_rung(&m, Precision::Fp16, &buckets, 20), 1);
+        // Nothing feasible at all (HBM below even the smallest shape):
+        // fall back to the smallest covering rung and let the backend
+        // surface the failure.
+        let tiny = AtlasSpec { hbm_gib: 10.0, ..AtlasSpec::default() };
+        let hopeless = AtlasCostModel::new(tiny, ModelDims::openpangu_7b());
+        assert_eq!(cheapest_rung(&hopeless, Precision::Fp16, &buckets, 1), 0);
+        // INT8 frees enough HBM for more slots than FP16 at the same card.
+        let fp_ok = buckets.iter().filter(|&&b| m.rung_feasible(Precision::Fp16, b)).count();
+        let i8_ok = buckets.iter().filter(|&&b| m.rung_feasible(Precision::Int8, b)).count();
+        assert!(i8_ok >= fp_ok);
+    }
+
+    #[test]
+    fn cheapest_rung_matches_smallest_cover_for_monotone_models() {
+        // Both shipped models are monotone in bucket, so the launch pick
+        // degenerates to the smallest covering rung — the PR 2 behavior.
+        let buckets = [2usize, 4, 8];
+        for demand in 0..10usize {
+            let want = buckets
+                .iter()
+                .position(|&b| b >= demand)
+                .unwrap_or(buckets.len() - 1);
+            assert_eq!(
+                cheapest_rung(&SlotStepCostModel, Precision::Int8, &buckets, demand),
+                want,
+                "slot-step, demand {demand}"
+            );
+            assert_eq!(
+                cheapest_rung(
+                    &AtlasCostModel::openpangu_7b(),
+                    Precision::Int8,
+                    &buckets,
+                    demand
+                ),
+                want,
+                "atlas, demand {demand}"
+            );
+        }
+    }
+}

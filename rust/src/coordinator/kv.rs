@@ -10,8 +10,10 @@
 
 use anyhow::{bail, Result};
 
+/// Lifecycle state of one batch slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotState {
+    /// Unoccupied; allocatable.
     Free,
     /// Live sequence: next token writes at `pos`.
     Active { pos: usize },
@@ -27,14 +29,18 @@ pub struct KvSlots {
 }
 
 impl KvSlots {
+    /// Fresh all-free slot table over a `bucket`-slot batch with a
+    /// `max_seq` KV window per slot.
     pub fn new(bucket: usize, max_seq: usize) -> KvSlots {
         KvSlots { slots: vec![SlotState::Free; bucket], max_seq }
     }
 
+    /// Current bucket shape (slot count).
     pub fn bucket(&self) -> usize {
         self.slots.len()
     }
 
+    /// Lifecycle state of one slot.
     pub fn state(&self, slot: usize) -> SlotState {
         self.slots[slot]
     }
@@ -71,6 +77,7 @@ impl KvSlots {
         }
     }
 
+    /// Current decode position of an occupied slot (`None` when free).
     pub fn position(&self, slot: usize) -> Option<usize> {
         match self.slots[slot] {
             SlotState::Active { pos } | SlotState::Finished { pos } => Some(pos),
@@ -78,6 +85,7 @@ impl KvSlots {
         }
     }
 
+    /// Mark an active slot finished (idempotent for already-finished ones).
     pub fn finish(&mut self, slot: usize) -> Result<()> {
         match self.slots[slot] {
             SlotState::Active { pos } => {
@@ -154,6 +162,7 @@ impl KvSlots {
         Ok(moves)
     }
 
+    /// Slots holding a live (still-decoding) sequence.
     pub fn active_count(&self) -> usize {
         self.slots
             .iter()
@@ -169,10 +178,12 @@ impl KvSlots {
             .count()
     }
 
+    /// Unoccupied (allocatable) slots.
     pub fn free_count(&self) -> usize {
         self.slots.len() - self.occupied_count()
     }
 
+    /// True while any slot is still decoding.
     pub fn any_active(&self) -> bool {
         self.active_count() > 0
     }

@@ -7,6 +7,8 @@
 //!   * [`kv`]        — KV slot accounting (Free -> Active -> Finished -> Free)
 //!   * [`admission`] — admission policy: which queued request fills which
 //!                     freed slot (FIFO + mode-aware, anti-starvation aging)
+//!   * [`cost`]      — cost models pricing the scheduler's bucket-ladder
+//!                     decisions (slot-steps or Atlas A2 rooflines)
 //!   * [`scheduler`] — continuous-batching decode loop driving a
 //!                     [`crate::runtime::backend::Backend`]
 //!   * [`server`]    — request loop: channel front-end, per-variant queues,
@@ -19,9 +21,12 @@
 //! immediately) and refills freed slots from the admission queue — one
 //! arrival via the backend's `join` operation, simultaneous arrivals via
 //! one batched `migrate`. The same `migrate` op moves the session across
-//! the ladder of compiled bucket shapes: queue pressure grows it eagerly,
-//! sustained low occupancy shrinks it with hysteresis, so light traffic
-//! stops paying max-bucket device compute per decode step. The mock
+//! the ladder of compiled bucket shapes, with both directions priced by a
+//! pluggable [`cost::CostModel`]: queue pressure grows the session when
+//! the modeled migration cost is amortized by the projected queue savings,
+//! and sustained low occupancy shrinks it — with hysteresis — straight to
+//! the modeled-optimal rung, so light traffic stops paying max-bucket
+//! device compute per decode step. The mock
 //! backend implements `join`/`migrate` natively; the PJRT device backend
 //! emulates them by re-prefilling occupied rows and replaying their
 //! decoded tokens (once per `migrate`, however many slots move), because
@@ -31,6 +36,7 @@
 //! `SchedReport::occupancy` is compared against.
 
 pub mod admission;
+pub mod cost;
 pub mod cot;
 pub mod kv;
 pub mod metrics;

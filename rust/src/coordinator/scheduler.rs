@@ -13,13 +13,20 @@
 //!     a single arrival takes the cheap per-slot [`Backend::join`], while
 //!     simultaneous arrivals share one batched [`Backend::migrate`]
 //!     rebuild (the amortized `join_many` path);
-//!   * the session *migrates across the bucket ladder* as load changes:
-//!     queue pressure beyond the free slots grows it eagerly to the
-//!     smallest rung covering occupied + weighted demand (growth costs no
-//!     decode steps, so burst TTFT matches a fixed max-bucket run), and
-//!     sustained low occupancy shrinks it a rung after
+//!   * the session *migrates across the bucket ladder* as load changes,
+//!     with both directions priced by the configured
+//!     [`CostModel`](crate::coordinator::cost::CostModel): queue pressure
+//!     beyond the free slots grows the session to the cheapest feasible
+//!     rung covering occupied + weighted demand whenever the modeled
+//!     migration cost is amortized by the projected queue savings (growth
+//!     costs no decode steps, so burst TTFT matches a fixed max-bucket
+//!     run), and sustained low occupancy — after
 //!     [`LadderConfig::shrink_patience`] consecutive idle evaluations —
-//!     light traffic stops paying big-bucket device compute per step;
+//!     shrinks it *straight to the modeled-optimal rung* for the surviving
+//!     occupants, one migration instead of a rung-per-patience-window
+//!     walk. The default [`SlotStepCostModel`] recovers the occupancy-only
+//!     policy exactly (free rebuilds, unconditional growth, one-rung
+//!     shrink walk);
 //!   * the `pump` callback is invoked every step so the owner (the server
 //!     loop) can drain newly arrived requests into the queue mid-session.
 //!
@@ -28,15 +35,19 @@
 //! discipline — kept as the baseline the continuous path is measured
 //! against; see `SchedReport::occupancy` and the comparison tests.
 
+use std::fmt;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::admission::AdmissionQueue;
+use crate::coordinator::cost::{cheapest_rung, CostModel, SlotStepCostModel};
 use crate::coordinator::cot::{self, CotPolicy};
 use crate::coordinator::kv::{KvSlots, SlotState};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::sampling;
+use crate::quant::Precision;
 use crate::runtime::backend::{Backend, MigrateSlot, StateHandle};
 use crate::tokenizer::Tokenizer;
 use crate::util::prng::Rng;
@@ -50,46 +61,131 @@ pub enum AdmitGate {
     WaveBarrier,
 }
 
-/// Hysteresis knobs for the adaptive bucket ladder. Growth is eager (a
-/// queue that outgrows the free slots lifts the session immediately, so
-/// admission latency never waits on the ladder); shrinking is damped so a
-/// brief lull between bursts does not thrash re-prefills.
+/// Hysteresis and projection knobs for the adaptive bucket ladder.
+/// Growth is decided per burst (the cost model amortizes the modeled
+/// migration price against the projected queue savings); shrinking is
+/// damped so a brief lull between bursts does not thrash re-prefills.
 #[derive(Debug, Clone)]
 pub struct LadderConfig {
     /// Decode steps between shrink evaluations.
     pub eval_every: usize,
     /// Consecutive low-occupancy evaluations (empty queue, live slots
-    /// fitting the next rung down) before the session drops a rung.
+    /// fitting the next rung down) before the session migrates to the
+    /// cost model's shrink target.
     pub shrink_patience: usize,
+    /// Projected per-request service length in decode steps, used by
+    /// [`CostModel::grow_pays_off`] to amortize a grow migration: a
+    /// backlog drained serially through freed slots is priced at this many
+    /// steps per wave. The default [`SlotStepCostModel`] ignores it
+    /// (growth is unconditional).
+    pub grow_horizon: usize,
 }
 
 impl Default for LadderConfig {
     fn default() -> Self {
-        LadderConfig { eval_every: 4, shrink_patience: 2 }
+        LadderConfig { eval_every: 4, shrink_patience: 2, grow_horizon: 24 }
     }
 }
 
+/// Typed construction error for a bucket ladder
+/// ([`SchedulerConfig::ladder`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LadderError {
+    /// The ladder has no buckets at all.
+    Empty,
+    /// The ladder contains a zero-sized bucket shape.
+    ZeroBucket,
+}
+
+impl fmt::Display for LadderError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LadderError::Empty => write!(f, "bucket ladder must not be empty"),
+            LadderError::ZeroBucket => write!(f, "bucket ladder shapes must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for LadderError {}
+
+/// Scheduler session configuration: the bucket ladder, the admission gate,
+/// the ladder hysteresis knobs, and the [`CostModel`] pricing the ladder's
+/// decisions.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     /// Strictly ascending ladder of batch bucket shapes the backend can
     /// execute (the manifest's compiled serve buckets, in production). A
     /// single-element ladder is a fixed bucket — the pre-ladder behavior.
     pub buckets: Vec<usize>,
+    /// Admission discipline (continuous vs the wave-era barrier baseline).
     pub gate: AdmitGate,
+    /// Hysteresis / projection knobs for ladder migration.
     pub ladder: LadderConfig,
+    /// Prices rungs and migrations for the grow/shrink decisions and the
+    /// [`SchedReport`] modeled-ms accounting. Defaults to
+    /// [`SlotStepCostModel`] (the occupancy-only PR 2 policy).
+    pub cost: Arc<dyn CostModel>,
 }
 
 impl SchedulerConfig {
-    /// Fixed single-bucket configuration (no migration possible).
-    pub fn fixed(bucket: usize, gate: AdmitGate) -> SchedulerConfig {
-        SchedulerConfig { buckets: vec![bucket], gate, ladder: LadderConfig::default() }
-    }
-
-    /// Adaptive ladder over `buckets` (sorted and deduplicated here).
-    pub fn ladder(mut buckets: Vec<usize>, gate: AdmitGate) -> SchedulerConfig {
+    /// Shared sanitizer for every construction path: sort, dedup, and
+    /// reject degenerate ladders with a typed error.
+    fn sanitize(mut buckets: Vec<usize>) -> Result<Vec<usize>, LadderError> {
         buckets.sort_unstable();
         buckets.dedup();
-        SchedulerConfig { buckets, gate, ladder: LadderConfig::default() }
+        if buckets.is_empty() {
+            return Err(LadderError::Empty);
+        }
+        if buckets[0] == 0 {
+            return Err(LadderError::ZeroBucket);
+        }
+        Ok(buckets)
+    }
+
+    /// Fixed single-bucket configuration (no migration possible) — sugar
+    /// for a single-rung [`SchedulerConfig::ladder`].
+    ///
+    /// # Panics
+    ///
+    /// Panics when `bucket` is zero; use [`SchedulerConfig::ladder`] for
+    /// fallible construction.
+    pub fn fixed(bucket: usize, gate: AdmitGate) -> SchedulerConfig {
+        SchedulerConfig::ladder(vec![bucket], gate).expect("fixed(): bucket must be positive")
+    }
+
+    /// Adaptive ladder over `buckets`, sorted and deduplicated here. A
+    /// single-element ladder is exactly [`SchedulerConfig::fixed`]; an
+    /// empty or zero-bucket ladder is a typed [`LadderError`], not a
+    /// deferred panic.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
+    /// use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
+    ///
+    /// let cfg = SchedulerConfig::ladder(vec![8, 2, 4], AdmitGate::Continuous)?
+    ///     .with_cost(Arc::new(AtlasCostModel::openpangu_7b()));
+    /// assert_eq!(cfg.buckets, vec![2, 4, 8]);
+    /// assert_eq!(cfg.max_bucket(), 8);
+    /// # Ok::<(), pangu_atlas_quant::coordinator::scheduler::LadderError>(())
+    /// ```
+    pub fn ladder(buckets: Vec<usize>, gate: AdmitGate) -> Result<SchedulerConfig, LadderError> {
+        Ok(SchedulerConfig {
+            buckets: SchedulerConfig::sanitize(buckets)?,
+            gate,
+            ladder: LadderConfig::default(),
+            cost: Arc::new(SlotStepCostModel),
+        })
+    }
+
+    /// Replace the cost model (builder style): e.g. plug in
+    /// [`crate::coordinator::cost::AtlasCostModel`] so ladder decisions
+    /// follow the Atlas A2 rooflines instead of raw slot-steps.
+    pub fn with_cost(mut self, cost: Arc<dyn CostModel>) -> SchedulerConfig {
+        self.cost = cost;
+        self
     }
 
     /// Largest rung (the capacity bound of the session).
@@ -105,19 +201,39 @@ impl Default for SchedulerConfig {
 }
 
 /// Smallest rung whose bucket covers `demand` slots (top rung when none
-/// does).
+/// does). The cost-blind fallback used when sizing grow targets before
+/// feasibility/amortization filtering.
 fn rung_for(buckets: &[usize], demand: usize) -> usize {
     buckets.iter().position(|&b| b >= demand).unwrap_or(buckets.len() - 1)
+}
+
+/// Session precision for cost-model pricing: the first live occupant's
+/// variant, else the queue head's; `None` while no request is visible at
+/// all. Unknown variant strings price conservatively at FP16. Server
+/// sessions are per-(model, variant) routes, so the first answer is locked
+/// for the whole session — the hot loop never re-parses it.
+fn detect_precision(slots: &[Option<SlotCtx>], queue: &AdmissionQueue) -> Option<Precision> {
+    slots
+        .iter()
+        .flatten()
+        .map(|ctx| ctx.req.variant.as_str())
+        .chain(queue.front().map(|r| r.variant.as_str()))
+        .next()
+        .map(|v| Precision::parse(v).unwrap_or(Precision::Fp16))
 }
 
 /// Steps executed at one bucket shape of the ladder.
 #[derive(Debug, Clone, Default)]
 pub struct RungUse {
+    /// The bucket shape these steps executed at.
     pub bucket: usize,
     /// Decode steps the device executed at this bucket shape.
     pub steps: usize,
     /// Of `steps * bucket` slot-steps, how many carried a live sequence.
     pub live_slot_steps: usize,
+    /// Modeled cost of this rung's decode steps under the session's
+    /// [`CostModel`] (slot-steps under the default [`SlotStepCostModel`]).
+    pub modeled_ms: f64,
 }
 
 /// Per-session execution report: step-level scheduler accounting (the
@@ -150,21 +266,35 @@ pub struct SchedReport {
     pub migrations_up: usize,
     /// Ladder migrations to a smaller bucket (sustained low occupancy).
     pub migrations_down: usize,
+    /// Measured wall time spent in prefill/join/migrate rebuilds.
     pub prefill_ms: f64,
+    /// Measured wall time spent in decode steps.
     pub decode_ms: f64,
+    /// Modeled device cost of every decode step, priced by the session's
+    /// [`CostModel`] at the bucket that actually executed each step.
+    pub modeled_decode_ms: f64,
+    /// Modeled device cost of whole-bucket prefills and per-slot joins.
+    pub modeled_prefill_ms: f64,
+    /// Modeled device cost of ladder/batched-admission migrations,
+    /// including the backend's replay depth
+    /// ([`Backend::migrate_replay_depth`]).
+    pub modeled_migrate_ms: f64,
 }
 
 impl SchedReport {
-    /// Charge one decode step executed at `bucket` with `live` live slots.
-    fn charge_step(&mut self, bucket: usize, live: usize) {
+    /// Charge one decode step executed at `bucket` with `live` live slots,
+    /// priced at `modeled_ms` by the session's cost model.
+    fn charge_step(&mut self, bucket: usize, live: usize, modeled_ms: f64) {
         self.decode_steps += 1;
         self.live_slot_steps += live;
+        self.modeled_decode_ms += modeled_ms;
         self.max_live = self.max_live.max(live);
         if let Some(r) = self.rungs.iter_mut().find(|r| r.bucket == bucket) {
             r.steps += 1;
             r.live_slot_steps += live;
+            r.modeled_ms += modeled_ms;
         } else {
-            self.rungs.push(RungUse { bucket, steps: 1, live_slot_steps: live });
+            self.rungs.push(RungUse { bucket, steps: 1, live_slot_steps: live, modeled_ms });
             self.rungs.sort_by_key(|r| r.bucket);
         }
     }
@@ -186,6 +316,15 @@ impl SchedReport {
             return 1.0;
         }
         self.live_slot_steps as f64 / total as f64
+    }
+
+    /// Total modeled device cost of the session under the configured
+    /// [`CostModel`]: decode steps plus prefill/join/migrate rebuilds. The
+    /// model-priced sibling of [`SchedReport::slot_steps`]: under the
+    /// default [`SlotStepCostModel`] (free rebuilds, a step costs its
+    /// bucket) the two agree exactly.
+    pub fn modeled_total_ms(&self) -> f64 {
+        self.modeled_decode_ms + self.modeled_prefill_ms + self.modeled_migrate_ms
     }
 
     /// Mean requests admitted per decode step.
@@ -291,7 +430,9 @@ impl<'t> Scheduler<'t> {
             "bucket ladder must be strictly ascending"
         );
         anyhow::ensure!(
-            self.cfg.ladder.eval_every > 0 && self.cfg.ladder.shrink_patience > 0,
+            self.cfg.ladder.eval_every > 0
+                && self.cfg.ladder.shrink_patience > 0
+                && self.cfg.ladder.grow_horizon > 0,
             "ladder hysteresis knobs must be positive"
         );
         let mut report = SchedReport::default();
@@ -365,6 +506,7 @@ impl<'t> Scheduler<'t> {
         hold_pos: &mut Vec<i32>,
         st: StateHandle,
         new_bucket: usize,
+        precision: Precision,
         report: &mut SchedReport,
         on_response: &mut dyn FnMut(Response),
     ) -> Result<(StateHandle, bool)> {
@@ -411,6 +553,13 @@ impl<'t> Scheduler<'t> {
             }
             return Ok((st, false));
         }
+        // Modeled migration price: the base reshape (one re-prefill at the
+        // target shape, under the cost model's pricing) plus the backend's
+        // replay depth charged as decode steps at the new bucket. Read the
+        // replay depth BEFORE the migrate rebuilds the traces.
+        let replay = backend.migrate_replay_depth();
+        report.modeled_migrate_ms += self.cfg.cost.migrate_ms(precision, old_bucket, new_bucket)
+            + replay as f64 * self.cfg.cost.decode_step_ms(precision, new_bucket);
         let t0 = Instant::now();
         let st = backend.migrate(st, &plan)?;
         report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
@@ -446,11 +595,26 @@ impl<'t> Scheduler<'t> {
         // Shrink hysteresis: consecutive low-occupancy evaluations.
         let mut idle_evals = 0usize;
         let mut last_eval_step = 0usize;
+        // Cost-model pricing precision: locked to the first request seen
+        // (sessions serve one (model, variant) route), so the decode hot
+        // loop never re-derives it.
+        let mut precision = Precision::Fp16;
+        let mut precision_locked = false;
 
         loop {
             pump(queue);
+            if !precision_locked {
+                if let Some(p) = detect_precision(slots, queue) {
+                    precision = p;
+                    precision_locked = true;
+                }
+            }
 
-            // ---- ladder shrink: sustained low occupancy drops a rung --
+            // ---- ladder shrink: sustained low occupancy migrates the
+            // session to the cost model's target rung — the modeled-optimal
+            // cover of the surviving occupants, in ONE migration (the
+            // default SlotStepCostModel degrades this to the occupancy-only
+            // one-rung walk) ------------------------------------------------
             if rung > 0
                 && kv.occupied_count() > 0
                 && report.decode_steps >= last_eval_step + ladder.eval_every
@@ -463,24 +627,33 @@ impl<'t> Scheduler<'t> {
                 }
                 if idle_evals >= ladder.shrink_patience {
                     idle_evals = 0;
-                    if let Some(st) = state.take() {
-                        let (st, migrated) = self.migrate_to(
-                            backend,
-                            queue,
-                            &mut kv,
-                            slots,
-                            &mut hold_pos,
-                            st,
-                            buckets[rung - 1],
-                            report,
-                            on_response,
-                        )?;
-                        if migrated {
-                            rung -= 1;
-                            bucket = buckets[rung];
-                            report.migrations_down += 1;
+                    let target = self.cfg.cost.shrink_target(
+                        precision,
+                        buckets,
+                        rung,
+                        kv.occupied_count(),
+                    );
+                    if let Some(target) = target {
+                        if let Some(st) = state.take() {
+                            let (st, migrated) = self.migrate_to(
+                                backend,
+                                queue,
+                                &mut kv,
+                                slots,
+                                &mut hold_pos,
+                                st,
+                                buckets[target],
+                                precision,
+                                report,
+                                on_response,
+                            )?;
+                            if migrated {
+                                rung = target;
+                                bucket = buckets[rung];
+                                report.migrations_down += 1;
+                            }
+                            state = Some(st);
                         }
-                        state = Some(st);
                     }
                 }
             }
@@ -493,12 +666,12 @@ impl<'t> Scheduler<'t> {
             if gate_open && !queue.is_empty() {
                 if kv.occupied_count() == 0 {
                     // Empty batch (first admission, a drained batch, or a
-                    // barrier wave): relaunch at the smallest rung covering
-                    // the weighted queue demand — light traffic starts on a
-                    // small bucket — and pay one whole-bucket prefill,
-                    // strictly cheaper than per-slot joins; any previous
-                    // state is dropped and rebuilt from scratch.
-                    rung = rung_for(buckets, queue.demand());
+                    // barrier wave): relaunch at the cheapest feasible rung
+                    // covering the weighted queue demand — light traffic
+                    // starts on a small bucket — and pay one whole-bucket
+                    // prefill, strictly cheaper than per-slot joins; any
+                    // previous state is dropped and rebuilt from scratch.
+                    rung = cheapest_rung(&*self.cfg.cost, precision, buckets, queue.demand());
                     bucket = buckets[rung];
                     kv = KvSlots::new(bucket, max_seq);
                     slots.clear();
@@ -534,6 +707,7 @@ impl<'t> Scheduler<'t> {
                     let t0 = Instant::now();
                     let mut st = backend.prefill(bucket, &tokens, &lens)?;
                     report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    report.modeled_prefill_ms += self.cfg.cost.prefill_ms(precision, bucket);
                     // Unused rows become vacant (inert) immediately.
                     for slot in admitted..bucket {
                         st = backend.evict(st, slot)?;
@@ -542,16 +716,42 @@ impl<'t> Scheduler<'t> {
                     state = Some(st);
                 } else if let Some(mut st) = state.take() {
                     // Mid-flight admission. Queue pressure beyond the free
-                    // slots grows the session eagerly to the smallest rung
-                    // covering occupied + weighted demand (growth costs no
-                    // decode steps, so burst TTFT matches a fixed
-                    // max-bucket session); two or more simultaneous
+                    // slots sizes a grow target: the smallest feasible rung
+                    // covering occupied + weighted demand. The session
+                    // grows there only when the cost model amortizes the
+                    // modeled migration price against the projected queue
+                    // savings (the default SlotStepCostModel always grows —
+                    // growth costs no decode steps, so burst TTFT matches a
+                    // fixed max-bucket session); two or more simultaneous
                     // admissions share one batched migrate (the join_many
                     // path); a single admission takes the per-slot join.
                     let demand = queue.demand();
                     let mut target = rung;
                     if demand > kv.free_count() {
-                        target = rung_for(buckets, kv.occupied_count() + demand).max(rung);
+                        let mut t = rung_for(buckets, kv.occupied_count() + demand).max(rung);
+                        // Never grow onto a rung the model deems infeasible
+                        // (e.g. it would not fit HBM at this precision).
+                        while t > rung && !self.cfg.cost.rung_feasible(precision, buckets[t]) {
+                            t -= 1;
+                        }
+                        if t > rung {
+                            let replay = backend.migrate_replay_depth();
+                            let migrate_ms =
+                                self.cfg.cost.migrate_ms(precision, bucket, buckets[t])
+                                    + replay as f64
+                                        * self.cfg.cost.decode_step_ms(precision, buckets[t]);
+                            let grow = crate::coordinator::cost::GrowContext {
+                                from: bucket,
+                                to: buckets[t],
+                                queued: queue.queued(),
+                                free_now: kv.free_count(),
+                                migrate_ms,
+                                horizon_steps: ladder.grow_horizon,
+                            };
+                            if self.cfg.cost.grow_pays_off(precision, grow) {
+                                target = t;
+                            }
+                        }
                     }
                     let free_at_target = buckets[target] - kv.occupied_count();
                     let will_join = queue.queued().min(free_at_target);
@@ -564,6 +764,7 @@ impl<'t> Scheduler<'t> {
                             &mut hold_pos,
                             st,
                             buckets[target],
+                            precision,
                             report,
                             on_response,
                         )?;
@@ -592,6 +793,12 @@ impl<'t> Scheduler<'t> {
                             let t0 = Instant::now();
                             st = backend.join(st, slot, &row, len)?;
                             report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            // A join is priced as one single-row prefill —
+                            // the native-KV admission price; the re-prefill
+                            // emulation's extra cost shows up only when
+                            // admissions route through migrate.
+                            report.modeled_prefill_ms +=
+                                self.cfg.cost.prefill_ms(precision, 1);
                             slots[slot] = Some(ctx);
                             report.joins += 1;
                         }
@@ -666,10 +873,11 @@ impl<'t> Scheduler<'t> {
                 pos[slot] = kv.position(slot).map(|p| p as i32).unwrap_or(hold_pos[slot]);
             }
             let live = kv.active_count();
+            let step_cost = self.cfg.cost.decode_step_ms(precision, bucket);
             let t0 = Instant::now();
             st = backend.decode(st, &next, &pos)?;
             report.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
-            report.charge_step(bucket, live);
+            report.charge_step(bucket, live, step_cost);
             for slot in 0..bucket {
                 if matches!(kv.state(slot), SlotState::Active { .. }) && !kv.advance(slot)? {
                     // KV window exhausted: force-finish (retired next step).
@@ -1040,7 +1248,8 @@ mod tests {
             SchedulerConfig {
                 buckets,
                 gate: AdmitGate::Continuous,
-                ladder: LadderConfig { eval_every, shrink_patience },
+                ladder: LadderConfig { eval_every, shrink_patience, ..LadderConfig::default() },
+                ..SchedulerConfig::default()
             },
         )
     }
@@ -1057,11 +1266,29 @@ mod tests {
                 "ladder {buckets:?} must be rejected"
             );
         }
-        // SchedulerConfig::ladder sanitizes exactly those shapes.
+        // SchedulerConfig::ladder sanitizes the recoverable shapes...
         assert_eq!(
-            SchedulerConfig::ladder(vec![4, 2, 4], AdmitGate::Continuous).buckets,
+            SchedulerConfig::ladder(vec![4, 2, 4], AdmitGate::Continuous).unwrap().buckets,
             vec![2, 4]
         );
+        // ...and rejects the degenerate ones with a typed error.
+        assert_eq!(
+            SchedulerConfig::ladder(vec![], AdmitGate::Continuous).unwrap_err(),
+            LadderError::Empty
+        );
+        assert_eq!(
+            SchedulerConfig::ladder(vec![0, 4], AdmitGate::Continuous).unwrap_err(),
+            LadderError::ZeroBucket
+        );
+        // The typed error converts through anyhow's `?` like any other.
+        let as_anyhow: anyhow::Error = LadderError::Empty.into();
+        assert!(as_anyhow.to_string().contains("empty"));
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket must be positive")]
+    fn fixed_zero_bucket_panics_with_typed_message() {
+        let _ = SchedulerConfig::fixed(0, AdmitGate::Continuous);
     }
 
     #[test]
@@ -1225,6 +1452,114 @@ mod tests {
         assert_eq!(report.migrations_up + report.migrations_down, 0);
         assert!(report.rungs.iter().all(|r| r.bucket == 2), "session never left rung 0");
         assert_eq!(responses.len(), 3);
+    }
+
+    // ---- cost-model-driven rung selection ------------------------------
+
+    use crate::coordinator::cost::AtlasCostModel;
+
+    #[test]
+    fn slot_step_cost_model_modeled_total_equals_slot_steps() {
+        // The default cost model prices a step at its bucket and rebuilds
+        // at zero, so the modeled account IS the slot-step account.
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let sched = ladder_scheduler(&tk, vec![2, 8], 4, 2);
+        let mut reqs = vec![request(0, CotMode::SlowThink)];
+        reqs.extend((1..4).map(|i| request(i, CotMode::NoThink)));
+        let (_, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert!(report.decode_steps > 0);
+        assert_eq!(report.modeled_prefill_ms, 0.0);
+        assert_eq!(report.modeled_migrate_ms, 0.0);
+        assert!(
+            (report.modeled_total_ms() - report.slot_steps() as f64).abs() < 1e-9,
+            "modeled {} != slot-steps {}",
+            report.modeled_total_ms(),
+            report.slot_steps()
+        );
+    }
+
+    fn atlas_ladder_scheduler(tk: &Tokenizer, buckets: Vec<usize>) -> Scheduler<'_> {
+        Scheduler::new(
+            tk,
+            SchedulerConfig {
+                buckets,
+                gate: AdmitGate::Continuous,
+                ladder: LadderConfig { eval_every: 4, shrink_patience: 2, grow_horizon: 24 },
+                cost: Arc::new(AtlasCostModel::openpangu_7b()),
+            },
+        )
+    }
+
+    #[test]
+    fn atlas_cost_shrinks_straight_to_the_target_rung() {
+        // One 30-token straggler plus five shorts: launch lands on bucket 8
+        // (weighted demand 7); once the shorts drain, only the straggler
+        // survives. The occupancy-only model walks 8 -> 4 -> 2, one rung per
+        // patience window; the Atlas model jumps 8 -> 2 in ONE migration.
+        let tk = fixture();
+        let run = |sched: Scheduler<'_>| {
+            let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 30));
+            let mut reqs = vec![request(0, CotMode::SlowThink)];
+            reqs.extend((1..6).map(|i| request(i, CotMode::NoThink)));
+            let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+            assert_eq!(resps.len(), 6);
+            (resps, report)
+        };
+        let (atlas_resps, atlas) = run(atlas_ladder_scheduler(&tk, vec![2, 4, 8]));
+        let (walk_resps, walk) = run(ladder_scheduler(&tk, vec![2, 4, 8], 4, 2));
+        assert_eq!(atlas.migrations_down, 1, "one migration straight to the target rung");
+        assert!(walk.migrations_down >= 2, "occupancy-only walk pays a migration per rung");
+        // The jump lands on the smallest rung (2), so the tail decodes at
+        // bucket 2 under both policies — but the atlas session never paid
+        // the intermediate bucket-4 re-prefill.
+        assert_eq!(atlas.rungs.first().unwrap().bucket, 2);
+        assert!(atlas.modeled_migrate_ms > 0.0, "atlas migrations are priced");
+        // Rung selection never changes what is generated.
+        for (a, w) in atlas_resps.iter().zip(&walk_resps) {
+            assert_eq!(a.id, w.id);
+            assert_eq!(a.tokens, w.tokens, "request {} diverged across policies", a.id);
+        }
+    }
+
+    #[test]
+    fn atlas_cost_declines_unamortized_growth() {
+        // A four-request burst over a 2-slot session: slot-step cost grows
+        // to bucket 8 unconditionally; the Atlas model prices the grow
+        // migration as a full re-prefill, sees the modeled queue savings
+        // fall short, and serves the burst through freed slots instead.
+        let tk = fixture();
+        let run = |sched: Scheduler<'_>| {
+            let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 20));
+            let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+            queue.push(request(0, CotMode::SlowThink)); // 20-token anchor
+            let mut pumps = 0usize;
+            let mut done = 0usize;
+            let report = sched
+                .run(
+                    &mut be,
+                    &mut queue,
+                    &mut |q| {
+                        pumps += 1;
+                        if pumps == 5 {
+                            for id in 1..5 {
+                                q.push(request(id, CotMode::NoThink));
+                            }
+                        }
+                    },
+                    &mut |_| done += 1,
+                )
+                .unwrap();
+            assert_eq!(done, 5, "every request answered");
+            (report, be.migrations)
+        };
+        let (atlas, atlas_migrations) = run(atlas_ladder_scheduler(&tk, vec![2, 8]));
+        let (eager, _) = run(ladder_scheduler(&tk, vec![2, 8], 4, 2));
+        assert_eq!(eager.migrations_up, 1, "slot-step growth is unconditional");
+        assert_eq!(atlas.migrations_up, 0, "unamortized growth declined");
+        assert_eq!(atlas_migrations, 0, "no device rebuild paid");
+        assert!(atlas.joins >= 4, "burst served through freed slots");
+        assert!(atlas.rungs.iter().all(|r| r.bucket == 2), "session stayed on rung 0");
     }
 
     #[test]

@@ -257,6 +257,10 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         // Charged at the bucket each step actually executed — under the
         // adaptive ladder this is the device-compute cost metric.
         self.metrics.inc("slot_steps", report.slot_steps() as u64);
+        // Its cost-model-priced sibling: per-session modeled milliseconds
+        // (equals slot_steps under the default SlotStepCostModel).
+        self.metrics.observe("modeled_session_ms", report.modeled_total_ms());
+        self.metrics.observe("modeled_migrate_ms", report.modeled_migrate_ms);
         self.metrics.inc("joins", report.joins as u64);
         self.metrics.inc("migrations_up", report.migrations_up as u64);
         self.metrics.inc("migrations_down", report.migrations_down as u64);

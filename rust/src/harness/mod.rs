@@ -10,6 +10,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -17,6 +18,7 @@ use anyhow::{Context, Result};
 use crate::bench_suite::analysis::{GenerationRecord, RunSummary};
 use crate::bench_suite::dataset::Benchmark;
 use crate::bench_suite::scoring;
+use crate::coordinator::cost::AtlasCostModel;
 use crate::coordinator::request::Request;
 use crate::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use crate::runtime::backend::DeviceBackend;
@@ -103,9 +105,16 @@ impl Harness {
         let tk = self.tokenizer.clone();
         // Offline evaluation submits bucket-sized batches at the largest
         // compiled shape; a fixed single-rung config keeps the device
-        // backend from ever paying migration re-prefills here.
-        let scheduler = Scheduler::new(&tk, SchedulerConfig::fixed(bucket, AdmitGate::Continuous));
+        // backend from ever paying migration re-prefills here. The Atlas
+        // cost model prices each session so the log can report what this
+        // run would have cost on the paper's deployment target.
+        let scheduler = Scheduler::new(
+            &tk,
+            SchedulerConfig::fixed(bucket, AdmitGate::Continuous)
+                .with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
+        );
         let mut records = Vec::with_capacity(n);
+        let mut modeled_ms = 0.0f64;
         let t0 = Instant::now();
         for chunk in bench.tasks[..n].chunks(bucket) {
             let requests: Vec<Request> = chunk
@@ -115,7 +124,8 @@ impl Harness {
                 })
                 .collect();
             let mut backend = DeviceBackend::new(&mut self.runtime, model, variant)?;
-            let (responses, _) = scheduler.run_batch(&mut backend, &requests)?;
+            let (responses, report) = scheduler.run_batch(&mut backend, &requests)?;
+            modeled_ms += report.modeled_total_ms();
             for (task, resp) in chunk.iter().zip(responses) {
                 let outcome = scoring::score_generation(&tk, task, &resp.tokens);
                 records.push(GenerationRecord::new(
@@ -125,9 +135,11 @@ impl Harness {
         }
         crate::log_info!(
             "harness",
-            "{model}/{variant}/{}/{bench_name}: {n} tasks in {:.1}s -> {:.2}%",
+            "{model}/{variant}/{}/{bench_name}: {n} tasks in {:.1}s \
+             (modeled A2 cost {:.0} ms) -> {:.2}%",
             mode.name(),
             t0.elapsed().as_secs_f64(),
+            modeled_ms,
             RunSummary::from_records(&records).accuracy_pct()
         );
         Ok(records)

@@ -8,7 +8,8 @@
 //!   repro <exp>                  — regenerate a paper table/figure
 //!                                  (table1|table2|table3|fig1|fig2|fig4|all)
 //! Common flags: --artifacts DIR (default ./artifacts), --quick N,
-//!               --model M, --variant V, --mode MODE, --iters N
+//!               --model M, --variant V, --mode MODE, --iters N,
+//!               --cost atlas|slot-step (serve: ladder cost model)
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -17,6 +18,7 @@ use anyhow::{anyhow, Result};
 
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
+use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
@@ -164,10 +166,21 @@ fn serve(args: &Args) -> Result<()> {
     let variant = precision.key().to_string();
     let bench = Benchmark::load(&dir.join(&rt.manifest.datasets["humaneval_s"]))?;
 
+    // Ladder decisions priced by the Atlas A2 cost model (pass
+    // --cost slot-step to fall back to the occupancy-only policy);
+    // `modeled_session_ms` in the metrics report shows the result.
+    let mut sched_cfg = SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?;
+    match args.get_or("cost", "atlas") {
+        "atlas" => {
+            sched_cfg = sched_cfg.with_cost(std::sync::Arc::new(AtlasCostModel::openpangu_7b()));
+        }
+        "slot-step" => {}
+        other => anyhow::bail!("--cost expects atlas|slot-step, got {other:?}"),
+    }
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
-        SchedulerConfig::ladder(buckets, AdmitGate::Continuous),
+        sched_cfg,
         AdmitConfig::with_wait(true, Duration::from_millis(10)),
     );
     // Client thread: submit synthetic traffic drawn from the benchmark.

@@ -83,6 +83,17 @@ pub trait Backend {
     fn decode(&mut self, state: StateHandle, tokens: &[i32], pos: &[i32]) -> Result<StateHandle>;
     /// Fetch logits [batch * vocab] from the state.
     fn logits(&mut self, state: &StateHandle) -> Result<Vec<f32>>;
+    /// Migration cost hook for the scheduler's
+    /// [`CostModel`](crate::coordinator::cost::CostModel): how many decode
+    /// steps a `migrate` issued *right now* would replay to rebuild its
+    /// carried slots. Zero for backends with a native KV carry (the
+    /// default, and [`MockBackend`]); the re-prefill-emulating
+    /// [`DeviceBackend`] reports the deepest occupied slot's decoded
+    /// length. The scheduler prices a migration at
+    /// `CostModel::migrate_ms + replay_depth * CostModel::decode_step_ms`.
+    fn migrate_replay_depth(&self) -> usize {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -332,6 +343,18 @@ impl Backend for DeviceBackend<'_> {
             return Err(anyhow!("device backend got mock state"));
         };
         self.runtime.readout(&self.model, s)
+    }
+
+    fn migrate_replay_depth(&self) -> usize {
+        // `rebuild` replays to the deepest occupied slot's decoded length —
+        // that is exactly the decode-step count a migrate pays on top of
+        // its re-prefill.
+        self.traces
+            .iter()
+            .filter(|t| t.occupied)
+            .map(|t| t.decoded.len())
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -797,6 +820,14 @@ mod tests {
         let state = be.evict(state, 0).unwrap();
         let plan = vec![MigrateSlot::Carry { from: 0 }];
         assert!(be.migrate(state, &plan).unwrap_err().to_string().contains("vacant slot"));
+    }
+
+    #[test]
+    fn mock_backend_reports_native_kv_carry() {
+        // The mock migrates without replay, so the scheduler's modeled
+        // migration price for it is the base reshape only.
+        let be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
+        assert_eq!(be.migrate_replay_depth(), 0);
     }
 
     #[test]

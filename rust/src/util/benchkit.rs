@@ -109,6 +109,14 @@ impl Group {
         self.results.last().unwrap()
     }
 
+    /// Print an indented annotation under the preceding bench line without
+    /// affecting the recorded results — used to report modeled-cost
+    /// accounting (e.g. `SchedReport::modeled_total_ms`) next to measured
+    /// wall time.
+    pub fn note(&self, text: &str) {
+        println!("    · {text}");
+    }
+
     pub fn finish(self) {
         println!("=== end group: {} ({} benches) ===", self.title, self.results.len());
     }

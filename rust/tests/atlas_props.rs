@@ -1,0 +1,155 @@
+//! Property tests (propcheck) over the analytical Atlas A2 models — the
+//! structural invariants behind the paper's Table 3, which the scheduler's
+//! cost-model ladder now depends on:
+//!
+//!   * prefill and decode latency are monotone (non-decreasing) in batch;
+//!   * a quantized variant's total latency never exceeds FP16's at equal
+//!     batch (the speedup is >= 1 everywhere, not just at the published
+//!     endpoints);
+//!   * the FP16 - INT8 memory delta is batch-independent (45.31 - 39.01 =
+//!     16.84 - 10.55 ~= 6.3 GB in the paper: exactly the weight-precision
+//!     delta).
+
+use pangu_atlas_quant::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
+use pangu_atlas_quant::quant::Precision;
+use pangu_atlas_quant::util::propcheck::{check, ensure};
+
+fn dims_for(tag: u8) -> ModelDims {
+    if tag == 0 {
+        ModelDims::openpangu_1b()
+    } else {
+        ModelDims::openpangu_7b()
+    }
+}
+
+fn precision_for(tag: usize) -> Precision {
+    Precision::ALL[tag % Precision::ALL.len()]
+}
+
+#[test]
+fn prop_prefill_latency_monotone_in_batch() {
+    check(
+        "prefill-monotone-in-batch",
+        200,
+        0xA71A5,
+        |rng| {
+            let b1 = rng.range(1, 64);
+            let b2 = rng.range(1, 64);
+            (rng.range(0, 1) as u8, rng.range(0, 8), b1.min(b2), b1.max(b2))
+        },
+        |&(dims_tag, p_tag, lo, hi)| {
+            let spec = AtlasSpec::default();
+            let dims = dims_for(dims_tag);
+            let p = precision_for(p_tag);
+            let t_lo = perf_model::prefill_latency(&spec, &dims, p, lo).total_ms();
+            let t_hi = perf_model::prefill_latency(&spec, &dims, p, hi).total_ms();
+            ensure(
+                t_lo <= t_hi + 1e-9,
+                format!("{p}: prefill({lo}) = {t_lo} > prefill({hi}) = {t_hi}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_decode_latency_monotone_in_batch() {
+    check(
+        "decode-monotone-in-batch",
+        200,
+        0xA71B6,
+        |rng| {
+            let b1 = rng.range(1, 64);
+            let b2 = rng.range(1, 64);
+            (rng.range(0, 1) as u8, rng.range(0, 8), b1.min(b2), b1.max(b2))
+        },
+        |&(dims_tag, p_tag, lo, hi)| {
+            let spec = AtlasSpec::default();
+            let dims = dims_for(dims_tag);
+            let p = precision_for(p_tag);
+            let t_lo = perf_model::decode_latency(&spec, &dims, p, lo).total_ms();
+            let t_hi = perf_model::decode_latency(&spec, &dims, p, hi).total_ms();
+            ensure(
+                t_lo <= t_hi + 1e-9,
+                format!("{p}: decode({lo}) = {t_lo} > decode({hi}) = {t_hi}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_quantized_total_never_exceeds_fp16_at_equal_batch() {
+    check(
+        "quantized-not-slower-than-fp16",
+        200,
+        0xA71C7,
+        |rng| (rng.range(0, 1) as u8, rng.range(0, 8), rng.range(1, 64)),
+        |&(dims_tag, p_tag, batch)| {
+            let spec = AtlasSpec::default();
+            let dims = dims_for(dims_tag);
+            let p = precision_for(p_tag);
+            let fp_pre = perf_model::prefill_latency(&spec, &dims, Precision::Fp16, batch);
+            let q_pre = perf_model::prefill_latency(&spec, &dims, p, batch);
+            ensure(
+                q_pre.total_ms() <= fp_pre.total_ms() + 1e-9,
+                format!(
+                    "{p}: prefill@{batch} {} > fp16 {}",
+                    q_pre.total_ms(),
+                    fp_pre.total_ms()
+                ),
+            )?;
+            let fp_dec = perf_model::decode_latency(&spec, &dims, Precision::Fp16, batch);
+            let q_dec = perf_model::decode_latency(&spec, &dims, p, batch);
+            ensure(
+                q_dec.total_ms() <= fp_dec.total_ms() + 1e-9,
+                format!(
+                    "{p}: decode@{batch} {} > fp16 {}",
+                    q_dec.total_ms(),
+                    fp_dec.total_ms()
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_memory_delta_batch_independent() {
+    // The Table 3 structural invariant: only the weight term depends on
+    // precision, so the FP16-vs-quantized total delta is the same at every
+    // batch size — and equals the weight-precision delta.
+    check(
+        "memory-delta-batch-independent",
+        200,
+        0xA71D8,
+        |rng| {
+            (
+                rng.range(0, 1) as u8,
+                rng.range(0, 8),
+                rng.range(1, 64),
+                rng.range(1, 64),
+            )
+        },
+        |&(dims_tag, p_tag, b1, b2)| {
+            let dims = dims_for(dims_tag);
+            let p = precision_for(p_tag);
+            let delta_at = |b: usize| {
+                memory_model::prefill_memory(&dims, Precision::Fp16, b).total_gib()
+                    - memory_model::prefill_memory(&dims, p, b).total_gib()
+            };
+            let d1 = delta_at(b1);
+            let d2 = delta_at(b2);
+            ensure(
+                (d1 - d2).abs() < 1e-6,
+                format!("{p}: delta({b1}) = {d1} != delta({b2}) = {d2}"),
+            )?;
+            // The delta is exactly the weight-precision delta.
+            const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+            let want = dims.params
+                * (Precision::Fp16.weight_bytes_per_param() - p.weight_bytes_per_param())
+                / GIB;
+            ensure(
+                (d1 - want).abs() < 1e-6,
+                format!("{p}: delta {d1} != weight delta {want}"),
+            )
+        },
+    );
+}

@@ -3,10 +3,12 @@
 //! totality.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel, SlotStepCostModel};
 use pangu_atlas_quant::coordinator::kv::{KvSlots, SlotState};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
@@ -152,7 +154,8 @@ fn prop_ladder_migration_invariants() {
     let run = |buckets: Vec<usize>,
                eval_every: usize,
                patience: usize,
-               arrivals: &[(u8, usize)]|
+               arrivals: &[(u8, usize)],
+               cost: Arc<dyn CostModel>|
      -> Result<BTreeMap<u64, Vec<Vec<u32>>>, String> {
         let tk = Tokenizer::minilang_default();
         let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
@@ -162,7 +165,12 @@ fn prop_ladder_migration_invariants() {
             SchedulerConfig {
                 buckets,
                 gate: AdmitGate::Continuous,
-                ladder: LadderConfig { eval_every, shrink_patience: patience },
+                ladder: LadderConfig {
+                    eval_every,
+                    shrink_patience: patience,
+                    ..LadderConfig::default()
+                },
+                cost,
             },
         );
         let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
@@ -207,8 +215,27 @@ fn prop_ladder_migration_invariants() {
             (buckets, eval_every, patience, arrivals)
         },
         |(buckets, eval_every, patience, arrivals)| {
-            let adaptive = run(buckets.clone(), *eval_every, *patience, arrivals)?;
-            let fixed = run(vec![*buckets.last().unwrap()], *eval_every, *patience, arrivals)?;
+            let adaptive = run(
+                buckets.clone(),
+                *eval_every,
+                *patience,
+                arrivals,
+                Arc::new(SlotStepCostModel),
+            )?;
+            let atlas = run(
+                buckets.clone(),
+                *eval_every,
+                *patience,
+                arrivals,
+                Arc::new(AtlasCostModel::openpangu_7b()),
+            )?;
+            let fixed = run(
+                vec![*buckets.last().unwrap()],
+                *eval_every,
+                *patience,
+                arrivals,
+                Arc::new(SlotStepCostModel),
+            )?;
             ensure_eq(adaptive.len(), arrivals.len() + 1, "every request answered")?;
             for (id, responses) in &adaptive {
                 ensure_eq(responses.len(), 1, &format!("request {id} answered once"))?;
@@ -217,6 +244,10 @@ fn prop_ladder_migration_invariants() {
             ensure(
                 adaptive == fixed,
                 "adaptive outputs diverged from the fixed-bucket baseline",
+            )?;
+            ensure(
+                atlas == fixed,
+                "atlas-cost outputs diverged from the fixed-bucket baseline",
             )?;
             Ok(())
         },

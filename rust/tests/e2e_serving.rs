@@ -8,16 +8,21 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring;
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use pangu_atlas_quant::coordinator::cost::{
+    AtlasCostModel, CostModel, GrowContext, SlotStepCostModel,
+};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, SchedReport, Scheduler, SchedulerConfig,
 };
+use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::coordinator::server::Server;
 use pangu_atlas_quant::runtime::backend::{MockBackend, MockProvider};
 use pangu_atlas_quant::runtime::Runtime;
@@ -179,6 +184,15 @@ fn mock_server_mode_aware_admission_keeps_replies_matched() -> Result<()> {
 /// the adaptive ladder. `(tokens, first_token_step)` per request id plus the
 /// session report.
 fn ramp_run(buckets: Vec<usize>) -> (BTreeMap<u64, (Vec<u32>, usize)>, SchedReport) {
+    ramp_run_with_cost(buckets, Arc::new(SlotStepCostModel))
+}
+
+/// [`ramp_run`] with an explicit ladder cost model (the cost-model
+/// acceptance test compares policies under identical pricing).
+fn ramp_run_with_cost(
+    buckets: Vec<usize>,
+    cost: Arc<dyn CostModel>,
+) -> (BTreeMap<u64, (Vec<u32>, usize)>, SchedReport) {
     let tk = Tokenizer::minilang_default();
     let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
     let mut be = MockBackend::new(64, 48, 96, script);
@@ -187,7 +201,8 @@ fn ramp_run(buckets: Vec<usize>) -> (BTreeMap<u64, (Vec<u32>, usize)>, SchedRepo
         SchedulerConfig {
             buckets,
             gate: AdmitGate::Continuous,
-            ladder: LadderConfig { eval_every: 2, shrink_patience: 2 },
+            ladder: LadderConfig { eval_every: 2, shrink_patience: 2, ..LadderConfig::default() },
+            cost,
         },
     );
     let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
@@ -262,6 +277,81 @@ fn ramp_adaptive_ladder_beats_fixed_max_bucket() {
     }
 }
 
+/// Atlas pricing with the pre-cost-model policy: unconditional growth and
+/// the one-rung shrink walk — the "occupancy-only ladder" baseline, priced
+/// in the same modeled milliseconds as the Atlas-policy run so their
+/// modeled totals are directly comparable.
+#[derive(Debug)]
+struct OccupancyOnlyAtlasPriced(AtlasCostModel);
+
+impl CostModel for OccupancyOnlyAtlasPriced {
+    fn decode_step_ms(&self, precision: Precision, bucket: usize) -> f64 {
+        self.0.decode_step_ms(precision, bucket)
+    }
+    fn prefill_ms(&self, precision: Precision, bucket: usize) -> f64 {
+        self.0.prefill_ms(precision, bucket)
+    }
+    fn shrink_target(
+        &self,
+        precision: Precision,
+        buckets: &[usize],
+        rung: usize,
+        occupied: usize,
+    ) -> Option<usize> {
+        SlotStepCostModel.shrink_target(precision, buckets, rung, occupied)
+    }
+    fn grow_pays_off(&self, _precision: Precision, ctx: GrowContext) -> bool {
+        ctx.queued > 0
+    }
+}
+
+/// The ISSUE 3 acceptance test: the trickle -> burst -> trickle ramp under
+/// [`AtlasCostModel`] ends with a modeled total latency no worse than the
+/// occupancy-only ladder's (both priced in Atlas milliseconds), shrinks
+/// straight to its target rung in ONE migration, and still produces outputs
+/// byte-identical to the fixed max-bucket baseline.
+#[test]
+fn ramp_atlas_cost_model_beats_occupancy_only_ladder() {
+    let (atlas_out, atlas) =
+        ramp_run_with_cost(vec![2, 4, 8], Arc::new(AtlasCostModel::openpangu_7b()));
+    let (occ_out, occ) = ramp_run_with_cost(
+        vec![2, 4, 8],
+        Arc::new(OccupancyOnlyAtlasPriced(AtlasCostModel::openpangu_7b())),
+    );
+    let (fixed_out, _) = ramp_run(vec![8]);
+
+    assert_eq!(atlas.completed, 12);
+    assert_eq!(occ.completed, 12);
+    // Modeled total latency: the cost-driven policy never does worse than
+    // the occupancy-only walk under identical pricing (in practice it does
+    // strictly better — the walk pays big-bucket rebuild prices).
+    assert!(
+        atlas.modeled_total_ms() <= occ.modeled_total_ms() + 1e-6,
+        "atlas policy modeled {:.1} ms !<= occupancy-only {:.1} ms",
+        atlas.modeled_total_ms(),
+        occ.modeled_total_ms()
+    );
+    // Shrink reaches its target rung in one migration instead of walking.
+    assert_eq!(
+        atlas.migrations_down, 1,
+        "cost-driven shrink must jump straight to the target rung"
+    );
+    assert!(occ.migrations_down >= 1, "the baseline ladder still shrinks");
+    assert!(
+        atlas.modeled_migrate_ms > 0.0,
+        "migrations must be priced into the modeled account"
+    );
+    // Rung policy never changes what is generated.
+    assert_eq!(atlas_out.len(), 12, "no request lost");
+    for (id, (tokens, _)) in &atlas_out {
+        assert_eq!(
+            tokens, &fixed_out[id].0,
+            "request {id} output diverged from the fixed max-bucket baseline"
+        );
+        assert_eq!(tokens, &occ_out[id].0, "request {id} diverged across policies");
+    }
+}
+
 /// The same ramp shape through the full mock server (channel front-end,
 /// client thread, wall-clock arrival gaps): the adaptive ladder serves the
 /// whole workload and charges strictly fewer slot-steps than fixed
@@ -310,7 +400,7 @@ fn mock_server_ramp_charges_fewer_slot_steps_adaptively() -> Result<()> {
         Ok((server.metrics.counter("slot_steps"), burst_ttft))
     };
     let (adaptive_steps, adaptive_ttft) =
-        run(SchedulerConfig::ladder(vec![2, 4, 8], AdmitGate::Continuous))?;
+        run(SchedulerConfig::ladder(vec![2, 4, 8], AdmitGate::Continuous)?)?;
     let (fixed_steps, fixed_ttft) = run(SchedulerConfig::fixed(8, AdmitGate::Continuous))?;
     assert!(
         adaptive_steps < fixed_steps,
@@ -354,7 +444,8 @@ fn serve_mixed_modes_through_channel_server() -> Result<()> {
     let (mut server, handle) = Server::new(
         pangu_atlas_quant::runtime::backend::DeviceProvider::new(rt),
         &tk,
-        SchedulerConfig::ladder(buckets, AdmitGate::Continuous),
+        SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?
+            .with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
         AdmitConfig::with_wait(true, Duration::from_millis(5)),
     );
 
