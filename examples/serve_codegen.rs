@@ -4,7 +4,15 @@
 //! client threads, and reports latency / TTFT / throughput / accuracy.
 //!
 //!     cargo run --release --example serve_codegen -- \
-//!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4]
+//!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4] \
+//!         [--long-cot] [--kv-page 16]
+//!
+//! The KV cache is served from a paged block pool budgeted by the Atlas A2
+//! memory model (token-granular admission; see docs/ARCHITECTURE.md,
+//! "Paged KV block pool"). `--long-cot` switches the workload to all
+//! `slow_think` requests with a raised generation budget — the regime
+//! where whole-window reservation exhausts HBM first while paging keeps
+//! admitting — and the report prints the pool-utilization metrics.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -13,6 +21,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use pangu_atlas_quant::atlas::memory_model::{KvPrecision, PageGeometry};
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring::{self, Outcome};
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
@@ -20,6 +29,7 @@ use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::runtime::backend::DeviceProvider;
 use pangu_atlas_quant::runtime::Runtime;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
@@ -33,6 +43,8 @@ fn main() -> Result<()> {
     let n_clients = args.usize_or("clients", 4);
     let variant = args.get_or("variant", "int8").to_string();
     let model = args.get_or("model", "7b-sim").to_string();
+    let long_cot = args.flag("long-cot");
+    let page_tokens = args.usize_or("kv-page", 16);
 
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
@@ -46,21 +58,43 @@ fn main() -> Result<()> {
 
     println!(
         "serving {n_requests} HumanEval-S requests on {model}/{variant} \
-         from {n_clients} client threads (continuous batching, bucket ladder {buckets:?})"
+         from {n_clients} client threads (continuous batching, bucket ladder {buckets:?}{})",
+        if long_cot { ", long-CoT slow_think workload" } else { "" }
     );
 
     // Ladder grow/shrink decisions are priced by the Atlas A2 rooflines
     // (docs/ARCHITECTURE.md, "Choosing a cost model"); the metrics report
-    // includes the resulting modeled_session_ms account.
+    // includes the resulting modeled_session_ms account. KV is served from
+    // a paged block pool budgeted by the same memory model — quantized
+    // variants store KV at INT8, halving the per-token footprint.
+    let weight_precision = Precision::parse(&variant).unwrap_or(Precision::Fp16);
+    let kv_precision = KvPrecision::for_weights(weight_precision);
+    let cost_model = AtlasCostModel::openpangu_7b().with_kv_precision(kv_precision);
+    let kv_cfg = cost_model.kv_config(
+        weight_precision,
+        PageGeometry { page_tokens },
+        buckets.last().copied().unwrap_or(8),
+    );
+    println!(
+        "paged KV pool: {} tokens of budget, {page_tokens}-token pages, \
+         {:.0} KiB per KV token ({kv_precision:?})",
+        kv_cfg.budget_tokens.unwrap_or(0),
+        kv_cfg.bytes_per_token / 1024.0
+    );
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
         SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?
-            .with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
-        AdmitConfig::with_wait(true, Duration::from_millis(15)),
+            .with_cost(Arc::new(cost_model))
+            .with_kv(kv_cfg),
+        // Token-weighted demand: a backlog of long-prompt requests sizes
+        // the launch rung by its real KV footprint.
+        AdmitConfig::with_wait(true, Duration::from_millis(15)).with_token_demand(24),
     );
 
-    // Client threads: each submits a slice of the benchmark, cycling modes.
+    // Client threads: each submits a slice of the benchmark. The default
+    // workload cycles all three CoT modes; --long-cot pins every request
+    // to slow_think with a raised budget, the KV-heaviest regime.
     let tasks: Vec<_> = bench
         .tasks
         .iter()
@@ -82,9 +116,18 @@ fn main() -> Result<()> {
         clients.push(std::thread::spawn(move || -> Vec<(usize, Vec<u32>, f64)> {
             let mut rxs = Vec::new();
             for (i, task) in &my_tasks {
-                let mode = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink][i % 3];
-                let req =
+                let mode = if long_cot {
+                    CotMode::SlowThink
+                } else {
+                    [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink][i % 3]
+                };
+                let mut req =
                     Request::new(*i as u64, &model, &variant, mode, task.examples.clone());
+                if long_cot {
+                    // Let the trace run to the CoT policy's cap instead of
+                    // the default per-request budget.
+                    req.params.max_new = usize::MAX;
+                }
                 rxs.push((*i, handle.submit(req).unwrap()));
             }
             rxs.into_iter()
@@ -113,6 +156,7 @@ fn main() -> Result<()> {
     }
 
     println!("\n{}", server.metrics.render());
+    print_pool_report(&server.metrics);
     let rt = server.into_provider().into_runtime();
     let s = Summary::of(&latencies);
     let tokens = rt.stats.decode_steps;
@@ -138,4 +182,24 @@ fn main() -> Result<()> {
         rt.stats.host_bytes_out as f64 / (1 << 20) as f64
     );
     Ok(())
+}
+
+/// Pool-utilization section of the E2E report (the paged-KV metrics the
+/// serving stack exports per session).
+fn print_pool_report(metrics: &pangu_atlas_quant::coordinator::metrics::Metrics) {
+    println!("=== paged KV pool ===");
+    println!("pages allocated:      {}", metrics.counter("kv_pages_allocated"));
+    println!("pages released:       {}", metrics.counter("kv_pages_released"));
+    println!("admissions deferred:  {}", metrics.counter("deferred_admissions"));
+    println!("pressure shrinks:     {}", metrics.counter("pressure_shrinks"));
+    if let Some(util) = metrics.summary("kv_pool_peak_util") {
+        println!(
+            "peak pool util:       mean {:.1}%  max {:.1}%  (per session)",
+            100.0 * util.mean,
+            100.0 * util.max
+        );
+    }
+    if let Some(bpt) = metrics.summary("kv_bytes_per_token") {
+        println!("kv bytes per token:   {:.0} KiB", bpt.mean / 1024.0);
+    }
 }

@@ -6,10 +6,13 @@
 //!
 //!     cargo bench --bench microbench
 //!     cargo bench --bench microbench -- --smoke   # CI: 1 iteration each
+//!     cargo bench --bench microbench -- --smoke --json BENCH_scheduler.json
 //!
 //! `--smoke` runs every bench exactly once with no warmup so CI exercises
 //! the bench code paths (they can't bit-rot) without paying measurement
-//! time.
+//! time. `--json <path>` additionally writes the groups/medians/notes as a
+//! machine-readable perf snapshot (uploaded as a CI artifact — the start
+//! of the perf trajectory).
 
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -17,6 +20,7 @@ use std::sync::Arc;
 use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
+use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::sampling;
 use pangu_atlas_quant::coordinator::scheduler::{
@@ -25,12 +29,19 @@ use pangu_atlas_quant::coordinator::scheduler::{
 use pangu_atlas_quant::quant::{hadamard, int4, int8};
 use pangu_atlas_quant::runtime::backend::MockBackend;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
-use pangu_atlas_quant::util::benchkit::{BenchConfig, Group};
+use pangu_atlas_quant::util::benchkit::{BenchConfig, Group, JsonEmitter};
 use pangu_atlas_quant::util::json::Json;
 use pangu_atlas_quant::util::prng::Rng;
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path: Option<std::path::PathBuf> = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from);
+    let mut emitter = JsonEmitter::new();
     let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::default() };
     let quick = if smoke { BenchConfig::smoke() } else { BenchConfig::quick() };
     let mut rng = Rng::new(7);
@@ -64,6 +75,7 @@ fn main() {
         hadamard::fwht_rows(&mut h, m, k);
         std::hint::black_box(&h);
     });
+    emitter.add(&g);
     g.finish();
 
     // ---- serving hot loop pieces --------------------------------------
@@ -81,6 +93,7 @@ fn main() {
     g.run("repetition detect len=96", &cfg, || {
         std::hint::black_box(detect(&tokens, &rep_cfg));
     });
+    emitter.add(&g);
     g.finish();
 
     // ---- continuous-batching scheduler over the mock backend -----------
@@ -165,6 +178,38 @@ fn main() {
             report.migrations_down
         ));
     }
+    // Paged KV pool vs whole-window reservation under the same token
+    // budget: the paged session admits more concurrently, so it drains the
+    // same workload in fewer slot-steps (the note carries the accounting).
+    for (name, kv) in [
+        ("budgeted session paged kv (16 pages)", KvConfig::paged(16, 16 * 16)),
+        ("budgeted session whole-window kv (16 pages)", KvConfig::whole_window(16, 16 * 16)),
+    ] {
+        let last = RefCell::new(None);
+        g.run(name, &quick, || {
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            let cfg = SchedulerConfig::fixed(3, AdmitGate::Continuous).with_kv(kv.clone());
+            let sched = Scheduler::new(&tk, cfg);
+            let reqs: Vec<Request> = (0..6)
+                .map(|i| Request::new(i, "7b-sim", "int8", CotMode::SlowThink, examples.clone()))
+                .collect();
+            let (resps, report) = sched.run_batch(&mut be, &reqs).expect("mock session");
+            assert_eq!(resps.len(), 6);
+            std::hint::black_box(report.slot_steps());
+            *last.borrow_mut() = Some(report);
+        });
+        let report = last.into_inner().expect("bench ran at least once");
+        g.note(&format!(
+            "{} slot-steps, max_live {}, {} deferred, {} pages churned, peak pool util {:.2}",
+            report.slot_steps(),
+            report.max_live,
+            report.deferred,
+            report.kv_pages_allocated,
+            report.kv_peak_pool_util
+        ));
+    }
+    emitter.add(&g);
     g.finish();
 
     // ---- substrates ----------------------------------------------------
@@ -177,5 +222,11 @@ fn main() {
     g.run("json serialize", &cfg, || {
         std::hint::black_box(parsed.to_string());
     });
+    emitter.add(&g);
     g.finish();
+
+    if let Some(path) = json_path {
+        emitter.write(&path).expect("write perf snapshot");
+        println!("\nperf snapshot written to {}", path.display());
+    }
 }

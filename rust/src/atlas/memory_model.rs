@@ -1,17 +1,106 @@
-//! Prefill memory model (Table 3's memory column).
+//! Prefill memory model (Table 3's memory column) and the KV-pool budget
+//! the paged serving scheduler draws on.
 //!
 //! total(B) = weights + kv(B) + activation workspace(B) + runtime overhead.
 //!
 //! The paper's FP16/INT8 deltas are batch-independent (45.31-39.01 =
 //! 16.84-10.55 ≈ 6.3 GB), i.e. exactly the weight-precision delta — the
 //! model reproduces that structure by construction: only `weight_bytes`
-//! depends on precision (activations/KV remain FP16 on the A2 path, with
-//! INT8 GEMM operands counted in the workspace term).
+//! depends on precision in the paper's deployment (activations/KV remain
+//! FP16 on the A2 path, with INT8 GEMM operands counted in the workspace
+//! term). The KV element precision is a *separate* axis
+//! ([`KvPrecision`]): a W8A8 deployment may additionally quantize the KV
+//! cache to INT8, halving the per-token KV footprint — the
+//! `*_kv` entry points take it explicitly, while the legacy signatures
+//! keep the paper's FP16-KV pairing so Table 3 reproduction is unchanged.
+//!
+//! For serving, the same model also answers the paged-pool sizing
+//! questions: [`kv_bytes_per_token`] (the unit the block pool accounts
+//! in), [`PageGeometry`] (tokens per fixed-size KV page), and
+//! [`kv_pool_budget_tokens`] (HBM left for KV once weights, activation
+//! workspace at the serving batch, and runtime overhead are paid).
 
 use super::{AtlasSpec, ModelDims};
 use crate::quant::Precision;
 
 const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// KV-cache element precision — independent of the GEMM/weight precision.
+/// The paper's Table 3 deployment keeps KV at FP16; an INT8-KV deployment
+/// halves every per-token KV figure below.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvPrecision {
+    Fp16,
+    Int8,
+}
+
+impl KvPrecision {
+    /// Bytes per stored KV element.
+    pub fn bytes_per_elem(self) -> f64 {
+        match self {
+            KvPrecision::Fp16 => 2.0,
+            KvPrecision::Int8 => 1.0,
+        }
+    }
+
+    /// The serving stack's deployment pairing: quantized-weight variants
+    /// also store KV at INT8 (the W8A8-with-INT8-KV configuration);
+    /// FP16 weights keep FP16 KV. One definition, so `pangu-serve` and the
+    /// examples cannot silently model different memory budgets for the
+    /// same variant.
+    pub fn for_weights(precision: Precision) -> KvPrecision {
+        match precision {
+            Precision::Fp16 => KvPrecision::Fp16,
+            _ => KvPrecision::Int8,
+        }
+    }
+}
+
+/// KV bytes one token of one sequence occupies: K and V planes across
+/// every layer at the GQA head count.
+pub fn kv_bytes_per_token(dims: &ModelDims, kv: KvPrecision) -> f64 {
+    2.0 * dims.n_layers as f64 * (dims.kv_heads * dims.head_dim) as f64 * kv.bytes_per_elem()
+}
+
+/// Fixed-size KV page shape for the paged block pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageGeometry {
+    /// Tokens per page (vLLM-style block size).
+    pub page_tokens: usize,
+}
+
+impl Default for PageGeometry {
+    fn default() -> Self {
+        PageGeometry { page_tokens: 16 }
+    }
+}
+
+impl PageGeometry {
+    /// Bytes of one page for one sequence.
+    pub fn page_bytes(&self, dims: &ModelDims, kv: KvPrecision) -> f64 {
+        self.page_tokens as f64 * kv_bytes_per_token(dims, kv)
+    }
+}
+
+/// HBM left for the KV block pool once the non-KV residents are paid:
+/// weights at `precision`, activation workspace at the serving `batch`,
+/// and the fixed runtime overhead. Returned in *tokens* of KV at `kv`
+/// precision (the unit the pool accounts in); 0 when the card cannot even
+/// hold the non-KV footprint.
+pub fn kv_pool_budget_tokens(
+    spec: &AtlasSpec,
+    dims: &ModelDims,
+    precision: Precision,
+    kv: KvPrecision,
+    batch: usize,
+) -> usize {
+    let non_kv = prefill_memory_kv(dims, precision, kv, batch);
+    let free_gib = spec.hbm_gib - (non_kv.total_gib() - non_kv.kv_gib);
+    if free_gib <= 0.0 {
+        return 0;
+    }
+    (free_gib * GIB / kv_bytes_per_token(dims, kv)) as usize
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct MemoryBreakdown {
@@ -35,12 +124,21 @@ const RUNTIME_OVERHEAD_GIB: f64 = 1.6;
 /// to the paper's per-batch slope (~0.95 GB/seq at S=2048 for 7B).
 const ACT_PLANES: f64 = 40.0;
 
+/// Paper-pairing wrapper: FP16 KV (Table 3's deployment), whatever the
+/// weight precision. See [`prefill_memory_kv`] for the explicit-KV form.
 pub fn prefill_memory(dims: &ModelDims, precision: Precision, batch: usize) -> MemoryBreakdown {
+    prefill_memory_kv(dims, precision, KvPrecision::Fp16, batch)
+}
+
+pub fn prefill_memory_kv(
+    dims: &ModelDims,
+    precision: Precision,
+    kv: KvPrecision,
+    batch: usize,
+) -> MemoryBreakdown {
     let weights_gib = dims.params * precision.weight_bytes_per_param() / GIB;
-    // KV cache: 2 (K,V) x L x H_kv x Dh x S x 2 bytes (fp16 KV), per sequence.
-    let kv_per_seq =
-        2.0 * dims.n_layers as f64 * (dims.kv_heads * dims.head_dim) as f64 * dims.seq_len as f64
-            * 2.0;
+    // KV cache: 2 (K,V) x L x H_kv x Dh x S x bytes-per-elem, per sequence.
+    let kv_per_seq = kv_bytes_per_token(dims, kv) * dims.seq_len as f64;
     let kv_gib = kv_per_seq * batch as f64 / GIB;
     // Activation workspace: ACT_PLANES live f16 planes of [S, d_model].
     let ws_per_seq = ACT_PLANES * dims.seq_len as f64 * dims.d_model as f64 * 2.0;
@@ -58,15 +156,58 @@ pub fn prefill_memory(dims: &ModelDims, precision: Precision, batch: usize) -> M
     }
 }
 
-/// Check a configuration fits the device.
+/// Check a configuration fits the device (FP16-KV pairing).
 pub fn fits(spec: &AtlasSpec, dims: &ModelDims, precision: Precision, batch: usize) -> bool {
-    prefill_memory(dims, precision, batch).total_gib() <= spec.hbm_gib
+    fits_kv(spec, dims, precision, KvPrecision::Fp16, batch)
 }
 
-/// Savings percentage of INT8 (or other low-bit) vs FP16 at a batch size.
+/// Worst-case (whole-window) fit at an explicit KV precision.
+pub fn fits_kv(
+    spec: &AtlasSpec,
+    dims: &ModelDims,
+    precision: Precision,
+    kv: KvPrecision,
+    batch: usize,
+) -> bool {
+    prefill_memory_kv(dims, precision, kv, batch).total_gib() <= spec.hbm_gib
+}
+
+/// Live-headroom fit: instead of charging every sequence a full `seq_len`
+/// KV window up front, charge the KV tokens the paged pool has *actually*
+/// mapped (`kv_tokens_used`). This is what lets the serving scheduler run
+/// batch shapes the worst-case [`fits_kv`] would refuse — the pool's
+/// admission gate, not the window reservation, bounds KV growth.
+pub fn fits_live(
+    spec: &AtlasSpec,
+    dims: &ModelDims,
+    precision: Precision,
+    kv: KvPrecision,
+    batch: usize,
+    kv_tokens_used: usize,
+) -> bool {
+    let bd = prefill_memory_kv(dims, precision, kv, batch);
+    let non_kv_gib = bd.total_gib() - bd.kv_gib;
+    let live_kv_gib = kv_tokens_used as f64 * kv_bytes_per_token(dims, kv) / GIB;
+    non_kv_gib + live_kv_gib <= spec.hbm_gib
+}
+
+/// Savings percentage of INT8 (or other low-bit) vs FP16 at a batch size
+/// (FP16-KV pairing — the paper's Table 3 figures).
 pub fn savings_pct(dims: &ModelDims, precision: Precision, batch: usize) -> f64 {
-    let fp = prefill_memory(dims, Precision::Fp16, batch).total_gib();
-    let q = prefill_memory(dims, precision, batch).total_gib();
+    savings_pct_kv(dims, precision, KvPrecision::Fp16, batch)
+}
+
+/// Savings vs the FP16-weights + FP16-KV baseline when the quantized
+/// deployment also stores KV at `kv` precision (W8A8-with-INT8-KV models
+/// the paper's full memory story).
+pub fn savings_pct_kv(
+    dims: &ModelDims,
+    precision: Precision,
+    kv: KvPrecision,
+    batch: usize,
+) -> f64 {
+    let fp = prefill_memory_kv(dims, Precision::Fp16, KvPrecision::Fp16, batch).total_gib();
+    let q = prefill_memory_kv(dims, precision, kv, batch).total_gib();
     100.0 * (fp - q) / fp
 }
 
@@ -131,5 +272,90 @@ mod tests {
         assert!(fits(&spec, &d, Precision::Fp16, 32));
         assert!(fits(&spec, &d, Precision::Int8, 32));
         assert!(!fits(&spec, &d, Precision::Fp16, 64)); // would blow HBM
+    }
+
+    #[test]
+    fn int8_kv_halves_the_kv_term_only() {
+        let d = B7();
+        let fp = prefill_memory_kv(&d, Precision::Int8, KvPrecision::Fp16, 16);
+        let qkv = prefill_memory_kv(&d, Precision::Int8, KvPrecision::Int8, 16);
+        assert!((qkv.kv_gib - fp.kv_gib / 2.0).abs() < 1e-9, "{} vs {}", qkv.kv_gib, fp.kv_gib);
+        assert_eq!(qkv.weights_gib, fp.weights_gib);
+        assert_eq!(qkv.workspace_gib, fp.workspace_gib);
+        // The legacy signature is exactly the FP16-KV pairing.
+        assert_eq!(
+            prefill_memory(&d, Precision::Int8, 16).total_gib(),
+            fp.total_gib()
+        );
+    }
+
+    #[test]
+    fn int8_kv_savings_beat_weight_only_savings() {
+        let d = B7();
+        for b in [2usize, 8, 32] {
+            assert!(
+                savings_pct_kv(&d, Precision::Int8, KvPrecision::Int8, b)
+                    > savings_pct_kv(&d, Precision::Int8, KvPrecision::Fp16, b),
+                "b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn kv_precision_widens_feasible_batches() {
+        // At a constrained card, INT8 KV admits batch shapes FP16 KV cannot.
+        let spec = AtlasSpec { hbm_gib: 40.0, ..AtlasSpec::default() };
+        let d = B7();
+        let fp_max = (1..=64)
+            .filter(|&b| fits_kv(&spec, &d, Precision::Int8, KvPrecision::Fp16, b))
+            .max()
+            .unwrap_or(0);
+        let i8_max = (1..=64)
+            .filter(|&b| fits_kv(&spec, &d, Precision::Int8, KvPrecision::Int8, b))
+            .max()
+            .unwrap_or(0);
+        assert!(i8_max > fp_max, "int8-kv max {i8_max} !> fp16-kv max {fp_max}");
+    }
+
+    #[test]
+    fn live_fit_beats_whole_window_fit() {
+        let spec = AtlasSpec::default();
+        let d = B7();
+        // Whole-window reservation refuses batch 64 at FP16...
+        assert!(!fits_kv(&spec, &d, Precision::Fp16, KvPrecision::Fp16, 64));
+        // ...but with only a light actual KV load the live check passes.
+        assert!(fits_live(&spec, &d, Precision::Fp16, KvPrecision::Fp16, 64, 64 * 128));
+        // A live load equal to the worst case reproduces the refusal.
+        assert!(!fits_live(
+            &spec,
+            &d,
+            Precision::Fp16,
+            KvPrecision::Fp16,
+            64,
+            64 * d.seq_len
+        ));
+    }
+
+    #[test]
+    fn pool_budget_counts_tokens_left_after_non_kv() {
+        let spec = AtlasSpec::default();
+        let d = B7();
+        let b16 = kv_pool_budget_tokens(&spec, &d, Precision::Int8, KvPrecision::Fp16, 8);
+        let b8 = kv_pool_budget_tokens(&spec, &d, Precision::Int8, KvPrecision::Int8, 8);
+        // Same free bytes, half the per-token cost: ~2x the token budget.
+        assert!((b8 as f64 / b16 as f64 - 2.0).abs() < 0.01, "{b8} vs {b16}");
+        // Consistency with the live-fit predicate at the budget boundary.
+        assert!(fits_live(&spec, &d, Precision::Int8, KvPrecision::Fp16, 8, b16));
+        assert!(!fits_live(&spec, &d, Precision::Int8, KvPrecision::Fp16, 8, b16 + 1024));
+        // A card too small for the non-KV residents has a zero pool.
+        let tiny = AtlasSpec { hbm_gib: 4.0, ..AtlasSpec::default() };
+        assert_eq!(kv_pool_budget_tokens(&tiny, &d, Precision::Fp16, KvPrecision::Fp16, 8), 0);
+        // Page geometry: a default page holds page_tokens tokens of KV.
+        let geom = PageGeometry::default();
+        assert_eq!(geom.page_tokens, 16);
+        let per_tok = kv_bytes_per_token(&d, KvPrecision::Fp16);
+        assert!((geom.page_bytes(&d, KvPrecision::Fp16) - 16.0 * per_tok).abs() < 1e-9);
+        // 7B GQA: 2 x 32 layers x 8 heads x 128 dim x 2 B = 256 KiB/token.
+        assert!((per_tok - 262144.0).abs() < 1e-9);
     }
 }

@@ -35,6 +35,16 @@ pub struct AdmitConfig {
     /// launches once the head request has waited this long
     /// ([`AdmissionQueue::ready`]).
     pub launch_deadline: Duration,
+    /// Weigh [`AdmissionQueue::demand`] by each request's prompt-token
+    /// footprint (`ceil(prompt_tokens / demand_unit_tokens)` slots, on top
+    /// of the mode weighting) instead of counting every request as one
+    /// slot — under the paged KV pool, a long-prompt request genuinely
+    /// occupies more of the memory the ladder is sizing rungs against.
+    /// `false` (the default) pins the historical count-based demand.
+    pub token_weighted_demand: bool,
+    /// Prompt tokens one demand slot stands for when
+    /// `token_weighted_demand` is on.
+    pub demand_unit_tokens: usize,
 }
 
 impl Default for AdmitConfig {
@@ -48,7 +58,21 @@ impl AdmitConfig {
     /// Couple both wait knobs at `wait` — the behavior of the old single
     /// `max_wait` field.
     pub fn with_wait(mode_aware: bool, wait: Duration) -> AdmitConfig {
-        AdmitConfig { mode_aware, starvation_bound: wait, launch_deadline: wait }
+        AdmitConfig {
+            mode_aware,
+            starvation_bound: wait,
+            launch_deadline: wait,
+            token_weighted_demand: false,
+            demand_unit_tokens: 24,
+        }
+    }
+
+    /// Builder: turn on token-weighted demand at `unit` prompt tokens per
+    /// demand slot.
+    pub fn with_token_demand(mut self, unit: usize) -> AdmitConfig {
+        self.token_weighted_demand = true;
+        self.demand_unit_tokens = unit.max(1);
+        self
     }
 }
 
@@ -65,14 +89,31 @@ fn mode_rank(mode: CotMode) -> u8 {
 pub struct AdmissionQueue {
     cfg: AdmitConfig,
     queue: VecDeque<Request>,
+    /// Incrementally maintained [`AdmissionQueue::demand`] total, so the
+    /// scheduler's per-step demand read is O(1) however long the backlog
+    /// (each request's weight is computed once, at push).
+    demand_sum: usize,
 }
 
 impl AdmissionQueue {
     pub fn new(cfg: AdmitConfig) -> AdmissionQueue {
-        AdmissionQueue { cfg, queue: VecDeque::new() }
+        AdmissionQueue { cfg, queue: VecDeque::new(), demand_sum: 0 }
+    }
+
+    /// One request's contribution to [`AdmissionQueue::demand`].
+    fn weight(&self, r: &Request) -> usize {
+        let mode_mult = if r.mode == CotMode::SlowThink { 2 } else { 1 };
+        let footprint = if self.cfg.token_weighted_demand {
+            r.prompt_tokens_hint().div_ceil(self.cfg.demand_unit_tokens).max(1)
+        } else {
+            1
+        };
+        mode_mult * footprint
     }
 
     pub fn push(&mut self, req: Request) {
+        let w = self.weight(&req);
+        self.demand_sum += w;
         self.queue.push_back(req);
     }
 
@@ -97,11 +138,16 @@ impl AdmissionQueue {
     /// counts double because it will pin its slot for a long trace
     /// (paper Fig. 2) — pending slow traffic justifies a bigger rung
     /// sooner than the same number of `no_think` requests.
+    ///
+    /// With [`AdmitConfig::token_weighted_demand`] the per-request count
+    /// additionally scales with the prompt-token footprint
+    /// (`ceil(prompt_tokens / demand_unit_tokens)`), so a backlog of
+    /// long-prompt requests — which will pin more KV pages per slot —
+    /// reads as more demand than the same number of short prompts.
+    ///
+    /// O(1): the total is maintained incrementally at push/admit.
     pub fn demand(&self) -> usize {
-        self.queue
-            .iter()
-            .map(|r| if r.mode == CotMode::SlowThink { 2 } else { 1 })
-            .sum()
+        self.demand_sum
     }
 
     /// Launch readiness for a *new* session over a `bucket`-slot batch:
@@ -121,29 +167,75 @@ impl AdmissionQueue {
     /// Pick the next request to fill one freed slot. `now` is injected for
     /// testability.
     pub fn admit(&mut self, now: Instant) -> Option<Request> {
+        match self.admit_gated(now, &mut |_| true) {
+            AdmitOutcome::Admitted(req) => Some(req),
+            AdmitOutcome::Deferred | AdmitOutcome::Empty => None,
+        }
+    }
+
+    /// [`AdmissionQueue::admit`] with an admissibility gate (the paged KV
+    /// pool's "can these prompt pages be reserved?" check). The queue is
+    /// NEVER reordered by a failed gate — a deferred request stays exactly
+    /// where it was, so the anti-starvation clock keeps running on the
+    /// true head. Policy:
+    ///
+    ///   * strict FIFO (`mode_aware` off) and the stale-head fallback
+    ///     consider the head only: if the head does not fit, admission is
+    ///     [`AdmitOutcome::Deferred`] — no head-of-line bypass, so FIFO
+    ///     order is preserved and a starving head is never overtaken;
+    ///   * the mode-aware pick scans candidates in (mode rank, arrival)
+    ///     order and admits the first that fits, so one unbackable request
+    ///     does not idle a free slot that another could use.
+    pub fn admit_gated(
+        &mut self,
+        now: Instant,
+        fits: &mut dyn FnMut(&Request) -> bool,
+    ) -> AdmitOutcome {
         if self.queue.is_empty() {
-            return None;
+            return AdmitOutcome::Empty;
         }
-        if !self.cfg.mode_aware {
-            return self.queue.pop_front();
-        }
-        // Anti-starvation: a stale head is admitted unconditionally.
         let head_wait = now
             .checked_duration_since(self.queue.front().unwrap().arrived)
             .unwrap_or(Duration::ZERO);
-        if head_wait >= self.cfg.starvation_bound {
-            return self.queue.pop_front();
+        if !self.cfg.mode_aware || head_wait >= self.cfg.starvation_bound {
+            // Strict FIFO (or anti-starvation fallback): head or nothing.
+            return if fits(self.queue.front().unwrap()) {
+                let req = self.queue.pop_front().unwrap();
+                let w = self.weight(&req);
+                self.demand_sum -= w;
+                AdmitOutcome::Admitted(req)
+            } else {
+                AdmitOutcome::Deferred
+            };
         }
-        // Cheapest mode wins; ties go to the earliest arrival (queue order).
-        let idx = self
-            .queue
-            .iter()
-            .enumerate()
-            .min_by_key(|(i, r)| (mode_rank(r.mode), *i))
-            .map(|(i, _)| i)
-            .unwrap();
-        self.queue.remove(idx)
+        // Cheapest mode wins; ties go to the earliest arrival (queue
+        // order); candidates that do not fit are skipped in place. One
+        // arrival-order pass per rank — allocation-free, this runs once
+        // per freed slot in the decode hot loop.
+        for rank in 0..3u8 {
+            for i in 0..self.queue.len() {
+                if mode_rank(self.queue[i].mode) == rank && fits(&self.queue[i]) {
+                    let req = self.queue.remove(i).unwrap();
+                    let w = self.weight(&req);
+                    self.demand_sum -= w;
+                    return AdmitOutcome::Admitted(req);
+                }
+            }
+        }
+        AdmitOutcome::Deferred
     }
+}
+
+/// Result of a gated admission attempt ([`AdmissionQueue::admit_gated`]).
+#[derive(Debug)]
+pub enum AdmitOutcome {
+    /// A request passed the gate and was removed from the queue.
+    Admitted(Request),
+    /// Requests are queued but none admissible passed the gate; they all
+    /// stay queued, in place — deferred, never dropped.
+    Deferred,
+    /// Nothing is queued.
+    Empty,
 }
 
 #[cfg(test)]
@@ -281,5 +373,87 @@ mod tests {
         assert!(q.admit(Instant::now()).is_none());
         q.push(req(0, CotMode::NoThink));
         assert_eq!(q.queued(), 1);
+    }
+
+    fn req_with_examples(id: u64, mode: CotMode, n_examples: usize) -> Request {
+        let ex = (0..n_examples)
+            .map(|_| (vec![1u8, 2, 3, 4, 5], vec![5u8, 4, 3, 2, 1]))
+            .collect();
+        Request::new(id, "7b-sim", "int8", mode, ex)
+    }
+
+    /// Regression pin for the pre-paging behavior: with the
+    /// `token_weighted_demand` flag off (the default), demand counts
+    /// requests — slow_think x2 — and is blind to prompt length.
+    #[test]
+    fn count_based_demand_is_pinned_behind_the_flag() {
+        let cfg = AdmitConfig::default();
+        assert!(!cfg.token_weighted_demand, "count-based demand is the default");
+        let mut q = AdmissionQueue::new(cfg);
+        q.push(req_with_examples(0, CotMode::NoThink, 1)); // ~15 tokens
+        q.push(req_with_examples(1, CotMode::NoThink, 8)); // ~100 tokens
+        assert_eq!(q.demand(), 2, "prompt length must not move count-based demand");
+        q.push(req_with_examples(2, CotMode::SlowThink, 8));
+        assert_eq!(q.demand(), 4, "slow_think still counts double");
+    }
+
+    #[test]
+    fn token_weighted_demand_scales_with_prompt_footprint() {
+        let mut q =
+            AdmissionQueue::new(AdmitConfig::default().with_token_demand(24));
+        // One example: 3 + (2+5+5) = 15 tokens -> 1 demand slot.
+        q.push(req_with_examples(0, CotMode::NoThink, 1));
+        assert_eq!(q.demand(), 1);
+        // Eight examples: 3 + 8*12 + 7 = 106 tokens -> 5 demand slots.
+        q.push(req_with_examples(1, CotMode::NoThink, 8));
+        assert_eq!(q.demand(), 1 + 5);
+        // Mode weighting composes multiplicatively with footprint.
+        q.push(req_with_examples(2, CotMode::SlowThink, 8));
+        assert_eq!(q.demand(), 1 + 5 + 10);
+        // The same backlog under the default flag reads count-based.
+        let mut plain = AdmissionQueue::new(AdmitConfig::default());
+        plain.push(req_with_examples(0, CotMode::NoThink, 1));
+        plain.push(req_with_examples(1, CotMode::NoThink, 8));
+        plain.push(req_with_examples(2, CotMode::SlowThink, 8));
+        assert_eq!(plain.demand(), 4);
+    }
+
+    #[test]
+    fn gated_admission_never_reorders_the_queue() {
+        // Strict FIFO: a head that fails the gate blocks (no bypass), and
+        // stays exactly where it was.
+        let mut q = queue(false, 0);
+        q.push(req(0, CotMode::NoThink));
+        q.push(req(1, CotMode::NoThink));
+        let now = Instant::now();
+        assert!(matches!(q.admit_gated(now, &mut |r| r.id != 0), AdmitOutcome::Deferred));
+        assert_eq!(q.queued(), 2);
+        assert_eq!(q.admit(now).unwrap().id, 0, "deferred head still admits first");
+        assert_eq!(q.admit(now).unwrap().id, 1);
+        assert!(matches!(q.admit_gated(now, &mut |_| true), AdmitOutcome::Empty));
+    }
+
+    #[test]
+    fn gated_mode_aware_pick_skips_unfittable_candidates_in_place() {
+        let mut q = queue(true, 1000);
+        q.push(req(0, CotMode::SlowThink));
+        q.push(req(1, CotMode::NoThink)); // cheapest mode, but gated out
+        q.push(req(2, CotMode::NoThink));
+        let now = Instant::now();
+        // Request 1 fails the gate: the pick falls through to the next
+        // candidate in (mode, arrival) order instead of idling the slot...
+        let AdmitOutcome::Admitted(r) = q.admit_gated(now, &mut |r| r.id != 1) else {
+            panic!("a fitting candidate exists");
+        };
+        assert_eq!(r.id, 2);
+        // ...and the gated-out request kept its queue position (it is
+        // still behind request 0 in arrival order, ahead by mode).
+        assert_eq!(q.queued(), 2);
+        assert_eq!(q.front().unwrap().id, 0, "queue order untouched");
+        // The anti-starvation clock runs on the true head: once request 0
+        // is stale it gets absolute priority, fitting or not.
+        let later = now + Duration::from_secs(2000);
+        assert!(matches!(q.admit_gated(later, &mut |r| r.id != 0), AdmitOutcome::Deferred));
+        assert_eq!(q.admit(later).unwrap().id, 0);
     }
 }

@@ -51,7 +51,9 @@
 
 use std::fmt;
 
+use crate::atlas::memory_model::KvPrecision;
 use crate::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
+use crate::coordinator::kv::{KvConfig, PoolHeadroom};
 use crate::quant::Precision;
 
 /// Inputs to a grow decision ([`CostModel::grow_pays_off`]): the shapes
@@ -98,16 +100,36 @@ pub trait CostModel: fmt::Debug + Send + Sync {
         self.prefill_ms(precision, to)
     }
 
-    /// Whether a `bucket`-slot shape is admissible at all (e.g. fits HBM).
-    /// Infeasible rungs are never chosen as launch or grow targets.
+    /// Whether a `bucket`-slot shape is admissible at all (e.g. fits HBM)
+    /// under *worst-case* (whole-window) KV reservation. Infeasible rungs
+    /// are never chosen as launch or grow targets.
     fn rung_feasible(&self, precision: Precision, bucket: usize) -> bool {
         let _ = (precision, bucket);
         true
     }
 
+    /// Live-headroom feasibility: when the scheduler runs a budgeted paged
+    /// KV pool it passes the pool's current [`PoolHeadroom`], and rungs
+    /// are judged by the KV tokens *actually mapped* instead of the
+    /// worst-case window — the paged pool's admission gate, not the
+    /// reservation, bounds KV growth. Without headroom (unbounded pool)
+    /// this falls back to the static [`CostModel::rung_feasible`].
+    fn rung_feasible_live(
+        &self,
+        precision: Precision,
+        bucket: usize,
+        headroom: Option<&PoolHeadroom>,
+    ) -> bool {
+        let _ = headroom;
+        self.rung_feasible(precision, bucket)
+    }
+
     /// Shrink target for a session at `buckets[rung]` with `occupied` live
-    /// slots (queue already verified empty by the caller). `None` means
-    /// stay put.
+    /// slots. The caller has verified either that the queue is empty (the
+    /// idle-patience shrink) or that the KV pool is memory-gated past its
+    /// watermark (the pressure shrink — queued demand cannot be admitted
+    /// at any rung until pages free, so the target is sized from the
+    /// occupants alone in both cases). `None` means stay put.
     ///
     /// Default: jump **straight to the modeled-cheapest rung** that covers
     /// the occupants — one migration to the optimum, not a one-rung walk.
@@ -158,21 +180,23 @@ pub trait CostModel: fmt::Debug + Send + Sync {
 }
 
 /// Smallest-cost feasible rung covering `demand` slots: the launch-time
-/// rung pick. When no feasible rung covers the demand, the *largest
-/// feasible* rung is chosen (the backlog is served in waves through slot
-/// turnover rather than on a shape the model says cannot exist); only when
-/// no rung is feasible at all does it fall back to the smallest covering
-/// rung and let the backend surface the failure.
+/// rung pick. Feasibility is judged live when the paged pool's `headroom`
+/// is available, worst-case otherwise. When no feasible rung covers the
+/// demand, the *largest feasible* rung is chosen (the backlog is served in
+/// waves through slot turnover rather than on a shape the model says
+/// cannot exist); only when no rung is feasible at all does it fall back
+/// to the smallest covering rung and let the backend surface the failure.
 pub fn cheapest_rung(
     model: &dyn CostModel,
     precision: Precision,
     buckets: &[usize],
     demand: usize,
+    headroom: Option<&PoolHeadroom>,
 ) -> usize {
     let cheapest_feasible_cover = buckets
         .iter()
         .enumerate()
-        .filter(|&(_, &b)| b >= demand && model.rung_feasible(precision, b))
+        .filter(|&(_, &b)| b >= demand && model.rung_feasible_live(precision, b, headroom))
         .min_by(|&(_, &a), &(_, &b)| {
             model
                 .decode_step_ms(precision, a)
@@ -185,7 +209,7 @@ pub fn cheapest_rung(
         .iter()
         .enumerate()
         .rev()
-        .find(|&(_, &b)| model.rung_feasible(precision, b));
+        .find(|&(_, &b)| model.rung_feasible_live(precision, b, headroom));
     if let Some((r, _)) = largest_feasible {
         return r;
     }
@@ -247,18 +271,43 @@ pub struct AtlasCostModel {
     pub spec: AtlasSpec,
     /// Model scale being served.
     pub dims: ModelDims,
+    /// KV-cache element precision the deployment stores (the paper's
+    /// Table 3 pairing is FP16 KV; W8A8-with-INT8-KV halves the KV term).
+    pub kv_precision: KvPrecision,
 }
 
 impl AtlasCostModel {
-    /// Cost model over explicit device and model dimensions.
+    /// Cost model over explicit device and model dimensions (FP16 KV —
+    /// the paper's deployment pairing).
     pub fn new(spec: AtlasSpec, dims: ModelDims) -> AtlasCostModel {
-        AtlasCostModel { spec, dims }
+        AtlasCostModel { spec, dims, kv_precision: KvPrecision::Fp16 }
     }
 
     /// Default A2 card serving openPangu-Embedded-7B (the paper's Table 3
     /// deployment).
     pub fn openpangu_7b() -> AtlasCostModel {
         AtlasCostModel::new(AtlasSpec::default(), ModelDims::openpangu_7b())
+    }
+
+    /// Builder: store KV at `kv` precision, so HBM feasibility (worst-case
+    /// and live) follows the quantized-KV footprint.
+    pub fn with_kv_precision(mut self, kv: KvPrecision) -> AtlasCostModel {
+        self.kv_precision = kv;
+        self
+    }
+
+    /// The paged [`KvConfig`] this deployment implies: pool budget derived
+    /// from the same spec, dims, and KV precision the model prices rung
+    /// feasibility with, at the top serving `batch`. One definition, so a
+    /// serving stack cannot pair a cost model with a pool sized from
+    /// different assumptions.
+    pub fn kv_config(
+        &self,
+        precision: Precision,
+        geometry: memory_model::PageGeometry,
+        batch: usize,
+    ) -> KvConfig {
+        KvConfig::atlas(&self.spec, &self.dims, precision, self.kv_precision, geometry, batch)
     }
 }
 
@@ -272,7 +321,28 @@ impl CostModel for AtlasCostModel {
     }
 
     fn rung_feasible(&self, precision: Precision, bucket: usize) -> bool {
-        memory_model::fits(&self.spec, &self.dims, precision, bucket)
+        memory_model::fits_kv(&self.spec, &self.dims, precision, self.kv_precision, bucket)
+    }
+
+    fn rung_feasible_live(
+        &self,
+        precision: Precision,
+        bucket: usize,
+        headroom: Option<&PoolHeadroom>,
+    ) -> bool {
+        match headroom {
+            // The paged pool gates KV growth; charge the tokens actually
+            // mapped instead of bucket x full windows.
+            Some(h) => memory_model::fits_live(
+                &self.spec,
+                &self.dims,
+                precision,
+                self.kv_precision,
+                bucket,
+                h.used_tokens(),
+            ),
+            None => self.rung_feasible(precision, bucket),
+        }
     }
 }
 
@@ -348,17 +418,17 @@ mod tests {
         assert!(m.rung_feasible(Precision::Fp16, 2));
         assert!(!m.rung_feasible(Precision::Fp16, 32));
         // Demand 5 covers rungs {8, 32}; 8 is feasible and cheapest.
-        assert_eq!(cheapest_rung(&m, Precision::Fp16, &buckets, 5), 1);
+        assert_eq!(cheapest_rung(&m, Precision::Fp16, &buckets, 5, None), 1);
         // Demand 20 covers only rung 32, which does not fit: the largest
         // FEASIBLE rung serves the backlog in waves — an infeasible shape
         // is never launched while a feasible one exists.
-        assert_eq!(cheapest_rung(&m, Precision::Fp16, &buckets, 20), 1);
+        assert_eq!(cheapest_rung(&m, Precision::Fp16, &buckets, 20, None), 1);
         // Nothing feasible at all (HBM below even the smallest shape):
         // fall back to the smallest covering rung and let the backend
         // surface the failure.
         let tiny = AtlasSpec { hbm_gib: 10.0, ..AtlasSpec::default() };
         let hopeless = AtlasCostModel::new(tiny, ModelDims::openpangu_7b());
-        assert_eq!(cheapest_rung(&hopeless, Precision::Fp16, &buckets, 1), 0);
+        assert_eq!(cheapest_rung(&hopeless, Precision::Fp16, &buckets, 1, None), 0);
         // INT8 frees enough HBM for more slots than FP16 at the same card.
         let fp_ok = buckets.iter().filter(|&&b| m.rung_feasible(Precision::Fp16, b)).count();
         let i8_ok = buckets.iter().filter(|&&b| m.rung_feasible(Precision::Int8, b)).count();
@@ -376,7 +446,7 @@ mod tests {
                 .position(|&b| b >= demand)
                 .unwrap_or(buckets.len() - 1);
             assert_eq!(
-                cheapest_rung(&SlotStepCostModel, Precision::Int8, &buckets, demand),
+                cheapest_rung(&SlotStepCostModel, Precision::Int8, &buckets, demand, None),
                 want,
                 "slot-step, demand {demand}"
             );
@@ -385,11 +455,60 @@ mod tests {
                     &AtlasCostModel::openpangu_7b(),
                     Precision::Int8,
                     &buckets,
-                    demand
+                    demand,
+                    None
                 ),
                 want,
                 "atlas, demand {demand}"
             );
         }
+    }
+
+    #[test]
+    fn live_headroom_unlocks_rungs_the_worst_case_refuses() {
+        // A 22 GiB card: worst-case whole-window feasibility refuses
+        // bucket 8 at FP16, but a lightly loaded paged pool runs it.
+        let spec = AtlasSpec { hbm_gib: 22.0, ..AtlasSpec::default() };
+        let m = AtlasCostModel::new(spec, ModelDims::openpangu_7b());
+        let light = PoolHeadroom {
+            page_tokens: 16,
+            used_pages: 64, // ~1k KV tokens actually mapped
+            free_pages: 1000,
+            capacity_pages: 1064,
+        };
+        assert!(!m.rung_feasible(Precision::Fp16, 8));
+        assert!(m.rung_feasible_live(Precision::Fp16, 8, Some(&light)));
+        // A pool as full as the worst case reproduces the refusal.
+        let full = PoolHeadroom {
+            page_tokens: 2048,
+            used_pages: 8, // 8 full windows mapped
+            free_pages: 0,
+            capacity_pages: 8,
+        };
+        assert!(!m.rung_feasible_live(Precision::Fp16, 8, Some(&full)));
+        // No headroom (unbounded pool): worst case applies.
+        assert!(!m.rung_feasible_live(Precision::Fp16, 8, None));
+        // The launch pick follows the live judgment.
+        let buckets = [2usize, 8, 32];
+        assert!(
+            cheapest_rung(&m, Precision::Fp16, &buckets, 5, Some(&light))
+                > cheapest_rung(&m, Precision::Fp16, &buckets, 5, None)
+        );
+    }
+
+    #[test]
+    fn int8_kv_widens_atlas_feasibility() {
+        let spec = AtlasSpec { hbm_gib: 40.0, ..AtlasSpec::default() };
+        let fp_kv = AtlasCostModel::new(spec, ModelDims::openpangu_7b());
+        let i8_kv = fp_kv.with_kv_precision(KvPrecision::Int8);
+        let buckets = [2usize, 8, 16, 32];
+        let fp_ok = buckets.iter().filter(|&&b| fp_kv.rung_feasible(Precision::Int8, b)).count();
+        let i8_ok = buckets.iter().filter(|&&b| i8_kv.rung_feasible(Precision::Int8, b)).count();
+        assert!(i8_ok > fp_ok, "int8 KV must unlock bigger rungs ({i8_ok} vs {fp_ok})");
+        // Pricing is unchanged — only feasibility moves with KV precision.
+        assert_eq!(
+            fp_kv.decode_step_ms(Precision::Int8, 8),
+            i8_kv.decode_step_ms(Precision::Int8, 8)
+        );
     }
 }

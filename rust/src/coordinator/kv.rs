@@ -1,14 +1,308 @@
-//! KV slot accounting for a batch bucket.
+//! Paged KV accounting: a fixed-size-page [`BlockPool`] with per-sequence
+//! [`BlockTable`]s, fronted by the [`KvSlots`] slot-lifecycle facade the
+//! scheduler drives.
 //!
-//! Tracks which batch slots carry live sequences, their current positions,
-//! and the KV window bound — the coordinator-side mirror of the
-//! device-resident cache. The continuous scheduler cycles slots through
-//! Free -> Active -> Finished -> Free (via [`KvSlots::release`]), so a slot
-//! is re-allocated at a fresh position as soon as its previous occupant is
-//! evicted. Invariants (property-tested): a slot is never double-allocated,
-//! positions never exceed the window, released slots are reusable.
+//! The wave- and ladder-era `KvSlots` reserved a full `max_seq` KV window
+//! per slot the moment a sequence was admitted — worst-case reservation
+//! that wastes most of the window on condensed `no_think` outputs and
+//! caps concurrency far below what HBM actually holds once long
+//! `slow_think` traces dominate. This module replaces that spine with
+//! token-granular paging while preserving the external contract:
+//!
+//!   * [`BlockPool`] — a pool of fixed-size token pages (free-list
+//!     allocation) bounded by an optional budget in tokens, typically
+//!     derived from the Atlas HBM model
+//!     ([`crate::atlas::memory_model::kv_pool_budget_tokens`]);
+//!   * [`BlockTable`] — the ordered page list of one live sequence,
+//!     growing one page at a time as its decode position advances;
+//!   * [`KvSlots`] — the slot table (Free -> Active -> Finished -> Free,
+//!     position monotone, resize carry plans) the `Scheduler`, `migrate`
+//!     plans, and the mock position contract already rely on, now backed
+//!     by the pool. [`KvSlots::new`] keeps the legacy behavior exactly
+//!     (whole-window reservation, unbounded pool); budgeted
+//!     configurations come from [`KvSlots::with_config`].
+//!
+//! Invariants (property-tested in `tests/coordinator_props.rs`): a page
+//! is never owned by two live sequences, the free list conserves pages
+//! across alloc/release/resize, a budgeted pool never exceeds its
+//! capacity, and an unbudgeted paged pool generates byte-identical
+//! schedules to the whole-window baseline.
 
 use anyhow::{bail, Result};
+
+use crate::atlas::memory_model::{self, KvPrecision, PageGeometry};
+use crate::atlas::{AtlasSpec, ModelDims};
+use crate::quant::Precision;
+
+/// How much of the pool a sequence reserves at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReservePolicy {
+    /// Legacy worst case: every admission reserves pages covering the full
+    /// `max_seq` window up front; decode never allocates. The baseline the
+    /// paged policy is measured against.
+    WholeWindow,
+    /// Token-granular: admission reserves only the prompt's pages; decode
+    /// grows the table one page at a time as the position crosses page
+    /// boundaries.
+    Paged,
+}
+
+/// Pool configuration: page geometry, the token budget (None = unbounded),
+/// and the reservation policy.
+#[derive(Debug, Clone)]
+pub struct KvConfig {
+    /// Tokens per page.
+    pub page_tokens: usize,
+    /// Pool capacity in KV tokens; `None` means unbounded (the pre-paging
+    /// behavior — admission is gated by slot count only).
+    pub budget_tokens: Option<usize>,
+    pub policy: ReservePolicy,
+    /// Modeled HBM bytes one KV token costs (informational — exported as
+    /// the `kv_bytes_per_token` serving metric; 0.0 when unknown).
+    pub bytes_per_token: f64,
+}
+
+impl KvConfig {
+    /// Legacy behavior: whole-window reservation over an unbounded pool.
+    /// [`KvSlots::new`] uses this, so existing call sites are unchanged.
+    pub fn unbounded() -> KvConfig {
+        KvConfig {
+            page_tokens: PageGeometry::default().page_tokens,
+            budget_tokens: None,
+            policy: ReservePolicy::WholeWindow,
+            bytes_per_token: 0.0,
+        }
+    }
+
+    /// Whole-window reservation under a token budget — the slot-granular
+    /// baseline with honest HBM accounting.
+    pub fn whole_window(page_tokens: usize, budget_tokens: usize) -> KvConfig {
+        KvConfig {
+            page_tokens,
+            budget_tokens: Some(budget_tokens),
+            policy: ReservePolicy::WholeWindow,
+            bytes_per_token: 0.0,
+        }
+    }
+
+    /// Token-granular paging under a token budget.
+    pub fn paged(page_tokens: usize, budget_tokens: usize) -> KvConfig {
+        KvConfig {
+            page_tokens,
+            budget_tokens: Some(budget_tokens),
+            policy: ReservePolicy::Paged,
+            bytes_per_token: 0.0,
+        }
+    }
+
+    /// Paged pool sized from the Atlas HBM model: the budget is whatever
+    /// the card holds once weights (at `precision`), activation workspace
+    /// at the top serving `batch`, and runtime overhead are paid, at `kv`
+    /// element precision.
+    pub fn atlas(
+        spec: &AtlasSpec,
+        dims: &ModelDims,
+        precision: Precision,
+        kv: KvPrecision,
+        geometry: PageGeometry,
+        batch: usize,
+    ) -> KvConfig {
+        KvConfig {
+            page_tokens: geometry.page_tokens,
+            budget_tokens: Some(memory_model::kv_pool_budget_tokens(
+                spec, dims, precision, kv, batch,
+            )),
+            policy: ReservePolicy::Paged,
+            bytes_per_token: memory_model::kv_bytes_per_token(dims, kv),
+        }
+    }
+
+    /// Pool capacity in pages (`None` = unbounded).
+    pub fn capacity_pages(&self) -> Option<usize> {
+        self.budget_tokens.map(|t| t / self.page_tokens)
+    }
+}
+
+/// Cumulative pool accounting, exported through
+/// [`crate::coordinator::scheduler::SchedReport`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    pub page_tokens: usize,
+    /// `None` = unbounded pool.
+    pub capacity_pages: Option<usize>,
+    pub used_pages: usize,
+    pub peak_used_pages: usize,
+    /// Pages handed out over the pool's lifetime (page churn numerator).
+    pub allocs: usize,
+    /// Pages returned over the pool's lifetime.
+    pub releases: usize,
+}
+
+/// Live pool headroom, passed to
+/// [`crate::coordinator::cost::CostModel::rung_feasible_live`] so rung
+/// feasibility can follow actual KV load instead of the worst-case window.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolHeadroom {
+    pub page_tokens: usize,
+    pub used_pages: usize,
+    pub free_pages: usize,
+    pub capacity_pages: usize,
+}
+
+impl PoolHeadroom {
+    /// KV tokens currently reserved by live sequences.
+    pub fn used_tokens(&self) -> usize {
+        self.used_pages * self.page_tokens
+    }
+}
+
+/// Fixed-size-page allocator: free-list reuse first, fresh pages up to the
+/// capacity bound after. Every page remembers its owning slot, so double
+/// mapping is structurally impossible (and loudly checked).
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    page_tokens: usize,
+    /// `None` = unbounded.
+    capacity_pages: Option<usize>,
+    /// Owner slot of every page ever created (high-water array).
+    owner: Vec<Option<usize>>,
+    /// Released page ids, reused LIFO.
+    free: Vec<usize>,
+    used: usize,
+    allocs: usize,
+    releases: usize,
+    peak_used: usize,
+}
+
+impl BlockPool {
+    pub fn new(page_tokens: usize, capacity_pages: Option<usize>) -> BlockPool {
+        BlockPool {
+            page_tokens,
+            capacity_pages,
+            owner: Vec::new(),
+            free: Vec::new(),
+            used: 0,
+            allocs: 0,
+            releases: 0,
+            peak_used: 0,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    /// Pages currently mapped by live sequences.
+    pub fn used_pages(&self) -> usize {
+        self.used
+    }
+
+    /// Pages still allocatable (`usize::MAX` when unbounded).
+    pub fn free_pages(&self) -> usize {
+        match self.capacity_pages {
+            Some(cap) => cap - self.used,
+            None => usize::MAX,
+        }
+    }
+
+    /// Used fraction of the budget (0.0 for unbounded pools).
+    pub fn utilization(&self) -> f64 {
+        match self.capacity_pages {
+            Some(cap) if cap > 0 => self.used as f64 / cap as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Claim one page for `slot`; `None` when the budget is exhausted.
+    pub fn alloc(&mut self, slot: usize) -> Option<usize> {
+        let id = if let Some(id) = self.free.pop() {
+            id
+        } else if self.capacity_pages.map_or(true, |cap| self.owner.len() < cap) {
+            self.owner.push(None);
+            self.owner.len() - 1
+        } else {
+            return None;
+        };
+        debug_assert!(self.owner[id].is_none(), "free-list page {id} still owned");
+        self.owner[id] = Some(slot);
+        self.used += 1;
+        self.allocs += 1;
+        self.peak_used = self.peak_used.max(self.used);
+        Some(id)
+    }
+
+    /// Return `block` (owned by `slot`) to the free list.
+    pub fn release(&mut self, block: usize, slot: usize) -> Result<()> {
+        match self.owner.get(block).copied().flatten() {
+            Some(o) if o == slot => {
+                self.owner[block] = None;
+                self.free.push(block);
+                self.used -= 1;
+                self.releases += 1;
+                Ok(())
+            }
+            Some(o) => bail!("page {block} owned by slot {o}, released by slot {slot}"),
+            None => bail!("double free of page {block}"),
+        }
+    }
+
+    /// Move `block` to a new owning slot (resize carry plans).
+    fn rebind(&mut self, block: usize, from: usize, to: usize) -> Result<()> {
+        match self.owner.get(block).copied().flatten() {
+            Some(o) if o == from => {
+                self.owner[block] = Some(to);
+                Ok(())
+            }
+            other => bail!("rebind page {block}: owner {other:?}, expected slot {from}"),
+        }
+    }
+
+    /// Owning slot of a page, if any.
+    pub fn owner_of(&self, block: usize) -> Option<usize> {
+        self.owner.get(block).copied().flatten()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            page_tokens: self.page_tokens,
+            capacity_pages: self.capacity_pages,
+            used_pages: self.used,
+            peak_used_pages: self.peak_used,
+            allocs: self.allocs,
+            releases: self.releases,
+        }
+    }
+
+    /// Free-list conservation check (property-test hook): every page ever
+    /// created is either owned or free, and a budgeted pool never created
+    /// more pages than its capacity.
+    pub fn conserved(&self) -> bool {
+        let owned = self.owner.iter().filter(|o| o.is_some()).count();
+        owned == self.used
+            && owned + self.free.len() == self.owner.len()
+            && self.capacity_pages.map_or(true, |cap| self.owner.len() <= cap)
+    }
+}
+
+/// Ordered page list of one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<usize>,
+}
+
+impl BlockTable {
+    pub fn blocks(&self) -> &[usize] {
+        &self.blocks
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
 
 /// Lifecycle state of one batch slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,18 +315,39 @@ pub enum SlotState {
     Finished { pos: usize },
 }
 
-/// Slot table for one wave over a fixed batch bucket.
+/// Slot table for one scheduler session over a batch bucket, backed by the
+/// paged [`BlockPool`]. The slot lifecycle, position contract, and resize
+/// carry plans are unchanged from the slot-granular era; what changed is
+/// *what admission costs*: pages for the prompt (paged policy) or the
+/// whole window (legacy), drawn from a pool that may be budgeted.
 #[derive(Debug, Clone)]
 pub struct KvSlots {
     slots: Vec<SlotState>,
+    tables: Vec<BlockTable>,
+    pool: BlockPool,
+    cfg: KvConfig,
     max_seq: usize,
 }
 
 impl KvSlots {
     /// Fresh all-free slot table over a `bucket`-slot batch with a
-    /// `max_seq` KV window per slot.
+    /// `max_seq` KV window per slot — legacy behavior: whole-window
+    /// reservation over an unbounded pool ([`KvConfig::unbounded`]).
     pub fn new(bucket: usize, max_seq: usize) -> KvSlots {
-        KvSlots { slots: vec![SlotState::Free; bucket], max_seq }
+        KvSlots::with_config(bucket, max_seq, KvConfig::unbounded())
+    }
+
+    /// Slot table over an explicit pool configuration.
+    pub fn with_config(bucket: usize, max_seq: usize, cfg: KvConfig) -> KvSlots {
+        let cfg = KvConfig { page_tokens: cfg.page_tokens.max(1), ..cfg };
+        let pool = BlockPool::new(cfg.page_tokens, cfg.capacity_pages());
+        KvSlots {
+            slots: vec![SlotState::Free; bucket],
+            tables: (0..bucket).map(|_| BlockTable::default()).collect(),
+            pool,
+            cfg,
+            max_seq,
+        }
     }
 
     /// Current bucket shape (slot count).
@@ -45,33 +360,91 @@ impl KvSlots {
         self.slots[slot]
     }
 
+    /// Pages covering write positions `[0, pos]`.
+    fn pages_for_pos(&self, pos: usize) -> usize {
+        pos / self.pool.page_tokens() + 1
+    }
+
+    /// Pages one admission at `prompt_len` reserves under the policy.
+    fn reserve_pages(&self, prompt_len: usize) -> usize {
+        match self.cfg.policy {
+            ReservePolicy::WholeWindow => self.pages_for_pos(self.max_seq.saturating_sub(1)),
+            ReservePolicy::Paged => self.pages_for_pos(prompt_len),
+        }
+    }
+
+    /// Memory-aware admission gate: true when a free slot exists AND the
+    /// pool can reserve the pages this admission needs. The scheduler
+    /// checks this *before* drawing a request, deferring (not dropping)
+    /// admissions the pool cannot back yet.
+    pub fn can_reserve(&self, prompt_len: usize) -> bool {
+        self.slots.iter().any(|s| matches!(s, SlotState::Free))
+            && self.pool.free_pages() >= self.reserve_pages(prompt_len)
+    }
+
+    /// Whether an admission at `prompt_len` could *ever* be reserved by
+    /// this pool, ignoring current occupancy: false only when the
+    /// policy's reservation exceeds the pool's total capacity. Such a
+    /// request must be rejected immediately — deferring it would block
+    /// admission forever, since no amount of retirement frees enough
+    /// pages.
+    pub fn can_ever_reserve(&self, prompt_len: usize) -> bool {
+        match self.pool.stats().capacity_pages {
+            Some(cap) => self.reserve_pages(prompt_len) <= cap,
+            None => true,
+        }
+    }
+
     /// Claim a free slot for a sequence whose prompt occupies [0, prompt_len).
     pub fn allocate(&mut self, prompt_len: usize) -> Result<usize> {
         if prompt_len >= self.max_seq {
             bail!("prompt {prompt_len} exceeds KV window {}", self.max_seq);
         }
-        for (i, s) in self.slots.iter_mut().enumerate() {
-            if matches!(s, SlotState::Free) {
-                *s = SlotState::Active { pos: prompt_len };
-                return Ok(i);
-            }
+        let Some(slot) = self.slots.iter().position(|s| matches!(s, SlotState::Free)) else {
+            bail!("no free KV slot in bucket of {}", self.slots.len());
+        };
+        let need = self.reserve_pages(prompt_len);
+        if self.pool.free_pages() < need {
+            bail!(
+                "KV pool exhausted: {need} pages needed, {} free (admission must defer)",
+                self.pool.free_pages()
+            );
         }
-        bail!("no free KV slot in bucket of {}", self.slots.len());
+        for _ in 0..need {
+            let page = self.pool.alloc(slot).expect("headroom checked above");
+            self.tables[slot].blocks.push(page);
+        }
+        self.slots[slot] = SlotState::Active { pos: prompt_len };
+        Ok(slot)
     }
 
     /// Advance an active slot by one decoded token; returns false when the
-    /// window is exhausted (caller must finish the sequence).
+    /// slot can no longer decode — the window is exhausted, or (paged
+    /// policy) the pool cannot back the next page — and the caller must
+    /// finish the sequence.
     pub fn advance(&mut self, slot: usize) -> Result<bool> {
         match self.slots[slot] {
             SlotState::Active { pos } => {
                 let next = pos + 1;
                 if next >= self.max_seq {
                     self.slots[slot] = SlotState::Finished { pos };
-                    Ok(false)
-                } else {
-                    self.slots[slot] = SlotState::Active { pos: next };
-                    Ok(true)
+                    return Ok(false);
                 }
+                let need = self.pages_for_pos(next);
+                if need > self.tables[slot].len() {
+                    debug_assert_eq!(need, self.tables[slot].len() + 1);
+                    match self.pool.alloc(slot) {
+                        Some(page) => self.tables[slot].blocks.push(page),
+                        None => {
+                            // Pool exhausted mid-decode: force-finish, same
+                            // contract as window exhaustion.
+                            self.slots[slot] = SlotState::Finished { pos };
+                            return Ok(false);
+                        }
+                    }
+                }
+                self.slots[slot] = SlotState::Active { pos: next };
+                Ok(true)
             }
             other => bail!("advance on non-active slot {slot}: {other:?}"),
         }
@@ -97,11 +470,14 @@ impl KvSlots {
         }
     }
 
-    /// Release one slot back to Free (continuous scheduler evicted it).
-    /// The slot is immediately re-allocatable at a new position.
+    /// Release one slot back to Free (continuous scheduler evicted it); its
+    /// pages return to the pool and the slot is immediately re-allocatable.
     pub fn release(&mut self, slot: usize) -> Result<()> {
         match self.slots[slot] {
             SlotState::Active { .. } | SlotState::Finished { .. } => {
+                for block in std::mem::take(&mut self.tables[slot].blocks) {
+                    self.pool.release(block, slot)?;
+                }
                 self.slots[slot] = SlotState::Free;
                 Ok(())
             }
@@ -111,18 +487,22 @@ impl KvSlots {
 
     /// Release every slot (batch drained).
     pub fn reset(&mut self) {
-        for s in self.slots.iter_mut() {
-            *s = SlotState::Free;
+        for slot in 0..self.slots.len() {
+            if !matches!(self.slots[slot], SlotState::Free) {
+                self.release(slot).expect("occupied slot releases");
+            }
         }
     }
 
     /// Resize the slot table to `new_bucket` slots (bucket-ladder
     /// migration). Occupied slots below the new bound keep their index;
     /// occupied slots above it are compacted, in index order, into the
-    /// lowest free indices. Returns the `(old, new)` index of every
-    /// occupied slot — the carry plan a backend `migrate` op executes.
-    /// Fails (leaving the table untouched) when the occupied slots cannot
-    /// fit the new bucket, so no live sequence is ever dropped.
+    /// lowest free indices. Block tables move with their slots (pages are
+    /// re-owned, never re-allocated). Returns the `(old, new)` index of
+    /// every occupied slot — the carry plan a backend `migrate` op
+    /// executes. Fails (leaving the table untouched) when the occupied
+    /// slots cannot fit the new bucket, so no live sequence is ever
+    /// dropped.
     pub fn resize(&mut self, new_bucket: usize) -> Result<Vec<(usize, usize)>> {
         if new_bucket == 0 {
             bail!("bucket must be positive");
@@ -157,7 +537,20 @@ impl KvSlots {
             moves.push((old, cursor));
             cursor += 1;
         }
+        // Move the block tables with their slots, re-owning every page.
+        let mut next_tables: Vec<BlockTable> =
+            (0..new_bucket).map(|_| BlockTable::default()).collect();
+        for &(old, new) in &moves {
+            let table = std::mem::take(&mut self.tables[old]);
+            if old != new {
+                for &block in table.blocks() {
+                    self.pool.rebind(block, old, new)?;
+                }
+            }
+            next_tables[new] = table;
+        }
         self.slots = next;
+        self.tables = next_tables;
         moves.sort_by_key(|&(_, new)| new);
         Ok(moves)
     }
@@ -186,6 +579,56 @@ impl KvSlots {
     /// True while any slot is still decoding.
     pub fn any_active(&self) -> bool {
         self.active_count() > 0
+    }
+
+    // ---- paged-pool views ------------------------------------------------
+
+    /// The block table of one slot (empty for free slots).
+    pub fn blocks(&self, slot: usize) -> &[usize] {
+        self.tables[slot].blocks()
+    }
+
+    /// Pages currently mapped by `slot`.
+    pub fn block_count(&self, slot: usize) -> usize {
+        self.tables[slot].len()
+    }
+
+    /// Pool configuration this table runs under.
+    pub fn config(&self) -> &KvConfig {
+        &self.cfg
+    }
+
+    /// Cumulative pool accounting (allocs/releases = page churn).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Used fraction of the pool budget (0.0 for unbounded pools).
+    pub fn pool_utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// Live headroom for cost-model feasibility; `None` when the pool is
+    /// unbounded (worst-case feasibility applies).
+    pub fn headroom(&self) -> Option<PoolHeadroom> {
+        let stats = self.pool.stats();
+        stats.capacity_pages.map(|capacity_pages| PoolHeadroom {
+            page_tokens: stats.page_tokens,
+            used_pages: stats.used_pages,
+            free_pages: capacity_pages - stats.used_pages,
+            capacity_pages,
+        })
+    }
+
+    /// Structural pool invariant (property-test hook): free-list
+    /// conservation plus table/owner agreement.
+    pub fn pool_conserved(&self) -> bool {
+        let table_pages: usize = self.tables.iter().map(|t| t.len()).sum();
+        self.pool.conserved()
+            && table_pages == self.pool.used_pages()
+            && self.tables.iter().enumerate().all(|(slot, t)| {
+                t.blocks().iter().all(|&b| self.pool.owner_of(b) == Some(slot))
+            })
     }
 }
 
@@ -277,6 +720,7 @@ mod tests {
         assert_eq!(kv.state(0), SlotState::Finished { pos: 13 });
         assert_eq!(kv.state(1), SlotState::Active { pos: 11 });
         assert_eq!(kv.free_count(), 0);
+        assert!(kv.pool_conserved(), "pages re-owned across the compaction");
     }
 
     #[test]
@@ -305,5 +749,130 @@ mod tests {
         assert_eq!(kv.state(a), SlotState::Free);
         assert!(kv.finish(a).is_err());
         assert_eq!(kv.allocate(5).unwrap(), 0); // reusable
+    }
+
+    // ---- paged pool ------------------------------------------------------
+
+    #[test]
+    fn whole_window_reserves_the_window_up_front() {
+        // max_seq 96 / page 16 = 6 pages per admission, whatever the prompt.
+        let mut kv = KvSlots::with_config(2, 96, KvConfig::whole_window(16, 16 * 16));
+        let a = kv.allocate(5).unwrap();
+        assert_eq!(kv.block_count(a), 6);
+        // Decode never allocates under whole-window reservation.
+        for _ in 0..40 {
+            assert!(kv.advance(a).unwrap());
+        }
+        assert_eq!(kv.block_count(a), 6);
+        // 16 pages total: a second window fits (12), a third does not.
+        assert!(kv.can_reserve(5));
+        kv.allocate(5).unwrap();
+        assert!(!kv.can_reserve(5), "4 free pages cannot back a 6-page window");
+        assert!(kv.allocate(5).is_err(), "pool-gated even though no slot check fails");
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn paged_reserves_prompt_pages_and_grows_by_one() {
+        let mut kv = KvSlots::with_config(1, 96, KvConfig::paged(16, 16 * 16));
+        // Prompt of 20 tokens: write cursor at 20 -> pages 0 and 1.
+        let s = kv.allocate(20).unwrap();
+        assert_eq!(kv.block_count(s), 2);
+        let stats0 = kv.pool_stats();
+        assert_eq!(stats0.allocs, 2);
+        // Advancing to position 31 stays within page 1; position 32 grows.
+        for _ in 20..31 {
+            assert!(kv.advance(s).unwrap());
+        }
+        assert_eq!(kv.block_count(s), 2);
+        assert!(kv.advance(s).unwrap()); // pos 32 -> page 2
+        assert_eq!(kv.block_count(s), 3);
+        assert!(kv.pool_conserved());
+        // Release returns every page.
+        kv.release(s).unwrap();
+        assert_eq!(kv.pool_stats().used_pages, 0);
+        assert_eq!(kv.pool_stats().releases, 3);
+    }
+
+    #[test]
+    fn paged_outfits_whole_window_under_the_same_budget() {
+        // 13-page budget: whole-window (6 pages/seq) holds 2 sequences;
+        // paging holds 4 short prompts with room to decode.
+        let budget = KvConfig::paged(16, 13 * 16);
+        let mut paged = KvSlots::with_config(4, 96, budget);
+        for _ in 0..4 {
+            paged.allocate(20).unwrap(); // 2 pages each
+        }
+        assert_eq!(paged.pool_stats().used_pages, 8);
+        let mut window = KvSlots::with_config(4, 96, KvConfig::whole_window(16, 13 * 16));
+        window.allocate(20).unwrap();
+        window.allocate(20).unwrap();
+        assert!(!window.can_reserve(20), "window baseline is HBM-bound at 2");
+        assert!(paged.pool_utilization() < 1.0);
+        assert!(window.pool_utilization() > 0.9);
+    }
+
+    #[test]
+    fn paged_pool_exhaustion_finishes_the_slot() {
+        // 3-page budget, 2 sequences: the pool runs dry mid-decode and the
+        // starved slot force-finishes instead of erroring.
+        let mut kv = KvSlots::with_config(2, 96, KvConfig::paged(16, 3 * 16));
+        let a = kv.allocate(10).unwrap(); // page 0
+        let b = kv.allocate(10).unwrap(); // page 1
+        for _ in 10..15 {
+            assert!(kv.advance(a).unwrap());
+        }
+        assert!(kv.advance(a).unwrap()); // pos 16 -> page 2 (last free page)
+        assert_eq!(kv.block_count(a), 2);
+        for _ in 10..15 {
+            assert!(kv.advance(b).unwrap());
+        }
+        assert!(!kv.advance(b).unwrap(), "pool dry: slot must finish");
+        assert_eq!(kv.state(b), SlotState::Finished { pos: 15 });
+        // Releasing the finished slot refills the pool for the survivor.
+        kv.release(b).unwrap();
+        assert!(kv.can_reserve(10));
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn headroom_reports_budget_and_unbounded_hides_it() {
+        let kv = KvSlots::new(2, 96);
+        assert!(kv.headroom().is_none(), "unbounded pool has no headroom story");
+        assert_eq!(kv.pool_utilization(), 0.0);
+        let mut kv = KvSlots::with_config(2, 96, KvConfig::paged(16, 8 * 16));
+        kv.allocate(20).unwrap();
+        let h = kv.headroom().unwrap();
+        assert_eq!(h.capacity_pages, 8);
+        assert_eq!(h.used_pages, 2);
+        assert_eq!(h.free_pages, 6);
+        assert_eq!(h.used_tokens(), 32);
+    }
+
+    #[test]
+    fn atlas_config_prices_tokens_from_the_memory_model() {
+        let spec = AtlasSpec::default();
+        let dims = ModelDims::openpangu_7b();
+        let cfg = KvConfig::atlas(
+            &spec,
+            &dims,
+            Precision::Int8,
+            KvPrecision::Int8,
+            PageGeometry::default(),
+            8,
+        );
+        assert_eq!(cfg.policy, ReservePolicy::Paged);
+        assert!(cfg.budget_tokens.unwrap() > 0);
+        assert!(cfg.bytes_per_token > 0.0);
+        // INT8 KV budget holds ~2x the FP16-KV tokens on the same card.
+        let fp = KvConfig::atlas(
+            &spec,
+            &dims,
+            Precision::Int8,
+            KvPrecision::Fp16,
+            PageGeometry::default(),
+            8,
+        );
+        assert!(cfg.budget_tokens.unwrap() > fp.budget_tokens.unwrap() * 3 / 2);
     }
 }

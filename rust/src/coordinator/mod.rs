@@ -4,7 +4,9 @@
 //!   * [`request`]   — request/response types + generation parameters
 //!   * [`cot`]       — CoT mode controller (directive tokens, per-mode budgets)
 //!   * [`sampling`]  — greedy / temperature / top-k samplers
-//!   * [`kv`]        — KV slot accounting (Free -> Active -> Finished -> Free)
+//!   * [`kv`]        — paged KV block pool (fixed-size token pages, HBM
+//!                     budget) behind the slot lifecycle facade
+//!                     (Free -> Active -> Finished -> Free)
 //!   * [`admission`] — admission policy: which queued request fills which
 //!                     freed slot (FIFO + mode-aware, anti-starvation aging)
 //!   * [`cost`]      — cost models pricing the scheduler's bucket-ladder

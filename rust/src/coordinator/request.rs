@@ -61,6 +61,22 @@ impl Request {
     pub fn route_key(&self) -> (String, String) {
         (self.model.clone(), self.variant.clone())
     }
+
+    /// Exact encoded prompt length in tokens, computed without a
+    /// tokenizer: the MiniLang prompt layout is
+    /// `BOS MODE (IN xs OUT ys | SEP)* ASK`, so the length depends only on
+    /// the example shapes. This is the footprint signal token-aware
+    /// admission demand weighs queued requests by
+    /// ([`crate::coordinator::admission::AdmitConfig::token_weighted_demand`]).
+    pub fn prompt_tokens_hint(&self) -> usize {
+        let body: usize = self
+            .examples
+            .iter()
+            .map(|(xs, ys)| 2 + xs.len() + ys.len())
+            .sum();
+        let seps = self.examples.len().saturating_sub(1);
+        3 + body + seps
+    }
 }
 
 /// Completed generation. Under the continuous scheduler a response is
@@ -103,5 +119,23 @@ mod tests {
         let p = GenParams::default();
         assert_eq!(p.temperature, 0.0);
         assert!(p.max_new > 0);
+    }
+
+    #[test]
+    fn prompt_hint_matches_the_encoded_length() {
+        let tk = crate::tokenizer::tests::test_tokenizer();
+        for examples in [
+            vec![],
+            vec![(vec![1u8, 2, 3], vec![3u8, 2, 1])],
+            vec![
+                (vec![1u8, 2, 3, 4, 5], vec![5u8, 4, 3, 2, 1]),
+                (vec![0u8, 1], vec![1u8, 0]),
+                (vec![9u8], vec![9u8]),
+            ],
+        ] {
+            let req = Request::new(1, "m", "fp16", CotMode::SlowThink, examples.clone());
+            let ids = tk.encode_prompt(req.mode, &req.examples);
+            assert_eq!(req.prompt_tokens_hint(), ids.len(), "examples {examples:?}");
+        }
     }
 }

@@ -41,10 +41,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::admission::AdmissionQueue;
+use crate::coordinator::admission::{AdmissionQueue, AdmitOutcome};
 use crate::coordinator::cost::{cheapest_rung, CostModel, SlotStepCostModel};
 use crate::coordinator::cot::{self, CotPolicy};
-use crate::coordinator::kv::{KvSlots, SlotState};
+use crate::coordinator::kv::{KvConfig, KvSlots, PoolStats, SlotState};
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::sampling;
 use crate::quant::Precision;
@@ -79,11 +79,24 @@ pub struct LadderConfig {
     /// steps per wave. The default [`SlotStepCostModel`] ignores it
     /// (growth is unconditional).
     pub grow_horizon: usize,
+    /// Paged-KV pressure valve: once the pool's utilization reaches this
+    /// fraction (and the occupants fit a smaller rung), the session
+    /// shrinks *preemptively* at the next evaluation — bypassing
+    /// `shrink_patience` — because a memory-gated session cannot admit
+    /// into its big bucket anyway and should stop paying its per-step
+    /// price. Unbounded pools report utilization 0.0, so this never fires
+    /// for legacy configurations.
+    pub pool_shrink_watermark: f64,
 }
 
 impl Default for LadderConfig {
     fn default() -> Self {
-        LadderConfig { eval_every: 4, shrink_patience: 2, grow_horizon: 24 }
+        LadderConfig {
+            eval_every: 4,
+            shrink_patience: 2,
+            grow_horizon: 24,
+            pool_shrink_watermark: 0.85,
+        }
     }
 }
 
@@ -125,6 +138,12 @@ pub struct SchedulerConfig {
     /// [`SchedReport`] modeled-ms accounting. Defaults to
     /// [`SlotStepCostModel`] (the occupancy-only PR 2 policy).
     pub cost: Arc<dyn CostModel>,
+    /// KV pool configuration. The default ([`KvConfig::unbounded`]) is the
+    /// legacy whole-window reservation over an unbounded pool; a budgeted
+    /// [`KvConfig::paged`]/[`KvConfig::atlas`] pool makes admission
+    /// token-granular and memory-aware (requests whose pages cannot be
+    /// reserved are deferred, never dropped).
+    pub kv: KvConfig,
 }
 
 impl SchedulerConfig {
@@ -177,6 +196,7 @@ impl SchedulerConfig {
             gate,
             ladder: LadderConfig::default(),
             cost: Arc::new(SlotStepCostModel),
+            kv: KvConfig::unbounded(),
         })
     }
 
@@ -185,6 +205,15 @@ impl SchedulerConfig {
     /// follow the Atlas A2 rooflines instead of raw slot-steps.
     pub fn with_cost(mut self, cost: Arc<dyn CostModel>) -> SchedulerConfig {
         self.cost = cost;
+        self
+    }
+
+    /// Replace the KV pool configuration (builder style): e.g.
+    /// [`KvConfig::atlas`] for a paged pool budgeted by the A2 memory
+    /// model, or [`KvConfig::whole_window`] for the slot-granular baseline
+    /// under the same budget.
+    pub fn with_kv(mut self, kv: KvConfig) -> SchedulerConfig {
+        self.kv = kv;
         self
     }
 
@@ -256,6 +285,11 @@ pub struct SchedReport {
     /// Requests rejected at admission (e.g. prompt exceeds the prefill
     /// window); each gets an empty truncated response, not a dead channel.
     pub rejected: usize,
+    /// Admission rounds deferred because the KV pool could not reserve any
+    /// admissible candidate's pages yet (every queued request stays in
+    /// place and is retried as pages free — deferred, never dropped). Only
+    /// a budgeted pool defers.
+    pub deferred: usize,
     /// In-flight requests aborted by a backend failure; each gets its
     /// partial output back (marked truncated) before the error surfaces.
     pub aborted: usize,
@@ -266,6 +300,20 @@ pub struct SchedReport {
     pub migrations_up: usize,
     /// Ladder migrations to a smaller bucket (sustained low occupancy).
     pub migrations_down: usize,
+    /// Of `migrations_down`, how many were triggered preemptively by the
+    /// KV pool crossing [`LadderConfig::pool_shrink_watermark`].
+    pub pressure_shrinks: usize,
+    /// KV pages handed out over the session (page-churn numerator,
+    /// accumulated across ladder relaunches).
+    pub kv_pages_allocated: usize,
+    /// KV pages returned over the session.
+    pub kv_pages_released: usize,
+    /// Peak used fraction of the KV pool budget (0.0 for unbounded pools).
+    pub kv_peak_pool_util: f64,
+    /// Modeled HBM bytes per KV token under the session's pool
+    /// configuration (0.0 when the pool was not sized from a memory
+    /// model) — the paper's KV-footprint metric, exported per session.
+    pub kv_bytes_per_token: f64,
     /// Measured wall time spent in prefill/join/migrate rebuilds.
     pub prefill_ms: f64,
     /// Measured wall time spent in decode steps.
@@ -296,6 +344,19 @@ impl SchedReport {
         } else {
             self.rungs.push(RungUse { bucket, steps: 1, live_slot_steps: live, modeled_ms });
             self.rungs.sort_by_key(|r| r.bucket);
+        }
+    }
+
+    /// Accumulate one pool's lifetime accounting (called when a session's
+    /// `KvSlots` is replaced at a ladder relaunch, and once at drain).
+    fn fold_pool(&mut self, stats: &PoolStats) {
+        self.kv_pages_allocated += stats.allocs;
+        self.kv_pages_released += stats.releases;
+        if let Some(cap) = stats.capacity_pages {
+            if cap > 0 {
+                self.kv_peak_pool_util =
+                    self.kv_peak_pool_util.max(stats.peak_used_pages as f64 / cap as f64);
+            }
         }
     }
 
@@ -435,7 +496,14 @@ impl<'t> Scheduler<'t> {
                 && self.cfg.ladder.grow_horizon > 0,
             "ladder hysteresis knobs must be positive"
         );
-        let mut report = SchedReport::default();
+        anyhow::ensure!(
+            self.cfg.ladder.pool_shrink_watermark > 0.0,
+            "pool shrink watermark must be positive"
+        );
+        let mut report = SchedReport {
+            kv_bytes_per_token: self.cfg.kv.bytes_per_token,
+            ..SchedReport::default()
+        };
         let mut slots: Vec<Option<SlotCtx>> = Vec::new();
         let result = self.run_core(backend, queue, pump, on_response, &mut slots, &mut report);
         if result.is_err() {
@@ -454,10 +522,32 @@ impl<'t> Scheduler<'t> {
         Ok(report)
     }
 
+    /// Publish one slot's block table to the backend when it changed size
+    /// (admission, page growth, release). Count-gated so the decode hot
+    /// loop pays one comparison per slot, not an ABI call.
+    fn sync_blocks<B: Backend + ?Sized>(
+        backend: &mut B,
+        kv: &KvSlots,
+        bound: &mut [usize],
+        slot: usize,
+    ) -> Result<()> {
+        let n = kv.block_count(slot);
+        if n != bound[slot] {
+            backend.bind_blocks(slot, kv.blocks(slot))?;
+            bound[slot] = n;
+        }
+        Ok(())
+    }
+
     /// Draw the next *admissible* request from the queue: malformed ones
     /// are rejected inline (each gets its empty truncated response),
     /// the winner gets a KV slot, a right-padded prompt row, and a slot
-    /// context. `None` once the queue holds nothing admissible.
+    /// context. `None` once the queue holds nothing admissible — or once
+    /// the KV pool cannot reserve any admissible candidate's pages, in
+    /// which case this admission round is *deferred*: every queued request
+    /// stays in place (the gate never reorders the queue) and is retried
+    /// as pages free on retirement. A prompt even an empty pool cannot
+    /// back is rejected outright: deferral would never resolve.
     fn draw_admit(
         &self,
         queue: &mut AdmissionQueue,
@@ -469,7 +559,26 @@ impl<'t> Scheduler<'t> {
     ) -> Result<Option<(usize, Vec<i32>, i32, SlotCtx)>> {
         let pad = self.tokenizer.pad as i32;
         loop {
-            let Some(req) = queue.admit(Instant::now()) else { return Ok(None) };
+            // Gate candidates on the pool's headroom via the exact prompt
+            // length ([`Request::prompt_tokens_hint`]). Requests whose
+            // reservation exceeds the pool's TOTAL capacity pass the gate
+            // too: deferral would never resolve, so they flow to the
+            // explicit rejection below instead of blocking the queue.
+            // (A drained pool needs no extra escape — with zero occupants
+            // every page is free, so can_reserve and can_ever_reserve
+            // agree and one of the two disjuncts decides.)
+            let outcome = queue.admit_gated(Instant::now(), &mut |req| {
+                let hint = req.prompt_tokens_hint();
+                kv.can_reserve(hint) || !kv.can_ever_reserve(hint)
+            });
+            let req = match outcome {
+                AdmitOutcome::Admitted(req) => req,
+                AdmitOutcome::Deferred => {
+                    report.deferred += 1;
+                    return Ok(None);
+                }
+                AdmitOutcome::Empty => return Ok(None),
+            };
             let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
                 Ok(enc) => enc,
                 Err(_) => {
@@ -477,6 +586,18 @@ impl<'t> Scheduler<'t> {
                     continue;
                 }
             };
+            if !kv.can_reserve(ids.len()) {
+                // The gate only passes unbackable prompts through when
+                // their reservation exceeds the pool's total capacity:
+                // such a request can never be admitted — reject, don't
+                // block the queue behind it.
+                debug_assert!(
+                    !kv.can_ever_reserve(ids.len()),
+                    "backable request drawn past a failing reserve gate"
+                );
+                reject(&req, report, on_response);
+                continue;
+            }
             let slot = kv.allocate(ids.len())?;
             let mut row = vec![pad; prompt_len];
             for (j, &t) in ids.iter().enumerate() {
@@ -504,6 +625,7 @@ impl<'t> Scheduler<'t> {
         kv: &mut KvSlots,
         slots: &mut Vec<Option<SlotCtx>>,
         hold_pos: &mut Vec<i32>,
+        bound: &mut Vec<usize>,
         st: StateHandle,
         new_bucket: usize,
         precision: Precision,
@@ -515,19 +637,29 @@ impl<'t> Scheduler<'t> {
         let old_bucket = slots.len();
 
         let moves = kv.resize(new_bucket)?;
+        // Snapshot the frozen positions: if the rebuild is skipped below,
+        // the live device state survives and every inert row must keep
+        // decoding at its exact frozen position (an executed migrate
+        // rebuilds vacant rows fresh, where hold = 1 is correct).
+        let saved_hold = hold_pos.clone();
         let mut plan: Vec<MigrateSlot> = (0..new_bucket).map(|_| MigrateSlot::Vacant).collect();
         let mut new_slots: Vec<Option<SlotCtx>> = (0..new_bucket).map(|_| None).collect();
         let mut new_hold = vec![1i32; new_bucket];
+        // Carried block tables move with their slots; the backend's own
+        // per-slot block view moves inside `migrate` (it sees the plan).
+        let mut new_bound = vec![0usize; new_bucket];
         for &(old, new) in &moves {
             plan[new] = MigrateSlot::Carry { from: old };
             new_slots[new] = slots[old].take();
             new_hold[new] = hold_pos[old];
+            new_bound[new] = bound[old];
         }
         // Re-home the carried contexts before any fallible admission work,
         // so an error below still leaves every in-flight request reachable
         // by the abort drain in `run`.
         *slots = new_slots;
         *hold_pos = new_hold;
+        *bound = new_bound;
         // Fill the free slots from the queue: each admission rides the same
         // batched rebuild instead of paying a per-request join.
         let mut admits = 0usize;
@@ -545,12 +677,15 @@ impl<'t> Scheduler<'t> {
         if admits == 0 && new_bucket >= old_bucket {
             // Nothing admissible and no shrink: a pure-carry migrate would
             // pay a full device rebuild for zero admissions. Undo the
-            // (identity-carry) grow and keep the existing state.
+            // (identity-carry) grow and keep the existing state — including
+            // the vacant rows' frozen positions, which the live state still
+            // expects verbatim.
             if new_bucket > old_bucket {
                 kv.resize(old_bucket)?;
                 slots.truncate(old_bucket);
-                hold_pos.truncate(old_bucket);
+                bound.truncate(old_bucket);
             }
+            *hold_pos = saved_hold;
             return Ok((st, false));
         }
         // Modeled migration price: the base reshape (one re-prefill at the
@@ -563,6 +698,11 @@ impl<'t> Scheduler<'t> {
         let t0 = Instant::now();
         let st = backend.migrate(st, &plan)?;
         report.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+        // Publish the block tables of the slots admitted in this rebuild
+        // (carried slots were remapped by the backend's migrate itself).
+        for slot in 0..new_bucket {
+            Self::sync_blocks(backend, kv, bound, slot)?;
+        }
         Ok((st, true))
     }
 
@@ -585,12 +725,14 @@ impl<'t> Scheduler<'t> {
 
         let mut rung = 0usize;
         let mut bucket = buckets[rung];
-        let mut kv = KvSlots::new(bucket, max_seq);
+        let mut kv = KvSlots::with_config(bucket, max_seq, self.cfg.kv.clone());
         slots.clear();
         slots.resize_with(bucket, || None);
         // Frozen decode position per vacant slot (inert rows still receive a
         // decode input every step; they re-write this position).
         let mut hold_pos = vec![1i32; bucket];
+        // Block-table sizes last published to the backend, per slot.
+        let mut bound = vec![0usize; bucket];
         let mut state: Option<StateHandle> = None;
         // Shrink hysteresis: consecutive low-occupancy evaluations.
         let mut idle_evals = 0usize;
@@ -614,18 +756,24 @@ impl<'t> Scheduler<'t> {
             // session to the cost model's target rung — the modeled-optimal
             // cover of the surviving occupants, in ONE migration (the
             // default SlotStepCostModel degrades this to the occupancy-only
-            // one-rung walk) ------------------------------------------------
+            // one-rung walk). A budgeted KV pool crossing its watermark
+            // shrinks *preemptively* (no patience): a memory-gated session
+            // cannot admit into its big bucket anyway, so it should stop
+            // paying that bucket's per-step price. -------------------------
             if rung > 0
                 && kv.occupied_count() > 0
                 && report.decode_steps >= last_eval_step + ladder.eval_every
             {
                 last_eval_step = report.decode_steps;
-                if queue.is_empty() && kv.occupied_count() <= buckets[rung - 1] {
+                let fits_down = kv.occupied_count() <= buckets[rung - 1];
+                let pressure =
+                    fits_down && kv.pool_utilization() >= ladder.pool_shrink_watermark;
+                if queue.is_empty() && fits_down {
                     idle_evals += 1;
                 } else {
                     idle_evals = 0;
                 }
-                if idle_evals >= ladder.shrink_patience {
+                if idle_evals >= ladder.shrink_patience || pressure {
                     idle_evals = 0;
                     let target = self.cfg.cost.shrink_target(
                         precision,
@@ -641,6 +789,7 @@ impl<'t> Scheduler<'t> {
                                 &mut kv,
                                 slots,
                                 &mut hold_pos,
+                                &mut bound,
                                 st,
                                 buckets[target],
                                 precision,
@@ -651,6 +800,9 @@ impl<'t> Scheduler<'t> {
                                 rung = target;
                                 bucket = buckets[rung];
                                 report.migrations_down += 1;
+                                if pressure {
+                                    report.pressure_shrinks += 1;
+                                }
                             }
                             state = Some(st);
                         }
@@ -671,12 +823,22 @@ impl<'t> Scheduler<'t> {
                     // starts on a small bucket — and pay one whole-bucket
                     // prefill, strictly cheaper than per-slot joins; any
                     // previous state is dropped and rebuilt from scratch.
-                    rung = cheapest_rung(&*self.cfg.cost, precision, buckets, queue.demand());
+                    // Feasibility is judged against the (drained, empty)
+                    // pool's live headroom when the pool is budgeted.
+                    rung = cheapest_rung(
+                        &*self.cfg.cost,
+                        precision,
+                        buckets,
+                        queue.demand(),
+                        kv.headroom().as_ref(),
+                    );
                     bucket = buckets[rung];
-                    kv = KvSlots::new(bucket, max_seq);
+                    report.fold_pool(&kv.pool_stats());
+                    kv = KvSlots::with_config(bucket, max_seq, self.cfg.kv.clone());
                     slots.clear();
                     slots.resize_with(bucket, || None);
                     hold_pos = vec![1i32; bucket];
+                    bound = vec![0usize; bucket];
                     idle_evals = 0;
                     drop(state.take());
                     let mut tokens = vec![pad; bucket * prompt_len];
@@ -713,9 +875,25 @@ impl<'t> Scheduler<'t> {
                         st = backend.evict(st, slot)?;
                         hold_pos[slot] = lens[slot];
                     }
+                    // Publish every admitted slot's block table.
+                    for slot in 0..bucket {
+                        Self::sync_blocks(backend, &kv, &mut bound, slot)?;
+                    }
                     state = Some(st);
-                } else if let Some(mut st) = state.take() {
-                    // Mid-flight admission. Queue pressure beyond the free
+                } else if kv.headroom().map_or(true, |h| h.free_pages > 0) {
+                    // Mid-flight admission — attempted only while the KV
+                    // pool can back at least one page: with the pool fully
+                    // mapped, nothing can be admitted and a grow target
+                    // would be undone anyway, so the block is skipped until
+                    // a retirement frees pages (no per-step resize churn).
+                    let Some(mut st) = state.take() else {
+                        // Unreachable: an occupied batch always carries a
+                        // state. Break (the pre-gate code path's behavior)
+                        // rather than spin.
+                        debug_assert!(false, "occupied batch has no state");
+                        break;
+                    };
+                    // Queue pressure beyond the free
                     // slots sizes a grow target: the smallest feasible rung
                     // covering occupied + weighted demand. The session
                     // grows there only when the cost model amortizes the
@@ -727,11 +905,27 @@ impl<'t> Scheduler<'t> {
                     // path); a single admission takes the per-slot join.
                     let demand = queue.demand();
                     let mut target = rung;
-                    if demand > kv.free_count() {
+                    // Growth is declined outright while the pool sits past
+                    // the shrink watermark — the mirror of the pressure
+                    // shrink, so the two cannot alternate (each would pay a
+                    // full device rebuild): a memory-gated session serves
+                    // its backlog through slot turnover until pages free.
+                    let memory_gated =
+                        kv.pool_utilization() >= ladder.pool_shrink_watermark;
+                    if demand > kv.free_count() && !memory_gated {
                         let mut t = rung_for(buckets, kv.occupied_count() + demand).max(rung);
                         // Never grow onto a rung the model deems infeasible
-                        // (e.g. it would not fit HBM at this precision).
-                        while t > rung && !self.cfg.cost.rung_feasible(precision, buckets[t]) {
+                        // (e.g. it would not fit HBM at this precision) —
+                        // judged live against the paged pool's headroom
+                        // when one is budgeted.
+                        let headroom = kv.headroom();
+                        while t > rung
+                            && !self.cfg.cost.rung_feasible_live(
+                                precision,
+                                buckets[t],
+                                headroom.as_ref(),
+                            )
+                        {
                             t -= 1;
                         }
                         if t > rung {
@@ -762,6 +956,7 @@ impl<'t> Scheduler<'t> {
                             &mut kv,
                             slots,
                             &mut hold_pos,
+                            &mut bound,
                             st,
                             buckets[target],
                             precision,
@@ -799,6 +994,7 @@ impl<'t> Scheduler<'t> {
                             // admissions route through migrate.
                             report.modeled_prefill_ms +=
                                 self.cfg.cost.prefill_ms(precision, 1);
+                            Self::sync_blocks(backend, &kv, &mut bound, slot)?;
                             slots[slot] = Some(ctx);
                             report.joins += 1;
                         }
@@ -848,6 +1044,9 @@ impl<'t> Scheduler<'t> {
                     hold_pos[slot] = pos as i32;
                     kv.release(slot)?;
                     st = backend.evict(st, slot)?;
+                    // The released pages return to the pool; publish the
+                    // now-empty block table.
+                    Self::sync_blocks(backend, &kv, &mut bound, slot)?;
                     let ctx = slots[slot].take().expect("finished slot has context");
                     report.completed += 1;
                     report.tokens_generated += ctx.output.len();
@@ -879,13 +1078,19 @@ impl<'t> Scheduler<'t> {
             report.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
             report.charge_step(bucket, live, step_cost);
             for slot in 0..bucket {
-                if matches!(kv.state(slot), SlotState::Active { .. }) && !kv.advance(slot)? {
-                    // KV window exhausted: force-finish (retired next step).
-                    slots[slot].as_mut().expect("active slot has context").truncated = true;
+                if matches!(kv.state(slot), SlotState::Active { .. }) {
+                    if !kv.advance(slot)? {
+                        // KV window (or paged pool) exhausted: force-finish
+                        // (retired next step).
+                        slots[slot].as_mut().expect("active slot has context").truncated = true;
+                    }
+                    // Page growth, if any, is published to the backend.
+                    Self::sync_blocks(backend, &kv, &mut bound, slot)?;
                 }
             }
             state = Some(st);
         }
+        report.fold_pool(&kv.pool_stats());
         Ok(())
     }
 
@@ -1291,6 +1496,123 @@ mod tests {
         let _ = SchedulerConfig::fixed(0, AdmitGate::Continuous);
     }
 
+    // ---- paged KV pool -------------------------------------------------
+
+    #[test]
+    fn paged_pool_defers_admissions_until_pages_free() {
+        // 7-page budget (page 16): two 3-page prompts fit, the third must
+        // wait for a retirement — deferred, never dropped.
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let cfg = SchedulerConfig::fixed(3, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 7 * 16));
+        let sched = Scheduler::new(&tk, cfg);
+        let reqs: Vec<Request> = (0..3).map(|i| request(i, CotMode::NoThink)).collect();
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 3, "deferred request still answered");
+        assert_eq!(report.completed, 3);
+        assert!(report.deferred >= 1, "third prompt must defer at least once");
+        assert_eq!(report.rejected, 0, "deferral is not rejection");
+        assert!(report.max_live <= 2, "pool admits at most two 3-page prompts");
+        assert!(resps.iter().all(|r| !r.tokens.is_empty()));
+        assert_eq!(report.kv_pages_allocated, report.kv_pages_released);
+        assert!(report.kv_peak_pool_util > 0.8, "pool ran near its budget");
+    }
+
+    #[test]
+    fn prompt_exceeding_pool_capacity_rejected_without_blocking_admission() {
+        // 2-page budget (page 16): an 11-token prompt needs one page and a
+        // 41-token prompt needs three — more than the pool will EVER hold.
+        // The impossible request must be rejected immediately, while a
+        // sequence is live, instead of deferring and blocking the request
+        // behind it until the batch drains.
+        let tk = fixture();
+        let prog = tk.prog;
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| vec![prog, rev, end]);
+        let cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 2 * 16));
+        let sched = Scheduler::new(&tk, cfg);
+        let small = |id: u64| {
+            // 11-token prompt, 3-token completion: never crosses page 0.
+            Request::new(id, "m", "fp16", CotMode::NoThink, vec![(vec![1, 2, 3], vec![3, 2, 1])])
+        };
+        let reqs = vec![small(0), request(1, CotMode::NoThink), small(2)];
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 3, "every caller answered");
+        assert_eq!(report.rejected, 1, "impossible prompt rejected, not deferred");
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.deferred, 0, "nothing waited on pages that never come");
+        assert!(resps[1].truncated && resps[1].tokens.is_empty());
+        assert_eq!(resps[0].tokens, vec![prog, rev, end]);
+        assert_eq!(resps[2].tokens, vec![prog, rev, end]);
+        assert_eq!(report.max_live, 2, "the request behind it was admitted alongside");
+    }
+
+    #[test]
+    fn paged_pool_is_byte_identical_to_unbounded_when_ample() {
+        let tk = fixture();
+        let workload = || {
+            let mut reqs = vec![request(0, CotMode::SlowThink)];
+            reqs.extend((1..6).map(|i| request(i, CotMode::NoThink)));
+            reqs
+        };
+        let run = |cfg: SchedulerConfig| {
+            let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 30));
+            let sched = Scheduler::new(&tk, cfg);
+            sched.run_batch(&mut be, &workload()).unwrap()
+        };
+        let base_cfg = SchedulerConfig::ladder(vec![2, 8], AdmitGate::Continuous).unwrap();
+        let (base, base_report) = run(base_cfg.clone());
+        // Ample budget: paging never defers, so the schedule is identical.
+        let (paged, paged_report) = run(base_cfg.with_kv(KvConfig::paged(16, 4096)));
+        assert_eq!(paged_report.deferred, 0);
+        assert_eq!(paged_report.decode_steps, base_report.decode_steps);
+        for (p, b) in paged.iter().zip(&base) {
+            assert_eq!(p.id, b.id);
+            assert_eq!(p.tokens, b.tokens, "request {} diverged under paging", p.id);
+        }
+        // Paged accounting is live: pages churned and were all returned.
+        assert!(paged_report.kv_pages_allocated > 0);
+        assert_eq!(paged_report.kv_pages_allocated, paged_report.kv_pages_released);
+        assert_eq!(base_report.kv_peak_pool_util, 0.0, "unbounded pool has no budget");
+    }
+
+    #[test]
+    fn pool_watermark_shrinks_preemptively_under_memory_pressure() {
+        // Ladder [4, 8], 12-page budget: launch covers demand 8 at bucket 8
+        // but the pool only backs four 3-page prompts, so the session is
+        // memory-gated at half its bucket. The watermark fires at the first
+        // evaluation (patience would need 99) and drops it to bucket 4.
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let cfg = SchedulerConfig {
+            buckets: vec![4, 8],
+            gate: AdmitGate::Continuous,
+            ladder: LadderConfig {
+                eval_every: 2,
+                shrink_patience: 99,
+                pool_shrink_watermark: 0.8,
+                ..LadderConfig::default()
+            },
+            ..SchedulerConfig::default()
+        }
+        .with_kv(KvConfig::paged(16, 12 * 16));
+        let sched = Scheduler::new(&tk, cfg);
+        let reqs: Vec<Request> = (0..8).map(|i| request(i, CotMode::NoThink)).collect();
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 8, "every request served across pool turnover");
+        assert!(report.deferred >= 1, "pool gated the launch at 4 of 8 slots");
+        assert_eq!(report.pressure_shrinks, 1, "watermark bypassed shrink patience");
+        assert!(report.migrations_down >= 1);
+        assert!(
+            report.rungs.iter().any(|r| r.bucket == 4),
+            "post-shrink steps charged at the small rung: {:?}",
+            report.rungs
+        );
+    }
+
     #[test]
     fn light_traffic_starts_on_the_smallest_rung() {
         let tk = fixture();
@@ -1485,9 +1807,14 @@ mod tests {
             SchedulerConfig {
                 buckets,
                 gate: AdmitGate::Continuous,
-                ladder: LadderConfig { eval_every: 4, shrink_patience: 2, grow_horizon: 24 },
-                cost: Arc::new(AtlasCostModel::openpangu_7b()),
-            },
+                ladder: LadderConfig {
+                    eval_every: 4,
+                    shrink_patience: 2,
+                    ..LadderConfig::default()
+                },
+                ..SchedulerConfig::default()
+            }
+            .with_cost(Arc::new(AtlasCostModel::openpangu_7b())),
         )
     }
 

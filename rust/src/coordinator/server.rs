@@ -264,6 +264,17 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         self.metrics.inc("joins", report.joins as u64);
         self.metrics.inc("migrations_up", report.migrations_up as u64);
         self.metrics.inc("migrations_down", report.migrations_down as u64);
+        // Paged-KV pool accounting: deferral pressure, page churn, peak
+        // pool utilization, and the modeled KV footprint per token. All
+        // zero under the legacy unbounded whole-window configuration.
+        self.metrics.inc("deferred_admissions", report.deferred as u64);
+        self.metrics.inc("pressure_shrinks", report.pressure_shrinks as u64);
+        self.metrics.inc("kv_pages_allocated", report.kv_pages_allocated as u64);
+        self.metrics.inc("kv_pages_released", report.kv_pages_released as u64);
+        self.metrics.observe("kv_pool_peak_util", report.kv_peak_pool_util);
+        if report.kv_bytes_per_token > 0.0 {
+            self.metrics.observe("kv_bytes_per_token", report.kv_bytes_per_token);
+        }
         self.metrics.observe("occupancy", report.occupancy());
         self.metrics.observe("admitted_per_step", report.admitted_per_step());
         self.metrics.observe("session_prefill_ms", report.prefill_ms);

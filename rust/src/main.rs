@@ -9,16 +9,19 @@
 //!                                  (table1|table2|table3|fig1|fig2|fig4|all)
 //! Common flags: --artifacts DIR (default ./artifacts), --quick N,
 //!               --model M, --variant V, --mode MODE, --iters N,
-//!               --cost atlas|slot-step (serve: ladder cost model)
+//!               --cost atlas|slot-step (serve: ladder cost model),
+//!               --kv paged|window|unbounded (serve: KV pool policy)
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use pangu_atlas_quant::atlas::memory_model::{KvPrecision, PageGeometry};
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
+use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
@@ -169,10 +172,31 @@ fn serve(args: &Args) -> Result<()> {
     // Ladder decisions priced by the Atlas A2 cost model (pass
     // --cost slot-step to fall back to the occupancy-only policy);
     // `modeled_session_ms` in the metrics report shows the result.
-    let mut sched_cfg = SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?;
+    let mut sched_cfg = SchedulerConfig::ladder(buckets.clone(), AdmitGate::Continuous)?;
+    // KV served from the paged block pool budgeted by the A2 memory model
+    // (quantized variants store KV at INT8). --kv window keeps the
+    // whole-window reservation baseline under the same budget; --kv
+    // unbounded disables the budget entirely.
+    let atlas = AtlasCostModel::openpangu_7b()
+        .with_kv_precision(KvPrecision::for_weights(precision));
+    let top_bucket = buckets.last().copied().unwrap_or(8);
+    let paged = atlas.kv_config(precision, PageGeometry::default(), top_bucket);
+    match args.get_or("kv", "paged") {
+        "paged" => {
+            sched_cfg = sched_cfg.with_kv(paged);
+        }
+        "window" => {
+            sched_cfg = sched_cfg.with_kv(KvConfig {
+                policy: pangu_atlas_quant::coordinator::kv::ReservePolicy::WholeWindow,
+                ..paged
+            });
+        }
+        "unbounded" => {}
+        other => anyhow::bail!("--kv expects paged|window|unbounded, got {other:?}"),
+    }
     match args.get_or("cost", "atlas") {
         "atlas" => {
-            sched_cfg = sched_cfg.with_cost(std::sync::Arc::new(AtlasCostModel::openpangu_7b()));
+            sched_cfg = sched_cfg.with_cost(std::sync::Arc::new(atlas));
         }
         "slot-step" => {}
         other => anyhow::bail!("--cost expects atlas|slot-step, got {other:?}"),

@@ -94,6 +94,21 @@ pub trait Backend {
     fn migrate_replay_depth(&self) -> usize {
         0
     }
+
+    /// Paged-KV block-table view: the scheduler publishes `slot`'s current
+    /// page list whenever it changes — after admission, after a decode
+    /// step that grew the table by a page, and (with an empty list) after
+    /// the slot's pages return to the pool. Backends with device-side
+    /// paged attention address KV through this table; backends without one
+    /// may ignore it (the default is a no-op). [`MockBackend`] uses it to
+    /// enforce the pool's central safety contract loudly: no page is ever
+    /// mapped by two live slots. A `migrate` moves each carried slot's
+    /// table to its new index (the backend sees the plan); only *newly
+    /// admitted* slots need a fresh `bind_blocks` after it.
+    fn bind_blocks(&mut self, slot: usize, blocks: &[usize]) -> Result<()> {
+        let _ = (slot, blocks);
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -112,6 +127,12 @@ struct SlotTrace {
     /// (token, position) pairs fed to `decode` since the prompt.
     decoded: Vec<(i32, i32)>,
     occupied: bool,
+    /// KV pages the coordinator's block pool mapped for this slot
+    /// ([`Backend::bind_blocks`]). The flat PJRT state has no device-side
+    /// paging, so the re-prefill emulation carries the table as addressing
+    /// metadata: it moves with the trace across `migrate` rebuilds exactly
+    /// as device-resident page mappings would.
+    blocks: Vec<usize>,
 }
 
 pub struct DeviceBackend<'r> {
@@ -218,6 +239,7 @@ impl Backend for DeviceBackend<'_> {
                 len: lens[b],
                 decoded: Vec::new(),
                 occupied: true,
+                blocks: Vec::new(),
             })
             .collect();
         Ok(StateHandle::Device(self.runtime.prefill(
@@ -248,6 +270,7 @@ impl Backend for DeviceBackend<'_> {
             len,
             decoded: Vec::new(),
             occupied: true,
+            blocks: Vec::new(),
         };
         self.joins += 1;
         // The old state is dropped; KV is rebuilt from the traces.
@@ -295,6 +318,7 @@ impl Backend for DeviceBackend<'_> {
                         len: *len,
                         decoded: Vec::new(),
                         occupied: true,
+                        blocks: Vec::new(),
                     }
                 }
                 MigrateSlot::Vacant => SlotTrace {
@@ -302,6 +326,7 @@ impl Backend for DeviceBackend<'_> {
                     len: 1,
                     decoded: Vec::new(),
                     occupied: false,
+                    blocks: Vec::new(),
                 },
             });
         }
@@ -356,6 +381,12 @@ impl Backend for DeviceBackend<'_> {
             .max()
             .unwrap_or(0)
     }
+
+    fn bind_blocks(&mut self, slot: usize, blocks: &[usize]) -> Result<()> {
+        anyhow::ensure!(slot < self.traces.len(), "bind_blocks slot {slot} out of range");
+        self.traces[slot].blocks = blocks.to_vec();
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -382,7 +413,8 @@ pub struct MockState {
 /// exactly the Backend ABI (including padded rows and slot join/evict), and
 /// fails loudly when a caller breaks the position contract — per-slot `pos`
 /// must be strictly monotone (+1 per step) while the slot advances and
-/// frozen once it stops.
+/// frozen once it stops — or the paged-KV block contract — no page mapped
+/// by two live slots at once ([`Backend::bind_blocks`]).
 pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     pub script_of: F,
     pub vocab: usize,
@@ -396,6 +428,12 @@ pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     pub evictions: usize,
     /// Bucket migrations (adaptive-ladder reshapes / batched joins).
     pub migrations: usize,
+    /// Block-table publications received ([`Backend::bind_blocks`]).
+    pub binds: usize,
+    /// Live page ownership (page id -> slot), validated on every bind.
+    block_owner: std::collections::HashMap<usize, usize>,
+    /// Per-slot published page lists (migrate remaps them with the plan).
+    slot_blocks: std::collections::HashMap<usize, Vec<usize>>,
 }
 
 impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
@@ -410,7 +448,15 @@ impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
             joins: 0,
             evictions: 0,
             migrations: 0,
+            binds: 0,
+            block_owner: std::collections::HashMap::new(),
+            slot_blocks: std::collections::HashMap::new(),
         }
+    }
+
+    /// Pages currently mapped across all slots (block-contract view).
+    pub fn mapped_pages(&self) -> usize {
+        self.block_owner.len()
     }
 }
 
@@ -431,6 +477,11 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         anyhow::ensure!(tokens.len() == batch * self.prompt_len);
         anyhow::ensure!(lens.len() == batch);
         self.prefills += 1;
+        // A whole-batch prefill starts a fresh session/pool lifetime: any
+        // block view from the previous batch (e.g. left by an aborted
+        // session) is obsolete, and its page ids are about to be reissued.
+        self.block_owner.clear();
+        self.slot_blocks.clear();
         let mut scripts = Vec::with_capacity(batch);
         for b in 0..batch {
             let prompt = &tokens[b * self.prompt_len..(b + 1) * self.prompt_len];
@@ -532,6 +583,22 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         }
         let dropped = (0..old_b).filter(|&i| s.occupied[i] && !carried[i]).count();
         anyhow::ensure!(dropped == 0, "migrate plan drops {dropped} live slots");
+        // Re-key the published block tables per the plan: a carried slot's
+        // pages move to its new index (exactly like its position-contract
+        // state); admitted/vacant slots start unmapped and are re-published
+        // by the scheduler after the migrate.
+        let mut old_tables = std::mem::take(&mut self.slot_blocks);
+        self.block_owner.clear();
+        for (slot, entry) in plan.iter().enumerate() {
+            if let MigrateSlot::Carry { from } = entry {
+                if let Some(blocks) = old_tables.remove(from) {
+                    for &b in &blocks {
+                        self.block_owner.insert(b, slot);
+                    }
+                    self.slot_blocks.insert(slot, blocks);
+                }
+            }
+        }
         self.migrations += 1;
         Ok(StateHandle::Mock(next))
     }
@@ -585,6 +652,28 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
             logits[slot * self.vocab + tok as usize] = 10.0;
         }
         Ok(logits)
+    }
+
+    fn bind_blocks(&mut self, slot: usize, blocks: &[usize]) -> Result<()> {
+        self.binds += 1;
+        // Drop the slot's previous mapping first (a re-publication replaces
+        // it wholesale), then claim the new pages, failing loudly if any is
+        // live under another slot — the pool contract this mock enforces.
+        if let Some(old) = self.slot_blocks.remove(&slot) {
+            for b in old {
+                self.block_owner.remove(&b);
+            }
+        }
+        for &b in blocks {
+            if let Some(&owner) = self.block_owner.get(&b) {
+                anyhow::bail!("page {b} double-mapped: live under slot {owner}, bound to {slot}");
+            }
+            self.block_owner.insert(b, slot);
+        }
+        if !blocks.is_empty() {
+            self.slot_blocks.insert(slot, blocks.to_vec());
+        }
+        Ok(())
     }
 }
 
@@ -828,6 +917,42 @@ mod tests {
         // migration price for it is the base reshape only.
         let be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
         assert_eq!(be.migrate_replay_depth(), 0);
+    }
+
+    #[test]
+    fn bind_blocks_enforces_single_ownership() {
+        let mut be = MockBackend::new(8, 4, 16, |_: &[i32]| vec![2]);
+        be.bind_blocks(0, &[0, 1, 2]).unwrap();
+        assert_eq!(be.mapped_pages(), 3);
+        // A second slot claiming a live page is the bug this guards.
+        let err = be.bind_blocks(1, &[2]).unwrap_err();
+        assert!(err.to_string().contains("double-mapped"), "{err}");
+        // Releasing (empty publication) frees the pages for reuse.
+        be.bind_blocks(0, &[]).unwrap();
+        assert_eq!(be.mapped_pages(), 0);
+        be.bind_blocks(1, &[2]).unwrap();
+        // Re-publication replaces a slot's own mapping (page growth).
+        be.bind_blocks(1, &[2, 3]).unwrap();
+        assert_eq!(be.mapped_pages(), 2);
+        assert_eq!(be.binds, 5);
+    }
+
+    #[test]
+    fn migrate_rekeys_block_tables_with_the_plan() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| vec![prompt[0] as u32, 2]);
+        let tokens = vec![3, 0, 0, 0, 6, 0, 0, 0, 4, 0, 0, 0];
+        let state = be.prefill(3, &tokens, &[1, 1, 1]).unwrap();
+        be.bind_blocks(0, &[10]).unwrap();
+        be.bind_blocks(2, &[11, 12]).unwrap();
+        let state = be.evict(state, 1).unwrap();
+        // Shrink 3 -> 2: slot 2 moves to index 1 and its pages move along.
+        let plan = vec![MigrateSlot::Carry { from: 0 }, MigrateSlot::Carry { from: 2 }];
+        let _state = be.migrate(state, &plan).unwrap();
+        assert_eq!(be.mapped_pages(), 3);
+        // Slot 1 (the moved slot) may now re-publish the same pages...
+        be.bind_blocks(1, &[11, 12]).unwrap();
+        // ...but slot 0 claiming them still trips the contract.
+        assert!(be.bind_blocks(0, &[11]).is_err());
     }
 
     #[test]

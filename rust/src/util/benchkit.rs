@@ -2,10 +2,15 @@
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly:
 //! warmup, timed iterations, outlier-robust summary, and a stable text
-//! format that the table/figure harnesses parse-free print.
+//! format that the table/figure harnesses parse-free print. A
+//! [`JsonEmitter`] additionally serializes finished groups (results,
+//! medians, notes) into a machine-readable perf snapshot — the `--json
+//! <path>` flag of the bench binaries, uploaded as a CI artifact so the
+//! perf trajectory accumulates across commits.
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 #[derive(Debug, Clone)]
@@ -94,12 +99,15 @@ pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult
 pub struct Group {
     pub title: String,
     pub results: Vec<BenchResult>,
+    /// Annotations recorded by [`Group::note`], keyed by the index of the
+    /// bench they annotate (the most recent one at note time).
+    pub notes: Vec<(usize, String)>,
 }
 
 impl Group {
     pub fn new(title: &str) -> Group {
         println!("\n=== bench group: {title} ===");
-        Group { title: title.to_string(), results: Vec::new() }
+        Group { title: title.to_string(), results: Vec::new(), notes: Vec::new() }
     }
 
     pub fn run<F: FnMut()>(&mut self, name: &str, cfg: &BenchConfig, f: F) -> &BenchResult {
@@ -112,13 +120,77 @@ impl Group {
     /// Print an indented annotation under the preceding bench line without
     /// affecting the recorded results — used to report modeled-cost
     /// accounting (e.g. `SchedReport::modeled_total_ms`) next to measured
-    /// wall time.
-    pub fn note(&self, text: &str) {
+    /// wall time. The note is kept and rides along into the
+    /// [`JsonEmitter`] snapshot.
+    pub fn note(&mut self, text: &str) {
         println!("    · {text}");
+        self.notes.push((self.results.len().saturating_sub(1), text.to_string()));
     }
 
     pub fn finish(self) {
         println!("=== end group: {} ({} benches) ===", self.title, self.results.len());
+    }
+}
+
+/// Collects finished bench groups into a JSON perf snapshot:
+///
+/// ```json
+/// {"groups": [{"title": "scheduler", "benches": [
+///     {"name": "...", "iters": 3, "mean_ms": 1.2, "p50_ms": 1.1,
+///      "p90_ms": 1.4, "notes": ["modeled 84.0 ms (...)"]}]}]}
+/// ```
+///
+/// Bench binaries call [`JsonEmitter::add`] on each group before
+/// `finish()` and [`JsonEmitter::write`] at exit when `--json <path>` was
+/// passed; CI uploads the file as the perf-trajectory artifact.
+#[derive(Default)]
+pub struct JsonEmitter {
+    groups: Vec<Json>,
+}
+
+impl JsonEmitter {
+    pub fn new() -> JsonEmitter {
+        JsonEmitter::default()
+    }
+
+    /// Record one group's results (call before `Group::finish`).
+    pub fn add(&mut self, group: &Group) {
+        let benches: Vec<Json> = group
+            .results
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let notes: Vec<Json> = group
+                    .notes
+                    .iter()
+                    .filter(|&&(at, _)| at == i)
+                    .map(|(_, text)| Json::str(text.clone()))
+                    .collect();
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_ms", Json::num(r.ms.mean)),
+                    ("p50_ms", Json::num(r.ms.p50)),
+                    ("p90_ms", Json::num(r.ms.p90)),
+                    ("notes", Json::Arr(notes)),
+                ])
+            })
+            .collect();
+        self.groups.push(Json::obj(vec![
+            ("title", Json::str(group.title.clone())),
+            ("benches", Json::Arr(benches)),
+        ]));
+    }
+
+    /// The snapshot as a JSON value (tested without touching disk).
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![("groups", Json::Arr(self.groups.clone()))])
+    }
+
+    /// Write the snapshot to `path` (pretty-printed).
+    pub fn write(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.snapshot().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("write perf snapshot {}: {e}", path.display()))
     }
 }
 
@@ -143,6 +215,50 @@ mod tests {
         assert!(count >= r.iters); // warmup included
         assert!(r.ms.mean >= 0.0);
         assert!(r.report_line().contains("noop"));
+    }
+
+    #[test]
+    fn json_emitter_snapshot_roundtrips() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 2,
+            max_iters: 2,
+            target_time: Duration::from_millis(1),
+        };
+        let mut g = Group::new("snapshot-test");
+        g.run("alpha", &cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        g.note("modeled 42.0 ms");
+        g.run("beta", &cfg, || {
+            std::hint::black_box(2 + 2);
+        });
+        let mut emitter = JsonEmitter::new();
+        emitter.add(&g);
+        g.finish();
+        let snap = emitter.snapshot();
+        let groups = snap.get("groups").as_arr().unwrap();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].get("title").as_str(), Some("snapshot-test"));
+        let benches = groups[0].get("benches").as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").as_str(), Some("alpha"));
+        assert_eq!(benches[0].get("iters").as_usize(), Some(2));
+        assert!(benches[0].get("mean_ms").as_f64().unwrap() >= 0.0);
+        // The note rides with the bench it annotated.
+        let notes = benches[0].get("notes").as_arr().unwrap();
+        assert_eq!(notes.len(), 1);
+        assert_eq!(notes[0].as_str(), Some("modeled 42.0 ms"));
+        assert!(benches[1].get("notes").as_arr().unwrap().is_empty());
+        // The serialized snapshot parses back to the same value.
+        let text = snap.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), snap);
+        // And the file path goes through write().
+        let path = std::env::temp_dir().join("benchkit_snapshot_test.json");
+        emitter.write(&path).unwrap();
+        let back = Json::parse_file(&path).unwrap();
+        assert_eq!(back, snap);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

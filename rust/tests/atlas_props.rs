@@ -10,6 +10,7 @@
 //!     16.84 - 10.55 ~= 6.3 GB in the paper: exactly the weight-precision
 //!     delta).
 
+use pangu_atlas_quant::atlas::memory_model::KvPrecision;
 use pangu_atlas_quant::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
 use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::util::propcheck::{check, ensure};
@@ -149,6 +150,88 @@ fn prop_memory_delta_batch_independent() {
             ensure(
                 (d1 - want).abs() < 1e-6,
                 format!("{p}: delta {d1} != weight delta {want}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_int8_kv_halves_kv_and_never_hurts() {
+    // KV precision is an independent axis: INT8 KV halves exactly the KV
+    // term at every (weight precision, batch), so totals are strictly
+    // smaller, savings strictly bigger, and the worst-case fit predicate
+    // monotone (everything FP16-KV fits, INT8-KV fits too).
+    check(
+        "int8-kv-halves-kv-term",
+        200,
+        0xA71E9,
+        |rng| (rng.range(0, 1) as u8, rng.range(0, 8), rng.range(1, 64)),
+        |&(dims_tag, p_tag, batch)| {
+            let spec = AtlasSpec::default();
+            let dims = dims_for(dims_tag);
+            let p = precision_for(p_tag);
+            let fp = memory_model::prefill_memory_kv(&dims, p, KvPrecision::Fp16, batch);
+            let q = memory_model::prefill_memory_kv(&dims, p, KvPrecision::Int8, batch);
+            ensure(
+                (q.kv_gib - fp.kv_gib / 2.0).abs() < 1e-9,
+                format!("{p}@{batch}: int8 kv {} != half of {}", q.kv_gib, fp.kv_gib),
+            )?;
+            ensure(
+                (fp.total_gib() - q.total_gib() - fp.kv_gib / 2.0).abs() < 1e-9,
+                "total delta must be exactly the halved KV term",
+            )?;
+            ensure(
+                memory_model::savings_pct_kv(&dims, p, KvPrecision::Int8, batch)
+                    >= memory_model::savings_pct_kv(&dims, p, KvPrecision::Fp16, batch),
+                "int8-kv savings must dominate",
+            )?;
+            if memory_model::fits_kv(&spec, &dims, p, KvPrecision::Fp16, batch) {
+                ensure(
+                    memory_model::fits_kv(&spec, &dims, p, KvPrecision::Int8, batch),
+                    "int8 kv must fit wherever fp16 kv fits",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_pool_budget_consistent_with_live_fit() {
+    // The paged pool's budget is the largest KV-token load the live-fit
+    // predicate accepts: budget tokens fit, budget + one page does not
+    // (modulo the sub-token float remainder), and the budget shrinks as
+    // the serving batch's activation workspace grows.
+    check(
+        "kv-pool-budget-live-fit",
+        100,
+        0xA71FA,
+        |rng| {
+            (
+                rng.range(0, 1) as u8,
+                rng.range(0, 8),
+                rng.range(1, 32),
+                if rng.chance(0.5) { KvPrecision::Fp16 } else { KvPrecision::Int8 },
+            )
+        },
+        |&(dims_tag, p_tag, batch, kv)| {
+            let spec = AtlasSpec::default();
+            let dims = dims_for(dims_tag);
+            let p = precision_for(p_tag);
+            let budget = memory_model::kv_pool_budget_tokens(&spec, &dims, p, kv, batch);
+            ensure(budget > 0, "default card must leave KV headroom")?;
+            ensure(
+                memory_model::fits_live(&spec, &dims, p, kv, batch, budget),
+                "the pool budget itself must fit",
+            )?;
+            ensure(
+                !memory_model::fits_live(&spec, &dims, p, kv, batch, budget + 64),
+                "a page past the budget must not fit",
+            )?;
+            let bigger_batch = memory_model::kv_pool_budget_tokens(&spec, &dims, p, kv, batch + 8);
+            ensure(
+                bigger_batch <= budget,
+                format!("budget grew with batch: {bigger_batch} > {budget}"),
             )
         },
     );

@@ -9,7 +9,7 @@ use std::time::Duration;
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel, SlotStepCostModel};
-use pangu_atlas_quant::coordinator::kv::{KvSlots, SlotState};
+use pangu_atlas_quant::coordinator::kv::{KvConfig, KvSlots, SlotState};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, Scheduler, SchedulerConfig,
@@ -170,8 +170,9 @@ fn prop_ladder_migration_invariants() {
                     shrink_patience: patience,
                     ..LadderConfig::default()
                 },
-                cost,
-            },
+                ..SchedulerConfig::default()
+            }
+            .with_cost(cost),
         );
         let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
         // Request 0 is a slow_think anchor (30 tokens ≈ 60 pump ticks):
@@ -249,6 +250,181 @@ fn prop_ladder_migration_invariants() {
                 atlas == fixed,
                 "atlas-cost outputs diverged from the fixed-bucket baseline",
             )?;
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV block pool
+// ---------------------------------------------------------------------------
+
+/// Randomized slot churn (alloc / advance / finish+release / resize) over a
+/// budgeted paged pool: no page double-mapped, the free list conserves
+/// pages at every step, and a budgeted pool never overruns its capacity.
+#[test]
+fn prop_block_pool_never_double_maps_and_conserves_pages() {
+    check(
+        "block-pool-invariants",
+        60,
+        0x9A6E,
+        |rng| {
+            let bucket = rng.range(1, 8);
+            let pages = rng.range(2, 24);
+            let whole_window = rng.chance(0.3);
+            let ops: Vec<u8> = (0..rng.range(4, 60)).map(|_| rng.range(0, 3) as u8).collect();
+            (bucket, pages, whole_window, ops)
+        },
+        |(bucket, pages, whole_window, ops)| {
+            let cfg = if *whole_window {
+                KvConfig::whole_window(16, pages * 16)
+            } else {
+                KvConfig::paged(16, pages * 16)
+            };
+            let mut kv = KvSlots::with_config(*bucket, 96, cfg);
+            let verify = |kv: &KvSlots| -> Result<(), String> {
+                ensure(kv.pool_conserved(), "free-list conservation broken")?;
+                // No page shared by two slots: the tables are disjoint.
+                let mut seen = std::collections::HashSet::new();
+                for slot in 0..kv.bucket() {
+                    for &b in kv.blocks(slot) {
+                        ensure(seen.insert(b), format!("page {b} mapped twice"))?;
+                    }
+                }
+                ensure(
+                    kv.pool_stats().used_pages <= *pages,
+                    "budgeted pool overran its capacity",
+                )
+            };
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    0 => {
+                        // Admission (when the gate allows it).
+                        let len = 10 + i % 30;
+                        if kv.can_reserve(len) {
+                            kv.allocate(len).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    1 => {
+                        // Advance every active slot one step.
+                        for slot in 0..kv.bucket() {
+                            if matches!(kv.state(slot), SlotState::Active { .. }) {
+                                let _ = kv.advance(slot).map_err(|e| e.to_string())?;
+                            }
+                        }
+                    }
+                    2 => {
+                        // Retire the first occupied slot.
+                        if let Some(slot) = (0..kv.bucket())
+                            .find(|&s| !matches!(kv.state(s), SlotState::Free))
+                        {
+                            kv.finish(slot).map_err(|e| e.to_string())?;
+                            kv.release(slot).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        // Resize to a shape that still fits the occupants
+                        // (exercises page re-owning across compaction).
+                        let occ = kv.occupied_count().max(1);
+                        let new_bucket = occ + i % 4;
+                        kv.resize(new_bucket).map_err(|e| e.to_string())?;
+                    }
+                }
+                verify(&kv)?;
+            }
+            // Drain: every page returns to the free list.
+            kv.reset();
+            ensure_eq(kv.pool_stats().used_pages, 0, "drained pool is empty")?;
+            let stats = kv.pool_stats();
+            ensure_eq(stats.allocs, stats.releases, "alloc/release balance")?;
+            verify(&kv)
+        },
+    );
+}
+
+/// Randomized workloads: an amply budgeted paged scheduler produces
+/// byte-identical outputs to the slot-granular (unbounded whole-window)
+/// baseline, and a tightly budgeted one still answers every request
+/// (pool exhaustion defers or truncates, never drops).
+#[test]
+fn prop_paged_scheduler_byte_identical_and_lossless() {
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    // `up_front` queues every arrival before the session starts (used for
+    // the tight-budget run, where pool exhaustion may truncate the anchor
+    // and end the session before late pump ticks would fire).
+    let run = |kv_cfg: Option<KvConfig>,
+               bucket: usize,
+               arrivals: &[(u8, usize)],
+               up_front: bool|
+     -> Result<(BTreeMap<u64, Vec<Vec<u32>>>, usize), String> {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut cfg = SchedulerConfig::fixed(bucket, AdmitGate::Continuous);
+        if let Some(kv_cfg) = kv_cfg {
+            cfg = cfg.with_kv(kv_cfg);
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        queue.push(mk_request(0, CotMode::SlowThink));
+        if up_front {
+            for (i, &(tag, _)) in arrivals.iter().enumerate() {
+                queue.push(mk_request(i as u64 + 1, modes[tag as usize]));
+            }
+        }
+        let mut pumps = 0usize;
+        let mut out: BTreeMap<u64, Vec<Vec<u32>>> = BTreeMap::new();
+        let report = sched
+            .run(
+                &mut be,
+                &mut queue,
+                &mut |q| {
+                    pumps += 1;
+                    if up_front {
+                        return;
+                    }
+                    for (i, &(tag, tick)) in arrivals.iter().enumerate() {
+                        if tick == pumps {
+                            q.push(mk_request(i as u64 + 1, modes[tag as usize]));
+                        }
+                    }
+                },
+                &mut |r| out.entry(r.id).or_default().push(r.tokens),
+            )
+            .map_err(|e| e.to_string())?;
+        Ok((out, report.deferred))
+    };
+    check(
+        "paged-byte-identical",
+        25,
+        0x9B7F,
+        |rng| {
+            let bucket = rng.range(1, 6);
+            let arrivals: Vec<(u8, usize)> = (0..rng.range(1, 6))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(1, 40)))
+                .collect();
+            let tight_pages = rng.range(4, 12);
+            (bucket, arrivals, tight_pages)
+        },
+        |(bucket, arrivals, tight_pages)| {
+            let (baseline, _) = run(None, *bucket, arrivals, false)?;
+            // Ample budget: identical schedule, identical bytes.
+            let (ample, deferred) =
+                run(Some(KvConfig::paged(16, 4096)), *bucket, arrivals, false)?;
+            ensure_eq(deferred, 0, "ample pool never defers")?;
+            ensure(ample == baseline, "ample paged run diverged from baseline")?;
+            // Tight budget: completeness only — every request answered
+            // exactly once, with tokens (deferral/truncation, not loss).
+            let (tight, _) = run(
+                Some(KvConfig::paged(16, tight_pages * 16)),
+                *bucket,
+                arrivals,
+                true,
+            )?;
+            ensure_eq(tight.len(), arrivals.len() + 1, "tight pool answered everyone")?;
+            for (id, responses) in &tight {
+                ensure_eq(responses.len(), 1, &format!("request {id} answered once"))?;
+            }
             Ok(())
         },
     );

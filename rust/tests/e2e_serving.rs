@@ -18,6 +18,7 @@ use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::{
     AtlasCostModel, CostModel, GrowContext, SlotStepCostModel,
 };
+use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, SchedReport, Scheduler, SchedulerConfig,
@@ -202,8 +203,9 @@ fn ramp_run_with_cost(
             buckets,
             gate: AdmitGate::Continuous,
             ladder: LadderConfig { eval_every: 2, shrink_patience: 2, ..LadderConfig::default() },
-            cost,
-        },
+            ..SchedulerConfig::default()
+        }
+        .with_cost(cost),
     );
     let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
     // Phase 1 (trickle): a 30-token slow_think straggler that keeps the
@@ -412,6 +414,142 @@ fn mock_server_ramp_charges_fewer_slot_steps_adaptively() -> Result<()> {
         adaptive_ttft <= fixed_ttft + 50.0,
         "burst TTFT regressed: adaptive {adaptive_ttft:.2}ms vs fixed {fixed_ttft:.2}ms"
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV block pool: token-granular vs whole-window reservation
+// ---------------------------------------------------------------------------
+
+/// The ISSUE 4 acceptance test. Under the SAME modeled HBM budget (16 KV
+/// pages of 16 tokens), a long-CoT `slow_think` workload:
+///
+///   * the **paged** pool admits strictly more concurrent sequences than
+///     the **whole-window** baseline (which burns a full 6-page `max_seq`
+///     window per admission),
+///   * defers strictly fewer admissions,
+///   * and produces outputs byte-identical to the unbounded slot-granular
+///     scheduler — while the mock backend's block contract (no page mapped
+///     by two live slots) is enforced on every publication.
+#[test]
+fn paged_pool_outadmits_whole_window_under_same_hbm_budget() {
+    // Long-CoT workload: every request is a 30-token slow_think trace over
+    // a 28-token prompt, so a sequence peaks at 4 pages — far under the
+    // 6-page whole-window reservation.
+    let workload = || -> Vec<Request> {
+        (0..6).map(|id| request(id, CotMode::SlowThink)).collect()
+    };
+    let budget_tokens = 16 * 16;
+    let run = |kv_cfg: Option<KvConfig>| {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut cfg = SchedulerConfig::fixed(3, AdmitGate::Continuous);
+        if let Some(kv_cfg) = kv_cfg {
+            cfg = cfg.with_kv(kv_cfg);
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let (resps, report) = sched.run_batch(&mut be, &workload()).expect("session");
+        assert_eq!(resps.len(), 6, "every request answered");
+        assert!(be.binds > 0, "block tables were published to the backend");
+        (resps, report)
+    };
+
+    let (baseline_resps, baseline) = run(None); // unbounded slot-granular
+    let (window_resps, window) = run(Some(KvConfig::whole_window(16, budget_tokens)));
+    let (paged_resps, paged) = run(Some(KvConfig::paged(16, budget_tokens)));
+
+    // Everyone completes everywhere: the budget defers, it never drops.
+    for report in [&baseline, &window, &paged] {
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.rejected, 0);
+    }
+    // Token-granular reservation admits strictly more concurrent long-CoT
+    // sequences than whole-window reservation under the same budget.
+    assert!(
+        paged.max_live > window.max_live,
+        "paged max_live {} !> whole-window {}",
+        paged.max_live,
+        window.max_live
+    );
+    // ...and defers strictly fewer admissions.
+    assert!(
+        paged.deferred < window.deferred,
+        "paged deferred {} !< whole-window {}",
+        paged.deferred,
+        window.deferred
+    );
+    assert!(window.deferred >= 1, "the baseline must actually hit the budget");
+    // The budget never bent the generation: the paged run is byte-identical
+    // to the unbounded slot-granular scheduler.
+    assert_eq!(paged.max_live, baseline.max_live, "budget did not gate the paged run");
+    for (p, b) in paged_resps.iter().zip(&baseline_resps) {
+        assert_eq!(p.id, b.id);
+        assert_eq!(p.tokens, b.tokens, "request {} diverged under paging", p.id);
+        assert!(!p.truncated, "no pool-exhaustion truncation in the paged run");
+    }
+    // The whole-window run also generates identical bytes — it is merely
+    // slower to admit (serialized by reservation, visible in slot-steps).
+    for (w, b) in window_resps.iter().zip(&baseline_resps) {
+        assert_eq!(w.tokens, b.tokens);
+    }
+    assert!(
+        paged.slot_steps() < window.slot_steps(),
+        "concurrency gain must show up as fewer slot-steps: paged {} vs window {}",
+        paged.slot_steps(),
+        window.slot_steps()
+    );
+    // Pool accounting: token-granular reservation pays 4 pages per
+    // sequence (prompt + trace) where the window pays 6, and every page
+    // comes back.
+    assert!(
+        paged.kv_pages_allocated < window.kv_pages_allocated,
+        "paged {} pages !< whole-window {}",
+        paged.kv_pages_allocated,
+        window.kv_pages_allocated
+    );
+    assert_eq!(paged.kv_pages_allocated, paged.kv_pages_released);
+    assert!(paged.kv_peak_pool_util > 0.0 && window.kv_peak_pool_util > 0.0);
+}
+
+/// Token-weighted demand (the `AdmitConfig::token_weighted_demand` flag)
+/// through the full server: long-prompt backlogs read as more demand, so
+/// the ladder launches on a bigger rung than the count-based default.
+#[test]
+fn token_weighted_demand_launches_a_bigger_rung() -> Result<()> {
+    let tk = Tokenizer::minilang_default();
+    let long_prompt_request = |id: u64| {
+        // Eight examples ≈ 106 prompt tokens (vs 28 for the short form).
+        let ex: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..8).map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1])).collect();
+        Request::new(id, "7b-sim", "int8", CotMode::NoThink, ex)
+    };
+    let run = |admit_cfg: AdmitConfig| -> Result<u64> {
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let provider = MockProvider::new(MockBackend::new(64, 128, 192, script));
+        let (mut server, handle) = Server::new(
+            provider,
+            &tk,
+            SchedulerConfig::ladder(vec![2, 8], AdmitGate::Continuous)?,
+            admit_cfg,
+        );
+        let rxs: Vec<_> = (0..2)
+            .map(|id| handle.submit(long_prompt_request(id)).unwrap())
+            .collect();
+        drop(handle);
+        server.run_until_idle(Duration::from_millis(200))?;
+        for rx in rxs {
+            assert!(!rx.recv()?.tokens.is_empty());
+        }
+        Ok(server.metrics.counter("slot_steps") / server.metrics.counter("decode_steps").max(1))
+    };
+    // Count-based: two queued requests -> demand 2 -> launch at bucket 2.
+    let count_bucket = run(AdmitConfig::with_wait(false, Duration::ZERO))?;
+    // Token-weighted: 2 x ceil(106/24) = 10 -> launch at bucket 8.
+    let token_bucket =
+        run(AdmitConfig::with_wait(false, Duration::ZERO).with_token_demand(24))?;
+    assert_eq!(count_bucket, 2, "count-based demand launches the small rung");
+    assert_eq!(token_bucket, 8, "token-weighted demand reflects prompt footprint");
     Ok(())
 }
 
