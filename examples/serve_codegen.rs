@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example serve_codegen -- \
 //!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4] \
-//!         [--long-cot] [--kv-page 16]
+//!         [--long-cot] [--kv-page 16] [--preempt]
 //!
 //! The KV cache is served from a paged block pool budgeted by the Atlas A2
 //! memory model (token-granular admission; see docs/ARCHITECTURE.md,
@@ -13,6 +13,9 @@
 //! `slow_think` requests with a raised generation budget — the regime
 //! where whole-window reservation exhausts HBM first while paging keeps
 //! admitting — and the report prints the pool-utilization metrics.
+//! `--preempt` turns on preempt-and-recompute: a pool starved mid-decode
+//! evicts-and-restores the cheapest sequence instead of truncating it (the
+//! report then shows preemptions / recomputed tokens / stall steps).
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -27,7 +30,7 @@ use pangu_atlas_quant::bench_suite::scoring::{self, Outcome};
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
-use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, PreemptConfig, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
 use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::runtime::backend::DeviceProvider;
@@ -45,6 +48,7 @@ fn main() -> Result<()> {
     let model = args.get_or("model", "7b-sim").to_string();
     let long_cot = args.flag("long-cot");
     let page_tokens = args.usize_or("kv-page", 16);
+    let preempt = args.flag("preempt");
 
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
@@ -81,12 +85,20 @@ fn main() -> Result<()> {
         kv_cfg.budget_tokens.unwrap_or(0),
         kv_cfg.bytes_per_token / 1024.0
     );
+    let mut sched_cfg = SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?
+        .with_cost(Arc::new(cost_model))
+        .with_kv(kv_cfg);
+    if preempt {
+        // Pool starvation parks-and-restores instead of truncating: no
+        // long-CoT trace is ever cut short by HBM pressure, at a measured
+        // recompute cost the pool report prints below.
+        sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
+        println!("preempt-and-recompute: ON (pool exhaustion evicts, never truncates)");
+    }
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
-        SchedulerConfig::ladder(buckets, AdmitGate::Continuous)?
-            .with_cost(Arc::new(cost_model))
-            .with_kv(kv_cfg),
+        sched_cfg,
         // Token-weighted demand: a backlog of long-prompt requests sizes
         // the launch rung by its real KV footprint.
         AdmitConfig::with_wait(true, Duration::from_millis(15)).with_token_demand(24),
@@ -192,6 +204,9 @@ fn print_pool_report(metrics: &pangu_atlas_quant::coordinator::metrics::Metrics)
     println!("pages released:       {}", metrics.counter("kv_pages_released"));
     println!("admissions deferred:  {}", metrics.counter("deferred_admissions"));
     println!("pressure shrinks:     {}", metrics.counter("pressure_shrinks"));
+    println!("preemptions:          {}", metrics.counter("preemptions"));
+    println!("recomputed tokens:    {}", metrics.counter("recomputed_tokens"));
+    println!("preempt stall steps:  {}", metrics.counter("preempt_stall_steps"));
     if let Some(util) = metrics.summary("kv_pool_peak_util") {
         println!(
             "peak pool util:       mean {:.1}%  max {:.1}%  (per session)",

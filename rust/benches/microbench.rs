@@ -24,7 +24,7 @@ use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::sampling;
 use pangu_atlas_quant::coordinator::scheduler::{
-    AdmitGate, LadderConfig, Scheduler, SchedulerConfig,
+    AdmitGate, LadderConfig, PreemptConfig, Scheduler, SchedulerConfig,
 };
 use pangu_atlas_quant::quant::{hadamard, int4, int8};
 use pangu_atlas_quant::runtime::backend::MockBackend;
@@ -207,6 +207,45 @@ fn main() {
             report.deferred,
             report.kv_pages_allocated,
             report.kv_peak_pool_util
+        ));
+    }
+    // Preempt-vs-truncate on a pool that genuinely starves mid-decode (four
+    // 5-page long-CoT sequences over 16 pages): the truncate policy is the
+    // cheap-but-lossy baseline, the preempt policy pays re-prefill replay
+    // to finish everyone — the notes carry truncations, preemptions, the
+    // recomputed-token bill, and both modeled-ms totals.
+    for (name, preempt) in [
+        ("starved session truncate policy (16 pages)", PreemptConfig::default()),
+        ("starved session preempt policy (16 pages)", PreemptConfig::enabled()),
+    ] {
+        let last = RefCell::new(None);
+        g.run(name, &quick, || {
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 40);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            let cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+                .with_kv(KvConfig::paged(16, 16 * 16))
+                .with_preempt(preempt.clone());
+            let sched = Scheduler::new(&tk, cfg);
+            let two_ex = vec![
+                (vec![1u8, 2, 3, 4, 5], vec![5u8, 4, 3, 2, 1]),
+                (vec![0u8, 1, 2, 3, 4], vec![4u8, 3, 2, 1, 0]),
+            ];
+            let reqs: Vec<Request> = (0..4)
+                .map(|i| Request::new(i, "7b-sim", "int8", CotMode::SlowThink, two_ex.clone()))
+                .collect();
+            let (resps, report) = sched.run_batch(&mut be, &reqs).expect("mock session");
+            let truncations = resps.iter().filter(|r| r.truncated).count();
+            std::hint::black_box((report.preemptions, truncations));
+            *last.borrow_mut() = Some((report, truncations));
+        });
+        let (report, truncations) = last.into_inner().expect("bench ran at least once");
+        g.note(&format!(
+            "{truncations} truncated, {} preemptions, {} recomputed tokens, \
+             {} stall steps, modeled {:.1} ms",
+            report.preemptions,
+            report.recomputed_tokens,
+            report.preempt_stall_steps,
+            report.modeled_total_ms()
         ));
     }
     emitter.add(&g);

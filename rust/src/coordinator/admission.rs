@@ -21,7 +21,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{PreemptedSeq, Request};
 use crate::tokenizer::CotMode;
 
 #[derive(Debug, Clone)]
@@ -93,11 +93,29 @@ pub struct AdmissionQueue {
     /// scheduler's per-step demand read is O(1) however long the backlog
     /// (each request's weight is computed once, at push).
     demand_sum: usize,
+    /// The preempted lane: sequences evicted mid-decode to relieve KV pool
+    /// pressure, parked here (FIFO by preemption time) until pages free.
+    /// The lane **outranks fresh arrivals absolutely**: the scheduler
+    /// restores from it before admitting anything from `queue`, and holds
+    /// fresh admission entirely while the lane is non-empty so a fresh
+    /// prompt can never steal the pages a parked sequence is waiting on.
+    /// Anti-starvation interaction: a parked sequence was admitted before
+    /// any queued request arrived at its slot, so lane-first ordering never
+    /// inverts arrival fairness — and because fresh requests stay in
+    /// `queue` untouched while the lane drains, the starvation clock keeps
+    /// running on the true FIFO head, which is admitted with its usual
+    /// priority the moment the lane clears.
+    preempted: VecDeque<PreemptedSeq>,
 }
 
 impl AdmissionQueue {
     pub fn new(cfg: AdmitConfig) -> AdmissionQueue {
-        AdmissionQueue { cfg, queue: VecDeque::new(), demand_sum: 0 }
+        AdmissionQueue {
+            cfg,
+            queue: VecDeque::new(),
+            demand_sum: 0,
+            preempted: VecDeque::new(),
+        }
     }
 
     /// One request's contribution to [`AdmissionQueue::demand`].
@@ -122,9 +140,41 @@ impl AdmissionQueue {
         self.queue.len()
     }
 
-    /// True when nothing is queued.
+    /// True when no *fresh* request is queued. The preempted lane is
+    /// deliberately excluded (check [`AdmissionQueue::has_parked`]): parked
+    /// sequences are not admission candidates — they restore through the
+    /// scheduler's replay path, and counting them here would send the
+    /// fresh-admission machinery chasing requests it cannot draw.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    // ---- preempted lane --------------------------------------------------
+
+    /// Park a preempted sequence for later restoration (FIFO).
+    pub fn park(&mut self, seq: PreemptedSeq) {
+        self.preempted.push_back(seq);
+    }
+
+    /// True while any preempted sequence awaits restoration.
+    pub fn has_parked(&self) -> bool {
+        !self.preempted.is_empty()
+    }
+
+    /// Number of parked sequences.
+    pub fn parked(&self) -> usize {
+        self.preempted.len()
+    }
+
+    /// The next sequence to restore (oldest preemption), if any — the
+    /// scheduler sizes its page reservation from this before committing.
+    pub fn peek_parked(&self) -> Option<&PreemptedSeq> {
+        self.preempted.front()
+    }
+
+    /// Remove and return the restoration head.
+    pub fn pop_parked(&mut self) -> Option<PreemptedSeq> {
+        self.preempted.pop_front()
     }
 
     /// The FIFO head (oldest arrival), if any — the scheduler reads its
@@ -323,6 +373,7 @@ mod tests {
             mode_aware: true,
             starvation_bound: Duration::from_millis(50),
             launch_deadline: Duration::from_secs(3600),
+            ..AdmitConfig::default()
         });
         q.push(req(0, CotMode::SlowThink));
         q.push(req(1, CotMode::NoThink));
@@ -342,6 +393,7 @@ mod tests {
             mode_aware: true,
             starvation_bound: Duration::from_secs(3600),
             launch_deadline: Duration::from_millis(50),
+            ..AdmitConfig::default()
         });
         let now = Instant::now();
         q.push(req(0, CotMode::NoThink));
@@ -416,6 +468,41 @@ mod tests {
         plain.push(req_with_examples(1, CotMode::NoThink, 8));
         plain.push(req_with_examples(2, CotMode::SlowThink, 8));
         assert_eq!(plain.demand(), 4);
+    }
+
+    #[test]
+    fn preempted_lane_is_fifo_and_invisible_to_fresh_admission() {
+        use crate::util::prng::Rng;
+        let parked = |id: u64, generated: usize| PreemptedSeq {
+            req: req(id, CotMode::SlowThink),
+            prompt_ids: vec![0; 10],
+            generated: vec![7; generated],
+            budget: 40,
+            rng: Rng::new(id),
+            ttft_ms: 1.0,
+            first_token_step: 2,
+            admitted_at: Instant::now(),
+            preemptions: 1,
+        };
+        let mut q = queue(true, 50);
+        assert!(!q.has_parked());
+        q.park(parked(10, 5));
+        q.park(parked(11, 3));
+        assert!(q.has_parked());
+        assert_eq!(q.parked(), 2);
+        assert_eq!(q.peek_parked().unwrap().req.id, 10, "oldest preemption first");
+        assert_eq!(q.peek_parked().unwrap().replay_len(), 15);
+        // The lane is a separate channel: fresh-admission accounting does
+        // not see it (the scheduler checks has_parked explicitly and holds
+        // fresh admission while the lane drains).
+        assert!(q.is_empty());
+        assert_eq!(q.demand(), 0);
+        assert!(q.admit(Instant::now()).is_none());
+        // FIFO restoration order, and popping drains the lane.
+        assert_eq!(q.pop_parked().unwrap().req.id, 10);
+        assert_eq!(q.pop_parked().unwrap().req.id, 11);
+        assert!(q.pop_parked().is_none());
+        assert!(!q.has_parked());
     }
 
     #[test]

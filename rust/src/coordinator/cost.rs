@@ -75,6 +75,20 @@ pub struct GrowContext {
     pub horizon_steps: usize,
 }
 
+/// One candidate for preempt-and-recompute eviction: a live slot whose
+/// pages could be released to un-starve the pool
+/// ([`CostModel::preempt_victim`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PreemptCandidate {
+    /// The candidate's batch slot.
+    pub slot: usize,
+    /// Replay-prefix length (prompt ⧺ generated so far) — the tokens a
+    /// restore must recompute, and the whole pricing input: every victim
+    /// frees at least the one page the starved slot needs, so selection
+    /// minimizes the recompute bill rather than maximizing pages freed.
+    pub replay_tokens: usize,
+}
+
 /// Prices the scheduler's ladder decisions for one serving session.
 ///
 /// All prices are in *modeled milliseconds* of device time under the
@@ -157,6 +171,41 @@ pub trait CostModel: fmt::Debug + Send + Sync {
                     .total_cmp(&self.decode_step_ms(precision, buckets[b]))
             })?;
         (self.decode_step_ms(precision, buckets[best]) < cur).then_some(best)
+    }
+
+    /// Modeled cost of recomputing one preempted sequence at restore time:
+    /// the single-row re-prefill of its prompt plus its generated tokens
+    /// replayed as single-slot decode steps — what the re-prefill backend
+    /// actually pays to rebuild the sequence.
+    fn preempt_cost_ms(&self, precision: Precision, candidate: &PreemptCandidate) -> f64 {
+        self.prefill_ms(precision, 1)
+            + candidate.replay_tokens as f64 * self.decode_step_ms(precision, 1)
+    }
+
+    /// Choose the eviction victim when the KV pool starves a decode: the
+    /// **cheapest-to-recompute** candidate, i.e. minimal
+    /// [`CostModel::preempt_cost_ms`]; price ties break to the smaller
+    /// replay prefix (youngest decode position), then the lowest slot, so
+    /// selection is deterministic. Returns the victim's slot, or `None`
+    /// when no candidate is preemptible (the caller truncates instead).
+    ///
+    /// Under [`SlotStepCostModel`] (free prefills, unit decode steps) the
+    /// price *is* the replay length, so the default recovers youngest-first
+    /// eviction exactly.
+    fn preempt_victim(
+        &self,
+        precision: Precision,
+        candidates: &[PreemptCandidate],
+    ) -> Option<usize> {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                self.preempt_cost_ms(precision, a)
+                    .total_cmp(&self.preempt_cost_ms(precision, b))
+                    .then(a.replay_tokens.cmp(&b.replay_tokens))
+                    .then(a.slot.cmp(&b.slot))
+            })
+            .map(|c| c.slot)
     }
 
     /// Whether growing `ctx.from -> ctx.to` slots pays off for the backlog
@@ -407,6 +456,31 @@ mod tests {
         // One queued request never pays for a full re-prefill: serving it
         // through the next freed slot is modeled-cheaper.
         assert!(!m.grow_pays_off(p, ctx(1, 1)));
+    }
+
+    #[test]
+    fn preempt_victim_is_cheapest_to_recompute() {
+        let cand = |slot, replay_tokens| PreemptCandidate { slot, replay_tokens };
+        // SlotStepCostModel: cost == replay length, so the youngest decode
+        // position (smallest replay prefix) is evicted.
+        let m = SlotStepCostModel;
+        let cs = [cand(0, 40), cand(1, 12), cand(2, 25)];
+        assert_eq!(m.preempt_cost_ms(Precision::Int8, &cs[1]), 12.0);
+        assert_eq!(m.preempt_victim(Precision::Int8, &cs), Some(1));
+        // Ties break to the lowest slot, deterministically.
+        let tied = [cand(3, 12), cand(1, 12)];
+        assert_eq!(m.preempt_victim(Precision::Int8, &tied), Some(1));
+        assert_eq!(m.preempt_victim(Precision::Int8, &[]), None);
+        // AtlasCostModel prices the same shape: a constant single-row
+        // re-prefill plus replay-proportional decode, so youngest still
+        // wins but the price is in modeled milliseconds.
+        let a = AtlasCostModel::openpangu_7b();
+        assert_eq!(a.preempt_victim(Precision::Int8, &cs), Some(1));
+        assert!(
+            a.preempt_cost_ms(Precision::Int8, &cs[1])
+                < a.preempt_cost_ms(Precision::Int8, &cs[2])
+        );
+        assert!(a.preempt_cost_ms(Precision::Int8, &cs[1]) > 0.0, "re-prefill is never free");
     }
 
     #[test]

@@ -304,6 +304,22 @@ impl BlockTable {
     }
 }
 
+/// Outcome of one [`KvSlots::try_advance`] attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Advance {
+    /// The slot advanced one position (growing its table if the position
+    /// crossed a page boundary).
+    Advanced,
+    /// The KV window is exhausted: no recompute can ever continue this
+    /// sequence, so the slot was force-finished at its current position.
+    WindowExhausted,
+    /// The pool could not back the next page. The slot is left *untouched*
+    /// (still Active at its current position): pool exhaustion is
+    /// transient, so the caller may preempt a victim to free pages and
+    /// retry, or accept truncation by calling [`KvSlots::finish`].
+    PoolExhausted,
+}
+
 /// Lifecycle state of one batch slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SlotState {
@@ -395,6 +411,30 @@ impl KvSlots {
         }
     }
 
+    /// Restoration gate for a preempted sequence whose replay prefix
+    /// (prompt plus tokens generated before eviction) is `replay_len`
+    /// tokens: a free slot exists and the pool can back the replay
+    /// reservation *plus* `headroom_pages` extra pages — the margin that
+    /// lets the restored sequence cross at least one more page boundary
+    /// before it could starve again (without it, a drained-to-exactly-fit
+    /// pool would restore and immediately re-preempt, a livelock).
+    pub fn can_restore(&self, replay_len: usize, headroom_pages: usize) -> bool {
+        self.slots.iter().any(|s| matches!(s, SlotState::Free))
+            && self.pool.free_pages() >= self.reserve_pages(replay_len) + headroom_pages
+    }
+
+    /// Whether a preempted sequence at `replay_len` could *ever* be
+    /// restored by this pool (its replay reservation plus the restore
+    /// headroom fits the total capacity). A sequence failing this must be
+    /// truncated instead of parked: no amount of retirement would ever
+    /// free enough pages, so parking it would stall forever.
+    pub fn can_ever_restore(&self, replay_len: usize, headroom_pages: usize) -> bool {
+        match self.pool.stats().capacity_pages {
+            Some(cap) => self.reserve_pages(replay_len) + headroom_pages <= cap,
+            None => true,
+        }
+    }
+
     /// Claim a free slot for a sequence whose prompt occupies [0, prompt_len).
     pub fn allocate(&mut self, prompt_len: usize) -> Result<usize> {
         if prompt_len >= self.max_seq {
@@ -418,35 +458,50 @@ impl KvSlots {
         Ok(slot)
     }
 
-    /// Advance an active slot by one decoded token; returns false when the
-    /// slot can no longer decode — the window is exhausted, or (paged
-    /// policy) the pool cannot back the next page — and the caller must
-    /// finish the sequence.
-    pub fn advance(&mut self, slot: usize) -> Result<bool> {
+    /// Advance an active slot by one decoded token, reporting *why* it
+    /// could not when it couldn't. Window exhaustion force-finishes the
+    /// slot (permanent — no recompute helps); pool exhaustion leaves it
+    /// Active at its frozen position so the scheduler can preempt a victim
+    /// and retry, or explicitly [`KvSlots::finish`] to accept truncation.
+    pub fn try_advance(&mut self, slot: usize) -> Result<Advance> {
         match self.slots[slot] {
             SlotState::Active { pos } => {
                 let next = pos + 1;
                 if next >= self.max_seq {
                     self.slots[slot] = SlotState::Finished { pos };
-                    return Ok(false);
+                    return Ok(Advance::WindowExhausted);
                 }
                 let need = self.pages_for_pos(next);
                 if need > self.tables[slot].len() {
                     debug_assert_eq!(need, self.tables[slot].len() + 1);
                     match self.pool.alloc(slot) {
                         Some(page) => self.tables[slot].blocks.push(page),
-                        None => {
-                            // Pool exhausted mid-decode: force-finish, same
-                            // contract as window exhaustion.
-                            self.slots[slot] = SlotState::Finished { pos };
-                            return Ok(false);
-                        }
+                        None => return Ok(Advance::PoolExhausted),
                     }
                 }
                 self.slots[slot] = SlotState::Active { pos: next };
-                Ok(true)
+                Ok(Advance::Advanced)
             }
             other => bail!("advance on non-active slot {slot}: {other:?}"),
+        }
+    }
+
+    /// Advance an active slot by one decoded token; returns false when the
+    /// slot can no longer decode — the window is exhausted, or (paged
+    /// policy) the pool cannot back the next page — and the caller must
+    /// finish the sequence. The legacy contract: pool exhaustion
+    /// force-finishes the slot exactly like window exhaustion. Callers that
+    /// want to preempt-and-recompute instead use [`KvSlots::try_advance`].
+    pub fn advance(&mut self, slot: usize) -> Result<bool> {
+        match self.try_advance(slot)? {
+            Advance::Advanced => Ok(true),
+            Advance::WindowExhausted => Ok(false),
+            Advance::PoolExhausted => {
+                // Pool exhausted mid-decode: force-finish, same contract as
+                // window exhaustion.
+                self.finish(slot)?;
+                Ok(false)
+            }
         }
     }
 
@@ -833,6 +888,52 @@ mod tests {
         kv.release(b).unwrap();
         assert!(kv.can_reserve(10));
         assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn try_advance_distinguishes_window_from_pool_exhaustion() {
+        // Window exhaustion: permanent, slot force-finished.
+        let mut kv = KvSlots::new(1, 12);
+        let s = kv.allocate(10).unwrap();
+        assert_eq!(kv.try_advance(s).unwrap(), Advance::Advanced); // pos 11
+        assert_eq!(kv.try_advance(s).unwrap(), Advance::WindowExhausted);
+        assert_eq!(kv.state(s), SlotState::Finished { pos: 11 });
+        // Pool exhaustion: transient, slot left Active at its position.
+        let mut kv = KvSlots::with_config(2, 96, KvConfig::paged(16, 2 * 16));
+        let a = kv.allocate(10).unwrap();
+        let b = kv.allocate(10).unwrap();
+        for _ in 10..15 {
+            assert_eq!(kv.try_advance(a).unwrap(), Advance::Advanced);
+        }
+        assert_eq!(kv.try_advance(a).unwrap(), Advance::PoolExhausted, "pool is dry");
+        assert_eq!(kv.state(a), SlotState::Active { pos: 15 }, "slot untouched");
+        assert_eq!(kv.block_count(a), 1, "no partial page claimed");
+        // Preempt the victim: its page frees and the retry succeeds.
+        kv.release(b).unwrap();
+        assert_eq!(kv.try_advance(a).unwrap(), Advance::Advanced);
+        assert_eq!(kv.state(a), SlotState::Active { pos: 16 });
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn restore_gates_require_replay_pages_plus_headroom() {
+        let mut kv = KvSlots::with_config(2, 96, KvConfig::paged(16, 4 * 16));
+        // Replay prefix of 20 tokens needs 2 pages; +1 headroom = 3 of 4.
+        assert!(kv.can_restore(20, 1));
+        assert!(kv.can_ever_restore(20, 1));
+        // A live occupant eating 2 pages leaves 2 free: restore must wait.
+        kv.allocate(20).unwrap();
+        assert!(!kv.can_restore(20, 1), "2 free < 2 replay + 1 headroom");
+        assert!(kv.can_restore(20, 0), "headroom is the margin that failed");
+        assert!(kv.can_ever_restore(20, 1), "retirement will free enough");
+        // A replay even an empty pool cannot hold is never restorable:
+        // 50 tokens -> 4 pages, +1 headroom > 4-page capacity.
+        assert!(!kv.can_ever_restore(50, 1));
+        assert!(kv.can_ever_restore(50, 0));
+        // Unbounded pools restore anything (they never preempt anyway).
+        let kv = KvSlots::new(1, 96);
+        assert!(kv.can_restore(90, 8));
+        assert!(kv.can_ever_restore(90, 8));
     }
 
     #[test]

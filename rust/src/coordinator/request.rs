@@ -3,6 +3,7 @@
 use std::time::Instant;
 
 use crate::tokenizer::CotMode;
+use crate::util::prng::Rng;
 
 /// Generation parameters for one request.
 #[derive(Debug, Clone)]
@@ -76,6 +77,46 @@ impl Request {
             .sum();
         let seps = self.examples.len().saturating_sub(1);
         3 + body + seps
+    }
+}
+
+/// An in-flight sequence evicted from its KV slot to relieve pool pressure
+/// (preempt-and-recompute), parked in the [`AdmissionQueue`] preempted lane
+/// until pages free. It carries everything needed to resume byte-identically
+/// to an un-preempted run: the original request, the encoded prompt, every
+/// token generated so far (prompt ⧺ generated is the replay prefix the
+/// backend re-prefills on restore), the sampler's RNG mid-sequence state,
+/// and the latency bookkeeping frozen at first admission.
+///
+/// [`AdmissionQueue`]: crate::coordinator::admission::AdmissionQueue
+#[derive(Debug, Clone)]
+pub struct PreemptedSeq {
+    pub req: Request,
+    /// Encoded prompt ids, exactly as first admitted.
+    pub prompt_ids: Vec<u32>,
+    /// Tokens generated (and already streamed into the slot context) before
+    /// eviction — replayed verbatim on restore, never re-sampled.
+    pub generated: Vec<u32>,
+    /// Generation budget sized at first admission.
+    pub budget: usize,
+    /// Sampler state mid-sequence, so post-restore sampling continues the
+    /// exact RNG stream of an un-preempted run.
+    pub rng: Rng,
+    /// TTFT observed at the first token (already emitted pre-eviction).
+    pub ttft_ms: f64,
+    pub first_token_step: usize,
+    /// Original slot-admission timestamp (service-time accounting spans the
+    /// parked interval — preemption must not hide its own latency).
+    pub admitted_at: Instant,
+    /// Times this sequence has been preempted (livelock guard input).
+    pub preemptions: usize,
+}
+
+impl PreemptedSeq {
+    /// Replay-prefix length in tokens: what a restore must re-reserve in
+    /// the KV pool and recompute on the device.
+    pub fn replay_len(&self) -> usize {
+        self.prompt_ids.len() + self.generated.len()
     }
 }
 

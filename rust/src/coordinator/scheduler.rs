@@ -42,10 +42,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::admission::{AdmissionQueue, AdmitOutcome};
-use crate::coordinator::cost::{cheapest_rung, CostModel, SlotStepCostModel};
+use crate::coordinator::cost::{cheapest_rung, CostModel, PreemptCandidate, SlotStepCostModel};
 use crate::coordinator::cot::{self, CotPolicy};
-use crate::coordinator::kv::{KvConfig, KvSlots, PoolStats, SlotState};
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::kv::{Advance, KvConfig, KvSlots, PoolStats, SlotState};
+use crate::coordinator::request::{PreemptedSeq, Request, Response};
 use crate::coordinator::sampling;
 use crate::quant::Precision;
 use crate::runtime::backend::{Backend, MigrateSlot, StateHandle};
@@ -100,6 +100,56 @@ impl Default for LadderConfig {
     }
 }
 
+/// Policy for KV pool exhaustion mid-decode: preempt-and-recompute vs the
+/// legacy force-finish truncation.
+///
+/// When the paged pool cannot back a starved slot's next page, the default
+/// (`enabled: false`) force-finishes that slot — the truncation failure the
+/// paper's long-CoT motivation warns about, since extended `slow_think`
+/// traces are exactly where pool pressure comes from. With preemption
+/// enabled the scheduler instead evicts the cheapest-to-recompute victim
+/// ([`CostModel::preempt_victim`](crate::coordinator::cost::CostModel::preempt_victim)),
+/// returns its pages to the pool, and parks the sequence — prompt plus
+/// everything decoded so far — in the [`AdmissionQueue`] preempted lane.
+/// Restoration rides the backend's `migrate` re-prefill path
+/// ([`MigrateSlot::Restore`](crate::runtime::backend::MigrateSlot)) and the
+/// final response is byte-identical to an un-preempted run.
+///
+/// Truncation is still chosen, even with preemption on, when no preemption
+/// can help: window exhaustion (permanent), no eligible victim (every
+/// candidate already preempted `max_per_seq` times, or its replay would
+/// never fit the pool), or a sequence whose own replay-plus-headroom
+/// exceeds total pool capacity.
+#[derive(Debug, Clone)]
+pub struct PreemptConfig {
+    /// Turn the preempt-and-recompute path on. Off by default: the legacy
+    /// truncation behavior is pinned by regression tests and must not
+    /// change under default configuration.
+    pub enabled: bool,
+    /// Livelock guard: a sequence preempted this many times is no longer a
+    /// victim candidate, so a pathologically tight pool degrades to
+    /// truncation instead of preempt/restore thrash.
+    pub max_per_seq: usize,
+    /// Extra free pages (beyond the replay reservation) required before a
+    /// parked sequence is restored, so it can cross at least one more page
+    /// boundary before starving again. Zero restores as early as possible
+    /// but risks immediate re-preemption on an exactly-full pool.
+    pub restore_headroom_pages: usize,
+}
+
+impl Default for PreemptConfig {
+    fn default() -> Self {
+        PreemptConfig { enabled: false, max_per_seq: 4, restore_headroom_pages: 1 }
+    }
+}
+
+impl PreemptConfig {
+    /// The preempt-and-recompute policy with default guards.
+    pub fn enabled() -> PreemptConfig {
+        PreemptConfig { enabled: true, ..PreemptConfig::default() }
+    }
+}
+
 /// Typed construction error for a bucket ladder
 /// ([`SchedulerConfig::ladder`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -144,6 +194,10 @@ pub struct SchedulerConfig {
     /// token-granular and memory-aware (requests whose pages cannot be
     /// reserved are deferred, never dropped).
     pub kv: KvConfig,
+    /// What happens when the budgeted pool starves a decode mid-sequence:
+    /// truncate (default — the pinned legacy behavior) or
+    /// preempt-and-recompute ([`PreemptConfig::enabled`]).
+    pub preempt: PreemptConfig,
 }
 
 impl SchedulerConfig {
@@ -197,6 +251,7 @@ impl SchedulerConfig {
             ladder: LadderConfig::default(),
             cost: Arc::new(SlotStepCostModel),
             kv: KvConfig::unbounded(),
+            preempt: PreemptConfig::default(),
         })
     }
 
@@ -214,6 +269,14 @@ impl SchedulerConfig {
     /// under the same budget.
     pub fn with_kv(mut self, kv: KvConfig) -> SchedulerConfig {
         self.kv = kv;
+        self
+    }
+
+    /// Replace the pool-exhaustion policy (builder style):
+    /// [`PreemptConfig::enabled`] turns on preempt-and-recompute so pool
+    /// starvation parks-and-restores instead of truncating.
+    pub fn with_preempt(mut self, preempt: PreemptConfig) -> SchedulerConfig {
+        self.preempt = preempt;
         self
     }
 
@@ -303,6 +366,19 @@ pub struct SchedReport {
     /// Of `migrations_down`, how many were triggered preemptively by the
     /// KV pool crossing [`LadderConfig::pool_shrink_watermark`].
     pub pressure_shrinks: usize,
+    /// Sequences evicted by the preempt-and-recompute policy to relieve
+    /// pool starvation (each is parked and later restored — or answered
+    /// truncated by the abort drain if the session dies first). Always 0
+    /// under the default truncate policy.
+    pub preemptions: usize,
+    /// Replay-prefix tokens (prompt ⧺ generated-so-far) re-prefilled by
+    /// restorations — the device-side recompute bill the preempt policy
+    /// pays to avoid truncating.
+    pub recomputed_tokens: usize,
+    /// Decode steps executed while at least one preempted sequence sat
+    /// parked awaiting pages — the latency cost of preemption visible to
+    /// the parked request.
+    pub preempt_stall_steps: usize,
     /// KV pages handed out over the session (page-churn numerator,
     /// accumulated across ladder relaunches).
     pub kv_pages_allocated: usize,
@@ -407,6 +483,8 @@ struct SlotCtx {
     ttft_ms: f64,
     first_token_step: usize,
     admitted_at: Instant,
+    /// Times this sequence has been evicted by the preempt policy.
+    preemptions: usize,
 }
 
 impl SlotCtx {
@@ -421,6 +499,43 @@ impl SlotCtx {
             ttft_ms: 0.0,
             first_token_step: 0,
             admitted_at: Instant::now(),
+            preemptions: 0,
+        }
+    }
+
+    /// Freeze this in-flight context into a parkable sequence. `prompt_ids`
+    /// is the encoded prompt exactly as first admitted (re-derived by the
+    /// caller — prompt encoding is deterministic).
+    fn into_parked(self, prompt_ids: Vec<u32>) -> PreemptedSeq {
+        debug_assert!(!self.truncated, "a truncated sequence is finished, not parkable");
+        PreemptedSeq {
+            req: self.req,
+            prompt_ids,
+            generated: self.output,
+            budget: self.budget,
+            rng: self.rng,
+            ttft_ms: self.ttft_ms,
+            first_token_step: self.first_token_step,
+            admitted_at: self.admitted_at,
+            preemptions: self.preemptions,
+        }
+    }
+
+    /// Thaw a parked sequence back into a live slot context; everything —
+    /// output so far, sampler RNG, latency clocks — resumes exactly where
+    /// eviction froze it, so the completed response is indistinguishable
+    /// from an un-preempted run.
+    fn from_parked(seq: PreemptedSeq) -> SlotCtx {
+        SlotCtx {
+            req: seq.req,
+            output: seq.generated,
+            budget: seq.budget,
+            truncated: false,
+            rng: seq.rng,
+            ttft_ms: seq.ttft_ms,
+            first_token_step: seq.first_token_step,
+            admitted_at: seq.admitted_at,
+            preemptions: seq.preemptions,
         }
     }
 
@@ -500,6 +615,10 @@ impl<'t> Scheduler<'t> {
             self.cfg.ladder.pool_shrink_watermark > 0.0,
             "pool shrink watermark must be positive"
         );
+        anyhow::ensure!(
+            !self.cfg.preempt.enabled || self.cfg.preempt.max_per_seq > 0,
+            "preempt max_per_seq must be positive when preemption is enabled"
+        );
         let mut report = SchedReport {
             kv_bytes_per_token: self.cfg.kv.bytes_per_token,
             ..SchedReport::default()
@@ -516,6 +635,16 @@ impl<'t> Scheduler<'t> {
                     report.aborted += 1;
                     on_response(ctx.into_response());
                 }
+            }
+            // Sequences parked in the preempted lane are in flight too —
+            // their partial output must come back the same way, or a
+            // preempted caller would hang where an un-preempted one would
+            // not (conservation: no response is ever lost to parking).
+            while let Some(seq) = queue.pop_parked() {
+                let mut ctx = SlotCtx::from_parked(seq);
+                ctx.truncated = true;
+                report.aborted += 1;
+                on_response(ctx.into_response());
             }
         }
         result?;
@@ -608,6 +737,101 @@ impl<'t> Scheduler<'t> {
         }
     }
 
+    /// Draw the restoration head of the preempted lane, if it can be backed
+    /// *now*: a free slot plus its replay pages plus the restore headroom.
+    /// Returns the claimed slot, the `MigrateSlot::Restore` plan entry that
+    /// recomputes it, and its thawed context. `None` when the lane is empty
+    /// or the head must keep waiting (the caller counts the stall).
+    fn draw_restore(
+        &self,
+        queue: &mut AdmissionQueue,
+        kv: &mut KvSlots,
+        prompt_len: usize,
+        report: &mut SchedReport,
+    ) -> Result<Option<(usize, MigrateSlot, SlotCtx)>> {
+        let Some(seq) = queue.peek_parked() else {
+            return Ok(None);
+        };
+        let replay = seq.replay_len();
+        if !kv.can_restore(replay, self.cfg.preempt.restore_headroom_pages) {
+            return Ok(None);
+        }
+        let seq = queue.pop_parked().expect("peeked head exists");
+        // Re-reserve the whole replay prefix: the restored table covers
+        // position `replay`, exactly where the decode loop resumes.
+        let slot = kv.allocate(replay)?;
+        let pad = self.tokenizer.pad as i32;
+        let mut row = vec![pad; prompt_len];
+        for (j, &t) in seq.prompt_ids.iter().enumerate() {
+            row[j] = t as i32;
+        }
+        let len = seq.prompt_ids.len() as i32;
+        let generated: Vec<i32> = seq.generated.iter().map(|&t| t as i32).collect();
+        report.recomputed_tokens += replay;
+        let entry = MigrateSlot::Restore { prompt: row, len, generated };
+        Ok(Some((slot, entry, SlotCtx::from_parked(seq))))
+    }
+
+    /// Pool starvation relief: pick the cheapest-to-recompute victim among
+    /// the live sequences, release its pages, evict its row, and park it in
+    /// the queue's preempted lane. Returns the (possibly replaced) state
+    /// and whether a victim was actually evicted — `false` means no
+    /// eligible candidate exists and the caller must fall back to
+    /// truncation. `pos_vec` is this step's decode-position vector: the
+    /// victim's row freezes at the position it was just decoded at.
+    #[allow(clippy::too_many_arguments)]
+    fn try_preempt<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        queue: &mut AdmissionQueue,
+        kv: &mut KvSlots,
+        slots: &mut [Option<SlotCtx>],
+        hold_pos: &mut [i32],
+        bound: &mut [usize],
+        st: StateHandle,
+        pos_vec: &[i32],
+        precision: Precision,
+        report: &mut SchedReport,
+    ) -> Result<(StateHandle, bool)> {
+        let headroom = self.cfg.preempt.restore_headroom_pages;
+        // Candidates: live sequences not yet over the preemption cap whose
+        // replay could ever be restored by this pool. The starved slot
+        // itself is a candidate — parking it IS the relief when it is the
+        // cheapest sequence to recompute.
+        let candidates: Vec<PreemptCandidate> = (0..kv.bucket())
+            .filter(|&s| matches!(kv.state(s), SlotState::Active { .. }))
+            .filter_map(|s| {
+                let ctx = slots[s].as_ref()?;
+                if ctx.preemptions >= self.cfg.preempt.max_per_seq {
+                    return None;
+                }
+                let replay = ctx.req.prompt_tokens_hint() + ctx.output.len();
+                if !kv.can_ever_restore(replay, headroom) {
+                    return None;
+                }
+                Some(PreemptCandidate { slot: s, replay_tokens: replay })
+            })
+            .collect();
+        let Some(victim) = self.cfg.cost.preempt_victim(precision, &candidates) else {
+            return Ok((st, false));
+        };
+        let mut ctx = slots[victim].take().expect("victim candidate has a context");
+        ctx.preemptions += 1;
+        report.preemptions += 1;
+        // Freeze the victim's row at the position it decoded this step,
+        // release its block table back to the pool, and publish the empty
+        // table so the backend's block view drops the mapping.
+        hold_pos[victim] = pos_vec[victim];
+        kv.release(victim)?;
+        let st = backend.evict(st, victim)?;
+        Self::sync_blocks(backend, kv, bound, victim)?;
+        // Park prompt ⧺ generated-so-far; prompt encoding is deterministic,
+        // so re-encoding here reproduces the admitted ids exactly.
+        let ids = cot::build_prompt(self.tokenizer, ctx.req.mode, &ctx.req.examples);
+        queue.park(ctx.into_parked(ids));
+        Ok((st, true))
+    }
+
     /// Migrate the live batch to `new_bucket` slots in one batched backend
     /// rebuild: every occupied KV slot is carried (compacted when
     /// shrinking), and as many queued requests as fit the new free slots
@@ -660,10 +884,27 @@ impl<'t> Scheduler<'t> {
         *slots = new_slots;
         *hold_pos = new_hold;
         *bound = new_bound;
-        // Fill the free slots from the queue: each admission rides the same
-        // batched rebuild instead of paying a per-request join.
+        // The preempted lane outranks fresh arrivals: restore parked
+        // sequences (FIFO) into free slots first, each re-reserving its
+        // replay pages, riding this same batched rebuild.
+        let mut restores = 0usize;
+        while kv.free_count() > 0 {
+            let Some((slot, entry, ctx)) =
+                self.draw_restore(queue, kv, prompt_len, report)?
+            else {
+                break;
+            };
+            plan[slot] = entry;
+            slots[slot] = Some(ctx);
+            restores += 1;
+        }
+        // Fill the remaining free slots from the queue: each admission
+        // rides the same batched rebuild instead of paying a per-request
+        // join. Fresh admission is held entirely while anything is still
+        // parked, so a fresh prompt can never claim the pages (or the last
+        // slot) a preempted sequence is waiting on.
         let mut admits = 0usize;
-        while kv.free_count() > 0 && !queue.is_empty() {
+        while !queue.has_parked() && kv.free_count() > 0 && !queue.is_empty() {
             let Some((slot, row, len, ctx)) =
                 self.draw_admit(queue, kv, prompt_len, max_seq, report, on_response)?
             else {
@@ -674,7 +915,7 @@ impl<'t> Scheduler<'t> {
             report.joins += 1;
             admits += 1;
         }
-        if admits == 0 && new_bucket >= old_bucket {
+        if admits + restores == 0 && new_bucket >= old_bucket {
             // Nothing admissible and no shrink: a pure-carry migrate would
             // pay a full device rebuild for zero admissions. Undo the
             // (identity-carry) grow and keep the existing state — including
@@ -765,7 +1006,14 @@ impl<'t> Scheduler<'t> {
                 && report.decode_steps >= last_eval_step + ladder.eval_every
             {
                 last_eval_step = report.decode_steps;
-                let fits_down = kv.occupied_count() <= buckets[rung - 1];
+                // A parked sequence restores into a FREE slot, and growth
+                // is unreachable while the lane holds fresh admission — so
+                // while anything is parked, size shrink decisions as if one
+                // more slot were occupied, or a shrink could eliminate the
+                // restoration slot and stall the lane until a retirement.
+                let shrink_occupied =
+                    kv.occupied_count() + usize::from(queue.has_parked());
+                let fits_down = shrink_occupied <= buckets[rung - 1];
                 let pressure =
                     fits_down && kv.pool_utilization() >= ladder.pool_shrink_watermark;
                 if queue.is_empty() && fits_down {
@@ -779,7 +1027,7 @@ impl<'t> Scheduler<'t> {
                         precision,
                         buckets,
                         rung,
-                        kv.occupied_count(),
+                        shrink_occupied,
                     );
                     if let Some(target) = target {
                         if let Some(st) = state.take() {
@@ -815,7 +1063,41 @@ impl<'t> Scheduler<'t> {
                 AdmitGate::Continuous => true,
                 AdmitGate::WaveBarrier => kv.occupied_count() == 0,
             };
-            if gate_open && !queue.is_empty() {
+            if gate_open && queue.has_parked() {
+                // Restoration outranks fresh admission: recompute parked
+                // sequences into free slots the moment their replay pages
+                // can be backed (one batched migrate rebuild, any fresh
+                // arrivals held behind the lane so they cannot steal freed
+                // pages). A non-empty lane implies a live session state —
+                // preemption only ever happens mid-decode. While the head
+                // still cannot be backed, taking this branch (and holding
+                // fresh admission) is the whole effect: the migrate_to call
+                // is skipped so a stalled step costs one gate check, not a
+                // resize-and-undo round trip.
+                let head_restorable = queue.peek_parked().map_or(false, |s| {
+                    kv.can_restore(s.replay_len(), self.cfg.preempt.restore_headroom_pages)
+                });
+                if head_restorable {
+                    if let Some(st) = state.take() {
+                        let (st, _) = self.migrate_to(
+                            backend,
+                            queue,
+                            &mut kv,
+                            slots,
+                            &mut hold_pos,
+                            &mut bound,
+                            st,
+                            bucket,
+                            precision,
+                            report,
+                            on_response,
+                        )?;
+                        state = Some(st);
+                    } else {
+                        debug_assert!(false, "preempted lane without a session state");
+                    }
+                }
+            } else if gate_open && !queue.is_empty() {
                 if kv.occupied_count() == 0 {
                     // Empty batch (first admission, a drained batch, or a
                     // barrier wave): relaunch at the cheapest feasible rung
@@ -1005,8 +1287,9 @@ impl<'t> Scheduler<'t> {
 
             let Some(mut st) = state.take() else {
                 // No state was ever created: the queue must be empty (an
-                // empty batch always opens the admission gate).
-                debug_assert!(queue.is_empty());
+                // empty batch always opens the admission gate), and nothing
+                // can be parked (parking requires a mid-decode session).
+                debug_assert!(queue.is_empty() && !queue.has_parked());
                 break;
             };
 
@@ -1056,7 +1339,10 @@ impl<'t> Scheduler<'t> {
 
             // ---- session end / step boundary -------------------------
             pump(queue);
-            if kv.occupied_count() == 0 && queue.is_empty() {
+            if kv.occupied_count() == 0 && queue.is_empty() && !queue.has_parked() {
+                // A parked sequence holds the session open: its pages are
+                // guaranteed restorable once the batch drains (checked at
+                // park time), so the next iteration restores it.
                 break;
             }
             if !kv.any_active() {
@@ -1077,18 +1363,66 @@ impl<'t> Scheduler<'t> {
             st = backend.decode(st, &next, &pos)?;
             report.decode_ms += t0.elapsed().as_secs_f64() * 1e3;
             report.charge_step(bucket, live, step_cost);
+            if queue.has_parked() {
+                report.preempt_stall_steps += 1;
+            }
+            let mut stx = Some(st);
             for slot in 0..bucket {
-                if matches!(kv.state(slot), SlotState::Active { .. }) {
-                    if !kv.advance(slot)? {
-                        // KV window (or paged pool) exhausted: force-finish
-                        // (retired next step).
+                if !matches!(kv.state(slot), SlotState::Active { .. }) {
+                    continue;
+                }
+                match kv.try_advance(slot)? {
+                    Advance::Advanced => {}
+                    Advance::WindowExhausted => {
+                        // Permanent: no recompute can extend the KV window.
+                        // Force-finish (retired next step).
                         slots[slot].as_mut().expect("active slot has context").truncated = true;
                     }
-                    // Page growth, if any, is published to the backend.
-                    Self::sync_blocks(backend, &kv, &mut bound, slot)?;
+                    Advance::PoolExhausted => {
+                        // The preempt-or-truncate site: pool starvation is
+                        // transient, so (policy permitting) evict the
+                        // cheapest-to-recompute victim and retry instead of
+                        // truncating the starved sequence.
+                        let mut relieved = false;
+                        if self.cfg.preempt.enabled {
+                            let st = stx.take().expect("advance loop holds the state");
+                            let (st, preempted) = self.try_preempt(
+                                backend,
+                                queue,
+                                &mut kv,
+                                slots,
+                                &mut hold_pos,
+                                &mut bound,
+                                st,
+                                &pos,
+                                precision,
+                                report,
+                            )?;
+                            stx = Some(st);
+                            if preempted {
+                                if !matches!(kv.state(slot), SlotState::Active { .. }) {
+                                    // The starved slot itself was the
+                                    // cheapest victim and parked itself.
+                                    continue;
+                                }
+                                // A victim freed at least one page, so the
+                                // retry cannot starve again.
+                                relieved = kv.try_advance(slot)? == Advance::Advanced;
+                            }
+                        }
+                        if !relieved {
+                            // Truncation: the pinned legacy behavior (and
+                            // the fallback when no victim is eligible).
+                            kv.finish(slot)?;
+                            slots[slot].as_mut().expect("active slot has context").truncated =
+                                true;
+                        }
+                    }
                 }
+                // Page growth, if any, is published to the backend.
+                Self::sync_blocks(backend, &kv, &mut bound, slot)?;
             }
-            state = Some(st);
+            state = stx;
         }
         report.fold_pool(&kv.pool_stats());
         Ok(())
@@ -1611,6 +1945,183 @@ mod tests {
             "post-shrink steps charged at the small rung: {:?}",
             report.rungs
         );
+    }
+
+    // ---- preempt-and-recompute ----------------------------------------
+
+    /// 11-token prompt (one 16-token page) — the preempt scenarios pivot on
+    /// page-crossing arithmetic, so prompts are kept to known sizes.
+    fn small_request(id: u64, mode: CotMode) -> Request {
+        Request::new(id, "m", "fp16", mode, vec![(vec![1, 2, 3], vec![3, 2, 1])])
+    }
+
+    /// Deterministic starvation fixture: two one-page prompts over a 3-page
+    /// pool, scripts of 12 tokens (END last). Both sequences cross into a
+    /// second page at position 16; the pool holds only one spare page, so
+    /// the second crossing starves.
+    fn tight_pool_pair(
+        preempt: PreemptConfig,
+    ) -> (Vec<Response>, SchedReport, usize, usize) {
+        let tk = fixture();
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut script = vec![rev; 11];
+        script.push(end);
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| script.clone());
+        let cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 3 * 16))
+            .with_preempt(preempt);
+        let sched = Scheduler::new(&tk, cfg);
+        let reqs = vec![small_request(0, CotMode::NoThink), small_request(1, CotMode::NoThink)];
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 2, "every caller answered");
+        (resps, report, be.restores, be.evictions)
+    }
+
+    /// Regression pin (PR 5 satellite): with `PreemptConfig` disabled — the
+    /// default — pool exhaustion truncates exactly as PR 4 shipped it, and
+    /// none of the new accounting fields move. The preempt path must not
+    /// leak into default configurations.
+    #[test]
+    fn preempt_disabled_pins_the_truncation_behavior() {
+        let tk = fixture();
+        let rev = tk.ops["REV"];
+        assert!(!PreemptConfig::default().enabled, "truncation is the default policy");
+        let (resps, report, restores, _) = tight_pool_pair(PreemptConfig::default());
+        // Slot 0 wins the spare page and completes; slot 1 starves at
+        // position 15 with 5 sampled tokens and is force-finished.
+        assert!(!resps[0].truncated);
+        assert_eq!(resps[0].tokens.len(), 12);
+        assert!(resps[1].truncated, "pool exhaustion truncates by default");
+        assert_eq!(resps[1].tokens, vec![rev; 5], "truncation point is pinned");
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.preemptions, 0);
+        assert_eq!(report.recomputed_tokens, 0);
+        assert_eq!(report.preempt_stall_steps, 0);
+        assert_eq!(restores, 0, "no Restore entry ever reaches the backend");
+    }
+
+    /// The preempt policy on the identical workload: nobody truncates, the
+    /// victim's output is byte-identical to an ample-pool run, and the
+    /// report accounts the eviction and every recomputed token.
+    #[test]
+    fn preempt_restores_byte_identical_instead_of_truncating() {
+        let (resps, report, restores, _) = tight_pool_pair(PreemptConfig::enabled());
+        for r in &resps {
+            assert!(!r.truncated, "request {} truncated under the preempt policy", r.id);
+            assert_eq!(r.tokens.len(), 12, "request {} lost tokens", r.id);
+        }
+        // Byte-identical to an ample pool (which never preempts).
+        let tk = fixture();
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut script = vec![rev; 11];
+        script.push(end);
+        let mut ample_be = MockBackend::new(64, 48, 96, move |_: &[i32]| script.clone());
+        let sched = Scheduler::new(
+            &tk,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous).with_kv(KvConfig::paged(16, 4096)),
+        );
+        let reqs = vec![small_request(0, CotMode::NoThink), small_request(1, CotMode::NoThink)];
+        let (ample, ample_report) = sched.run_batch(&mut ample_be, &reqs).unwrap();
+        assert_eq!(ample_report.preemptions, 0);
+        for (p, a) in resps.iter().zip(&ample) {
+            assert_eq!(p.id, a.id);
+            assert_eq!(p.tokens, a.tokens, "request {} diverged across preemption", p.id);
+        }
+        // Accounting: one eviction (the cheapest-to-recompute victim at its
+        // 16-token replay prefix), restored after stalling for pages.
+        assert_eq!(report.preemptions, 1);
+        assert_eq!(report.recomputed_tokens, 16, "prompt 11 + 5 generated replayed");
+        assert!(report.preempt_stall_steps >= 1, "the parked victim waited for pages");
+        assert_eq!(restores, 1, "backend executed exactly one Restore entry");
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(
+            report.kv_pages_allocated, report.kv_pages_released,
+            "preempt/restore churn conserves pages"
+        );
+    }
+
+    /// Victim selection is cost-driven, not starved-slot-driven: when the
+    /// starved sequence is expensive to recompute (long replay) and a
+    /// younger one is cheap, the *younger* one is evicted and the starved
+    /// slot resumes with the freed page.
+    #[test]
+    fn preempt_evicts_the_cheapest_victim_not_the_starved_slot() {
+        let tk = fixture();
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut script = vec![rev; 19];
+        script.push(end);
+        let mut be = MockBackend::new(64, 48, 96, move |_: &[i32]| script.clone());
+        // Slot 0: 11-token prompt (1 page). Slot 1: 28-token prompt (2
+        // pages). The 3-page pool is exactly full at admission; slot 1
+        // starves first (crossing into page 3 at position 32) while slot 0
+        // is the cheaper recompute (15-token replay vs 32) — and slot 1's
+        // own replay + headroom would not even fit the pool.
+        let cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 3 * 16))
+            .with_preempt(PreemptConfig::enabled());
+        let sched = Scheduler::new(&tk, cfg);
+        let reqs = vec![
+            small_request(0, CotMode::SlowThink),
+            Request::new(
+                1,
+                "m",
+                "fp16",
+                CotMode::SlowThink,
+                vec![
+                    (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+                    (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+                ],
+            ),
+        ];
+        let (resps, report) = sched.run_batch(&mut be, &reqs).unwrap();
+        assert_eq!(resps.len(), 2);
+        for r in &resps {
+            assert!(!r.truncated, "request {} truncated", r.id);
+            assert_eq!(r.tokens.len(), 20);
+        }
+        assert_eq!(report.preemptions, 1);
+        // The recompute bill identifies the victim: slot 0's replay was 11
+        // prompt + 4 generated = 15 tokens (the starved slot 1's would have
+        // been 32).
+        assert_eq!(report.recomputed_tokens, 15, "the cheap sequence was evicted");
+        assert_eq!(be.restores, 1);
+        assert_eq!(report.completed, 2);
+    }
+
+    /// A backend failure while a sequence sits parked must still answer
+    /// that caller: the abort drain covers the preempted lane.
+    #[test]
+    fn abort_drain_answers_parked_sequences() {
+        let tk = fixture();
+        let rev = tk.ops["REV"];
+        let end = tk.end;
+        let mut script = vec![rev; 11];
+        script.push(end);
+        let mut be = FailAfter {
+            inner: MockBackend::new(64, 48, 96, move |_: &[i32]| script.clone()),
+            fail_at: 8,
+        };
+        let cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 3 * 16))
+            .with_preempt(PreemptConfig::enabled());
+        let sched = Scheduler::new(&tk, cfg);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        queue.push(small_request(0, CotMode::NoThink));
+        queue.push(small_request(1, CotMode::NoThink));
+        let mut got = Vec::new();
+        let err = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |r| got.push(r))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected device failure"));
+        assert_eq!(got.len(), 2, "in-flight AND parked requests both answered");
+        for r in &got {
+            assert!(r.truncated);
+            assert!(!r.tokens.is_empty(), "partial output preserved for request {}", r.id);
+        }
     }
 
     #[test]

@@ -269,6 +269,13 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         // zero under the legacy unbounded whole-window configuration.
         self.metrics.inc("deferred_admissions", report.deferred as u64);
         self.metrics.inc("pressure_shrinks", report.pressure_shrinks as u64);
+        // Preempt-and-recompute accounting: evictions taken to relieve pool
+        // starvation, the replay tokens recomputed to restore them, and the
+        // decode steps parked sequences spent waiting. All zero under the
+        // default truncate policy.
+        self.metrics.inc("preemptions", report.preemptions as u64);
+        self.metrics.inc("recomputed_tokens", report.recomputed_tokens as u64);
+        self.metrics.inc("preempt_stall_steps", report.preempt_stall_steps as u64);
         self.metrics.inc("kv_pages_allocated", report.kv_pages_allocated as u64);
         self.metrics.inc("kv_pages_released", report.kv_pages_released as u64);
         self.metrics.observe("kv_pool_peak_util", report.kv_peak_pool_util);

@@ -10,7 +10,8 @@
 //! Common flags: --artifacts DIR (default ./artifacts), --quick N,
 //!               --model M, --variant V, --mode MODE, --iters N,
 //!               --cost atlas|slot-step (serve: ladder cost model),
-//!               --kv paged|window|unbounded (serve: KV pool policy)
+//!               --kv paged|window|unbounded (serve: KV pool policy),
+//!               --preempt (serve: preempt-and-recompute on pool exhaustion)
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -23,7 +24,9 @@ use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
-use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
+use pangu_atlas_quant::coordinator::scheduler::{
+    AdmitGate, PreemptConfig, Scheduler, SchedulerConfig,
+};
 use pangu_atlas_quant::coordinator::server::Server;
 use pangu_atlas_quant::harness::{self, Harness};
 use pangu_atlas_quant::quant::Precision;
@@ -200,6 +203,12 @@ fn serve(args: &Args) -> Result<()> {
         }
         "slot-step" => {}
         other => anyhow::bail!("--cost expects atlas|slot-step, got {other:?}"),
+    }
+    if args.flag("preempt") {
+        // Pool exhaustion mid-decode evicts-and-restores the cheapest
+        // sequence instead of truncating it (metrics: preemptions /
+        // recomputed_tokens / preempt_stall_steps).
+        sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
     }
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),

@@ -49,6 +49,18 @@ pub enum MigrateSlot {
     /// rebuild (the amortized `join_many` path). `prompt` is a full
     /// right-padded row of `prompt_len` tokens with `len` real ones.
     Admit { prompt: Vec<i32>, len: i32 },
+    /// Recompute a previously preempted sequence into this slot: re-prefill
+    /// the prompt and replay `generated` (the tokens it emitted before
+    /// eviction) so the slot resumes at position `len + generated.len()`
+    /// holding the logits for its *next* token. The replayed prefix is
+    /// prompt ⧺ generated — [`MockBackend`] fails the rebuild loudly if it
+    /// does not equal the trace the sequence had produced before eviction,
+    /// so a scheduler can never silently rewrite a preempted sequence's
+    /// history. Restoration is a contract extension of `migrate`, not a new
+    /// op: the re-prefill backend already rebuilds carried slots by
+    /// prompt-prefill + decode replay, and a restore is exactly that rebuild
+    /// for a slot whose state lives host-side while it was parked.
+    Restore { prompt: Vec<i32>, len: i32, generated: Vec<i32> },
     /// Leave the slot vacant (inert row until a later join claims it).
     Vacant,
 }
@@ -149,6 +161,9 @@ pub struct DeviceBackend<'r> {
     /// Bucket migrations served (one re-prefill + replay regardless of how
     /// many slots moved or joined — the amortized `join_many` path).
     pub migrations: usize,
+    /// Preempted sequences recomputed back into a slot
+    /// ([`MigrateSlot::Restore`] plan entries executed).
+    pub restores: usize,
 }
 
 impl<'r> DeviceBackend<'r> {
@@ -167,6 +182,7 @@ impl<'r> DeviceBackend<'r> {
             traces: Vec::new(),
             joins: 0,
             migrations: 0,
+            restores: 0,
         })
     }
 
@@ -321,6 +337,31 @@ impl Backend for DeviceBackend<'_> {
                         blocks: Vec::new(),
                     }
                 }
+                MigrateSlot::Restore { prompt, len, generated } => {
+                    anyhow::ensure!(
+                        prompt.len() == self.prompt_len,
+                        "restore prompt row must be padded"
+                    );
+                    anyhow::ensure!(
+                        *len >= 1 && (*len as usize) <= self.prompt_len,
+                        "bad restore len {len}"
+                    );
+                    self.restores += 1;
+                    // The replay prefix becomes this slot's decode history;
+                    // `rebuild` re-prefills the prompt and replays it token
+                    // by token — the same path every carried slot takes.
+                    SlotTrace {
+                        prompt_row: prompt.clone(),
+                        len: *len,
+                        decoded: generated
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &t)| (t, *len + i as i32))
+                            .collect(),
+                        occupied: true,
+                        blocks: Vec::new(),
+                    }
+                }
                 MigrateSlot::Vacant => SlotTrace {
                     prompt_row: vec![0; self.prompt_len],
                     len: 1,
@@ -413,8 +454,10 @@ pub struct MockState {
 /// exactly the Backend ABI (including padded rows and slot join/evict), and
 /// fails loudly when a caller breaks the position contract — per-slot `pos`
 /// must be strictly monotone (+1 per step) while the slot advances and
-/// frozen once it stops — or the paged-KV block contract — no page mapped
-/// by two live slots at once ([`Backend::bind_blocks`]).
+/// frozen once it stops — the paged-KV block contract — no page mapped
+/// by two live slots at once ([`Backend::bind_blocks`]) — or the
+/// replay-prefix contract — a [`MigrateSlot::Restore`]d slot's replayed
+/// tokens must equal its pre-eviction trace.
 pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     pub script_of: F,
     pub vocab: usize,
@@ -428,6 +471,9 @@ pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     pub evictions: usize,
     /// Bucket migrations (adaptive-ladder reshapes / batched joins).
     pub migrations: usize,
+    /// Preempted sequences recomputed back into a slot
+    /// ([`MigrateSlot::Restore`] entries executed).
+    pub restores: usize,
     /// Block-table publications received ([`Backend::bind_blocks`]).
     pub binds: usize,
     /// Live page ownership (page id -> slot), validated on every bind.
@@ -448,6 +494,7 @@ impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
             joins: 0,
             evictions: 0,
             migrations: 0,
+            restores: 0,
             binds: 0,
             block_owner: std::collections::HashMap::new(),
             slot_blocks: std::collections::HashMap::new(),
@@ -577,6 +624,44 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
                     next.occupied[slot] = true;
                     next.next_pos[slot] = *len;
                     self.joins += 1;
+                }
+                MigrateSlot::Restore { prompt, len, generated } => {
+                    anyhow::ensure!(
+                        prompt.len() == self.prompt_len,
+                        "restore prompt row must be padded"
+                    );
+                    anyhow::ensure!(
+                        *len >= 1 && (*len as usize) <= self.prompt_len,
+                        "bad restore len {len}"
+                    );
+                    // The replay-prefix contract, enforced loudly: the
+                    // restored slot's replayed tokens must equal its
+                    // pre-eviction trace. Scripts are deterministic in the
+                    // prompt, so the pre-eviction trace IS the script
+                    // prefix — any scheduler that rewrote, dropped, or
+                    // duplicated a parked token diverges here and fails
+                    // the rebuild instead of silently corrupting output.
+                    let script = (self.script_of)(&prompt[..*len as usize]);
+                    anyhow::ensure!(
+                        generated.len() <= script.len(),
+                        "restore slot {slot}: replay of {} tokens exceeds the \
+                         {}-token pre-eviction trace",
+                        generated.len(),
+                        script.len()
+                    );
+                    for (i, &g) in generated.iter().enumerate() {
+                        anyhow::ensure!(
+                            script[i] == g as u32,
+                            "restore slot {slot}: replayed prefix token {i} is {g}, \
+                             pre-eviction trace had {}",
+                            script[i]
+                        );
+                    }
+                    next.scripts[slot] = script;
+                    next.cursor[slot] = generated.len();
+                    next.occupied[slot] = true;
+                    next.next_pos[slot] = *len + generated.len() as i32;
+                    self.restores += 1;
                 }
                 MigrateSlot::Vacant => {}
             }
@@ -909,6 +994,63 @@ mod tests {
         let state = be.evict(state, 0).unwrap();
         let plan = vec![MigrateSlot::Carry { from: 0 }];
         assert!(be.migrate(state, &plan).unwrap_err().to_string().contains("vacant slot"));
+    }
+
+    #[test]
+    fn restore_resumes_at_frozen_position_with_pending_logits() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| {
+            vec![prompt[0] as u32, 5, 6, 2]
+        });
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        // Slot 0 decodes two tokens (3, 5), then is preempted (evicted).
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let state = be.decode(state, &[3], &[1]).unwrap();
+        let state = be.decode(state, &[5], &[2]).unwrap();
+        let state = be.evict(state, 0).unwrap();
+        // Restore into a 2-slot shape with a fresh admission alongside: the
+        // replayed prefix is exactly what the slot emitted before eviction.
+        let plan = vec![
+            MigrateSlot::Restore { prompt: vec![3, 0, 0, 0], len: 1, generated: vec![3, 5] },
+            MigrateSlot::Admit { prompt: vec![7, 0, 0, 0], len: 1 },
+        ];
+        let state = be.migrate(state, &plan).unwrap();
+        assert_eq!(be.restores, 1);
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 6, "restored slot holds its NEXT token's logits");
+        assert_eq!(argmax(&lg[8..16]), 7, "admitted slot unaffected");
+        // The restored slot resumes the position contract at its frozen
+        // position (len + replayed = 3); regressing to a replayed position
+        // is a contract violation.
+        let state = be.decode(state, &[6, 7], &[3, 1]).unwrap();
+        let lg = be.logits(&state).unwrap();
+        assert_eq!(argmax(&lg[0..8]), 2, "restored slot reached END");
+        assert!(be.decode(state, &[6, 7], &[1, 2]).is_err(), "pos regressed into the replay");
+    }
+
+    #[test]
+    fn restore_rejects_a_replay_that_diverges_from_the_trace() {
+        let mut be = MockBackend::new(8, 4, 16, |prompt: &[i32]| {
+            vec![prompt[0] as u32, 5, 6, 2]
+        });
+        let mk = |generated: Vec<i32>| {
+            vec![MigrateSlot::Restore { prompt: vec![3, 0, 0, 0], len: 1, generated }]
+        };
+        // A rewritten token in the replayed prefix fails the rebuild...
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let state = be.evict(state, 0).unwrap();
+        let err = be.migrate(state, &mk(vec![3, 4])).unwrap_err();
+        assert!(err.to_string().contains("pre-eviction trace"), "{err}");
+        // ...as does replaying more tokens than the trace ever held.
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let state = be.evict(state, 0).unwrap();
+        let err = be.migrate(state, &mk(vec![3, 5, 6, 2, 2])).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        // The faithful replay passes.
+        let state = be.prefill(1, &[3, 0, 0, 0], &[1]).unwrap();
+        let state = be.evict(state, 0).unwrap();
+        assert!(be.migrate(state, &mk(vec![3, 5])).is_ok());
     }
 
     #[test]

@@ -5,13 +5,28 @@
 
 use super::prng::Rng;
 
-/// Run `prop` against `cases` random inputs drawn by `gen`. On failure,
-/// panics with the case index and seed so the exact case can be replayed.
+/// Case-count multiplier read from `PROPCHECK_SCALE` (default 1), so CI can
+/// run the same properties at a raised case count in a dedicated job
+/// without touching every call site. Values that fail to parse (or 0) fall
+/// back to 1 — a misconfigured environment must never *weaken* a property
+/// below its in-repo baseline.
+fn scale() -> usize {
+    std::env::var("PROPCHECK_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&m| m >= 1)
+        .unwrap_or(1)
+}
+
+/// Run `prop` against `cases` random inputs drawn by `gen` (multiplied by
+/// `PROPCHECK_SCALE` when set). On failure, panics with the case index and
+/// seed so the exact case can be replayed.
 pub fn check<T: std::fmt::Debug, G, P>(name: &str, cases: usize, seed: u64, mut gen: G, mut prop: P)
 where
     G: FnMut(&mut Rng) -> T,
     P: FnMut(&T) -> Result<(), String>,
 {
+    let cases = cases * scale();
     let mut root = Rng::new(seed);
     for i in 0..cases {
         let case_seed = root.next_u64();
@@ -37,6 +52,7 @@ pub fn check_vec<T: Clone + std::fmt::Debug, G, P>(
     G: FnMut(&mut Rng) -> Vec<T>,
     P: FnMut(&[T]) -> Result<(), String>,
 {
+    let cases = cases * scale();
     let mut root = Rng::new(seed);
     for i in 0..cases {
         let case_seed = root.next_u64();

@@ -9,10 +9,10 @@ use std::time::Duration;
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel, SlotStepCostModel};
-use pangu_atlas_quant::coordinator::kv::{KvConfig, KvSlots, SlotState};
+use pangu_atlas_quant::coordinator::kv::{Advance, KvConfig, KvSlots, SlotState};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
-    AdmitGate, LadderConfig, Scheduler, SchedulerConfig,
+    AdmitGate, LadderConfig, PreemptConfig, Scheduler, SchedulerConfig,
 };
 use pangu_atlas_quant::quant::{int4, int8};
 use pangu_atlas_quant::runtime::backend::MockBackend;
@@ -426,6 +426,229 @@ fn prop_paged_scheduler_byte_identical_and_lossless() {
                 ensure_eq(responses.len(), 1, &format!("request {id} answered once"))?;
             }
             Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Preempt-and-recompute: the conservation suite ("no tokens lost, ever")
+// ---------------------------------------------------------------------------
+
+/// Randomized tight-pool workloads under the preempt policy: every response
+/// is byte-identical to the same workload over an ample pool, nothing is
+/// truncated, nothing is dropped or duplicated, and the mock backend's
+/// replay-prefix contract (a restored slot replays exactly its pre-eviction
+/// trace) is enforced on every restore — a contract violation fails the
+/// session, so a clean run IS the assertion.
+///
+/// Pool sizing keeps truncation genuinely avoidable: every sequence peaks
+/// at <= 4 pages (28-token prompt + 30-token trace), so any pool of >= 5
+/// pages can always restore (replay + 1 headroom page), and each
+/// preemption advances the starved sequence by at least one token — the
+/// policy must convert that headroom into zero truncations.
+#[test]
+fn prop_preempt_tight_pool_byte_identical_and_lossless() {
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    let run = |kv_cfg: Option<KvConfig>,
+               bucket: usize,
+               shapes: &[(u8, u8)]|
+     -> Result<(BTreeMap<u64, Vec<(Vec<u32>, bool)>>, usize, usize), String> {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut cfg = SchedulerConfig::fixed(bucket, AdmitGate::Continuous).with_preempt(
+            PreemptConfig { enabled: true, max_per_seq: 64, restore_headroom_pages: 1 },
+        );
+        if let Some(kv_cfg) = kv_cfg {
+            cfg = cfg.with_kv(kv_cfg);
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        for (i, &(mode_tag, examples)) in shapes.iter().enumerate() {
+            let ex: Vec<(Vec<u8>, Vec<u8>)> = (0..examples)
+                .map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]))
+                .collect();
+            queue.push(Request::new(i as u64, "7b-sim", "int8", modes[mode_tag as usize], ex));
+        }
+        let mut out: BTreeMap<u64, Vec<(Vec<u32>, bool)>> = BTreeMap::new();
+        let report = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |r| {
+                out.entry(r.id).or_default().push((r.tokens, r.truncated));
+            })
+            .map_err(|e| e.to_string())?;
+        // Conservation through the pool: every page the churn (admissions,
+        // growth, evictions, restores) handed out came back.
+        ensure_eq(
+            report.kv_pages_allocated,
+            report.kv_pages_released,
+            "page conservation across preempt/restore churn",
+        )?;
+        ensure_eq(report.preemptions, be.restores + report.aborted, "every eviction restored")?;
+        Ok((out, report.preemptions, report.recomputed_tokens))
+    };
+    let total_preemptions = std::cell::Cell::new(0usize);
+    check(
+        "preempt-no-tokens-lost",
+        25,
+        0x9E3E,
+        |rng| {
+            let bucket = rng.range(2, 4);
+            // 0..=2 examples per request: 3 / 15 / 28 prompt tokens.
+            let shapes: Vec<(u8, u8)> = (0..rng.range(2, 6))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            // 5..=8 pages: tight enough to starve, never too tight to
+            // restore a 4-page peak sequence plus headroom.
+            let pages = rng.range(5, 8);
+            (bucket, shapes, pages)
+        },
+        |(bucket, shapes, pages)| {
+            let (ample, _, _) = run(None, *bucket, shapes)?;
+            let (tight, preemptions, recomputed) =
+                run(Some(KvConfig::paged(16, pages * 16)), *bucket, shapes)?;
+            total_preemptions.set(total_preemptions.get() + preemptions);
+            ensure_eq(tight.len(), shapes.len(), "every request answered")?;
+            for (id, responses) in &tight {
+                ensure_eq(responses.len(), 1, &format!("request {id} answered exactly once"))?;
+                let (tokens, truncated) = &responses[0];
+                ensure(!*truncated, format!("request {id} truncated under preemption"))?;
+                let (ample_tokens, _) = &ample[id][0];
+                ensure(
+                    tokens == ample_tokens,
+                    format!("request {id} diverged from the ample-pool run"),
+                )?;
+            }
+            if preemptions == 0 {
+                ensure_eq(recomputed, 0, "no recompute without a preemption")?;
+            }
+            Ok(())
+        },
+    );
+    assert!(
+        total_preemptions.get() > 0,
+        "the generator never starved a pool: the property was vacuous"
+    );
+}
+
+/// Block-pool conservation under direct preempt/restore churn at the
+/// KvSlots layer: pages freed by an eviction grow the free list by exactly
+/// the victim's table; a restore re-reserves exactly the replay-prefix
+/// pages (the eviction's table, plus one page when the eviction happened
+/// *at* a crossing); no page is ever double-mapped across the eviction
+/// boundary; and after a full drain the pool's alloc/release ledger
+/// balances to zero.
+#[test]
+fn prop_preempt_block_conservation_under_churn() {
+    check(
+        "preempt-block-conservation",
+        60,
+        0x9CAF,
+        |rng| {
+            let bucket = rng.range(1, 6);
+            let pages = rng.range(3, 16);
+            let ops: Vec<u8> = (0..rng.range(6, 70)).map(|_| rng.range(0, 3) as u8).collect();
+            (bucket, pages, ops)
+        },
+        |(bucket, pages, ops)| {
+            let mut kv =
+                KvSlots::with_config(*bucket, 96, KvConfig::paged(16, pages * 16));
+            // Parked ledger: (replay_len, pages freed at eviction).
+            let mut parked: Vec<(usize, usize)> = Vec::new();
+            let verify = |kv: &KvSlots| -> Result<(), String> {
+                ensure(kv.pool_conserved(), "free-list conservation broken")?;
+                let mut seen = std::collections::HashSet::new();
+                for slot in 0..kv.bucket() {
+                    for &b in kv.blocks(slot) {
+                        ensure(
+                            seen.insert(b),
+                            format!("page {b} double-mapped across the eviction boundary"),
+                        )?;
+                    }
+                }
+                ensure(kv.pool_stats().used_pages <= *pages, "pool overran its budget")
+            };
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    0 => {
+                        // Admission.
+                        let len = 5 + i % 30;
+                        if kv.can_reserve(len) {
+                            kv.allocate(len).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    1 => {
+                        // Advance every active slot; a starved slot is
+                        // preempted (self-eviction: park its replay prefix
+                        // and free its table).
+                        for slot in 0..kv.bucket() {
+                            let SlotState::Active { pos } = kv.state(slot) else {
+                                continue;
+                            };
+                            match kv.try_advance(slot).map_err(|e| e.to_string())? {
+                                Advance::Advanced | Advance::WindowExhausted => {}
+                                Advance::PoolExhausted => {
+                                    let free_pages = |kv: &KvSlots| {
+                                        let s = kv.pool_stats();
+                                        s.capacity_pages.unwrap() - s.used_pages
+                                    };
+                                    let freed = kv.block_count(slot);
+                                    let free_before = free_pages(&kv);
+                                    kv.release(slot).map_err(|e| e.to_string())?;
+                                    let free_after = free_pages(&kv);
+                                    // Eviction grows the free list by
+                                    // exactly the victim's table.
+                                    ensure_eq(
+                                        free_after - free_before,
+                                        freed,
+                                        "pages freed by eviction",
+                                    )?;
+                                    // The replay prefix includes the token
+                                    // whose page could not be backed.
+                                    parked.push((pos + 1, freed));
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        // Restore the parked head when pages + headroom
+                        // allow; the re-reservation must equal the pages
+                        // freed at eviction, plus exactly one page for the
+                        // crossing the eviction was starved at.
+                        let Some(&(replay, freed)) = parked.first() else {
+                            continue;
+                        };
+                        if !kv.can_restore(replay, 1) {
+                            continue;
+                        }
+                        parked.remove(0);
+                        let used_before = kv.pool_stats().used_pages;
+                        kv.allocate(replay).map_err(|e| e.to_string())?;
+                        let reserved = kv.pool_stats().used_pages - used_before;
+                        ensure_eq(
+                            reserved,
+                            freed + 1,
+                            "restore re-reserves the evicted table + the starved page",
+                        )?;
+                    }
+                    _ => {
+                        // Retire the first occupied slot (pages recycle).
+                        if let Some(slot) = (0..kv.bucket())
+                            .find(|&s| !matches!(kv.state(s), SlotState::Free))
+                        {
+                            kv.finish(slot).map_err(|e| e.to_string())?;
+                            kv.release(slot).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                verify(&kv)?;
+            }
+            // Drain: every page returns; the ledger balances even with
+            // sequences still parked (a parked sequence holds zero pages).
+            kv.reset();
+            ensure_eq(kv.pool_stats().used_pages, 0, "drained pool is empty")?;
+            let stats = kv.pool_stats();
+            ensure_eq(stats.allocs, stats.releases, "alloc/release ledger balances")?;
+            verify(&kv)
         },
     );
 }

@@ -21,7 +21,7 @@ use pangu_atlas_quant::coordinator::cost::{
 use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
-    AdmitGate, LadderConfig, SchedReport, Scheduler, SchedulerConfig,
+    AdmitGate, LadderConfig, PreemptConfig, SchedReport, Scheduler, SchedulerConfig,
 };
 use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::coordinator::server::Server;
@@ -510,6 +510,89 @@ fn paged_pool_outadmits_whole_window_under_same_hbm_budget() {
     );
     assert_eq!(paged.kv_pages_allocated, paged.kv_pages_released);
     assert!(paged.kv_peak_pool_util > 0.0 && window.kv_peak_pool_util > 0.0);
+}
+
+/// The ISSUE 5 acceptance test: the PR 4 `--long-cot` tight-budget
+/// scenario (the same 16-page modeled HBM budget), pushed until the pool
+/// genuinely starves mid-decode, run preempt-vs-truncate:
+///
+///   * the **truncate** baseline (the default policy) force-finishes at
+///     least one long-CoT sequence — the paper's truncation failure;
+///   * the **preempt** policy finishes every sequence `truncated == false`
+///     with outputs byte-identical to an ample-pool run;
+///   * the price is visible and accounted: `recomputed_tokens` > 0 and a
+///     modeled-ms total no lower than the baseline's, printed below.
+#[test]
+fn preempt_policy_completes_long_cot_where_truncation_fails() {
+    // Four concurrent 28-token slow_think prompts tracing 40 tokens peak at
+    // 5 pages each (position 67) — 20 pages of demand against the same
+    // 16-page budget as the PR 4 e2e, so the fourth page-crossing starves.
+    let budget_tokens = 16 * 16;
+    let workload = || -> Vec<Request> {
+        (0..4).map(|id| request(id, CotMode::SlowThink)).collect()
+    };
+    let run = |kv_cfg: Option<KvConfig>, preempt: PreemptConfig| {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 40);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous).with_preempt(preempt);
+        if let Some(kv_cfg) = kv_cfg {
+            cfg = cfg.with_kv(kv_cfg);
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let (resps, report) = sched.run_batch(&mut be, &workload()).expect("session");
+        assert_eq!(resps.len(), 4, "every caller answered");
+        (resps, report, be.restores)
+    };
+
+    let (ample_resps, ample, _) = run(None, PreemptConfig::default());
+    let (trunc_resps, trunc, _) =
+        run(Some(KvConfig::paged(16, budget_tokens)), PreemptConfig::default());
+    let (preempt_resps, preempt, restores) =
+        run(Some(KvConfig::paged(16, budget_tokens)), PreemptConfig::enabled());
+
+    // The baseline genuinely starves: at least one sequence truncated.
+    let truncated = trunc_resps.iter().filter(|r| r.truncated).count();
+    assert!(truncated >= 1, "the truncate baseline must hit the budget");
+    assert_eq!(trunc.preemptions, 0, "the default policy never preempts");
+
+    // The preempt policy finishes everyone, byte-identical to ample HBM.
+    for (p, a) in preempt_resps.iter().zip(&ample_resps) {
+        assert_eq!(p.id, a.id);
+        assert!(!p.truncated, "request {} truncated under preemption", p.id);
+        assert_eq!(p.tokens, a.tokens, "request {} diverged from the ample run", p.id);
+    }
+    assert_eq!(preempt.completed, 4);
+
+    // Every preemption and recomputed token is accounted, and the recompute
+    // bill shows up in the modeled device-cost total.
+    assert!(preempt.preemptions >= 1, "completion was bought with a preemption");
+    assert_eq!(restores, preempt.preemptions, "every eviction was restored");
+    assert!(preempt.recomputed_tokens > 0);
+    assert!(preempt.preempt_stall_steps >= 1, "the parked victim waited for pages");
+    assert_eq!(
+        preempt.kv_pages_allocated, preempt.kv_pages_released,
+        "preempt/restore churn conserves the pool"
+    );
+    assert!(
+        preempt.decode_steps >= trunc.decode_steps,
+        "recompute cannot be cheaper than truncating"
+    );
+    assert_eq!(ample.preemptions, 0, "an ample pool never preempts");
+
+    println!(
+        "preempt-vs-truncate under a {budget_tokens}-token budget: \
+         truncate baseline finished {}/{} untruncated (modeled {:.1} ms); \
+         preempt finished 4/4 untruncated at a cost of {} preemption(s), \
+         {} recomputed tokens, {} stall steps (modeled {:.1} ms)",
+        4 - truncated,
+        4,
+        trunc.modeled_total_ms(),
+        preempt.preemptions,
+        preempt.recomputed_tokens,
+        preempt.preempt_stall_steps,
+        preempt.modeled_total_ms(),
+    );
 }
 
 /// Token-weighted demand (the `AdmitConfig::token_weighted_demand` flag)
