@@ -5,7 +5,14 @@
 //!
 //!     cargo run --release --example serve_codegen -- \
 //!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4] \
-//!         [--long-cot] [--kv-page 16] [--preempt]
+//!         [--long-cot] [--kv-page 16] [--preempt] \
+//!         [--devices N [--device-budget-pages P]]
+//!
+//! `--devices N` switches to the artifact-free multi-device fleet demo:
+//! N mock-backed devices, each with its own paged KV budget, serve a
+//! deliberately skewed workload under BOTH routers (cost-priced and
+//! round-robin), and the run prints the two per-device FleetReports plus
+//! a head-to-head comparison (deferrals, makespan, imbalance).
 //!
 //! The KV cache is served from a paged block pool budgeted by the Atlas A2
 //! memory model (token-granular admission; see docs/ARCHITECTURE.md,
@@ -49,6 +56,10 @@ fn main() -> Result<()> {
     let long_cot = args.flag("long-cot");
     let page_tokens = args.usize_or("kv-page", 16);
     let preempt = args.flag("preempt");
+    let devices = args.usize_or("devices", 0);
+    if devices > 0 {
+        return serve_fleet(devices, n_requests, args.usize_or("device-budget-pages", 10));
+    }
 
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
@@ -192,6 +203,82 @@ fn main() -> Result<()> {
         "host traffic:         {:.2} MiB in, {:.2} MiB out (KV stays on device)",
         rt.stats.host_bytes_in as f64 / (1 << 20) as f64,
         rt.stats.host_bytes_out as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+/// The `--devices N` fleet demo: a skewed workload (long slow_think
+/// traces alternating with short no_think ones) over N mock-backed
+/// devices with equal per-device KV budgets, served under both in-tree
+/// routers. Artifact-free — runs anywhere `cargo run` does.
+fn serve_fleet(devices: usize, n_requests: usize, pages: usize) -> Result<()> {
+    use pangu_atlas_quant::coordinator::fleet::{
+        Fleet, FleetConfig, FleetReport, LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
+    };
+    use pangu_atlas_quant::coordinator::kv::KvConfig;
+    use pangu_atlas_quant::coordinator::scheduler::AdmitGate;
+    use pangu_atlas_quant::runtime::backend::{minilang_mock_script, MockBackend, MockProvider};
+
+    anyhow::ensure!(pages > 0, "--device-budget-pages must be positive");
+    let tk = Tokenizer::minilang_default();
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let mode = if i % 2 == 0 { CotMode::SlowThink } else { CotMode::NoThink };
+            let examples = if mode == CotMode::SlowThink {
+                vec![
+                    (vec![1, 2, 3, 4], vec![4, 3, 2, 1]),
+                    (vec![2, 3, 4, 5], vec![5, 4, 3, 2]),
+                    (vec![3, 4, 5, 6], vec![6, 5, 4, 3]),
+                ]
+            } else {
+                vec![(vec![1, 2, 3], vec![3, 2, 1]), (vec![2, 3, 4], vec![4, 3, 2])]
+            };
+            Request::new(i as u64, "7b-sim", "int8", mode, examples)
+        })
+        .collect();
+    println!(
+        "fleet demo: {n_requests} skewed requests over {devices} mock devices, \
+         {pages} KV pages ({}-token budget) each\n",
+        pages * 16
+    );
+
+    let mut run = |policy: Box<dyn RouterPolicy>| -> Result<FleetReport> {
+        let sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, pages * 16));
+        let cfg = FleetConfig::homogeneous(
+            devices,
+            sched_cfg,
+            AdmitConfig::with_wait(false, Duration::ZERO),
+        );
+        let mut fleet = Fleet::new(&tk, cfg, policy)?;
+        let mut providers: Vec<_> = (0..devices)
+            .map(|_| {
+                MockProvider::new(MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 8)))
+            })
+            .collect();
+        let (resps, report) = fleet.run_batch(&mut providers, &requests)?;
+        anyhow::ensure!(resps.len() == requests.len(), "every request must be answered");
+        println!("{}", report.render());
+        Ok(report)
+    };
+    let cost = run(Box::new(LeastLoadedRouter::new()))?;
+    let rr = run(Box::new(RoundRobinRouter::new()))?;
+
+    println!("=== router head-to-head (same workload, same budgets) ===");
+    println!(
+        "deferred admissions:  cost {} vs round-robin {}",
+        cost.rollup().deferred,
+        rr.rollup().deferred
+    );
+    println!(
+        "makespan slot-steps:  cost {} vs round-robin {}",
+        cost.makespan_slot_steps(),
+        rr.makespan_slot_steps()
+    );
+    println!(
+        "imbalance ratio:      cost {:.3} vs round-robin {:.3}",
+        cost.imbalance_ratio(),
+        rr.imbalance_ratio()
     );
     Ok(())
 }

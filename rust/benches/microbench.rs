@@ -20,6 +20,7 @@ use std::sync::Arc;
 use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
+use pangu_atlas_quant::coordinator::fleet;
 use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::sampling;
@@ -246,6 +247,82 @@ fn main() {
             report.recomputed_tokens,
             report.preempt_stall_steps,
             report.modeled_total_ms()
+        ));
+    }
+    emitter.add(&g);
+    g.finish();
+
+    // ---- fleet router ---------------------------------------------------
+    // Round-robin vs cost-priced placement over 2 mock devices on a skewed
+    // long-CoT workload (long slow_think traces alternating with short
+    // no_think ones — the pattern round-robin folds onto one device). The
+    // notes carry the fleet completion metrics the e2e gate asserts on:
+    // makespan slot-steps, max/min device utilization, and deferrals.
+    let mut g = Group::new("fleet-router");
+    let skew_requests = || -> Vec<Request> {
+        (0..8)
+            .map(|i| {
+                let mode = if i % 2 == 0 { CotMode::SlowThink } else { CotMode::NoThink };
+                let ex = if mode == CotMode::SlowThink {
+                    vec![
+                        (vec![1u8, 2, 3, 4], vec![4u8, 3, 2, 1]),
+                        (vec![2u8, 3, 4, 5], vec![5u8, 4, 3, 2]),
+                        (vec![3u8, 4, 5, 6], vec![6u8, 5, 4, 3]),
+                    ]
+                } else {
+                    vec![
+                        (vec![1u8, 2, 3], vec![3u8, 2, 1]),
+                        (vec![2u8, 3, 4], vec![4u8, 3, 2]),
+                    ]
+                };
+                Request::new(i as u64, "7b-sim", "int8", mode, ex)
+            })
+            .collect()
+    };
+    type FleetRouterFactory = fn() -> Box<dyn fleet::RouterPolicy>;
+    let policies: [(&str, FleetRouterFactory); 2] = [
+        ("fleet 2-dev skewed round-robin", || Box::new(fleet::RoundRobinRouter::new())),
+        ("fleet 2-dev skewed cost-priced", || Box::new(fleet::LeastLoadedRouter::new())),
+    ];
+    for (name, mk_policy) in policies {
+        let last = RefCell::new(None);
+        g.run(name, &quick, || {
+            let sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+                .with_kv(KvConfig::paged(16, 10 * 16));
+            let cfg = fleet::FleetConfig::homogeneous(
+                2,
+                sched_cfg,
+                AdmitConfig::with_wait(false, std::time::Duration::ZERO),
+            );
+            let mut f = fleet::Fleet::new(&tk, cfg, mk_policy()).expect("fleet");
+            let mut providers: Vec<_> = (0..2)
+                .map(|_| {
+                    let script =
+                        pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 8);
+                    pangu_atlas_quant::runtime::backend::MockProvider::new(MockBackend::new(
+                        64, 48, 96, script,
+                    ))
+                })
+                .collect();
+            let (resps, report) =
+                f.run_batch(&mut providers, &skew_requests()).expect("fleet session");
+            assert_eq!(resps.len(), 8);
+            std::hint::black_box(report.makespan_slot_steps());
+            *last.borrow_mut() = Some(report);
+        });
+        let report = last.into_inner().expect("bench ran at least once");
+        let per_dev: Vec<usize> =
+            report.devices.iter().map(|d| d.report.slot_steps()).collect();
+        g.note(&format!(
+            "makespan {} slot-steps (devices max {} / min {}, imbalance {:.2}), \
+             {} deferred, {} rebalances, modeled {:.1} ms",
+            report.makespan_slot_steps(),
+            per_dev.iter().max().copied().unwrap_or(0),
+            per_dev.iter().min().copied().unwrap_or(0),
+            report.imbalance_ratio(),
+            report.rollup().deferred,
+            report.rebalances,
+            report.rollup().modeled_total_ms()
         ));
     }
     emitter.add(&g);

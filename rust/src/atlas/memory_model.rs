@@ -211,6 +211,30 @@ pub fn savings_pct_kv(
     100.0 * (fp - q) / fp
 }
 
+/// Per-device KV pool budgets for a fleet of (possibly heterogeneous)
+/// cards, one entry per spec in order. Every device runs the full model
+/// replica, so each card pays its *own* non-KV residents (weights at
+/// `precision`, activation workspace at the per-device serving `batch`,
+/// runtime overhead) out of its own HBM and keeps the rest for KV —
+/// a 32 GiB card in the same fleet as a 64 GiB card gets a budget
+/// smaller by more than the HBM ratio, because the residents are a fixed
+/// bill. This is the sizing hook behind
+/// [`crate::coordinator::fleet::Fleet`]'s per-device pools; budgets of 0
+/// (card cannot hold the residents) are returned as-is so the caller can
+/// reject the device rather than admit into a pool that cannot exist.
+pub fn fleet_kv_budget_tokens(
+    specs: &[AtlasSpec],
+    dims: &ModelDims,
+    precision: Precision,
+    kv: KvPrecision,
+    batch: usize,
+) -> Vec<usize> {
+    specs
+        .iter()
+        .map(|spec| kv_pool_budget_tokens(spec, dims, precision, kv, batch))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +252,34 @@ mod tests {
         assert!((delta2 - delta32).abs() < 0.5, "{delta2} vs {delta32}");
         // ~= params * 1 byte ≈ 6.5 GiB
         assert!((delta2 - 6.5).abs() < 1.0, "delta {delta2}");
+    }
+
+    /// Heterogeneous fleet sizing: budgets follow the per-card HBM after
+    /// the fixed resident bill, agree entry-by-entry with the single-card
+    /// function, and a card too small for the residents reports 0.
+    #[test]
+    fn fleet_budgets_are_per_card_and_resident_aware() {
+        let d = B7();
+        let big = AtlasSpec::default(); // 64 GiB
+        let small = AtlasSpec { hbm_gib: 32.0, ..AtlasSpec::default() };
+        let tiny = AtlasSpec { hbm_gib: 4.0, ..AtlasSpec::default() };
+        let budgets = fleet_kv_budget_tokens(
+            &[big, small, tiny],
+            &d,
+            Precision::Int8,
+            KvPrecision::Fp16,
+            8,
+        );
+        assert_eq!(budgets.len(), 3);
+        assert_eq!(
+            budgets[0],
+            kv_pool_budget_tokens(&big, &d, Precision::Int8, KvPrecision::Fp16, 8),
+            "fleet entry = single-card sizing"
+        );
+        assert!(budgets[0] > budgets[1], "more HBM, more KV budget");
+        // The resident bill is fixed, so halving HBM more than halves KV.
+        assert!(budgets[1] < budgets[0] / 2 + 1, "{budgets:?}");
+        assert_eq!(budgets[2], 0, "card below the resident bill has no pool");
     }
 
     #[test]

@@ -183,6 +183,21 @@ impl AdmissionQueue {
         self.queue.front()
     }
 
+    /// Remove and return the *youngest* queued request (the FIFO tail) —
+    /// the fleet router's rebalance primitive. Only queued,
+    /// not-yet-prefilled requests can be re-placed on a sibling device
+    /// (an admitted sequence has device-resident KV state; a parked one
+    /// has a replay prefix pinned to its pool), and taking from the tail
+    /// preserves head-side FIFO fairness: the requests that have waited
+    /// longest keep their position on this device, the newest arrival is
+    /// the one that travels. The incremental demand total is maintained.
+    pub fn steal_tail(&mut self) -> Option<Request> {
+        let req = self.queue.pop_back()?;
+        let w = self.weight(&req);
+        self.demand_sum -= w;
+        Some(req)
+    }
+
     /// Weighted backlog for the scheduler's bucket-ladder grow decision:
     /// every queued request counts one slot, and a `slow_think` request
     /// counts double because it will pin its slot for a long trace
@@ -348,6 +363,27 @@ mod tests {
         let now = Instant::now();
         assert_eq!(q.admit(now).unwrap().id, 0);
         assert_eq!(q.admit(now).unwrap().id, 1);
+    }
+
+    /// The rebalance primitive takes from the tail (youngest arrival),
+    /// keeps FIFO order on the survivors, and maintains the incremental
+    /// demand total exactly.
+    #[test]
+    fn steal_tail_takes_youngest_and_keeps_demand_exact() {
+        let mut q = queue(false, 0);
+        assert!(q.steal_tail().is_none(), "empty queue yields nothing");
+        q.push(req(0, CotMode::NoThink));
+        q.push(req(1, CotMode::SlowThink));
+        q.push(req(2, CotMode::NoThink));
+        let full = q.demand();
+        assert_eq!(q.steal_tail().unwrap().id, 2, "tail travels first");
+        assert_eq!(q.steal_tail().unwrap().id, 1);
+        // slow_think weighs double in the demand total.
+        assert_eq!(q.demand(), full - 3);
+        assert_eq!(q.queued(), 1);
+        // The head kept its place for normal admission.
+        assert_eq!(q.admit(Instant::now()).unwrap().id, 0);
+        assert_eq!(q.demand(), 0);
     }
 
     #[test]

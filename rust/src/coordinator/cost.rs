@@ -226,6 +226,29 @@ pub trait CostModel: fmt::Debug + Send + Sync {
             ctx.horizon_steps as f64 * self.decode_step_ms(precision, ctx.to);
         ctx.migrate_ms <= serial_ms - concurrent_ms
     }
+
+    /// Placement price of one request on a device — the fleet router's
+    /// least-modeled-load unit ([`crate::coordinator::fleet`]): what one
+    /// device is expected to spend serving this request, so the router can
+    /// compare devices by *modeled milliseconds of committed work* instead
+    /// of request counts (a slow_think trace is worth many no_think ones,
+    /// paper Fig. 2).
+    ///
+    /// Default: one single-row prefill plus `expected_steps` single-slot
+    /// decode steps. `prompt_tokens` is available for models whose prefill
+    /// price scales with prompt length; the default (like
+    /// [`CostModel::prefill_ms`]) prices the rebuild by shape alone.
+    /// Under [`SlotStepCostModel`] (free prefills, unit steps) the price
+    /// reduces to `expected_steps` exactly.
+    fn place_request_ms(
+        &self,
+        precision: Precision,
+        prompt_tokens: usize,
+        expected_steps: usize,
+    ) -> f64 {
+        let _ = prompt_tokens;
+        self.prefill_ms(precision, 1) + expected_steps as f64 * self.decode_step_ms(precision, 1)
+    }
 }
 
 /// Smallest-cost feasible rung covering `demand` slots: the launch-time
@@ -423,6 +446,22 @@ mod tests {
         };
         assert!(m.grow_pays_off(Precision::Int8, ctx(1, 0, 1e9)));
         assert!(!m.grow_pays_off(Precision::Int8, ctx(0, 2, 0.0)));
+    }
+
+    /// The fleet placement price: slot-step units reduce to the expected
+    /// step count; the Atlas roofline prices a slow_think placement
+    /// strictly above a no_think one and never negative.
+    #[test]
+    fn place_request_ms_prices_expected_work() {
+        let m = SlotStepCostModel;
+        assert_eq!(m.place_request_ms(Precision::Int8, 40, 12), 12.0);
+        assert_eq!(m.place_request_ms(Precision::Int8, 40, 0), 0.0);
+
+        let a = AtlasCostModel::openpangu_7b();
+        let short = a.place_request_ms(Precision::Int8, 40, 8);
+        let long = a.place_request_ms(Precision::Int8, 40, 64);
+        assert!(short > 0.0, "roofline prefill + decode is never free");
+        assert!(long > short, "more expected steps cost strictly more");
     }
 
     #[test]

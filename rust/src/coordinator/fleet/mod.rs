@@ -1,0 +1,557 @@
+//! Multi-device serving: N per-device scheduler/backend pairs — each with
+//! its own KV `BlockPool` budget — behind a cost-priced router.
+//!
+//! The paper deploys on a single Atlas A2; production traffic scales by
+//! running N of them side by side. Everything a fleet needs already
+//! exists as single-device primitives, and this module only *composes*
+//! them:
+//!
+//!   * each device is an [`crate::coordinator::admission::AdmissionQueue`]
+//!     plus a [`SchedulerConfig`] whose
+//!     [`crate::coordinator::kv::KvConfig`] budget is sized per card
+//!     (heterogeneous fleets via
+//!     [`crate::atlas::memory_model::fleet_kv_budget_tokens`]);
+//!   * a [`RouterPolicy`] places each request by modeled cost —
+//!     [`LeastLoadedRouter`] prices committed work with each device's own
+//!     [`crate::coordinator::cost::CostModel`]
+//!     ([`CostModel::place_request_ms`][crate::coordinator::cost::CostModel::place_request_ms])
+//!     and gates on estimated pool headroom; [`RoundRobinRouter`] is the
+//!     measured baseline;
+//!   * pathological skew is corrected by *rebalance*: a device whose
+//!     preempted lane is non-empty (pool-starved) re-places its queued,
+//!     not-yet-prefilled requests onto the least-loaded sibling with
+//!     headroom. Only tail-of-queue requests travel
+//!     ([`AdmissionQueue::steal_tail`][crate::coordinator::admission::AdmissionQueue::steal_tail]),
+//!     so the move rides the sibling's ordinary admission lane — no new
+//!     backend ops, no KV state crosses devices;
+//!   * accounting rolls up additively ([`SchedReport::merge`]) into a
+//!     [`FleetReport`], so per-device numbers and fleet totals cannot
+//!     drift.
+//!
+//! Execution model: device sessions run one at a time on the caller's
+//! thread (the PJRT runtime's device handles are not Send, and the mock
+//! fleet wants determinism), so wall-clock is *not* the fleet metric —
+//! [`FleetReport::makespan_slot_steps`] (busiest device's slot-steps)
+//! models fleet completion time of devices that would run concurrently,
+//! and [`FleetReport::imbalance_ratio`] exposes placement skew. Routing
+//! and rebalance interleave with the running session through the
+//! scheduler's pump, exactly like the single-device server loop.
+//!
+//! A fleet replicates ONE model: requests may carry any (model, variant)
+//! route key, but every device is assumed able to serve every request
+//! (the provider receives the route of each session's queue head).
+
+pub mod report;
+pub mod router;
+pub mod server;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use crate::coordinator::kv::PoolHeadroom;
+use crate::coordinator::request::{Request, Response};
+use crate::coordinator::scheduler::{SchedReport, Scheduler, SchedulerConfig};
+use crate::quant::Precision;
+use crate::runtime::backend::BackendProvider;
+use crate::tokenizer::{CotMode, Tokenizer};
+
+pub use report::{DeviceReport, FleetReport};
+pub use router::{DeviceSnapshot, LeastLoadedRouter, RoundRobinRouter, RouterPolicy};
+pub use server::FleetServer;
+
+/// Cross-device rebalance knobs.
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// Master switch. On by default: rebalance only ever fires when a
+    /// device is pool-starved (its preempted lane is non-empty), so a
+    /// healthy fleet never pays for it.
+    pub enabled: bool,
+    /// Queued requests re-placed per scheduler step of the distressed
+    /// session (the pump runs once per step; a small cap keeps one bad
+    /// step from emptying the whole queue onto one sibling between
+    /// placement-estimate refreshes).
+    pub max_moves_per_step: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { enabled: true, max_moves_per_step: 1 }
+    }
+}
+
+/// Fleet composition: one [`SchedulerConfig`] per device (bucket ladder,
+/// cost model, KV budget, preempt policy may all differ per card), a
+/// shared admission configuration, and the rebalance knobs.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Per-device scheduler configurations, in device order.
+    pub devices: Vec<SchedulerConfig>,
+    /// Admission policy, shared by every device's queue.
+    pub admit: AdmitConfig,
+    pub rebalance: RebalanceConfig,
+}
+
+impl FleetConfig {
+    /// N identical devices — the common replicated-pool deployment.
+    pub fn homogeneous(n: usize, sched: SchedulerConfig, admit: AdmitConfig) -> FleetConfig {
+        FleetConfig {
+            devices: vec![sched; n],
+            admit,
+            rebalance: RebalanceConfig::default(),
+        }
+    }
+}
+
+/// Expected decode steps of one request, for placement pricing: the
+/// ladder's `grow_horizon` scaled by think mode (paper Fig. 2 — CoT
+/// length grows no_think < auto_think < slow_think). A projection, not a
+/// promise: the router only needs placement prices to *rank* devices
+/// consistently.
+pub fn expected_decode_steps(mode: CotMode, grow_horizon: usize) -> usize {
+    let mult = match mode {
+        CotMode::NoThink => 1,
+        CotMode::AutoThink => 2,
+        CotMode::SlowThink => 4,
+    };
+    mult * grow_horizon.max(1)
+}
+
+/// One device: its scheduler configuration, admission queue, and
+/// accumulated accounting. The backend itself is *not* owned here — run
+/// methods take a [`BackendProvider`] per device, so the same fleet state
+/// drives mock and PJRT-backed devices alike.
+#[derive(Debug)]
+struct DeviceState {
+    cfg: SchedulerConfig,
+    queue: AdmissionQueue,
+    /// All completed sessions' reports, merged additively.
+    acc: SchedReport,
+    sessions: usize,
+    placements: usize,
+    /// Modeled ms of work routed here since the last completed session
+    /// ([`crate::coordinator::cost::CostModel::place_request_ms`] summed).
+    pending_ms: f64,
+    /// Estimated admission reservation (prompt pages) of the queued work.
+    /// Decode growth is deliberately not counted: this mirrors the pool's
+    /// own admission gate, and growth pressure is what deferral, preempt
+    /// and rebalance handle live.
+    queued_pages: usize,
+}
+
+impl DeviceState {
+    fn new(cfg: SchedulerConfig, admit: &AdmitConfig) -> DeviceState {
+        DeviceState {
+            cfg,
+            queue: AdmissionQueue::new(admit.clone()),
+            acc: SchedReport::default(),
+            sessions: 0,
+            placements: 0,
+            pending_ms: 0.0,
+            queued_pages: 0,
+        }
+    }
+
+    /// Placement price of `req` on THIS device, under its own cost model
+    /// and ladder horizon (heterogeneous devices price differently).
+    fn price(&self, req: &Request) -> f64 {
+        let precision = Precision::parse(&req.variant).unwrap_or(Precision::Fp16);
+        let steps = expected_decode_steps(req.mode, self.cfg.ladder.grow_horizon);
+        self.cfg.cost.place_request_ms(precision, req.prompt_tokens_hint(), steps)
+    }
+
+    /// Estimated pages of `req`'s admission reservation on this device.
+    fn est_pages(&self, req: &Request) -> usize {
+        req.prompt_tokens_hint().div_ceil(self.cfg.kv.page_tokens.max(1)).max(1)
+    }
+
+    fn charge(&mut self, req: &Request) {
+        self.pending_ms += self.price(req);
+        self.queued_pages += self.est_pages(req);
+    }
+
+    fn uncharge(&mut self, req: &Request) {
+        self.pending_ms = (self.pending_ms - self.price(req)).max(0.0);
+        self.queued_pages = self.queued_pages.saturating_sub(self.est_pages(req));
+    }
+
+    /// Router view of this device, with `queued` supplied by the caller
+    /// (the running device's queue lives outside `self` during a session).
+    fn snapshot(&self, device: usize, queued: usize, req: &Request) -> DeviceSnapshot {
+        let capacity = self.cfg.kv.capacity_pages();
+        let headroom = capacity.map(|cap| {
+            let used = self.queued_pages.min(cap);
+            PoolHeadroom {
+                page_tokens: self.cfg.kv.page_tokens,
+                used_pages: used,
+                free_pages: cap - used,
+                capacity_pages: cap,
+            }
+        });
+        let fits = match &headroom {
+            Some(h) => self.est_pages(req) <= h.free_pages,
+            None => true,
+        };
+        DeviceSnapshot {
+            device,
+            queued,
+            pending_ms: self.pending_ms,
+            place_ms: self.price(req),
+            headroom,
+            fits,
+        }
+    }
+}
+
+/// N per-device scheduler+queue pairs behind a pluggable router. See the
+/// module docs for the execution model; [`FleetServer`] is the channel
+/// front end, [`Fleet::run_batch`] the offline entry point.
+pub struct Fleet<'t> {
+    tokenizer: &'t Tokenizer,
+    admit: AdmitConfig,
+    rebalance: RebalanceConfig,
+    policy: Box<dyn RouterPolicy>,
+    devices: Vec<DeviceState>,
+    rebalances: usize,
+}
+
+impl<'t> Fleet<'t> {
+    pub fn new(
+        tokenizer: &'t Tokenizer,
+        cfg: FleetConfig,
+        policy: Box<dyn RouterPolicy>,
+    ) -> Result<Fleet<'t>> {
+        anyhow::ensure!(!cfg.devices.is_empty(), "a fleet needs at least one device");
+        let devices =
+            cfg.devices.into_iter().map(|c| DeviceState::new(c, &cfg.admit)).collect();
+        Ok(Fleet {
+            tokenizer,
+            admit: cfg.admit,
+            rebalance: cfg.rebalance,
+            policy,
+            devices,
+            rebalances: 0,
+        })
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Requests queued fleet-wide (routed, not yet admitted anywhere).
+    pub fn queued(&self) -> usize {
+        self.devices.iter().map(|d| d.queue.queued()).sum()
+    }
+
+    /// Place one request on a device (by the configured policy) and
+    /// enqueue it there. Returns the device index.
+    pub fn route(&mut self, req: Request) -> usize {
+        let snaps: Vec<DeviceSnapshot> = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, dev)| dev.snapshot(i, dev.queue.queued(), &req))
+            .collect();
+        let j = self.policy.place(&req, &snaps).min(self.devices.len() - 1);
+        self.devices[j].charge(&req);
+        self.devices[j].placements += 1;
+        self.devices[j].queue.push(req);
+        j
+    }
+
+    /// Accumulated fleet accounting (callable at any point; totals grow
+    /// as sessions complete).
+    pub fn report(&self) -> FleetReport {
+        FleetReport {
+            policy: self.policy.name().to_string(),
+            devices: self
+                .devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| DeviceReport {
+                    device: i,
+                    sessions: d.sessions,
+                    placements: d.placements,
+                    report: d.acc.clone(),
+                })
+                .collect(),
+            rebalances: self.rebalances,
+        }
+    }
+
+    /// Run ONE scheduler session on device `d` (which must have work or
+    /// receive some through `inflow`). `inflow` is drained every scheduler
+    /// step and each request is routed across the whole fleet — the
+    /// running device admits its share mid-session, siblings accumulate
+    /// theirs for their own next session. Rebalance (see module docs) also
+    /// runs here, inside the pump.
+    pub fn run_session<P: BackendProvider>(
+        &mut self,
+        providers: &mut [P],
+        d: usize,
+        inflow: &mut dyn FnMut() -> Option<Request>,
+        on_response: &mut dyn FnMut(Response),
+    ) -> Result<SchedReport> {
+        anyhow::ensure!(
+            providers.len() == self.devices.len(),
+            "fleet has {} devices but {} providers were supplied",
+            self.devices.len(),
+            providers.len()
+        );
+        anyhow::ensure!(d < self.devices.len(), "device {d} out of range");
+        let placeholder = AdmissionQueue::new(self.admit.clone());
+        let mut queue = std::mem::replace(&mut self.devices[d].queue, placeholder);
+        let (model, variant) = queue
+            .front()
+            .map(|r| r.route_key())
+            .unwrap_or_else(|| ("mock".to_string(), "mock".to_string()));
+        let scheduler = Scheduler::new(self.tokenizer, self.devices[d].cfg.clone());
+        let rebalance = self.rebalance.clone();
+        let mut moved = 0usize;
+
+        let result = {
+            let devices = &mut self.devices;
+            let policy = &mut self.policy;
+            let mut pump = |q: &mut AdmissionQueue| {
+                // Fresh arrivals are routed fleet-wide: the running device
+                // admits into the live session, siblings queue for theirs.
+                while let Some(req) = inflow() {
+                    let snaps: Vec<DeviceSnapshot> = devices
+                        .iter()
+                        .enumerate()
+                        .map(|(i, dev)| {
+                            let queued =
+                                if i == d { q.queued() } else { dev.queue.queued() };
+                            dev.snapshot(i, queued, &req)
+                        })
+                        .collect();
+                    let j = policy.place(&req, &snaps).min(devices.len() - 1);
+                    devices[j].charge(&req);
+                    devices[j].placements += 1;
+                    if j == d {
+                        q.push(req);
+                    } else {
+                        devices[j].queue.push(req);
+                    }
+                }
+                // Rebalance: this device is pool-starved (a preempted
+                // sequence is parked, which also holds all fresh admission
+                // here) while not-yet-prefilled requests wait in its
+                // queue. Re-place the youngest onto the least-loaded
+                // sibling with estimated headroom; if no sibling has any,
+                // everything stays — deferred, never dropped, never
+                // thrashed.
+                if !rebalance.enabled || devices.len() < 2 {
+                    return;
+                }
+                let mut moves = 0usize;
+                while moves < rebalance.max_moves_per_step
+                    && q.has_parked()
+                    && q.queued() > 0
+                {
+                    let Some(req) = q.steal_tail() else { break };
+                    let snaps: Vec<DeviceSnapshot> = devices
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != d)
+                        .map(|(i, dev)| dev.snapshot(i, dev.queue.queued(), &req))
+                        .collect();
+                    let fitting: Vec<DeviceSnapshot> =
+                        snaps.iter().filter(|s| s.fits).cloned().collect();
+                    match router::least_loaded(&fitting) {
+                        Some(j) => {
+                            devices[d].uncharge(&req);
+                            devices[d].placements =
+                                devices[d].placements.saturating_sub(1);
+                            devices[j].charge(&req);
+                            devices[j].placements += 1;
+                            devices[j].queue.push(req);
+                            moves += 1;
+                        }
+                        None => {
+                            // No sibling headroom: undo the steal (the
+                            // tail goes back to the tail) and stop.
+                            q.push(req);
+                            break;
+                        }
+                    }
+                }
+                moved += moves;
+            };
+            providers[d].with_backend(&model, &variant, &mut |backend| {
+                scheduler.run(backend, &mut queue, &mut pump, on_response)
+            })
+        };
+
+        // Restore device state before surfacing any backend error: queued
+        // requests survive a failed session (in-flight ones were already
+        // answered by the scheduler's abort drain).
+        self.devices[d].queue = queue;
+        self.rebalances += moved;
+        let report = result?;
+        let dev = &mut self.devices[d];
+        dev.acc.merge(&report);
+        dev.sessions += 1;
+        // The session drained this device's queue; committed-work
+        // estimates reset with it.
+        dev.pending_ms = 0.0;
+        dev.queued_pages = 0;
+        Ok(report)
+    }
+
+    /// Offline entry point, the fleet sibling of
+    /// [`Scheduler::run_batch`]: route every request up front, then run
+    /// device sessions (rotating over busy devices) until every queue —
+    /// including rebalance arrivals — has drained. Responses come back in
+    /// input order; the [`FleetReport`] carries per-device and rolled-up
+    /// accounting.
+    pub fn run_batch<P: BackendProvider>(
+        &mut self,
+        providers: &mut [P],
+        requests: &[Request],
+    ) -> Result<(Vec<Response>, FleetReport)> {
+        anyhow::ensure!(
+            providers.len() == self.devices.len(),
+            "fleet has {} devices but {} providers were supplied",
+            self.devices.len(),
+            providers.len()
+        );
+        for req in requests {
+            self.route(req.clone());
+        }
+        let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
+        let mut no_inflow = || None::<Request>;
+        let mut cursor = 0usize;
+        loop {
+            let n = self.devices.len();
+            let busy = (0..n)
+                .map(|i| (cursor + i) % n)
+                .find(|&i| !self.devices[i].queue.is_empty());
+            let Some(dev) = busy else { break };
+            self.run_session(providers, dev, &mut no_inflow, &mut |resp| {
+                responses.push(resp)
+            })?;
+            cursor = dev + 1;
+        }
+        let order: BTreeMap<u64, usize> =
+            requests.iter().enumerate().map(|(i, r)| (r.id, i)).collect();
+        responses.sort_by_key(|r| order.get(&r.id).copied().unwrap_or(usize::MAX));
+        Ok((responses, self.report()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{AdmitGate, Scheduler};
+    use crate::runtime::backend::{minilang_mock_script, MockBackend, MockProvider};
+    use std::time::Duration;
+
+    fn providers(
+        tk: &Tokenizer,
+        n: usize,
+        long: usize,
+    ) -> Vec<MockProvider<impl Fn(&[i32]) -> Vec<u32>>> {
+        (0..n)
+            .map(|_| MockProvider::new(MockBackend::new(64, 48, 96, minilang_mock_script(tk, long))))
+            .collect()
+    }
+
+    fn request(id: u64, mode: CotMode) -> Request {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+        ];
+        Request::new(id, "7b-sim", "int8", mode, ex)
+    }
+
+    fn admit() -> AdmitConfig {
+        AdmitConfig::with_wait(false, Duration::ZERO)
+    }
+
+    #[test]
+    fn round_robin_fleet_answers_every_request_exactly_once() {
+        let tk = Tokenizer::minilang_default();
+        let cfg = FleetConfig::homogeneous(
+            3,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous),
+            admit(),
+        );
+        let mut fleet =
+            Fleet::new(&tk, cfg, Box::new(RoundRobinRouter::new())).unwrap();
+        let mut provs = providers(&tk, 3, 8);
+        let reqs: Vec<Request> = (0..7)
+            .map(|i| {
+                request(i, if i % 2 == 0 { CotMode::SlowThink } else { CotMode::NoThink })
+            })
+            .collect();
+        let (resps, report) = fleet.run_batch(&mut provs, &reqs).unwrap();
+        assert_eq!(resps.len(), 7);
+        // Input order is preserved, every id answered exactly once.
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        assert_eq!(report.placements(), 7);
+        assert_eq!(report.rollup().completed, 7);
+        // Round-robin spreads 7 requests over 3 devices as 3/2/2.
+        let mut counts: Vec<usize> =
+            report.devices.iter().map(|d| d.placements).collect();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![2, 2, 3]);
+        assert_eq!(report.policy, "round-robin");
+        assert_eq!(report.rebalances, 0, "healthy fleet never rebalances");
+    }
+
+    #[test]
+    fn single_device_fleet_matches_bare_scheduler() {
+        let tk = Tokenizer::minilang_default();
+        let sched_cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| {
+                request(i, if i == 0 { CotMode::SlowThink } else { CotMode::NoThink })
+            })
+            .collect();
+
+        let mut bare_be = MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 10));
+        let (bare_resps, bare_report) =
+            Scheduler::new(&tk, sched_cfg.clone()).run_batch(&mut bare_be, &reqs).unwrap();
+
+        let cfg = FleetConfig::homogeneous(1, sched_cfg, admit());
+        let mut fleet =
+            Fleet::new(&tk, cfg, Box::new(LeastLoadedRouter::new())).unwrap();
+        let mut provs = providers(&tk, 1, 10);
+        let (fleet_resps, fleet_report) = fleet.run_batch(&mut provs, &reqs).unwrap();
+
+        assert_eq!(bare_resps.len(), fleet_resps.len());
+        for (a, b) in bare_resps.iter().zip(&fleet_resps) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "byte-identical streams");
+            assert_eq!(a.truncated, b.truncated);
+            assert_eq!(a.first_token_step, b.first_token_step);
+        }
+        let total = fleet_report.rollup();
+        assert_eq!(total.decode_steps, bare_report.decode_steps);
+        assert_eq!(total.slot_steps(), bare_report.slot_steps());
+        assert_eq!(total.completed, bare_report.completed);
+        assert_eq!(total.admitted, bare_report.admitted);
+    }
+
+    #[test]
+    fn fleet_requires_devices_and_matching_providers() {
+        let tk = Tokenizer::minilang_default();
+        let cfg = FleetConfig { devices: vec![], admit: admit(), rebalance: RebalanceConfig::default() };
+        assert!(Fleet::new(&tk, cfg, Box::new(RoundRobinRouter::new())).is_err());
+
+        let cfg = FleetConfig::homogeneous(
+            2,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous),
+            admit(),
+        );
+        let mut fleet =
+            Fleet::new(&tk, cfg, Box::new(RoundRobinRouter::new())).unwrap();
+        let mut provs = providers(&tk, 1, 8);
+        let err = fleet.run_batch(&mut provs, &[request(0, CotMode::NoThink)]);
+        assert!(err.is_err(), "1 provider for 2 devices must be rejected");
+    }
+}

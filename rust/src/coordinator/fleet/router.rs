@@ -1,0 +1,178 @@
+//! Placement policies: where does the next request go?
+//!
+//! The router sees one [`DeviceSnapshot`] per device — modeled committed
+//! load, an estimated live pool headroom, and the price of placing *this*
+//! request there — and picks a device index. Policies are pluggable
+//! behind [`RouterPolicy`]; the two in-tree ones are the measured
+//! baseline ([`RoundRobinRouter`]) and the cost-priced default
+//! ([`LeastLoadedRouter`]).
+
+use std::fmt;
+
+use crate::coordinator::kv::PoolHeadroom;
+use crate::coordinator::request::Request;
+
+/// One device's state as the router sees it at placement time.
+///
+/// Everything here is *modeled*: the fleet prices committed work with each
+/// device's own [`crate::coordinator::cost::CostModel`] and estimates pool
+/// occupancy from prompt/decode token hints, because a device's actual
+/// `BlockPool` only exists inside a running scheduler session. The
+/// estimates are deliberately conservative — they count everything routed
+/// to a device since its last completed session.
+#[derive(Debug, Clone)]
+pub struct DeviceSnapshot {
+    /// Device index in fleet order.
+    pub device: usize,
+    /// Requests queued (routed, not yet admitted by that device).
+    pub queued: usize,
+    /// Modeled milliseconds of work committed to this device and not yet
+    /// retired by a session ([`crate::coordinator::cost::CostModel::place_request_ms`]
+    /// summed over its queue).
+    pub pending_ms: f64,
+    /// Price of placing the *candidate* request on this device, under this
+    /// device's own cost model and precision.
+    pub place_ms: f64,
+    /// Estimated live pool headroom: the device's configured page budget
+    /// minus the pages its queued work is expected to map. `None` when the
+    /// device runs an unbounded pool.
+    pub headroom: Option<PoolHeadroom>,
+    /// Whether the candidate's estimated pages fit the estimated free
+    /// pages (always `true` for an unbounded pool).
+    pub fits: bool,
+}
+
+/// A pluggable placement policy. `place` must return an index `<
+/// devices.len()` (the fleet clamps out-of-range picks to the last
+/// device); `devices` is never empty and is ordered by device index.
+pub trait RouterPolicy: fmt::Debug {
+    /// Short stable name, recorded in
+    /// [`crate::coordinator::fleet::FleetReport::policy`].
+    fn name(&self) -> &'static str;
+
+    /// Pick the device for `req`.
+    fn place(&mut self, req: &Request, devices: &[DeviceSnapshot]) -> usize;
+}
+
+/// The baseline: rotate over devices in arrival order, blind to cost and
+/// headroom. Exists to be measured against — a skewed arrival pattern
+/// (long slow_think traces interleaved with short no_think ones) lands all
+/// the expensive work on one device.
+#[derive(Debug, Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl RoundRobinRouter {
+    pub fn new() -> RoundRobinRouter {
+        RoundRobinRouter::default()
+    }
+}
+
+impl RouterPolicy for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&mut self, _req: &Request, devices: &[DeviceSnapshot]) -> usize {
+        let pick = self.next % devices.len();
+        self.next = (self.next + 1) % devices.len();
+        pick
+    }
+}
+
+/// The cost-priced default: least modeled load with a pool-headroom gate.
+///
+/// Among devices whose estimated free pages can back the candidate
+/// (`fits`), pick the one minimizing `pending_ms + place_ms` — the
+/// modeled completion of its committed work plus this request. If no
+/// device fits (every estimated pool is full), fall back to least
+/// modeled load over all devices: the request will ride that device's
+/// defer-never-drop admission lane until pages free. Ties break to the
+/// lowest device index, so placement is deterministic.
+#[derive(Debug, Default)]
+pub struct LeastLoadedRouter;
+
+impl LeastLoadedRouter {
+    pub fn new() -> LeastLoadedRouter {
+        LeastLoadedRouter
+    }
+}
+
+/// Least `pending_ms + place_ms` over `devices`, ties to the lowest
+/// index. Shared by [`LeastLoadedRouter`] and the fleet's rebalance
+/// sibling pick.
+pub(crate) fn least_loaded(devices: &[DeviceSnapshot]) -> Option<usize> {
+    devices
+        .iter()
+        .min_by(|a, b| {
+            (a.pending_ms + a.place_ms)
+                .total_cmp(&(b.pending_ms + b.place_ms))
+                .then(a.device.cmp(&b.device))
+        })
+        .map(|s| s.device)
+}
+
+impl RouterPolicy for LeastLoadedRouter {
+    fn name(&self) -> &'static str {
+        "cost"
+    }
+
+    fn place(&mut self, _req: &Request, devices: &[DeviceSnapshot]) -> usize {
+        let fitting: Vec<DeviceSnapshot> =
+            devices.iter().filter(|s| s.fits).cloned().collect();
+        let pool = if fitting.is_empty() { devices } else { &fitting[..] };
+        least_loaded(pool).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::CotMode;
+
+    fn snap(device: usize, pending_ms: f64, place_ms: f64, fits: bool) -> DeviceSnapshot {
+        DeviceSnapshot { device, queued: 0, pending_ms, place_ms, headroom: None, fits }
+    }
+
+    fn req() -> Request {
+        Request::new(7, "m", "int8", CotMode::NoThink, vec![(vec![1], vec![1])])
+    }
+
+    #[test]
+    fn round_robin_rotates_regardless_of_load() {
+        let mut rr = RoundRobinRouter::new();
+        let snaps = vec![snap(0, 100.0, 1.0, true), snap(1, 0.0, 1.0, true)];
+        assert_eq!(rr.place(&req(), &snaps), 0, "blind to the loaded device");
+        assert_eq!(rr.place(&req(), &snaps), 1);
+        assert_eq!(rr.place(&req(), &snaps), 0);
+    }
+
+    #[test]
+    fn least_loaded_prices_committed_work() {
+        let mut lc = LeastLoadedRouter::new();
+        // Device 1 has less committed work: it wins.
+        let snaps = vec![snap(0, 10.0, 2.0, true), snap(1, 3.0, 2.0, true)];
+        assert_eq!(lc.place(&req(), &snaps), 1);
+        // Per-device pricing matters: device 1 is idle but *slow* for this
+        // request (heterogeneous cost model), device 0 wins on total.
+        let snaps = vec![snap(0, 3.0, 1.0, true), snap(1, 0.0, 9.0, true)];
+        assert_eq!(lc.place(&req(), &snaps), 0);
+        // Ties break to the lowest index (determinism).
+        let snaps = vec![snap(0, 2.0, 1.0, true), snap(1, 2.0, 1.0, true)];
+        assert_eq!(lc.place(&req(), &snaps), 0);
+    }
+
+    #[test]
+    fn least_loaded_prefers_devices_with_pool_headroom() {
+        let mut lc = LeastLoadedRouter::new();
+        // Device 0 is cheaper but its estimated pool is full: device 1
+        // (with headroom) takes the request.
+        let snaps = vec![snap(0, 0.0, 1.0, false), snap(1, 5.0, 1.0, true)];
+        assert_eq!(lc.place(&req(), &snaps), 1);
+        // Nobody fits: fall back to least modeled load, ride the
+        // defer-never-drop admission lane.
+        let snaps = vec![snap(0, 9.0, 1.0, false), snap(1, 5.0, 1.0, false)];
+        assert_eq!(lc.place(&req(), &snaps), 1);
+    }
+}

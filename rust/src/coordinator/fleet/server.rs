@@ -1,0 +1,310 @@
+//! Channel front end over a [`Fleet`] — the multi-device sibling of
+//! [`crate::coordinator::server::Server`].
+//!
+//! Clients submit through the same [`ServerHandle`] and block on their
+//! per-request response channel; the server loop routes each arrival
+//! across devices (by the fleet's [`RouterPolicy`]), runs one device
+//! session at a time on the owning thread (device handles are not Send),
+//! and streams responses back as slots drain. One [`ReplyBook`] spans the
+//! whole fleet: replies match by `Request::id` wherever the response was
+//! computed, so delivery survives cross-device rebalance exactly as it
+//! survives admission reordering on one device.
+//!
+//! Metrics keep two levels that cannot disagree: each device folds its
+//! sessions through the same [`record_session`] mapping the single-device
+//! server uses, and [`FleetServer::metrics_rollup`] derives fleet totals
+//! with [`Metrics::merge`]. A fleet replicates one model; requests for
+//! any route are accepted and served by whichever device they land on.
+
+use std::cell::RefCell;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Request;
+use crate::coordinator::server::{record_session, Envelope, ReplyBook, ServerHandle};
+use crate::runtime::backend::BackendProvider;
+use crate::tokenizer::Tokenizer;
+
+use super::{Fleet, FleetConfig, FleetReport, RouterPolicy};
+
+pub struct FleetServer<'t, P: BackendProvider> {
+    fleet: Fleet<'t>,
+    providers: Vec<P>,
+    rx: mpsc::Receiver<Envelope>,
+    /// Fleet-wide reply routing (see module docs).
+    pending: RefCell<ReplyBook>,
+    /// Front-end counters (`requests_received`, per-request latency
+    /// observations). Per-session serving metrics live per device; use
+    /// [`FleetServer::metrics_rollup`] for the fleet view.
+    pub metrics: Metrics,
+    device_metrics: Vec<Metrics>,
+    /// Device served by the most recent session (round-robin fairness).
+    last_device: usize,
+}
+
+impl<'t, P: BackendProvider> FleetServer<'t, P> {
+    /// One provider per device, in device order.
+    pub fn new(
+        providers: Vec<P>,
+        tokenizer: &'t Tokenizer,
+        cfg: FleetConfig,
+        policy: Box<dyn RouterPolicy>,
+    ) -> Result<(FleetServer<'t, P>, ServerHandle)> {
+        anyhow::ensure!(
+            providers.len() == cfg.devices.len(),
+            "fleet config has {} devices but {} providers were supplied",
+            cfg.devices.len(),
+            providers.len()
+        );
+        let fleet = Fleet::new(tokenizer, cfg, policy)?;
+        let (handle, rx) = ServerHandle::channel();
+        let n = providers.len();
+        Ok((
+            FleetServer {
+                fleet,
+                providers,
+                rx,
+                pending: RefCell::new(ReplyBook::new()),
+                metrics: Metrics::new(),
+                device_metrics: vec![Metrics::new(); n],
+                last_device: n.saturating_sub(1),
+            },
+            handle,
+        ))
+    }
+
+    fn enqueue(&mut self, env: Envelope) {
+        self.pending.borrow_mut().register(env.request.id, env.reply);
+        self.fleet.route(env.request);
+        self.metrics.inc("requests_received", 1);
+    }
+
+    /// First device (rotating after the last-served one) whose queue is
+    /// launch-ready: sized to its own smallest ladder rung, or anything
+    /// non-empty once the submit side closed. Mirrors the single-device
+    /// server's route pick, with devices in place of routes.
+    fn pick_device(&self, closed: bool, now: Instant) -> Option<usize> {
+        let n = self.fleet.devices.len();
+        (0..n).map(|i| (self.last_device + 1 + i) % n).find(|&i| {
+            let dev = &self.fleet.devices[i];
+            let bucket = dev.cfg.buckets.first().copied().unwrap_or(1);
+            !dev.queue.is_empty() && (closed || dev.queue.ready(bucket, now))
+        })
+    }
+
+    /// Run device sessions until `deadline_idle` passes with no traffic,
+    /// or the submitting side closed and every device's queue drained
+    /// (including rebalance arrivals). Returns processed-request count.
+    pub fn run_until_idle(&mut self, deadline_idle: Duration) -> Result<usize> {
+        let mut processed = 0usize;
+        let mut last_activity = Instant::now();
+        let mut closed = false;
+        loop {
+            loop {
+                match self.rx.try_recv() {
+                    Ok(env) => {
+                        self.enqueue(env);
+                        last_activity = Instant::now();
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            if let Some(dev) = self.pick_device(closed, Instant::now()) {
+                processed += self.run_device_session(dev)?;
+                self.last_device = dev;
+                last_activity = Instant::now();
+            } else if closed || (last_activity.elapsed() >= deadline_idle && self.fleet.queued() == 0)
+            {
+                return Ok(processed);
+            } else {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+
+    /// One scheduler session on device `dev`. Arrivals during the session
+    /// are routed fleet-wide by the fleet's pump: same-device placements
+    /// join the live batch mid-flight, sibling placements queue for their
+    /// own sessions.
+    fn run_device_session(&mut self, dev: usize) -> Result<usize> {
+        let mut pumped_in: u64 = 0;
+        let result = {
+            let FleetServer {
+                ref mut fleet,
+                ref mut providers,
+                ref rx,
+                ref pending,
+                ref mut metrics,
+                ..
+            } = *self;
+            fleet.run_session(
+                providers,
+                dev,
+                &mut || match rx.try_recv() {
+                    Ok(env) => {
+                        pending.borrow_mut().register(env.request.id, env.reply);
+                        pumped_in += 1;
+                        Some(env.request)
+                    }
+                    Err(_) => None,
+                },
+                &mut |resp| {
+                    metrics.observe("request_latency_ms", resp.latency_ms);
+                    metrics.observe("ttft_ms", resp.ttft_ms);
+                    pending.borrow_mut().deliver(resp);
+                },
+            )
+        };
+        // Received is received regardless of the session outcome.
+        self.metrics.inc("requests_received", pumped_in);
+        let report = result?;
+        record_session(&mut self.device_metrics[dev], &report);
+        Ok(report.completed)
+    }
+
+    /// Per-device serving metrics, in device order (same metric names as
+    /// the single-device server).
+    pub fn device_metrics(&self) -> &[Metrics] {
+        &self.device_metrics
+    }
+
+    /// Fleet totals: the front-end registry merged with every device's —
+    /// the [`Metrics::merge`] rollup path.
+    pub fn metrics_rollup(&self) -> Metrics {
+        let mut total = self.metrics.clone();
+        for m in &self.device_metrics {
+            total.merge(m);
+        }
+        total
+    }
+
+    /// The fleet's own accounting (placements, rebalances, per-device
+    /// [`crate::coordinator::scheduler::SchedReport`] rollup).
+    pub fn fleet_report(&self) -> FleetReport {
+        self.fleet.report()
+    }
+
+    /// Recover the providers after serving (runtime stats, benches).
+    pub fn into_providers(self) -> Vec<P> {
+        self.providers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::AdmitConfig;
+    use crate::coordinator::fleet::{LeastLoadedRouter, RoundRobinRouter};
+    use crate::coordinator::scheduler::{AdmitGate, SchedulerConfig};
+    use crate::runtime::backend::{minilang_mock_script, MockBackend, MockProvider};
+    use crate::tokenizer::CotMode;
+
+    fn providers(
+        tk: &Tokenizer,
+        n: usize,
+    ) -> Vec<MockProvider<impl Fn(&[i32]) -> Vec<u32>>> {
+        (0..n)
+            .map(|_| MockProvider::new(MockBackend::new(64, 48, 96, minilang_mock_script(tk, 8))))
+            .collect()
+    }
+
+    fn request(id: u64, mode: CotMode) -> Request {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+        ];
+        Request::new(id, "7b-sim", "int8", mode, ex)
+    }
+
+    fn fleet_cfg(n: usize) -> FleetConfig {
+        FleetConfig::homogeneous(
+            n,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous),
+            AdmitConfig::with_wait(false, Duration::ZERO),
+        )
+    }
+
+    #[test]
+    fn fleet_server_answers_every_caller_and_rolls_up_metrics() {
+        let tk = Tokenizer::minilang_default();
+        let (mut server, handle) = FleetServer::new(
+            providers(&tk, 2),
+            &tk,
+            fleet_cfg(2),
+            Box::new(LeastLoadedRouter::new()),
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let mode = if i % 2 == 0 { CotMode::SlowThink } else { CotMode::NoThink };
+                handle.submit(request(i, mode)).unwrap()
+            })
+            .collect();
+        drop(handle);
+        let processed = server.run_until_idle(Duration::from_millis(5)).unwrap();
+        assert_eq!(processed, 6);
+        for rx in rxs {
+            let resp = rx.recv().expect("every caller gets a response");
+            assert!(!resp.tokens.is_empty());
+        }
+        assert_eq!(server.metrics.counter("requests_received"), 6);
+        let total = server.metrics_rollup();
+        assert_eq!(total.counter("requests_served"), 6);
+        assert_eq!(total.counter("requests_received"), 6, "front-end counters survive the merge");
+        let per_device: u64 =
+            server.device_metrics().iter().map(|m| m.counter("requests_served")).sum();
+        assert_eq!(per_device, 6, "rollup equals the sum of the parts");
+        let fr = server.fleet_report();
+        assert_eq!(fr.placements(), 6);
+        assert_eq!(fr.rollup().completed, 6);
+        assert_eq!(fr.policy, "cost");
+        let provs = server.into_providers();
+        assert_eq!(provs.len(), 2);
+        let steps: usize = provs.iter().map(|p| p.backend.steps).sum();
+        assert!(steps > 0, "the mock devices actually decoded");
+    }
+
+    #[test]
+    fn fleet_server_round_robin_spreads_sessions() {
+        let tk = Tokenizer::minilang_default();
+        let (mut server, handle) = FleetServer::new(
+            providers(&tk, 3),
+            &tk,
+            fleet_cfg(3),
+            Box::new(RoundRobinRouter::new()),
+        )
+        .unwrap();
+        for i in 0..6 {
+            // Fire-and-forget submissions: receivers dropped immediately,
+            // delivery must not panic or wedge the loop.
+            let _ = handle.submit(request(i, CotMode::NoThink)).unwrap();
+        }
+        drop(handle);
+        let processed = server.run_until_idle(Duration::from_millis(5)).unwrap();
+        assert_eq!(processed, 6);
+        let fr = server.fleet_report();
+        for d in &fr.devices {
+            assert_eq!(d.placements, 2, "round-robin places 6 over 3 evenly");
+            assert!(d.sessions >= 1, "every device ran at least one session");
+        }
+    }
+
+    #[test]
+    fn fleet_server_rejects_provider_count_mismatch() {
+        let tk = Tokenizer::minilang_default();
+        let result = FleetServer::new(
+            providers(&tk, 1),
+            &tk,
+            fleet_cfg(2),
+            Box::new(RoundRobinRouter::new()),
+        );
+        assert!(result.is_err());
+    }
+}

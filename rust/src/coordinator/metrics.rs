@@ -41,6 +41,21 @@ impl Metrics {
         }
     }
 
+    /// Additive rollup of another registry into this one: counters add,
+    /// sample series concatenate. This is the multi-scheduler rollup path
+    /// — a fleet keeps one registry per device and derives fleet totals by
+    /// merging, so per-device numbers and the rolled-up totals cannot
+    /// drift apart (there is no second accounting code path to disagree
+    /// with).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.samples {
+            self.samples.entry(k.clone()).or_default().extend_from_slice(v);
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut out = String::from("--- metrics ---\n");
         for (k, v) in &self.counters {
@@ -85,6 +100,25 @@ mod tests {
         assert_eq!(s.n, 3);
         assert!((s.mean - 2.0).abs() < 1e-12);
         assert!(m.summary("nothing").is_none());
+    }
+
+    #[test]
+    fn merge_is_additive() {
+        let mut a = Metrics::new();
+        a.inc("steps", 3);
+        a.observe("ms", 1.0);
+        let mut b = Metrics::new();
+        b.inc("steps", 4);
+        b.inc("joins", 1);
+        b.observe("ms", 2.0);
+        b.observe("util", 0.5);
+        a.merge(&b);
+        assert_eq!(a.counter("steps"), 7);
+        assert_eq!(a.counter("joins"), 1);
+        assert_eq!(a.summary("ms").unwrap().n, 2);
+        assert_eq!(a.summary("util").unwrap().n, 1);
+        // `b` is unchanged by the merge.
+        assert_eq!(b.counter("steps"), 4);
     }
 
     #[test]

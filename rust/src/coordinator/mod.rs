@@ -15,6 +15,9 @@
 //!                     [`crate::runtime::backend::Backend`]
 //!   * [`server`]    — request loop: channel front-end, per-variant queues,
 //!                     generic over backend construction
+//!   * [`fleet`]     — multi-device serving: per-device scheduler + KV pool
+//!                     pairs behind a cost-priced router, with cross-device
+//!                     rebalance of queued work and rolled-up reporting
 //!   * [`metrics`]   — counters + latency summaries
 //!
 //! Scheduling model: *continuous batching at slot granularity over an
@@ -40,6 +43,7 @@
 pub mod admission;
 pub mod cost;
 pub mod cot;
+pub mod fleet;
 pub mod kv;
 pub mod metrics;
 pub mod request;

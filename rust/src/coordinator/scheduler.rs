@@ -471,6 +471,59 @@ impl SchedReport {
         }
         self.admitted as f64 / self.decode_steps as f64
     }
+
+    /// Additive rollup of another report into this one — the multi-session
+    /// / multi-device accounting path used by
+    /// [`crate::coordinator::fleet::FleetReport`], so per-device numbers
+    /// and fleet totals come from one accumulator and cannot drift.
+    ///
+    /// Every throughput-style counter and modeled/measured cost adds;
+    /// per-rung lines merge by bucket (so `slot_steps`, `occupancy` and
+    /// `modeled_total_ms` of the merged report equal the sums of the
+    /// parts). Peak-style gauges do **not** add: `max_live` and
+    /// `kv_peak_pool_util` fold by max, because concurrency peaks of
+    /// different sessions (or different devices' pools) are not
+    /// simultaneous. `kv_bytes_per_token` is a configuration constant, not
+    /// a counter — it folds by max so a merge across devices with mixed KV
+    /// precision surfaces the most expensive footprint rather than a
+    /// meaningless sum.
+    pub fn merge(&mut self, other: &SchedReport) {
+        for r in &other.rungs {
+            if let Some(mine) = self.rungs.iter_mut().find(|m| m.bucket == r.bucket) {
+                mine.steps += r.steps;
+                mine.live_slot_steps += r.live_slot_steps;
+                mine.modeled_ms += r.modeled_ms;
+            } else {
+                self.rungs.push(r.clone());
+            }
+        }
+        self.rungs.sort_by_key(|r| r.bucket);
+        self.decode_steps += other.decode_steps;
+        self.live_slot_steps += other.live_slot_steps;
+        self.admitted += other.admitted;
+        self.joins += other.joins;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.deferred += other.deferred;
+        self.aborted += other.aborted;
+        self.tokens_generated += other.tokens_generated;
+        self.max_live = self.max_live.max(other.max_live);
+        self.migrations_up += other.migrations_up;
+        self.migrations_down += other.migrations_down;
+        self.pressure_shrinks += other.pressure_shrinks;
+        self.preemptions += other.preemptions;
+        self.recomputed_tokens += other.recomputed_tokens;
+        self.preempt_stall_steps += other.preempt_stall_steps;
+        self.kv_pages_allocated += other.kv_pages_allocated;
+        self.kv_pages_released += other.kv_pages_released;
+        self.kv_peak_pool_util = self.kv_peak_pool_util.max(other.kv_peak_pool_util);
+        self.kv_bytes_per_token = self.kv_bytes_per_token.max(other.kv_bytes_per_token);
+        self.prefill_ms += other.prefill_ms;
+        self.decode_ms += other.decode_ms;
+        self.modeled_decode_ms += other.modeled_decode_ms;
+        self.modeled_prefill_ms += other.modeled_prefill_ms;
+        self.modeled_migrate_ms += other.modeled_migrate_ms;
+    }
 }
 
 /// One slot's in-flight request context.
@@ -1487,6 +1540,43 @@ mod tests {
     /// everything else a 3-token one (shared helper, see backend.rs).
     fn mode_scripts(tk: &Tokenizer, long: usize) -> impl Fn(&[i32]) -> Vec<u32> {
         crate::runtime::backend::minilang_mock_script(tk, long)
+    }
+
+    /// `SchedReport::merge` is the fleet rollup primitive: sums must match
+    /// field-by-field addition, rung lines must merge by bucket, and the
+    /// derived metrics (`slot_steps`, `modeled_total_ms`) must equal the
+    /// sums of the parts.
+    #[test]
+    fn sched_report_merge_is_additive() {
+        let tk = fixture();
+        let sched = scheduler(&tk, 2, AdmitGate::Continuous);
+        let mut be_a = MockBackend::new(64, 48, 96, mode_scripts(&tk, 8));
+        let mut be_b = MockBackend::new(64, 48, 96, mode_scripts(&tk, 8));
+        let reqs_a = vec![request(1, CotMode::NoThink), request(2, CotMode::SlowThink)];
+        let reqs_b = vec![request(3, CotMode::NoThink)];
+        let (_, ra) = sched.run_batch(&mut be_a, &reqs_a).unwrap();
+        let (_, rb) = sched.run_batch(&mut be_b, &reqs_b).unwrap();
+
+        let mut merged = ra.clone();
+        merged.merge(&rb);
+        assert_eq!(merged.completed, ra.completed + rb.completed);
+        assert_eq!(merged.admitted, ra.admitted + rb.admitted);
+        assert_eq!(merged.decode_steps, ra.decode_steps + rb.decode_steps);
+        assert_eq!(merged.tokens_generated, ra.tokens_generated + rb.tokens_generated);
+        assert_eq!(merged.slot_steps(), ra.slot_steps() + rb.slot_steps());
+        assert!(
+            (merged.modeled_total_ms() - (ra.modeled_total_ms() + rb.modeled_total_ms())).abs()
+                < 1e-9
+        );
+        assert_eq!(merged.max_live, ra.max_live.max(rb.max_live), "peaks fold by max");
+        // Same single-rung ladder on both sides: the rung lines merged.
+        assert_eq!(merged.rungs.len(), 1);
+        assert_eq!(merged.rungs[0].steps, ra.rungs[0].steps + rb.rungs[0].steps);
+        // Merging a default (empty) report is the identity.
+        let mut id = ra.clone();
+        id.merge(&SchedReport::default());
+        assert_eq!(id.slot_steps(), ra.slot_steps());
+        assert_eq!(id.completed, ra.completed);
     }
 
     #[test]

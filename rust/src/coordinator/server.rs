@@ -45,6 +45,14 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// Build a handle plus the server-side envelope receiver — the pairing
+    /// used by [`Server::new`] and the fleet front end
+    /// ([`crate::coordinator::fleet::FleetServer`]).
+    pub(crate) fn channel() -> (ServerHandle, mpsc::Receiver<Envelope>) {
+        let (tx, rx) = mpsc::channel();
+        (ServerHandle { tx }, rx)
+    }
+
     /// Submit a request; returns a receiver for the response.
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Response>> {
         let (reply, rx) = mpsc::channel();
@@ -55,12 +63,48 @@ impl ServerHandle {
     }
 }
 
-/// One route's admission queue plus its reply channels keyed by request id.
-/// Duplicate in-flight ids queue their senders FIFO, so each of N same-id
-/// submissions still receives exactly one response.
+/// Reply channels keyed by request id. Duplicate in-flight ids queue their
+/// senders FIFO, so each of N same-id submissions still receives exactly
+/// one response. Shared delivery bookkeeping of [`Server`] (one book per
+/// route) and [`crate::coordinator::fleet::FleetServer`] (one book for the
+/// whole fleet — ids are matched wherever the response was computed, so
+/// delivery survives cross-device rebalance as well as admission
+/// reordering).
+#[derive(Default)]
+pub struct ReplyBook {
+    pending: BTreeMap<u64, VecDeque<mpsc::Sender<Response>>>,
+}
+
+impl ReplyBook {
+    pub fn new() -> ReplyBook {
+        ReplyBook::default()
+    }
+
+    /// Register a caller waiting for `id`.
+    pub fn register(&mut self, id: u64, reply: mpsc::Sender<Response>) {
+        self.pending.entry(id).or_default().push_back(reply);
+    }
+
+    /// Deliver a response to the oldest caller registered for its id; a
+    /// response nobody registered for (or whose receiver hung up) is
+    /// dropped silently.
+    pub fn deliver(&mut self, resp: Response) {
+        if let Some(txs) = self.pending.get_mut(&resp.id) {
+            let tx = txs.pop_front();
+            if txs.is_empty() {
+                self.pending.remove(&resp.id);
+            }
+            if let Some(tx) = tx {
+                let _ = tx.send(resp);
+            }
+        }
+    }
+}
+
+/// One route's admission queue plus its reply book.
 struct RouteQueue {
     queue: AdmissionQueue,
-    pending: BTreeMap<u64, VecDeque<mpsc::Sender<Response>>>,
+    pending: ReplyBook,
 }
 
 pub struct Server<'t, P: BackendProvider> {
@@ -82,7 +126,7 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         sched_cfg: SchedulerConfig,
         admit_cfg: AdmitConfig,
     ) -> (Server<'t, P>, ServerHandle) {
-        let (tx, rx) = mpsc::channel();
+        let (handle, rx) = ServerHandle::channel();
         (
             Server {
                 provider,
@@ -94,7 +138,7 @@ impl<'t, P: BackendProvider> Server<'t, P> {
                 last_route: None,
                 metrics: Metrics::new(),
             },
-            ServerHandle { tx },
+            handle,
         )
     }
 
@@ -103,9 +147,9 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         let cfg = self.admit_cfg.clone();
         let rq = self.queues.entry(key).or_insert_with(|| RouteQueue {
             queue: AdmissionQueue::new(cfg),
-            pending: BTreeMap::new(),
+            pending: ReplyBook::new(),
         });
-        rq.pending.entry(env.request.id).or_default().push_back(env.reply);
+        rq.pending.register(env.request.id, env.reply);
         rq.queue.push(env.request);
         self.metrics.inc("requests_received", 1);
     }
@@ -203,11 +247,7 @@ impl<'t, P: BackendProvider> Server<'t, P> {
                         // starvation under sustained traffic).
                         while let Ok(env) = rx.try_recv() {
                             if foreign.is_empty() && env.request.route_key() == *key {
-                                pending
-                                    .borrow_mut()
-                                    .entry(env.request.id)
-                                    .or_default()
-                                    .push_back(env.reply);
+                                pending.borrow_mut().register(env.request.id, env.reply);
                                 q.push(env.request);
                                 pumped_in += 1;
                             } else {
@@ -219,16 +259,7 @@ impl<'t, P: BackendProvider> Server<'t, P> {
                         metrics.observe("request_latency_ms", resp.latency_ms);
                         metrics.observe("ttft_ms", resp.ttft_ms);
                         // Deliver by id; the receiver may have given up.
-                        let mut map = pending.borrow_mut();
-                        if let Some(txs) = map.get_mut(&resp.id) {
-                            let tx = txs.pop_front();
-                            if txs.is_empty() {
-                                map.remove(&resp.id);
-                            }
-                            if let Some(tx) = tx {
-                                let _ = tx.send(resp);
-                            }
-                        }
+                        pending.borrow_mut().deliver(resp);
                     },
                 )
             })
@@ -249,43 +280,7 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         }
         let report = result?;
 
-        self.metrics.inc("sessions", 1);
-        self.metrics.inc("requests_served", report.completed as u64);
-        self.metrics.inc("requests_rejected", report.rejected as u64);
-        self.metrics.inc("tokens_generated", report.tokens_generated as u64);
-        self.metrics.inc("decode_steps", report.decode_steps as u64);
-        // Charged at the bucket each step actually executed — under the
-        // adaptive ladder this is the device-compute cost metric.
-        self.metrics.inc("slot_steps", report.slot_steps() as u64);
-        // Its cost-model-priced sibling: per-session modeled milliseconds
-        // (equals slot_steps under the default SlotStepCostModel).
-        self.metrics.observe("modeled_session_ms", report.modeled_total_ms());
-        self.metrics.observe("modeled_migrate_ms", report.modeled_migrate_ms);
-        self.metrics.inc("joins", report.joins as u64);
-        self.metrics.inc("migrations_up", report.migrations_up as u64);
-        self.metrics.inc("migrations_down", report.migrations_down as u64);
-        // Paged-KV pool accounting: deferral pressure, page churn, peak
-        // pool utilization, and the modeled KV footprint per token. All
-        // zero under the legacy unbounded whole-window configuration.
-        self.metrics.inc("deferred_admissions", report.deferred as u64);
-        self.metrics.inc("pressure_shrinks", report.pressure_shrinks as u64);
-        // Preempt-and-recompute accounting: evictions taken to relieve pool
-        // starvation, the replay tokens recomputed to restore them, and the
-        // decode steps parked sequences spent waiting. All zero under the
-        // default truncate policy.
-        self.metrics.inc("preemptions", report.preemptions as u64);
-        self.metrics.inc("recomputed_tokens", report.recomputed_tokens as u64);
-        self.metrics.inc("preempt_stall_steps", report.preempt_stall_steps as u64);
-        self.metrics.inc("kv_pages_allocated", report.kv_pages_allocated as u64);
-        self.metrics.inc("kv_pages_released", report.kv_pages_released as u64);
-        self.metrics.observe("kv_pool_peak_util", report.kv_peak_pool_util);
-        if report.kv_bytes_per_token > 0.0 {
-            self.metrics.observe("kv_bytes_per_token", report.kv_bytes_per_token);
-        }
-        self.metrics.observe("occupancy", report.occupancy());
-        self.metrics.observe("admitted_per_step", report.admitted_per_step());
-        self.metrics.observe("session_prefill_ms", report.prefill_ms);
-        self.metrics.observe("session_decode_ms", report.decode_ms);
+        record_session(&mut self.metrics, &report);
         Ok(report.completed)
     }
 
@@ -293,4 +288,52 @@ impl<'t, P: BackendProvider> Server<'t, P> {
     pub fn into_provider(self) -> P {
         self.provider
     }
+}
+
+/// Fold one scheduler session's report into a serving metrics registry —
+/// the single mapping from [`SchedReport`] fields to metric names, shared
+/// by [`Server`] and the per-device registries of
+/// [`crate::coordinator::fleet::FleetServer`] (whose fleet totals are then
+/// derived with [`Metrics::merge`], so the two levels cannot disagree).
+pub(crate) fn record_session(
+    metrics: &mut Metrics,
+    report: &crate::coordinator::scheduler::SchedReport,
+) {
+    metrics.inc("sessions", 1);
+    metrics.inc("requests_served", report.completed as u64);
+    metrics.inc("requests_rejected", report.rejected as u64);
+    metrics.inc("tokens_generated", report.tokens_generated as u64);
+    metrics.inc("decode_steps", report.decode_steps as u64);
+    // Charged at the bucket each step actually executed — under the
+    // adaptive ladder this is the device-compute cost metric.
+    metrics.inc("slot_steps", report.slot_steps() as u64);
+    // Its cost-model-priced sibling: per-session modeled milliseconds
+    // (equals slot_steps under the default SlotStepCostModel).
+    metrics.observe("modeled_session_ms", report.modeled_total_ms());
+    metrics.observe("modeled_migrate_ms", report.modeled_migrate_ms);
+    metrics.inc("joins", report.joins as u64);
+    metrics.inc("migrations_up", report.migrations_up as u64);
+    metrics.inc("migrations_down", report.migrations_down as u64);
+    // Paged-KV pool accounting: deferral pressure, page churn, peak
+    // pool utilization, and the modeled KV footprint per token. All
+    // zero under the legacy unbounded whole-window configuration.
+    metrics.inc("deferred_admissions", report.deferred as u64);
+    metrics.inc("pressure_shrinks", report.pressure_shrinks as u64);
+    // Preempt-and-recompute accounting: evictions taken to relieve pool
+    // starvation, the replay tokens recomputed to restore them, and the
+    // decode steps parked sequences spent waiting. All zero under the
+    // default truncate policy.
+    metrics.inc("preemptions", report.preemptions as u64);
+    metrics.inc("recomputed_tokens", report.recomputed_tokens as u64);
+    metrics.inc("preempt_stall_steps", report.preempt_stall_steps as u64);
+    metrics.inc("kv_pages_allocated", report.kv_pages_allocated as u64);
+    metrics.inc("kv_pages_released", report.kv_pages_released as u64);
+    metrics.observe("kv_pool_peak_util", report.kv_peak_pool_util);
+    if report.kv_bytes_per_token > 0.0 {
+        metrics.observe("kv_bytes_per_token", report.kv_bytes_per_token);
+    }
+    metrics.observe("occupancy", report.occupancy());
+    metrics.observe("admitted_per_step", report.admitted_per_step());
+    metrics.observe("session_prefill_ms", report.prefill_ms);
+    metrics.observe("session_decode_ms", report.decode_ms);
 }

@@ -5,13 +5,17 @@
 //!   validate                     — artifact + dataset integrity checks
 //!   generate                     — one-off generation for a benchmark task
 //!   serve                        — demo serving loop over synthetic traffic
+//!                                  (--devices N runs an artifact-free
+//!                                  multi-device fleet over mock backends)
 //!   repro <exp>                  — regenerate a paper table/figure
 //!                                  (table1|table2|table3|fig1|fig2|fig4|all)
 //! Common flags: --artifacts DIR (default ./artifacts), --quick N,
 //!               --model M, --variant V, --mode MODE, --iters N,
 //!               --cost atlas|slot-step (serve: ladder cost model),
 //!               --kv paged|window|unbounded (serve: KV pool policy),
-//!               --preempt (serve: preempt-and-recompute on pool exhaustion)
+//!               --preempt (serve: preempt-and-recompute on pool exhaustion),
+//!               --devices N --router cost|round-robin
+//!               --device-budget-pages P (serve: fleet mode)
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -22,6 +26,9 @@ use pangu_atlas_quant::atlas::memory_model::{KvPrecision, PageGeometry};
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
+use pangu_atlas_quant::coordinator::fleet::{
+    FleetConfig, FleetServer, LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
+};
 use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
@@ -30,7 +37,9 @@ use pangu_atlas_quant::coordinator::scheduler::{
 use pangu_atlas_quant::coordinator::server::Server;
 use pangu_atlas_quant::harness::{self, Harness};
 use pangu_atlas_quant::quant::Precision;
-use pangu_atlas_quant::runtime::backend::{DeviceBackend, DeviceProvider};
+use pangu_atlas_quant::runtime::backend::{
+    minilang_mock_script, DeviceBackend, DeviceProvider, MockBackend, MockProvider,
+};
 use pangu_atlas_quant::runtime::Runtime;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::cli::Args;
@@ -156,6 +165,10 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    let devices = args.usize_or("devices", 0);
+    if devices > 0 {
+        return serve_fleet(args, devices);
+    }
     let dir = artifacts_dir(args);
     let rt = Runtime::open(&dir)?;
     let tk = Tokenizer::from_manifest(&rt.manifest.raw)?;
@@ -243,6 +256,78 @@ fn serve(args: &Args) -> Result<()> {
         "served {processed} requests in {wall:.2}s  ({:.1} req/s, {:.1} tok/s)",
         processed as f64 / wall,
         server.metrics.rate("tokens_generated", wall)
+    );
+    println!("request latency ms: mean {:.1} p50 {:.1} p99 {:.1}", s.mean, s.p50, s.p99);
+    Ok(())
+}
+
+/// `serve --devices N`: the multi-device fleet demo. Runs entirely
+/// artifact-free — N mock-backed devices, each with its own paged KV
+/// budget (`--device-budget-pages`, default 10 pages of 16 tokens),
+/// behind the cost-priced router (`--router round-robin` for the
+/// baseline). Traffic is deliberately skewed: long slow_think traces
+/// alternating with short no_think ones, the pattern that makes a
+/// skew-blind router pile all the expensive work on one device.
+fn serve_fleet(args: &Args, devices: usize) -> Result<()> {
+    let tk = Tokenizer::minilang_default();
+    let n_req = args.usize_or("requests", 32);
+    let pages = args.usize_or("device-budget-pages", 10);
+    anyhow::ensure!(pages > 0, "--device-budget-pages must be positive");
+    let policy: Box<dyn RouterPolicy> = match args.get_or("router", "cost") {
+        "cost" => Box::new(LeastLoadedRouter::new()),
+        "round-robin" => Box::new(RoundRobinRouter::new()),
+        other => anyhow::bail!("--router expects cost|round-robin, got {other:?}"),
+    };
+    let mut sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+        .with_kv(KvConfig::paged(16, pages * 16));
+    if args.flag("preempt") {
+        sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
+    }
+    let fleet_cfg = FleetConfig::homogeneous(
+        devices,
+        sched_cfg,
+        AdmitConfig::with_wait(false, Duration::ZERO),
+    );
+    let providers: Vec<_> = (0..devices)
+        .map(|_| MockProvider::new(MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 8))))
+        .collect();
+    let (mut server, handle) = FleetServer::new(providers, &tk, fleet_cfg, policy)?;
+    let client = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for i in 0..n_req {
+            let mode = if i % 2 == 0 { CotMode::SlowThink } else { CotMode::NoThink };
+            let examples = if mode == CotMode::SlowThink {
+                vec![
+                    (vec![1, 2, 3, 4], vec![4, 3, 2, 1]),
+                    (vec![2, 3, 4, 5], vec![5, 4, 3, 2]),
+                    (vec![3, 4, 5, 6], vec![6, 5, 4, 3]),
+                ]
+            } else {
+                vec![(vec![1, 2, 3], vec![3, 2, 1]), (vec![2, 3, 4], vec![4, 3, 2])]
+            };
+            let req = Request::new(i as u64, "7b-sim", "int8", mode, examples);
+            rxs.push(handle.submit(req).unwrap());
+        }
+        let mut latencies = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            latencies.push(resp.latency_ms);
+        }
+        latencies
+    });
+    let t0 = std::time::Instant::now();
+    let processed = server.run_until_idle(Duration::from_millis(300))?;
+    let wall = t0.elapsed().as_secs_f64();
+    let latencies = client.join().map_err(|_| anyhow!("client panicked"))?;
+    println!("{}", server.fleet_report().render());
+    let rollup = server.metrics_rollup();
+    println!("{}", rollup.render());
+    let s = pangu_atlas_quant::util::stats::Summary::of(&latencies);
+    println!(
+        "served {processed} requests over {devices} devices in {wall:.2}s  \
+         ({:.1} req/s, {:.1} tok/s)",
+        processed as f64 / wall,
+        rollup.rate("tokens_generated", wall)
     );
     println!("request latency ms: mean {:.1} p50 {:.1} p99 {:.1}", s.mean, s.p50, s.p99);
     Ok(())

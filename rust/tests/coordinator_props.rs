@@ -878,6 +878,166 @@ fn prop_int4_quant_error_bound() {
 }
 
 // ---------------------------------------------------------------------------
+// Fleet: multi-device conservation and single-device identity
+// ---------------------------------------------------------------------------
+
+/// Randomized workloads over randomized fleets (1–4 devices, both router
+/// policies, tight per-device paged pools with preempt-and-recompute on):
+/// every request is answered exactly once by exactly one device, in input
+/// order, with tokens; placement accounting is conserved through
+/// rebalance; and the fleet-wide page ledger balances.
+///
+/// Pool sizing mirrors the preempt conservation suite: every sequence
+/// peaks at <= 4 pages (28-token prompt + 30-token trace), so 5..=8 pages
+/// per device starve often but can always restore — distress is reachable
+/// (exercising the rebalance path) without truncation being forced.
+#[test]
+fn prop_fleet_conserves_requests() {
+    use pangu_atlas_quant::coordinator::fleet::{
+        Fleet, FleetConfig, LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
+    };
+    use pangu_atlas_quant::runtime::backend::MockProvider;
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    check(
+        "fleet-conservation",
+        25,
+        0xF1EE7,
+        |rng| {
+            let devices = rng.range(1, 4);
+            let shapes: Vec<(u8, u8)> = (0..rng.range(2, 10))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            let pages = rng.range(5, 8);
+            let cost_router = rng.chance(0.5);
+            (devices, shapes, pages, cost_router)
+        },
+        |(devices, shapes, pages, cost_router)| {
+            let tk = Tokenizer::minilang_default();
+            let sched_cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+                .with_kv(KvConfig::paged(16, pages * 16))
+                .with_preempt(PreemptConfig::enabled());
+            let cfg = FleetConfig::homogeneous(
+                *devices,
+                sched_cfg,
+                AdmitConfig::with_wait(false, Duration::ZERO),
+            );
+            let policy: Box<dyn RouterPolicy> = if *cost_router {
+                Box::new(LeastLoadedRouter::new())
+            } else {
+                Box::new(RoundRobinRouter::new())
+            };
+            let mut fleet = Fleet::new(&tk, cfg, policy).map_err(|e| e.to_string())?;
+            let mut providers: Vec<_> = (0..*devices)
+                .map(|_| {
+                    let script =
+                        pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+                    MockProvider::new(MockBackend::new(64, 48, 96, script))
+                })
+                .collect();
+            let requests: Vec<Request> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, &(tag, examples))| {
+                    let ex: Vec<(Vec<u8>, Vec<u8>)> = (0..examples)
+                        .map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]))
+                        .collect();
+                    Request::new(i as u64, "7b-sim", "int8", modes[tag as usize], ex)
+                })
+                .collect();
+            let (resps, report) =
+                fleet.run_batch(&mut providers, &requests).map_err(|e| e.to_string())?;
+            ensure_eq(resps.len(), requests.len(), "every request answered exactly once")?;
+            for (i, r) in resps.iter().enumerate() {
+                ensure_eq(r.id, i as u64, "responses in input order, no loss/duplication")?;
+                ensure(!r.tokens.is_empty(), format!("request {i} got tokens"))?;
+            }
+            ensure_eq(
+                report.placements(),
+                requests.len(),
+                "placement accounting conserved through rebalance",
+            )?;
+            let total = report.rollup();
+            ensure_eq(total.completed, requests.len(), "rollup completion agrees")?;
+            ensure_eq(
+                total.kv_pages_allocated,
+                total.kv_pages_released,
+                "fleet-wide page conservation",
+            )?;
+            Ok(())
+        },
+    );
+}
+
+/// A single-device fleet is the bare scheduler: same responses
+/// byte-for-byte (tokens, truncation, first-token step) and the same
+/// schedule accounting. The fleet layer must add routing, not behavior.
+#[test]
+fn prop_single_device_fleet_matches_bare_scheduler() {
+    use pangu_atlas_quant::coordinator::fleet::{Fleet, FleetConfig, LeastLoadedRouter};
+    use pangu_atlas_quant::runtime::backend::MockProvider;
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    check(
+        "fleet-single-device-identity",
+        25,
+        0xF1D1,
+        |rng| {
+            let bucket = rng.range(1, 6);
+            let shapes: Vec<(u8, u8)> = (0..rng.range(1, 8))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            (bucket, shapes)
+        },
+        |(bucket, shapes)| {
+            let tk = Tokenizer::minilang_default();
+            let requests: Vec<Request> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, &(tag, examples))| {
+                    let ex: Vec<(Vec<u8>, Vec<u8>)> = (0..examples)
+                        .map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]))
+                        .collect();
+                    Request::new(i as u64, "7b-sim", "int8", modes[tag as usize], ex)
+                })
+                .collect();
+            let sched_cfg = SchedulerConfig::fixed(*bucket, AdmitGate::Continuous);
+
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            let (bare_resps, bare_report) = Scheduler::new(&tk, sched_cfg.clone())
+                .run_batch(&mut be, &requests)
+                .map_err(|e| e.to_string())?;
+
+            let cfg = FleetConfig::homogeneous(
+                1,
+                sched_cfg,
+                AdmitConfig::with_wait(false, Duration::ZERO),
+            );
+            let mut fleet = Fleet::new(&tk, cfg, Box::new(LeastLoadedRouter::new()))
+                .map_err(|e| e.to_string())?;
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+            let mut providers = vec![MockProvider::new(MockBackend::new(64, 48, 96, script))];
+            let (fleet_resps, fleet_report) =
+                fleet.run_batch(&mut providers, &requests).map_err(|e| e.to_string())?;
+
+            ensure_eq(fleet_resps.len(), bare_resps.len(), "same response count")?;
+            for (a, b) in bare_resps.iter().zip(&fleet_resps) {
+                ensure_eq(a.id, b.id, "same response order")?;
+                ensure(a.tokens == b.tokens, format!("request {} tokens diverged", a.id))?;
+                ensure_eq(a.truncated, b.truncated, "same truncation")?;
+                ensure_eq(a.first_token_step, b.first_token_step, "same schedule")?;
+            }
+            let total = fleet_report.rollup();
+            ensure_eq(total.decode_steps, bare_report.decode_steps, "same decode steps")?;
+            ensure_eq(total.slot_steps(), bare_report.slot_steps(), "same slot-steps")?;
+            ensure_eq(total.completed, bare_report.completed, "same completions")?;
+            ensure_eq(total.admitted, bare_report.admitted, "same admissions")?;
+            ensure_eq(total.joins, bare_report.joins, "same joins")?;
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // MiniLang VM totality: any program over any input halts in domain.
 // ---------------------------------------------------------------------------
 

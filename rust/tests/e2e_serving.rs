@@ -637,6 +637,192 @@ fn token_weighted_demand_launches_a_bigger_rung() -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Fleet: multi-device serving behind the cost-priced router
+// ---------------------------------------------------------------------------
+
+/// Skewed fleet workload: long slow_think traces (3 examples, 35 prompt
+/// tokens -> 3 pages) alternating with short no_think ones (2 examples,
+/// 20 prompt tokens -> 2 pages). Round-robin folds all the expensive
+/// requests onto one device.
+fn skew_request(id: u64) -> Request {
+    if id % 2 == 0 {
+        let ex = vec![
+            (vec![1, 2, 3, 4], vec![4, 3, 2, 1]),
+            (vec![2, 3, 4, 5], vec![5, 4, 3, 2]),
+            (vec![3, 4, 5, 6], vec![6, 5, 4, 3]),
+        ];
+        Request::new(id, "7b-sim", "int8", CotMode::SlowThink, ex)
+    } else {
+        let ex = vec![(vec![1, 2, 3], vec![3, 2, 1]), (vec![2, 3, 4], vec![4, 3, 2])];
+        Request::new(id, "7b-sim", "int8", CotMode::NoThink, ex)
+    }
+}
+
+/// The ISSUE 6 acceptance test. Two devices with EQUAL per-device KV
+/// budgets (10 pages each — the same total HBM either way), skewed
+/// arrivals:
+///
+///   * **round-robin** sends every slow_think to device 0 (4 x 3 pages =
+///     12 > 10), so its pool must defer admissions while device 1's sits
+///     half empty;
+///   * the **cost-priced** router interleaves placements (2 slow + 2
+///     short = exactly 10 pages per device), defers strictly fewer
+///     admissions, and models no more total milliseconds;
+///   * placement never bends generation: both fleets' outputs are
+///     byte-identical to a single unbounded bare-scheduler reference.
+#[test]
+fn fleet_cost_router_beats_round_robin_on_skewed_arrivals() {
+    use pangu_atlas_quant::coordinator::fleet::{
+        Fleet, FleetConfig, FleetReport, LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
+    };
+    let tk = Tokenizer::minilang_default();
+    let requests: Vec<Request> = (0..8).map(skew_request).collect();
+
+    // Reference: one bare scheduler, unbounded pool — what every request
+    // generates when nothing is budget-gated.
+    let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 6);
+    let mut be = MockBackend::new(64, 48, 96, script);
+    let (reference, _) = Scheduler::new(&tk, SchedulerConfig::fixed(4, AdmitGate::Continuous))
+        .run_batch(&mut be, &requests)
+        .expect("reference session");
+
+    let run = |policy: Box<dyn RouterPolicy>| -> FleetReport {
+        let sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 10 * 16));
+        let cfg = FleetConfig::homogeneous(
+            2,
+            sched_cfg,
+            AdmitConfig::with_wait(false, Duration::ZERO),
+        );
+        let mut fleet = Fleet::new(&tk, cfg, policy).expect("fleet");
+        let mut providers = vec![mock_provider(&tk, 6), mock_provider(&tk, 6)];
+        let (resps, report) = fleet.run_batch(&mut providers, &requests).expect("fleet batch");
+        assert_eq!(resps.len(), 8, "every request answered exactly once");
+        for (resp, reference) in resps.iter().zip(&reference) {
+            assert_eq!(resp.id, reference.id);
+            assert_eq!(
+                resp.tokens, reference.tokens,
+                "request {} diverged under placement", resp.id
+            );
+            assert!(!resp.truncated, "request {} truncated by the budget", resp.id);
+        }
+        report
+    };
+
+    let cost = run(Box::new(LeastLoadedRouter::new()));
+    let rr = run(Box::new(RoundRobinRouter::new()));
+
+    assert_eq!(cost.rollup().completed, 8);
+    assert_eq!(rr.rollup().completed, 8);
+    // The skew-blind baseline genuinely overloads one pool...
+    assert!(
+        rr.rollup().deferred >= 1,
+        "round-robin must overload device 0's pool on this workload"
+    );
+    // ...and the cost-priced router strictly beats it on deferrals while
+    // modeling no more total milliseconds.
+    assert!(
+        cost.rollup().deferred < rr.rollup().deferred,
+        "cost-priced deferred {} !< round-robin {}",
+        cost.rollup().deferred,
+        rr.rollup().deferred
+    );
+    assert!(
+        cost.rollup().modeled_total_ms() <= rr.rollup().modeled_total_ms() + 1e-6,
+        "cost-priced modeled {:.1} ms !<= round-robin {:.1} ms",
+        cost.rollup().modeled_total_ms(),
+        rr.rollup().modeled_total_ms()
+    );
+    // Balanced placement also shows up as fleet completion time: the
+    // busiest device under the cost router finishes no later.
+    assert!(
+        cost.makespan_slot_steps() <= rr.makespan_slot_steps(),
+        "cost makespan {} !<= round-robin {}",
+        cost.makespan_slot_steps(),
+        rr.makespan_slot_steps()
+    );
+    assert!(
+        cost.imbalance_ratio() <= rr.imbalance_ratio(),
+        "cost imbalance {:.3} !<= round-robin {:.3}",
+        cost.imbalance_ratio(),
+        rr.imbalance_ratio()
+    );
+    assert_eq!(cost.policy, "cost");
+    assert_eq!(rr.policy, "round-robin");
+}
+
+/// Cross-device rebalance: a device whose pool starves mid-decode (its
+/// preempted lane is non-empty) re-places its queued, not-yet-prefilled
+/// work onto the sibling with headroom. Device 0 holds three growing
+/// slow_think sequences against a 5-page pool; device 1 holds three
+/// 1-page no_think requests. When device 0 starves and parks, its third
+/// queued slow_think migrates to device 1 — and every request is still
+/// answered exactly once, untruncated.
+#[test]
+fn fleet_rebalance_moves_queued_work_off_a_starved_device() {
+    use pangu_atlas_quant::coordinator::fleet::{
+        Fleet, FleetConfig, RoundRobinRouter,
+    };
+    let tk = Tokenizer::minilang_default();
+    // Round-robin interleaving puts slows (even ids, 28-token prompts that
+    // grow 16 tokens -> 2 pages then 3) on device 0 and tiny no_thinks
+    // (11-token prompts, 1 page, no growth) on device 1.
+    let requests: Vec<Request> = (0..6)
+        .map(|id| {
+            if id % 2 == 0 {
+                request(id, CotMode::SlowThink)
+            } else {
+                let ex = vec![(vec![1, 2, 3], vec![3, 2, 1])];
+                Request::new(id, "7b-sim", "int8", CotMode::NoThink, ex)
+            }
+        })
+        .collect();
+    let sched_cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+        .with_kv(KvConfig::paged(16, 5 * 16))
+        .with_preempt(PreemptConfig::enabled());
+    let cfg = FleetConfig::homogeneous(
+        2,
+        sched_cfg,
+        AdmitConfig::with_wait(false, Duration::ZERO),
+    );
+    let mut fleet = Fleet::new(&tk, cfg, Box::new(RoundRobinRouter::new())).expect("fleet");
+    let mut providers = vec![mock_provider(&tk, 16), mock_provider(&tk, 16)];
+    let (resps, report) = fleet.run_batch(&mut providers, &requests).expect("fleet batch");
+
+    assert_eq!(resps.len(), 6, "every request answered exactly once");
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "input order restored");
+        assert!(!r.truncated, "request {i} truncated despite preempt + rebalance");
+        let want = if i % 2 == 0 { 16 } else { 3 };
+        assert_eq!(r.tokens.len(), want, "request {i} finished its full trace");
+    }
+    assert!(
+        report.rebalances >= 1,
+        "the starved device never re-placed its queued work"
+    );
+    assert_eq!(
+        report.placements(),
+        6,
+        "placement accounting conserved through the move"
+    );
+    let total = report.rollup();
+    assert_eq!(total.completed, 6);
+    assert!(total.preemptions >= 1, "distress was real: the pool parked a sequence");
+    assert_eq!(
+        total.kv_pages_allocated, total.kv_pages_released,
+        "fleet-wide page conservation through preempt + rebalance"
+    );
+    // The moved request really ran on the sibling: device 1 completed more
+    // than its three original placements' worth of work.
+    let d1 = &report.devices[1];
+    assert!(
+        d1.report.completed >= 4,
+        "device 1 completed {} requests; expected the rebalanced one too",
+        d1.report.completed
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Artifact-backed test (skips when artifacts are absent)
 // ---------------------------------------------------------------------------
 
