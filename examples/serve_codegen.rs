@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example serve_codegen -- \
 //!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4] \
-//!         [--long-cot] [--kv-page 16] [--preempt] \
+//!         [--long-cot] [--kv-page 16] [--preempt] [--share-prefix] \
 //!         [--devices N [--device-budget-pages P]]
 //!
 //! `--devices N` switches to the artifact-free multi-device fleet demo:
@@ -23,6 +23,10 @@
 //! `--preempt` turns on preempt-and-recompute: a pool starved mid-decode
 //! evicts-and-restores the cheapest sequence instead of truncating it (the
 //! report then shows preemptions / recomputed tokens / stall steps).
+//! `--share-prefix` turns on shared-prefix copy-on-write pages: requests
+//! whose prompts share a prefix with a live sequence map the cached pages
+//! by reference and fork a private copy on first write (the pool report
+//! then shows prefix hits / pages reused / CoW forks).
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -56,9 +60,10 @@ fn main() -> Result<()> {
     let long_cot = args.flag("long-cot");
     let page_tokens = args.usize_or("kv-page", 16);
     let preempt = args.flag("preempt");
+    let share = args.flag("share-prefix");
     let devices = args.usize_or("devices", 0);
     if devices > 0 {
-        return serve_fleet(devices, n_requests, args.usize_or("device-budget-pages", 10));
+        return serve_fleet(devices, n_requests, args.usize_or("device-budget-pages", 10), share);
     }
 
     let rt = Runtime::open(&dir)?;
@@ -85,11 +90,15 @@ fn main() -> Result<()> {
     let weight_precision = Precision::parse(&variant).unwrap_or(Precision::Fp16);
     let kv_precision = KvPrecision::for_weights(weight_precision);
     let cost_model = AtlasCostModel::openpangu_7b().with_kv_precision(kv_precision);
-    let kv_cfg = cost_model.kv_config(
+    let mut kv_cfg = cost_model.kv_config(
         weight_precision,
         PageGeometry { page_tokens },
         buckets.last().copied().unwrap_or(8),
     );
+    if share {
+        kv_cfg = kv_cfg.with_prefix_sharing();
+        println!("shared-prefix CoW: ON (common prompt prefixes map pool pages by reference)");
+    }
     println!(
         "paged KV pool: {} tokens of budget, {page_tokens}-token pages, \
          {:.0} KiB per KV token ({kv_precision:?})",
@@ -210,8 +219,10 @@ fn main() -> Result<()> {
 /// The `--devices N` fleet demo: a skewed workload (long slow_think
 /// traces alternating with short no_think ones) over N mock-backed
 /// devices with equal per-device KV budgets, served under both in-tree
-/// routers. Artifact-free — runs anywhere `cargo run` does.
-fn serve_fleet(devices: usize, n_requests: usize, pages: usize) -> Result<()> {
+/// routers. Artifact-free — runs anywhere `cargo run` does. With
+/// `share` on, the repeated example sets make most prompts map cached
+/// prefix pages by reference instead of allocating fresh ones.
+fn serve_fleet(devices: usize, n_requests: usize, pages: usize, share: bool) -> Result<()> {
     use pangu_atlas_quant::coordinator::fleet::{
         Fleet, FleetConfig, FleetReport, LeastLoadedRouter, RoundRobinRouter, RouterPolicy,
     };
@@ -243,8 +254,11 @@ fn serve_fleet(devices: usize, n_requests: usize, pages: usize) -> Result<()> {
     );
 
     let mut run = |policy: Box<dyn RouterPolicy>| -> Result<FleetReport> {
-        let sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
-            .with_kv(KvConfig::paged(16, pages * 16));
+        let mut kv = KvConfig::paged(16, pages * 16);
+        if share {
+            kv = kv.with_prefix_sharing();
+        }
+        let sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous).with_kv(kv);
         let cfg = FleetConfig::homogeneous(
             devices,
             sched_cfg,
@@ -253,7 +267,13 @@ fn serve_fleet(devices: usize, n_requests: usize, pages: usize) -> Result<()> {
         let mut fleet = Fleet::new(&tk, cfg, policy)?;
         let mut providers: Vec<_> = (0..devices)
             .map(|_| {
-                MockProvider::new(MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 8)))
+                let mut be = MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 8));
+                if share {
+                    // Page-aware sharing contract: reads of multi-mapped
+                    // pages pass, advancing writes into one are rejected.
+                    be = be.with_page_tokens(16);
+                }
+                MockProvider::new(be)
             })
             .collect();
         let (resps, report) = fleet.run_batch(&mut providers, &requests)?;
@@ -289,6 +309,9 @@ fn print_pool_report(metrics: &pangu_atlas_quant::coordinator::metrics::Metrics)
     println!("=== paged KV pool ===");
     println!("pages allocated:      {}", metrics.counter("kv_pages_allocated"));
     println!("pages released:       {}", metrics.counter("kv_pages_released"));
+    println!("prefix hits:          {}", metrics.counter("kv_prefix_hits"));
+    println!("shared pages reused:  {}", metrics.counter("kv_shared_pages_reused"));
+    println!("CoW forks:            {}", metrics.counter("kv_cow_forks"));
     println!("admissions deferred:  {}", metrics.counter("deferred_admissions"));
     println!("pressure shrinks:     {}", metrics.counter("pressure_shrinks"));
     println!("preemptions:          {}", metrics.counter("preemptions"));

@@ -210,6 +210,55 @@ fn main() {
             report.kv_peak_pool_util
         ));
     }
+    // Shared-prefix CoW vs the plain paged pool on an n-best workload (six
+    // identical prompts) under the same tight budget: sharing admits the
+    // full bucket by mapping the cached prefix pages by reference and
+    // forking on first write, the plain pool serializes on prompt pages —
+    // the notes carry max_live, deferrals, prefix hits, reused pages, and
+    // CoW forks.
+    for (name, kv) in [
+        (
+            "n-best session shared-prefix kv (10 pages)",
+            KvConfig::paged(16, 10 * 16).with_prefix_sharing(),
+        ),
+        ("n-best session plain paged kv (10 pages)", KvConfig::paged(16, 10 * 16)),
+    ] {
+        let last = RefCell::new(None);
+        g.run(name, &quick, || {
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 6);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            if kv.sharing() {
+                // Page-aware mock: reads of multi-mapped pages pass,
+                // advancing writes into one are rejected.
+                be = be.with_page_tokens(16);
+            }
+            let cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous).with_kv(kv.clone());
+            let sched = Scheduler::new(&tk, cfg);
+            let nbest = vec![
+                (vec![1u8, 2, 3, 4, 5], vec![5u8, 4, 3, 2, 1]),
+                (vec![0u8, 1, 2, 3, 4], vec![4u8, 3, 2, 1, 0]),
+                (vec![2u8, 3, 4, 5, 6], vec![6u8, 5, 4, 3, 2]),
+            ];
+            let reqs: Vec<Request> = (0..6)
+                .map(|i| Request::new(i, "7b-sim", "int8", CotMode::NoThink, nbest.clone()))
+                .collect();
+            let (resps, report) = sched.run_batch(&mut be, &reqs).expect("mock session");
+            assert_eq!(resps.len(), 6);
+            std::hint::black_box(report.kv_prefix_hits);
+            *last.borrow_mut() = Some(report);
+        });
+        let report = last.into_inner().expect("bench ran at least once");
+        g.note(&format!(
+            "max_live {}, {} deferred, {} prefix hits, {} pages reused, {} CoW forks, \
+             {} pages allocated",
+            report.max_live,
+            report.deferred,
+            report.kv_prefix_hits,
+            report.kv_shared_pages_reused,
+            report.kv_cow_forks,
+            report.kv_pages_allocated
+        ));
+    }
     // Preempt-vs-truncate on a pool that genuinely starves mid-decode (four
     // 5-page long-CoT sequences over 16 pages): the truncate policy is the
     // cheap-but-lossy baseline, the preempt policy pays re-prefill replay

@@ -162,6 +162,10 @@ impl DeviceState {
     }
 
     /// Estimated pages of `req`'s admission reservation on this device.
+    /// Deliberately a conservative upper bound when the device's pool runs
+    /// prefix sharing: the estimate prices the whole prompt even though a
+    /// shared prefix would reserve only the unshared suffix — routing sees
+    /// the worst case, and sharing shows up as extra live headroom.
     fn est_pages(&self, req: &Request) -> usize {
         req.prompt_tokens_hint().div_ceil(self.cfg.kv.page_tokens.max(1)).max(1)
     }
@@ -223,6 +227,13 @@ impl<'t> Fleet<'t> {
         policy: Box<dyn RouterPolicy>,
     ) -> Result<Fleet<'t>> {
         anyhow::ensure!(!cfg.devices.is_empty(), "a fleet needs at least one device");
+        // Surface per-device KV misconfiguration (e.g. a sub-page budget)
+        // at fleet construction instead of at each device's first session.
+        for (i, c) in cfg.devices.iter().enumerate() {
+            if let Err(e) = c.kv.validate() {
+                return Err(anyhow::anyhow!("device {i}: {e}"));
+            }
+        }
         let devices =
             cfg.devices.into_iter().map(|c| DeviceState::new(c, &cfg.admit)).collect();
         Ok(Fleet {
@@ -246,18 +257,30 @@ impl<'t> Fleet<'t> {
 
     /// Place one request on a device (by the configured policy) and
     /// enqueue it there. Returns the device index.
-    pub fn route(&mut self, req: Request) -> usize {
+    ///
+    /// An out-of-range [`RouterPolicy::place`] pick is a hard error — the
+    /// trait contract requires an index `< devices.len()`. It used to be
+    /// clamped to the last device, which silently dumped all traffic from
+    /// a buggy policy onto one card; the request is not enqueued anywhere
+    /// when the policy misbehaves.
+    pub fn route(&mut self, req: Request) -> Result<usize> {
         let snaps: Vec<DeviceSnapshot> = self
             .devices
             .iter()
             .enumerate()
             .map(|(i, dev)| dev.snapshot(i, dev.queue.queued(), &req))
             .collect();
-        let j = self.policy.place(&req, &snaps).min(self.devices.len() - 1);
+        let j = self.policy.place(&req, &snaps);
+        anyhow::ensure!(
+            j < self.devices.len(),
+            "router policy '{}' placed a request on device {j} of a {}-device fleet",
+            self.policy.name(),
+            self.devices.len()
+        );
         self.devices[j].charge(&req);
         self.devices[j].placements += 1;
         self.devices[j].queue.push(req);
-        j
+        Ok(j)
     }
 
     /// Accumulated fleet accounting (callable at any point; totals grow
@@ -280,12 +303,15 @@ impl<'t> Fleet<'t> {
         }
     }
 
-    /// Run ONE scheduler session on device `d` (which must have work or
-    /// receive some through `inflow`). `inflow` is drained every scheduler
-    /// step and each request is routed across the whole fleet — the
-    /// running device admits its share mid-session, siblings accumulate
-    /// theirs for their own next session. Rebalance (see module docs) also
-    /// runs here, inside the pump.
+    /// Run ONE scheduler session on device `d`. The session's backend
+    /// route key comes from the device's queue head; an idle device first
+    /// drains `inflow` (routing fleet-wide), and if no work lands here the
+    /// call is a no-op returning an empty report — it never binds a
+    /// guessed backend. `inflow` is also drained every scheduler step and
+    /// each request is routed across the whole fleet — the running device
+    /// admits its share mid-session, siblings accumulate theirs for their
+    /// own next session. Rebalance (see module docs) also runs here,
+    /// inside the pump.
     pub fn run_session<P: BackendProvider>(
         &mut self,
         providers: &mut [P],
@@ -300,20 +326,38 @@ impl<'t> Fleet<'t> {
             providers.len()
         );
         anyhow::ensure!(d < self.devices.len(), "device {d} out of range");
+        // An idle device must not guess its backend: the route key comes
+        // from real work. Drain inflow (routed fleet-wide, like the pump
+        // does) until something lands on THIS device; if nothing ever
+        // does, there is no session to run — return an empty report
+        // instead of binding a made-up ("mock", "mock") backend.
+        while self.devices[d].queue.front().is_none() {
+            let Some(req) = inflow() else { break };
+            self.route(req)?;
+        }
+        if self.devices[d].queue.front().is_none() {
+            return Ok(SchedReport::default());
+        }
         let placeholder = AdmissionQueue::new(self.admit.clone());
         let mut queue = std::mem::replace(&mut self.devices[d].queue, placeholder);
-        let (model, variant) = queue
-            .front()
-            .map(|r| r.route_key())
-            .unwrap_or_else(|| ("mock".to_string(), "mock".to_string()));
+        let (model, variant) =
+            queue.front().map(|r| r.route_key()).expect("checked non-empty above");
         let scheduler = Scheduler::new(self.tokenizer, self.devices[d].cfg.clone());
         let rebalance = self.rebalance.clone();
         let mut moved = 0usize;
+        // The pump closure cannot return `Result`; a router contract
+        // violation mid-session poisons the pump (which becomes a no-op so
+        // the scheduler can finish its in-flight work) and surfaces here
+        // after device state is restored.
+        let mut pump_err: Option<anyhow::Error> = None;
 
         let result = {
             let devices = &mut self.devices;
             let policy = &mut self.policy;
             let mut pump = |q: &mut AdmissionQueue| {
+                if pump_err.is_some() {
+                    return;
+                }
                 // Fresh arrivals are routed fleet-wide: the running device
                 // admits into the live session, siblings queue for theirs.
                 while let Some(req) = inflow() {
@@ -326,7 +370,24 @@ impl<'t> Fleet<'t> {
                             dev.snapshot(i, queued, &req)
                         })
                         .collect();
-                    let j = policy.place(&req, &snaps).min(devices.len() - 1);
+                    let j = policy.place(&req, &snaps);
+                    if j >= devices.len() {
+                        // Same hard contract as `route`: never clamp a
+                        // buggy pick onto the last device. Conservation
+                        // still holds — the request stays on the running
+                        // device (charged honestly), so it is answered or
+                        // restored with the queue, never dropped.
+                        pump_err = Some(anyhow::anyhow!(
+                            "router policy '{}' placed a request on device {j} of a \
+                             {}-device fleet",
+                            policy.name(),
+                            devices.len()
+                        ));
+                        devices[d].charge(&req);
+                        devices[d].placements += 1;
+                        q.push(req);
+                        return;
+                    }
                     devices[j].charge(&req);
                     devices[j].placements += 1;
                     if j == d {
@@ -346,9 +407,13 @@ impl<'t> Fleet<'t> {
                     return;
                 }
                 let mut moves = 0usize;
+                // `queued() > 1`: stealing the ONLY queued request would
+                // move the FIFO head — the request whose starvation clock
+                // is oldest — off-device, contradicting steal_tail's
+                // head-side fairness. A lone queued request stays put.
                 while moves < rebalance.max_moves_per_step
                     && q.has_parked()
-                    && q.queued() > 0
+                    && q.queued() > 1
                 {
                     let Some(req) = q.steal_tail() else { break };
                     let snaps: Vec<DeviceSnapshot> = devices
@@ -389,6 +454,13 @@ impl<'t> Fleet<'t> {
         // answered by the scheduler's abort drain).
         self.devices[d].queue = queue;
         self.rebalances += moved;
+        if let Some(e) = pump_err {
+            // The router violated its contract mid-session: the scheduler
+            // was allowed to finish (the pump went inert), responses were
+            // delivered, and the queue above kept every unserved request —
+            // now the root cause surfaces.
+            return Err(e);
+        }
         let report = result?;
         let dev = &mut self.devices[d];
         dev.acc.merge(&report);
@@ -418,7 +490,7 @@ impl<'t> Fleet<'t> {
             providers.len()
         );
         for req in requests {
-            self.route(req.clone());
+            self.route(req.clone())?;
         }
         let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
         let mut no_inflow = || None::<Request>;
@@ -535,6 +607,207 @@ mod tests {
         assert_eq!(total.slot_steps(), bare_report.slot_steps());
         assert_eq!(total.completed, bare_report.completed);
         assert_eq!(total.admitted, bare_report.admitted);
+    }
+
+    /// Routes everything to one fixed device index — including, when
+    /// constructed out of range, indices the fleet does not have.
+    #[derive(Debug)]
+    struct PinRouter(usize);
+
+    impl RouterPolicy for PinRouter {
+        fn name(&self) -> &'static str {
+            "pin"
+        }
+        fn place(&mut self, _req: &Request, _devices: &[DeviceSnapshot]) -> usize {
+            self.0
+        }
+    }
+
+    /// Provider that records every (model, variant) it is asked to bind —
+    /// the observable for the idle-device route-key bugfix.
+    struct KeyProvider<F: Fn(&[i32]) -> Vec<u32>> {
+        inner: MockProvider<F>,
+        keys: Vec<(String, String)>,
+    }
+
+    impl<F: Fn(&[i32]) -> Vec<u32>> crate::runtime::backend::BackendProvider
+        for KeyProvider<F>
+    {
+        fn with_backend<R>(
+            &mut self,
+            model: &str,
+            variant: &str,
+            run: &mut dyn FnMut(&mut dyn crate::runtime::backend::Backend) -> Result<R>,
+        ) -> Result<R> {
+            self.keys.push((model.to_string(), variant.to_string()));
+            self.inner.with_backend(model, variant, run)
+        }
+    }
+
+    #[test]
+    fn out_of_range_router_pick_is_a_hard_error_not_a_clamp() {
+        let tk = Tokenizer::minilang_default();
+        let cfg = FleetConfig::homogeneous(
+            2,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous),
+            admit(),
+        );
+        // `route`: the contract violation is rejected outright and the
+        // request lands nowhere (it used to be clamped onto device 1).
+        let mut fleet = Fleet::new(&tk, cfg.clone(), Box::new(PinRouter(2))).unwrap();
+        let err = fleet.route(request(0, CotMode::NoThink)).unwrap_err();
+        assert!(
+            err.to_string().contains("device 2 of a 2-device fleet"),
+            "unexpected error: {err}"
+        );
+        assert_eq!(fleet.queued(), 0, "a rejected pick enqueues nothing");
+        assert_eq!(fleet.report().placements(), 0);
+
+        // Mid-session (the pump): the session finishes its in-flight work
+        // — every caller is answered — and the violation surfaces as the
+        // session error instead of dumping the arrival on the last device.
+        #[derive(Debug)]
+        struct FlipRouter {
+            calls: usize,
+        }
+        impl RouterPolicy for FlipRouter {
+            fn name(&self) -> &'static str {
+                "flip"
+            }
+            fn place(&mut self, _req: &Request, _devices: &[DeviceSnapshot]) -> usize {
+                self.calls += 1;
+                if self.calls == 1 {
+                    0
+                } else {
+                    99
+                }
+            }
+        }
+        let mut fleet =
+            Fleet::new(&tk, cfg, Box::new(FlipRouter { calls: 0 })).unwrap();
+        let mut provs = providers(&tk, 2, 8);
+        fleet.route(request(0, CotMode::SlowThink)).unwrap();
+        let mut fed = false;
+        let mut got = Vec::new();
+        let err = fleet
+            .run_session(
+                &mut provs,
+                0,
+                &mut || {
+                    if fed {
+                        None
+                    } else {
+                        fed = true;
+                        Some(request(1, CotMode::NoThink))
+                    }
+                },
+                &mut |r| got.push(r),
+            )
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("device 99"),
+            "pump must surface the contract violation: {err}"
+        );
+        assert_eq!(got.len(), 2, "both callers answered before the error surfaced");
+    }
+
+    #[test]
+    fn rebalance_never_steals_the_only_queued_request() {
+        use crate::coordinator::kv::KvConfig;
+        use crate::coordinator::scheduler::PreemptConfig;
+        let tk = Tokenizer::minilang_default();
+        // Device 0: two one-page slow_think prompts over a 3-page pool —
+        // both cross into a second page, one gets parked. While it sits
+        // parked, exactly ONE fresh request is queued: the old rebalance
+        // stole it (moving the FIFO head off-device); the fix leaves it.
+        let tight = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 3 * 16))
+            .with_preempt(PreemptConfig::enabled());
+        let roomy = SchedulerConfig::fixed(2, AdmitGate::Continuous);
+        let cfg = FleetConfig {
+            devices: vec![tight, roomy],
+            admit: admit(),
+            rebalance: RebalanceConfig::default(),
+        };
+        let mut fleet = Fleet::new(&tk, cfg, Box::new(PinRouter(0))).unwrap();
+        let mut provs = providers(&tk, 2, 12);
+        let small = |id: u64, mode: CotMode| {
+            Request::new(id, "7b-sim", "int8", mode, vec![(vec![1, 2, 3], vec![3, 2, 1])])
+        };
+        fleet.route(small(0, CotMode::SlowThink)).unwrap();
+        fleet.route(small(1, CotMode::SlowThink)).unwrap();
+        fleet.route(small(2, CotMode::NoThink)).unwrap();
+        let mut got = Vec::new();
+        let report = fleet
+            .run_session(&mut provs, 0, &mut || None, &mut |r| got.push(r))
+            .unwrap();
+        assert!(report.preemptions >= 1, "the scenario must actually park a sequence");
+        assert_eq!(got.len(), 3, "the starved device served everything itself");
+        assert_eq!(fleet.report().rebalances, 0, "the lone queued request stayed put");
+        assert_eq!(
+            fleet.report().devices[1].placements,
+            0,
+            "nothing moved to the sibling"
+        );
+    }
+
+    #[test]
+    fn idle_device_session_derives_its_route_from_real_work() {
+        let tk = Tokenizer::minilang_default();
+        let cfg = FleetConfig::homogeneous(
+            2,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous),
+            admit(),
+        );
+        let mut fleet = Fleet::new(&tk, cfg, Box::new(PinRouter(1))).unwrap();
+        let mut provs: Vec<KeyProvider<_>> = (0..2)
+            .map(|_| KeyProvider {
+                inner: MockProvider::new(MockBackend::new(
+                    64,
+                    48,
+                    96,
+                    minilang_mock_script(&tk, 8),
+                )),
+                keys: Vec::new(),
+            })
+            .collect();
+
+        // Truly idle (empty queue, dry inflow): a no-op — no backend is
+        // ever bound, where the old code ran a ("mock", "mock") session.
+        let report = fleet
+            .run_session(&mut provs, 0, &mut || None, &mut |_| {
+                panic!("an idle session must produce no responses")
+            })
+            .unwrap();
+        assert_eq!(report.decode_steps + report.admitted, 0);
+        assert!(provs[0].keys.is_empty(), "no work, no backend bound");
+        assert_eq!(fleet.report().devices[0].sessions, 0, "no session counted");
+
+        // Idle but inflow-fed: the first arrival's route key drives the
+        // session.
+        let mut fed = false;
+        let mut got = Vec::new();
+        fleet
+            .run_session(
+                &mut provs,
+                1,
+                &mut || {
+                    if fed {
+                        None
+                    } else {
+                        fed = true;
+                        Some(request(5, CotMode::NoThink))
+                    }
+                },
+                &mut |r| got.push(r),
+            )
+            .unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(
+            provs[1].keys,
+            vec![("7b-sim".to_string(), "int8".to_string())],
+            "the session bound the arrival's own route key"
+        );
     }
 
     #[test]

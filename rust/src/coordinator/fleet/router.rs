@@ -42,9 +42,11 @@ pub struct DeviceSnapshot {
     pub fits: bool,
 }
 
-/// A pluggable placement policy. `place` must return an index `<
-/// devices.len()` (the fleet clamps out-of-range picks to the last
-/// device); `devices` is never empty and is ordered by device index.
+/// A pluggable placement policy. `place` MUST return an index `<
+/// devices.len()` — an out-of-range pick is a contract violation and the
+/// fleet surfaces it as a hard error (it is never clamped: clamping
+/// silently dumped all of a buggy policy's traffic onto the last device).
+/// `devices` is never empty and is ordered by device index.
 pub trait RouterPolicy: fmt::Debug {
     /// Short stable name, recorded in
     /// [`crate::coordinator::fleet::FleetReport::policy`].

@@ -76,10 +76,11 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
         ))
     }
 
-    fn enqueue(&mut self, env: Envelope) {
+    fn enqueue(&mut self, env: Envelope) -> Result<()> {
         self.pending.borrow_mut().register(env.request.id, env.reply);
-        self.fleet.route(env.request);
+        self.fleet.route(env.request)?;
         self.metrics.inc("requests_received", 1);
+        Ok(())
     }
 
     /// First device (rotating after the last-served one) whose queue is
@@ -106,7 +107,7 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
             loop {
                 match self.rx.try_recv() {
                     Ok(env) => {
-                        self.enqueue(env);
+                        self.enqueue(env)?;
                         last_activity = Instant::now();
                     }
                     Err(mpsc::TryRecvError::Empty) => break,

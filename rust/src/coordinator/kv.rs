@@ -1,5 +1,6 @@
-//! Paged KV accounting: a fixed-size-page [`BlockPool`] with per-sequence
-//! [`BlockTable`]s, fronted by the [`KvSlots`] slot-lifecycle facade the
+//! Paged KV accounting: a refcounted fixed-size-page [`BlockPool`] with
+//! per-sequence [`BlockTable`]s, shared-prefix reuse with copy-on-write
+//! forking, fronted by the [`KvSlots`] slot-lifecycle facade the
 //! scheduler drives.
 //!
 //! The wave- and ladder-era `KvSlots` reserved a full `max_seq` KV window
@@ -12,9 +13,14 @@
 //!   * [`BlockPool`] — a pool of fixed-size token pages (free-list
 //!     allocation) bounded by an optional budget in tokens, typically
 //!     derived from the Atlas HBM model
-//!     ([`crate::atlas::memory_model::kv_pool_budget_tokens`]);
-//!   * [`BlockTable`] — the ordered page list of one live sequence,
-//!     growing one page at a time as its decode position advances;
+//!     ([`crate::atlas::memory_model::kv_pool_budget_tokens`]). Every
+//!     page carries a *refcount*: a page mapped by several live
+//!     sequences is owned by that share-set, not one slot, and
+//!     `used_pages` counts **unique** pages — the honest HBM footprint
+//!     under sharing.
+//!   * [`BlockTable`] — the ordered page list of one live sequence: a
+//!     (possibly empty) shared prefix run followed by a private suffix,
+//!     growing one page at a time as its decode position advances.
 //!   * [`KvSlots`] — the slot table (Free -> Active -> Finished -> Free,
 //!     position monotone, resize carry plans) the `Scheduler`, `migrate`
 //!     plans, and the mock position contract already rely on, now backed
@@ -22,10 +28,27 @@
 //!     (whole-window reservation, unbounded pool); budgeted
 //!     configurations come from [`KvSlots::with_config`].
 //!
-//! Invariants (property-tested in `tests/coordinator_props.rs`): a page
-//! is never owned by two live sequences, the free list conserves pages
-//! across alloc/release/resize, a budgeted pool never exceeds its
-//! capacity, and an unbudgeted paged pool generates byte-identical
+//! Prefix sharing (opt-in via [`KvConfig::with_prefix_sharing`], paged
+//! policy only): admission runs the prompt's token ids through a
+//! `PrefixIndex` — a trie over full-page chunks, plus equal-tail
+//! boundary-page claims — and a new request whose prompt shares a prefix
+//! with a live sequence *retains* the matching pages instead of
+//! allocating them, reserving fresh pages only for its unshared suffix.
+//! Shared full-prefix pages are immutable (every sharer's writes land at
+//! positions at or beyond its own prompt length), so they are safe to
+//! read forever; a shared *boundary* page is written by whichever sharer
+//! decodes first, and that first write must fork a private copy
+//! ([`KvSlots::prepare_write`]) instead of writing through — the backend
+//! contract rejects any write-through of a page mapped by more than one
+//! live slot.
+//!
+//! Invariants (property-tested in `tests/coordinator_props.rs`): the
+//! multiset of pages across live tables equals the pool's per-page
+//! refcounts (so a page is never freed while mapped and never mapped
+//! while free), releasing a shared page drops a ref rather than freeing
+//! it, the free list conserves pages across alloc/retain/release/resize,
+//! a budgeted pool never exceeds its capacity in *unique* pages, and
+//! (sharing off) an unbudgeted paged pool generates byte-identical
 //! schedules to the whole-window baseline.
 
 use anyhow::{bail, Result};
@@ -47,8 +70,48 @@ pub enum ReservePolicy {
     Paged,
 }
 
+/// Typed construction-time validation failure of a [`KvConfig`]. Surfaced
+/// by [`KvConfig::validate`], which the scheduler, the fleet, and the CLI
+/// call before building a pool — so a nonsensical budget fails loudly at
+/// startup instead of silently flooring to a pool that rejects every
+/// admission while reporting 0.0 utilization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvConfigError {
+    /// `page_tokens == 0`: no page geometry at all.
+    ZeroPageTokens,
+    /// The token budget is smaller than one page, so
+    /// [`KvConfig::capacity_pages`] floors to a 0-capacity pool: the
+    /// watermark never fires (utilization is pinned at 0.0) and every
+    /// admission is rejected as never-reservable with no diagnosis.
+    BudgetBelowOnePage { budget_tokens: usize, page_tokens: usize },
+    /// Prefix sharing only makes sense under token-granular paging; a
+    /// whole-window reservation has no suffix to save.
+    SharingRequiresPaged,
+}
+
+impl std::fmt::Display for KvConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvConfigError::ZeroPageTokens => {
+                write!(f, "KV page size must be positive")
+            }
+            KvConfigError::BudgetBelowOnePage { budget_tokens, page_tokens } => write!(
+                f,
+                "KV budget of {budget_tokens} tokens is smaller than one \
+                 {page_tokens}-token page: the pool would have zero capacity \
+                 and reject every admission"
+            ),
+            KvConfigError::SharingRequiresPaged => {
+                write!(f, "prefix sharing requires the paged reservation policy")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvConfigError {}
+
 /// Pool configuration: page geometry, the token budget (None = unbounded),
-/// and the reservation policy.
+/// the reservation policy, and whether admissions may share prefix pages.
 #[derive(Debug, Clone)]
 pub struct KvConfig {
     /// Tokens per page.
@@ -60,6 +123,10 @@ pub struct KvConfig {
     /// Modeled HBM bytes one KV token costs (informational — exported as
     /// the `kv_bytes_per_token` serving metric; 0.0 when unknown).
     pub bytes_per_token: f64,
+    /// Shared-prefix reuse: admissions whose prompt shares a prefix with a
+    /// live sequence retain the matching pages (copy-on-write) instead of
+    /// allocating them. Off by default; paged policy only.
+    pub share_prefixes: bool,
 }
 
 impl KvConfig {
@@ -71,6 +138,7 @@ impl KvConfig {
             budget_tokens: None,
             policy: ReservePolicy::WholeWindow,
             bytes_per_token: 0.0,
+            share_prefixes: false,
         }
     }
 
@@ -82,6 +150,7 @@ impl KvConfig {
             budget_tokens: Some(budget_tokens),
             policy: ReservePolicy::WholeWindow,
             bytes_per_token: 0.0,
+            share_prefixes: false,
         }
     }
 
@@ -92,6 +161,7 @@ impl KvConfig {
             budget_tokens: Some(budget_tokens),
             policy: ReservePolicy::Paged,
             bytes_per_token: 0.0,
+            share_prefixes: false,
         }
     }
 
@@ -114,17 +184,52 @@ impl KvConfig {
             )),
             policy: ReservePolicy::Paged,
             bytes_per_token: memory_model::kv_bytes_per_token(dims, kv),
+            share_prefixes: false,
         }
+    }
+
+    /// Enable shared-prefix copy-on-write reuse (paged policy only —
+    /// [`KvConfig::validate`] rejects the combination otherwise).
+    pub fn with_prefix_sharing(mut self) -> KvConfig {
+        self.share_prefixes = true;
+        self
+    }
+
+    /// Whether this configuration actually shares pages.
+    pub fn sharing(&self) -> bool {
+        self.share_prefixes && self.policy == ReservePolicy::Paged
     }
 
     /// Pool capacity in pages (`None` = unbounded).
     pub fn capacity_pages(&self) -> Option<usize> {
         self.budget_tokens.map(|t| t / self.page_tokens)
     }
+
+    /// Construction-time sanity: rejects geometry the pool cannot serve —
+    /// see [`KvConfigError`] for the cases.
+    pub fn validate(&self) -> Result<(), KvConfigError> {
+        if self.page_tokens == 0 {
+            return Err(KvConfigError::ZeroPageTokens);
+        }
+        if let Some(budget_tokens) = self.budget_tokens {
+            if budget_tokens < self.page_tokens {
+                return Err(KvConfigError::BudgetBelowOnePage {
+                    budget_tokens,
+                    page_tokens: self.page_tokens,
+                });
+            }
+        }
+        if self.share_prefixes && self.policy != ReservePolicy::Paged {
+            return Err(KvConfigError::SharingRequiresPaged);
+        }
+        Ok(())
+    }
 }
 
 /// Cumulative pool accounting, exported through
-/// [`crate::coordinator::scheduler::SchedReport`].
+/// [`crate::coordinator::scheduler::SchedReport`]. `used_pages` /
+/// `peak_used_pages` count **unique** pages: a page mapped by five
+/// sharers occupies one page of HBM.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PoolStats {
     pub page_tokens: usize,
@@ -134,13 +239,23 @@ pub struct PoolStats {
     pub peak_used_pages: usize,
     /// Pages handed out over the pool's lifetime (page churn numerator).
     pub allocs: usize,
-    /// Pages returned over the pool's lifetime.
+    /// Pages actually freed (refcount reaching zero) over the pool's
+    /// lifetime.
     pub releases: usize,
+    /// Ref increments on already-live pages — each one a page an
+    /// admission reused through the prefix index instead of allocating.
+    pub retains: usize,
+    /// Private copies forked by the first write into a shared page.
+    pub cow_forks: usize,
+    /// Admissions that attached to at least one shared prefix page.
+    pub prefix_hits: usize,
 }
 
 /// Live pool headroom, passed to
 /// [`crate::coordinator::cost::CostModel::rung_feasible_live`] so rung
 /// feasibility can follow actual KV load instead of the worst-case window.
+/// Under prefix sharing `used_pages` counts unique pages, so headroom
+/// reflects the sharing win directly.
 #[derive(Debug, Clone, Copy)]
 pub struct PoolHeadroom {
     pub page_tokens: usize,
@@ -150,27 +265,31 @@ pub struct PoolHeadroom {
 }
 
 impl PoolHeadroom {
-    /// KV tokens currently reserved by live sequences.
+    /// KV tokens currently reserved by live sequences (unique pages).
     pub fn used_tokens(&self) -> usize {
         self.used_pages * self.page_tokens
     }
 }
 
 /// Fixed-size-page allocator: free-list reuse first, fresh pages up to the
-/// capacity bound after. Every page remembers its owning slot, so double
-/// mapping is structurally impossible (and loudly checked).
+/// capacity bound after. Every page carries a refcount — a shared page is
+/// owned by its share-set, and `release` drops a ref, freeing the page
+/// only when the last ref goes (so double frees and mapped-while-free
+/// states are structurally impossible, and loudly checked).
 #[derive(Debug, Clone)]
 pub struct BlockPool {
     page_tokens: usize,
     /// `None` = unbounded.
     capacity_pages: Option<usize>,
-    /// Owner slot of every page ever created (high-water array).
-    owner: Vec<Option<usize>>,
-    /// Released page ids, reused LIFO.
+    /// Refcount of every page ever created (high-water array); 0 = free.
+    refs: Vec<usize>,
+    /// Freed page ids, reused LIFO.
     free: Vec<usize>,
+    /// Unique pages with a nonzero refcount.
     used: usize,
     allocs: usize,
     releases: usize,
+    retains: usize,
     peak_used: usize,
 }
 
@@ -179,11 +298,12 @@ impl BlockPool {
         BlockPool {
             page_tokens,
             capacity_pages,
-            owner: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             used: 0,
             allocs: 0,
             releases: 0,
+            retains: 0,
             peak_used: 0,
         }
     }
@@ -192,7 +312,7 @@ impl BlockPool {
         self.page_tokens
     }
 
-    /// Pages currently mapped by live sequences.
+    /// Unique pages currently mapped by live sequences.
     pub fn used_pages(&self) -> usize {
         self.used
     }
@@ -205,7 +325,8 @@ impl BlockPool {
         }
     }
 
-    /// Used fraction of the budget (0.0 for unbounded pools).
+    /// Used fraction of the budget (0.0 for unbounded pools), counting
+    /// unique pages.
     pub fn utilization(&self) -> f64 {
         match self.capacity_pages {
             Some(cap) if cap > 0 => self.used as f64 / cap as f64,
@@ -213,53 +334,68 @@ impl BlockPool {
         }
     }
 
-    /// Claim one page for `slot`; `None` when the budget is exhausted.
-    pub fn alloc(&mut self, slot: usize) -> Option<usize> {
+    /// Claim one fresh page (refcount 1); `None` when the budget is
+    /// exhausted.
+    pub fn alloc(&mut self) -> Option<usize> {
         let id = if let Some(id) = self.free.pop() {
             id
-        } else if self.capacity_pages.map_or(true, |cap| self.owner.len() < cap) {
-            self.owner.push(None);
-            self.owner.len() - 1
+        } else if self.capacity_pages.map_or(true, |cap| self.refs.len() < cap) {
+            self.refs.push(0);
+            self.refs.len() - 1
         } else {
             return None;
         };
-        debug_assert!(self.owner[id].is_none(), "free-list page {id} still owned");
-        self.owner[id] = Some(slot);
+        debug_assert_eq!(self.refs[id], 0, "free-list page {id} still referenced");
+        self.refs[id] = 1;
         self.used += 1;
         self.allocs += 1;
         self.peak_used = self.peak_used.max(self.used);
         Some(id)
     }
 
-    /// Return `block` (owned by `slot`) to the free list.
-    pub fn release(&mut self, block: usize, slot: usize) -> Result<()> {
-        match self.owner.get(block).copied().flatten() {
-            Some(o) if o == slot => {
-                self.owner[block] = None;
+    /// Add one ref to a live page (shared-prefix attach). Costs no pool
+    /// capacity: the page is already paid for.
+    pub fn retain(&mut self, block: usize) -> Result<()> {
+        match self.refs.get(block).copied() {
+            Some(r) if r > 0 => {
+                self.refs[block] = r + 1;
+                self.retains += 1;
+                Ok(())
+            }
+            Some(_) => bail!("retain on free page {block}"),
+            None => bail!("retain on unknown page {block}"),
+        }
+    }
+
+    /// Drop one ref from `block`; the page returns to the free list only
+    /// when the last ref goes. Returns whether the page was actually
+    /// freed — a shared page survives its sharers' releases.
+    pub fn release(&mut self, block: usize) -> Result<bool> {
+        match self.refs.get(block).copied() {
+            Some(r) if r > 1 => {
+                self.refs[block] = r - 1;
+                Ok(false)
+            }
+            Some(1) => {
+                self.refs[block] = 0;
                 self.free.push(block);
                 self.used -= 1;
                 self.releases += 1;
-                Ok(())
+                Ok(true)
             }
-            Some(o) => bail!("page {block} owned by slot {o}, released by slot {slot}"),
-            None => bail!("double free of page {block}"),
+            Some(_) => bail!("double free of page {block}"),
+            None => bail!("release of unknown page {block}"),
         }
     }
 
-    /// Move `block` to a new owning slot (resize carry plans).
-    fn rebind(&mut self, block: usize, from: usize, to: usize) -> Result<()> {
-        match self.owner.get(block).copied().flatten() {
-            Some(o) if o == from => {
-                self.owner[block] = Some(to);
-                Ok(())
-            }
-            other => bail!("rebind page {block}: owner {other:?}, expected slot {from}"),
-        }
+    /// Current refcount of a page (0 = free or never created).
+    pub fn ref_count(&self, block: usize) -> usize {
+        self.refs.get(block).copied().unwrap_or(0)
     }
 
-    /// Owning slot of a page, if any.
-    pub fn owner_of(&self, block: usize) -> Option<usize> {
-        self.owner.get(block).copied().flatten()
+    /// Whether a page is mapped by more than one live sequence.
+    pub fn is_shared(&self, block: usize) -> bool {
+        self.ref_count(block) > 1
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -270,21 +406,29 @@ impl BlockPool {
             peak_used_pages: self.peak_used,
             allocs: self.allocs,
             releases: self.releases,
+            retains: self.retains,
+            // Filled in by the KvSlots facade, which owns the fork and
+            // prefix-index counters.
+            cow_forks: 0,
+            prefix_hits: 0,
         }
     }
 
     /// Free-list conservation check (property-test hook): every page ever
-    /// created is either owned or free, and a budgeted pool never created
-    /// more pages than its capacity.
+    /// created is either referenced or free, `used` counts exactly the
+    /// referenced ones, and a budgeted pool never created more pages than
+    /// its capacity.
     pub fn conserved(&self) -> bool {
-        let owned = self.owner.iter().filter(|o| o.is_some()).count();
-        owned == self.used
-            && owned + self.free.len() == self.owner.len()
-            && self.capacity_pages.map_or(true, |cap| self.owner.len() <= cap)
+        let live = self.refs.iter().filter(|&&r| r > 0).count();
+        live == self.used
+            && live + self.free.len() == self.refs.len()
+            && self.free.iter().all(|&b| self.refs.get(b).copied() == Some(0))
+            && self.capacity_pages.map_or(true, |cap| self.refs.len() <= cap)
     }
 }
 
-/// Ordered page list of one sequence.
+/// Ordered page list of one sequence: a (possibly empty) shared prefix
+/// run followed by a private suffix.
 #[derive(Debug, Clone, Default)]
 pub struct BlockTable {
     blocks: Vec<usize>,
@@ -302,6 +446,135 @@ impl BlockTable {
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty()
     }
+}
+
+/// One node of the `PrefixIndex` trie. A node represents one full-page
+/// chunk of prompt tokens and remembers the page holding it; `live`
+/// counts the live tables mapping that page through this node, so a dead
+/// node (live == 0) is skipped by lookups and repurposed in place when
+/// the same chunk is registered again with a fresh page.
+#[derive(Debug, Clone, Default)]
+struct TrieNode {
+    /// Child chunks: (page-sized token run, node index). Linear scan —
+    /// fan-out is bounded by distinct live prompts.
+    children: Vec<(Vec<u32>, usize)>,
+    /// Page holding this chunk, valid while `live > 0`.
+    page: usize,
+    live: usize,
+    /// Boundary-page claims registered under this node: the page holding
+    /// a prompt tail shorter than one page.
+    partials: Vec<PartialTail>,
+}
+
+/// A claim that `page` holds exactly `tokens` from its first position on.
+/// Only *equal* tails may share it: a shorter-tail sharer would start
+/// writing inside the claimed range once the page went exclusive again,
+/// silently poisoning the claim for future sharers.
+#[derive(Debug, Clone)]
+struct PartialTail {
+    tokens: Vec<u32>,
+    page: usize,
+    /// Live tables mapping `page` through this claim.
+    live: usize,
+}
+
+/// Trie over full-page chunks of live prompts (plus equal-tail boundary
+/// claims), living beside the admit path: admission walks the new
+/// prompt's token ids through it and retains every matched page instead
+/// of allocating. Dead entries are skipped, never eagerly pruned — the
+/// index lives only as long as one scheduler session's [`KvSlots`].
+#[derive(Debug, Clone)]
+struct PrefixIndex {
+    /// Arena; node 0 is the root (its `page`/`live` are unused).
+    nodes: Vec<TrieNode>,
+}
+
+impl PrefixIndex {
+    fn new() -> PrefixIndex {
+        PrefixIndex { nodes: vec![TrieNode::default()] }
+    }
+
+    /// Live child of `node` holding exactly `chunk`.
+    fn child_live(&self, node: usize, chunk: &[u32]) -> Option<usize> {
+        self.nodes[node]
+            .children
+            .iter()
+            .find(|(c, i)| self.nodes[*i].live > 0 && c.as_slice() == chunk)
+            .map(|&(_, i)| i)
+    }
+
+    /// Find-or-create the child of `node` for `chunk`, claiming it for
+    /// `page` with one live ref. Only called for chunks past the matched
+    /// run, so any existing child here is dead and is repurposed.
+    fn ensure_child(&mut self, node: usize, chunk: &[u32], page: usize) -> usize {
+        if let Some(&(_, i)) =
+            self.nodes[node].children.iter().find(|(c, _)| c.as_slice() == chunk)
+        {
+            debug_assert_eq!(self.nodes[i].live, 0, "a live child would have been matched");
+            self.nodes[i].page = page;
+            self.nodes[i].live = 1;
+            return i;
+        }
+        let i = self.nodes.len();
+        self.nodes.push(TrieNode { page, live: 1, ..TrieNode::default() });
+        self.nodes[node].children.push((chunk.to_vec(), i));
+        i
+    }
+
+    /// Add one live ref to the claim on `page` under `node`.
+    fn retain_partial(&mut self, node: usize, page: usize) {
+        if let Some(p) = self.nodes[node].partials.iter_mut().find(|p| p.page == page) {
+            p.live += 1;
+        }
+    }
+
+    /// Drop one live ref from the claim on `page` under `node`, purging
+    /// dead claims.
+    fn drop_partial(&mut self, node: usize, page: usize) {
+        let n = &mut self.nodes[node];
+        if let Some(p) = n.partials.iter_mut().find(|p| p.page == page) {
+            p.live = p.live.saturating_sub(1);
+        }
+        n.partials.retain(|p| p.live > 0);
+    }
+}
+
+/// What one slot holds in the `PrefixIndex` — unwound at release (and
+/// the boundary claim also on a copy-on-write fork, which orphans it).
+#[derive(Debug, Clone, Default)]
+struct Registration {
+    /// Trie nodes (in depth order) whose `live` count this slot holds.
+    path: Vec<usize>,
+    /// `(node, page)` of the boundary claim this slot's table backs.
+    partial: Option<(usize, usize)>,
+}
+
+/// A resolved sharing opportunity for one prompt: the pages to retain (in
+/// table order), the trie nodes backing them, an optional boundary claim,
+/// and the deepest matched node (where private chunks register).
+#[derive(Debug, Default)]
+struct SharedMatch {
+    pages: Vec<usize>,
+    nodes: Vec<usize>,
+    partial: Option<(usize, usize)>,
+    last: usize,
+}
+
+/// Outcome of preparing one decode write under copy-on-write sharing
+/// ([`KvSlots::prepare_write`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrepareWrite {
+    /// The write position's page is private: write through.
+    Ready,
+    /// The page was shared; a private copy was forked and the slot's
+    /// table changed in place — the caller must re-publish
+    /// [`KvSlots::blocks`] to the backend *before* decoding (the table
+    /// length did not change, so a count-gated sync will not catch it).
+    Forked,
+    /// The page is shared but no free page could back the fork; the slot
+    /// is untouched. Transient, like [`Advance::PoolExhausted`]: preempt
+    /// a victim and retry, or [`KvSlots::finish`] to accept truncation.
+    PoolExhausted,
 }
 
 /// Outcome of one [`KvSlots::try_advance`] attempt.
@@ -332,10 +605,11 @@ pub enum SlotState {
 }
 
 /// Slot table for one scheduler session over a batch bucket, backed by the
-/// paged [`BlockPool`]. The slot lifecycle, position contract, and resize
-/// carry plans are unchanged from the slot-granular era; what changed is
-/// *what admission costs*: pages for the prompt (paged policy) or the
-/// whole window (legacy), drawn from a pool that may be budgeted.
+/// refcounted [`BlockPool`]. The slot lifecycle, position contract, and
+/// resize carry plans are unchanged from the slot-granular era; what
+/// changed is *what admission costs*: pages for the prompt (paged policy)
+/// or the whole window (legacy), drawn from a pool that may be budgeted —
+/// and, with sharing on, only the pages no live sequence already holds.
 #[derive(Debug, Clone)]
 pub struct KvSlots {
     slots: Vec<SlotState>,
@@ -343,6 +617,10 @@ pub struct KvSlots {
     pool: BlockPool,
     cfg: KvConfig,
     max_seq: usize,
+    index: PrefixIndex,
+    regs: Vec<Registration>,
+    cow_forks: usize,
+    prefix_hits: usize,
 }
 
 impl KvSlots {
@@ -363,6 +641,10 @@ impl KvSlots {
             pool,
             cfg,
             max_seq,
+            index: PrefixIndex::new(),
+            regs: (0..bucket).map(|_| Registration::default()).collect(),
+            cow_forks: 0,
+            prefix_hits: 0,
         }
     }
 
@@ -374,6 +656,11 @@ impl KvSlots {
     /// Lifecycle state of one slot.
     pub fn state(&self, slot: usize) -> SlotState {
         self.slots[slot]
+    }
+
+    /// Whether this table shares prefix pages at admission.
+    pub fn sharing_active(&self) -> bool {
+        self.cfg.sharing()
     }
 
     /// Pages covering write positions `[0, pos]`.
@@ -398,12 +685,29 @@ impl KvSlots {
             && self.pool.free_pages() >= self.reserve_pages(prompt_len)
     }
 
+    /// Sharing-aware admission gate: like [`KvSlots::can_reserve`], but
+    /// priced on the *unshared* pages of the encoded prompt — plus one
+    /// page of slack when a boundary page would be shared, so the
+    /// inevitable copy-on-write fork of the first decode write does not
+    /// starve the moment it fires. Falls back to `can_reserve` when
+    /// sharing is off.
+    pub fn can_admit_shared(&self, ids: &[u32]) -> bool {
+        if !self.sharing_active() {
+            return self.can_reserve(ids.len());
+        }
+        let (_, fresh, slack, _) = self.shared_plan(ids);
+        self.slots.iter().any(|s| matches!(s, SlotState::Free))
+            && self.pool.free_pages() >= fresh + slack
+    }
+
     /// Whether an admission at `prompt_len` could *ever* be reserved by
     /// this pool, ignoring current occupancy: false only when the
     /// policy's reservation exceeds the pool's total capacity. Such a
     /// request must be rejected immediately — deferring it would block
     /// admission forever, since no amount of retirement frees enough
-    /// pages.
+    /// pages. (Deliberately conservative under sharing: a prompt only
+    /// admissible *because* of a live donor is still rejected, since the
+    /// donor may retire first.)
     pub fn can_ever_reserve(&self, prompt_len: usize) -> bool {
         match self.pool.stats().capacity_pages {
             Some(cap) => self.reserve_pages(prompt_len) <= cap,
@@ -435,6 +739,54 @@ impl KvSlots {
         }
     }
 
+    /// Longest sharable run for `ids`: full-page chunks matched in the
+    /// trie, then (only when *every* full chunk matched) an equal-tail
+    /// boundary claim.
+    fn shared_match(&self, ids: &[u32]) -> SharedMatch {
+        let pt = self.pool.page_tokens();
+        let mut m = SharedMatch::default();
+        let full = ids.len() / pt;
+        for k in 0..full {
+            let chunk = &ids[k * pt..(k + 1) * pt];
+            match self.index.child_live(m.last, chunk) {
+                Some(child) => {
+                    m.pages.push(self.index.nodes[child].page);
+                    m.nodes.push(child);
+                    m.last = child;
+                }
+                None => return m,
+            }
+        }
+        let tail = &ids[full * pt..];
+        if !tail.is_empty() {
+            if let Some(p) = self.index.nodes[m.last]
+                .partials
+                .iter()
+                .find(|p| p.live > 0 && p.tokens.as_slice() == tail)
+            {
+                m.pages.push(p.page);
+                m.partial = Some((m.last, p.page));
+            }
+        }
+        m
+    }
+
+    /// (total pages, fresh pages to allocate, fork slack, match) for one
+    /// encoded prompt — the single pricing both [`KvSlots::can_admit_shared`]
+    /// and [`KvSlots::allocate_shared`] use, so the gate and the
+    /// allocation cannot disagree.
+    fn shared_plan(&self, ids: &[u32]) -> (usize, usize, usize, SharedMatch) {
+        let need = self.pages_for_pos(ids.len());
+        let m = self.shared_match(ids);
+        let fresh = need - m.pages.len();
+        // A shared boundary page means the first decode write *will* fork;
+        // demand one free page of slack so the admission is not born
+        // starved. (Slack is a gate, not a reservation — a fork can still
+        // lose a race under churn, which prepare_write reports.)
+        let slack = usize::from(m.partial.is_some());
+        (need, fresh, slack, m)
+    }
+
     /// Claim a free slot for a sequence whose prompt occupies [0, prompt_len).
     pub fn allocate(&mut self, prompt_len: usize) -> Result<usize> {
         if prompt_len >= self.max_seq {
@@ -451,11 +803,119 @@ impl KvSlots {
             );
         }
         for _ in 0..need {
-            let page = self.pool.alloc(slot).expect("headroom checked above");
+            let page = self.pool.alloc().expect("headroom checked above");
             self.tables[slot].blocks.push(page);
         }
         self.slots[slot] = SlotState::Active { pos: prompt_len };
         Ok(slot)
+    }
+
+    /// Claim a free slot for the encoded prompt `ids`, sharing every
+    /// prefix page a live sequence already holds (retained, not
+    /// allocated) and allocating only the unshared suffix. Registers the
+    /// sequence's own private prompt pages in the prefix index so later
+    /// arrivals can share *them*. Falls back to [`KvSlots::allocate`]
+    /// when sharing is off. Restores of preempted sequences keep using
+    /// `allocate` — their replayed pages mix prompt and generated tokens,
+    /// which the index must never serve.
+    pub fn allocate_shared(&mut self, ids: &[u32]) -> Result<usize> {
+        if !self.sharing_active() {
+            return self.allocate(ids.len());
+        }
+        let prompt_len = ids.len();
+        if prompt_len >= self.max_seq {
+            bail!("prompt {prompt_len} exceeds KV window {}", self.max_seq);
+        }
+        let Some(slot) = self.slots.iter().position(|s| matches!(s, SlotState::Free)) else {
+            bail!("no free KV slot in bucket of {}", self.slots.len());
+        };
+        let (need, fresh, slack, m) = self.shared_plan(ids);
+        if self.pool.free_pages() < fresh + slack {
+            bail!(
+                "KV pool exhausted: {fresh} unshared of {need} pages needed, {} free \
+                 (admission must defer)",
+                self.pool.free_pages()
+            );
+        }
+        // Attach the shared prefix: bump page refs and index claims.
+        for &page in &m.pages {
+            self.pool.retain(page)?;
+        }
+        for &n in &m.nodes {
+            self.index.nodes[n].live += 1;
+        }
+        if let Some((node, page)) = m.partial {
+            self.index.retain_partial(node, page);
+        }
+        let shared = m.pages.len();
+        let mut table = m.pages;
+        for _ in 0..fresh {
+            let page = self.pool.alloc().expect("headroom checked above");
+            table.push(page);
+        }
+        // Register this slot's private *full* prompt pages (immutable
+        // after prefill) and its boundary claim, so later arrivals share
+        // them. The trailing page of an exactly-page-aligned prompt is
+        // empty and never registered.
+        let pt = self.pool.page_tokens();
+        let full = prompt_len / pt;
+        let mut reg = Registration { path: m.nodes, partial: m.partial };
+        let mut node = m.last;
+        for k in reg.path.len()..full {
+            node = self.index.ensure_child(node, &ids[k * pt..(k + 1) * pt], table[k]);
+            reg.path.push(node);
+        }
+        let tail = &ids[full * pt..];
+        if !tail.is_empty() && reg.partial.is_none() {
+            self.index.nodes[node].partials.push(PartialTail {
+                tokens: tail.to_vec(),
+                page: table[full],
+                live: 1,
+            });
+            reg.partial = Some((node, table[full]));
+        }
+        if shared > 0 {
+            self.prefix_hits += 1;
+        }
+        self.regs[slot] = reg;
+        self.tables[slot].blocks = table;
+        self.slots[slot] = SlotState::Active { pos: prompt_len };
+        Ok(slot)
+    }
+
+    /// Copy-on-write hook: called for every active slot *before* a decode
+    /// step writes at its position. If the page under the write cursor is
+    /// shared, fork a private copy (swap it into the table, drop this
+    /// slot's ref on the original) so the write never tears a sharer's
+    /// prefix. The caller must re-publish the block table on
+    /// [`PrepareWrite::Forked`] — the swap is length-preserving, so
+    /// count-gated publication will not notice it.
+    pub fn prepare_write(&mut self, slot: usize) -> Result<PrepareWrite> {
+        let SlotState::Active { pos } = self.slots[slot] else {
+            bail!("prepare_write on non-active slot {slot}: {:?}", self.slots[slot]);
+        };
+        let k = pos / self.pool.page_tokens();
+        debug_assert!(k < self.tables[slot].len(), "table covers the write position");
+        let old = self.tables[slot].blocks[k];
+        if !self.pool.is_shared(old) {
+            return Ok(PrepareWrite::Ready);
+        }
+        let Some(fresh) = self.pool.alloc() else {
+            return Ok(PrepareWrite::PoolExhausted);
+        };
+        self.pool.release(old)?; // drops this slot's ref; sharers keep the page
+        self.tables[slot].blocks[k] = fresh;
+        // Forking away from the page orphans this slot's boundary claim
+        // on it: the claim stays alive only through sharers still mapping
+        // the page, never through a freed-then-recycled one.
+        if let Some((node, page)) = self.regs[slot].partial {
+            if page == old {
+                self.index.drop_partial(node, page);
+                self.regs[slot].partial = None;
+            }
+        }
+        self.cow_forks += 1;
+        Ok(PrepareWrite::Forked)
     }
 
     /// Advance an active slot by one decoded token, reporting *why* it
@@ -474,7 +934,7 @@ impl KvSlots {
                 let need = self.pages_for_pos(next);
                 if need > self.tables[slot].len() {
                     debug_assert_eq!(need, self.tables[slot].len() + 1);
-                    match self.pool.alloc(slot) {
+                    match self.pool.alloc() {
                         Some(page) => self.tables[slot].blocks.push(page),
                         None => return Ok(Advance::PoolExhausted),
                     }
@@ -525,18 +985,34 @@ impl KvSlots {
         }
     }
 
-    /// Release one slot back to Free (continuous scheduler evicted it); its
-    /// pages return to the pool and the slot is immediately re-allocatable.
+    /// Release one slot back to Free (continuous scheduler evicted it): its
+    /// prefix-index claims unwind, then every table page drops one ref —
+    /// *shared pages survive for their sharers*; only pages this sequence
+    /// held exclusively return to the pool. The slot is immediately
+    /// re-allocatable. This is also the preempt path, which is why a
+    /// preempted victim can never free a page out from under a sharer.
     pub fn release(&mut self, slot: usize) -> Result<()> {
         match self.slots[slot] {
             SlotState::Active { .. } | SlotState::Finished { .. } => {
+                self.unregister(slot);
                 for block in std::mem::take(&mut self.tables[slot].blocks) {
-                    self.pool.release(block, slot)?;
+                    self.pool.release(block)?;
                 }
                 self.slots[slot] = SlotState::Free;
                 Ok(())
             }
             SlotState::Free => bail!("release on free slot {slot}"),
+        }
+    }
+
+    /// Unwind one slot's prefix-index registrations.
+    fn unregister(&mut self, slot: usize) {
+        let reg = std::mem::take(&mut self.regs[slot]);
+        for n in reg.path {
+            self.index.nodes[n].live = self.index.nodes[n].live.saturating_sub(1);
+        }
+        if let Some((node, page)) = reg.partial {
+            self.index.drop_partial(node, page);
         }
     }
 
@@ -552,12 +1028,12 @@ impl KvSlots {
     /// Resize the slot table to `new_bucket` slots (bucket-ladder
     /// migration). Occupied slots below the new bound keep their index;
     /// occupied slots above it are compacted, in index order, into the
-    /// lowest free indices. Block tables move with their slots (pages are
-    /// re-owned, never re-allocated). Returns the `(old, new)` index of
-    /// every occupied slot — the carry plan a backend `migrate` op
-    /// executes. Fails (leaving the table untouched) when the occupied
-    /// slots cannot fit the new bucket, so no live sequence is ever
-    /// dropped.
+    /// lowest free indices. Block tables — and prefix-index registrations
+    /// — move with their slots (page refcounts are slot-agnostic, so no
+    /// page is touched). Returns the `(old, new)` index of every occupied
+    /// slot — the carry plan a backend `migrate` op executes. Fails
+    /// (leaving the table untouched) when the occupied slots cannot fit
+    /// the new bucket, so no live sequence is ever dropped.
     pub fn resize(&mut self, new_bucket: usize) -> Result<Vec<(usize, usize)>> {
         if new_bucket == 0 {
             bail!("bucket must be positive");
@@ -592,20 +1068,18 @@ impl KvSlots {
             moves.push((old, cursor));
             cursor += 1;
         }
-        // Move the block tables with their slots, re-owning every page.
+        // Move the block tables and index registrations with their slots.
         let mut next_tables: Vec<BlockTable> =
             (0..new_bucket).map(|_| BlockTable::default()).collect();
+        let mut next_regs: Vec<Registration> =
+            (0..new_bucket).map(|_| Registration::default()).collect();
         for &(old, new) in &moves {
-            let table = std::mem::take(&mut self.tables[old]);
-            if old != new {
-                for &block in table.blocks() {
-                    self.pool.rebind(block, old, new)?;
-                }
-            }
-            next_tables[new] = table;
+            next_tables[new] = std::mem::take(&mut self.tables[old]);
+            next_regs[new] = std::mem::take(&mut self.regs[old]);
         }
         self.slots = next;
         self.tables = next_tables;
+        self.regs = next_regs;
         moves.sort_by_key(|&(_, new)| new);
         Ok(moves)
     }
@@ -648,14 +1122,23 @@ impl KvSlots {
         self.tables[slot].len()
     }
 
+    /// Refcount of one page (property-test hook; 0 = free).
+    pub fn page_refs(&self, block: usize) -> usize {
+        self.pool.ref_count(block)
+    }
+
     /// Pool configuration this table runs under.
     pub fn config(&self) -> &KvConfig {
         &self.cfg
     }
 
-    /// Cumulative pool accounting (allocs/releases = page churn).
+    /// Cumulative pool accounting (allocs/releases = page churn; retains /
+    /// cow_forks / prefix_hits = the sharing story).
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.stats()
+        let mut stats = self.pool.stats();
+        stats.cow_forks = self.cow_forks;
+        stats.prefix_hits = self.prefix_hits;
+        stats
     }
 
     /// Used fraction of the pool budget (0.0 for unbounded pools).
@@ -676,14 +1159,19 @@ impl KvSlots {
     }
 
     /// Structural pool invariant (property-test hook): free-list
-    /// conservation plus table/owner agreement.
+    /// conservation, plus the multiset of pages across live tables
+    /// matching the pool's per-page refcounts exactly — no double-free,
+    /// no page mapped while free, no ref without a mapping.
     pub fn pool_conserved(&self) -> bool {
-        let table_pages: usize = self.tables.iter().map(|t| t.len()).sum();
+        let mut counts: std::collections::BTreeMap<usize, usize> = Default::default();
+        for t in &self.tables {
+            for &b in t.blocks() {
+                *counts.entry(b).or_default() += 1;
+            }
+        }
         self.pool.conserved()
-            && table_pages == self.pool.used_pages()
-            && self.tables.iter().enumerate().all(|(slot, t)| {
-                t.blocks().iter().all(|&b| self.pool.owner_of(b) == Some(slot))
-            })
+            && counts.len() == self.pool.used_pages()
+            && counts.iter().all(|(&b, &n)| self.pool.ref_count(b) == n)
     }
 }
 
@@ -775,7 +1263,7 @@ mod tests {
         assert_eq!(kv.state(0), SlotState::Finished { pos: 13 });
         assert_eq!(kv.state(1), SlotState::Active { pos: 11 });
         assert_eq!(kv.free_count(), 0);
-        assert!(kv.pool_conserved(), "pages re-owned across the compaction");
+        assert!(kv.pool_conserved(), "pages conserved across the compaction");
     }
 
     #[test]
@@ -975,5 +1463,223 @@ mod tests {
             8,
         );
         assert!(cfg.budget_tokens.unwrap() > fp.budget_tokens.unwrap() * 3 / 2);
+    }
+
+    // ---- config validation ----------------------------------------------
+
+    #[test]
+    fn budget_below_one_page_is_a_typed_config_error() {
+        let err = KvConfig::paged(16, 8).validate().unwrap_err();
+        assert_eq!(
+            err,
+            KvConfigError::BudgetBelowOnePage { budget_tokens: 8, page_tokens: 16 }
+        );
+        assert!(err.to_string().contains("smaller than one"));
+        assert_eq!(
+            KvConfig::whole_window(16, 15).validate().unwrap_err(),
+            KvConfigError::BudgetBelowOnePage { budget_tokens: 15, page_tokens: 16 }
+        );
+        // One full page is the smallest legal budget.
+        assert!(KvConfig::paged(16, 16).validate().is_ok());
+        assert!(KvConfig::unbounded().validate().is_ok());
+        let zero = KvConfig { page_tokens: 0, ..KvConfig::unbounded() };
+        assert_eq!(zero.validate().unwrap_err(), KvConfigError::ZeroPageTokens);
+        // Sharing demands the paged policy.
+        assert_eq!(
+            KvConfig::whole_window(16, 96).with_prefix_sharing().validate().unwrap_err(),
+            KvConfigError::SharingRequiresPaged
+        );
+        assert!(KvConfig::paged(16, 96).with_prefix_sharing().validate().is_ok());
+    }
+
+    // ---- shared-prefix copy-on-write ------------------------------------
+
+    /// A 40-token prompt over 16-token pages: pages 0 and 1 are full
+    /// prompt chunks, page 2 holds the 8-token tail.
+    fn ids40() -> Vec<u32> {
+        (100..140).collect()
+    }
+
+    fn sharing_pool(bucket: usize, pages: usize) -> KvSlots {
+        KvSlots::with_config(
+            bucket,
+            96,
+            KvConfig::paged(16, pages * 16).with_prefix_sharing(),
+        )
+    }
+
+    #[test]
+    fn shared_prefix_admission_reserves_only_the_suffix() {
+        let mut kv = sharing_pool(3, 8);
+        let ids = ids40();
+        let a = kv.allocate_shared(&ids).unwrap();
+        assert_eq!(kv.block_count(a), 3);
+        assert_eq!(kv.pool_stats().allocs, 3);
+        assert_eq!(kv.pool_stats().prefix_hits, 0, "first admission has no donor");
+        // An identical prompt shares all three pages (two full chunks plus
+        // the equal-tail boundary claim) and allocates nothing.
+        let b = kv.allocate_shared(&ids).unwrap();
+        assert_eq!(kv.blocks(b), kv.blocks(a), "tables alias the same pages");
+        let stats = kv.pool_stats();
+        assert_eq!(stats.allocs, 3, "no fresh page for the sharer");
+        assert_eq!(stats.used_pages, 3, "used counts unique pages");
+        assert_eq!(stats.retains, 3);
+        assert_eq!(stats.prefix_hits, 1);
+        for &p in kv.blocks(a) {
+            assert_eq!(kv.page_refs(p), 2);
+        }
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn first_write_into_a_shared_page_forks_a_private_copy() {
+        let mut kv = sharing_pool(3, 8);
+        let ids = ids40();
+        let a = kv.allocate_shared(&ids).unwrap();
+        let b = kv.allocate_shared(&ids).unwrap();
+        let boundary = kv.blocks(a)[2];
+        // A's first decode write lands at position 40 — inside the shared
+        // boundary page — and must fork, swapping a private copy into A's
+        // table while B keeps the original.
+        assert_eq!(kv.prepare_write(a).unwrap(), PrepareWrite::Forked);
+        assert_ne!(kv.blocks(a)[2], boundary);
+        assert_eq!(kv.blocks(b)[2], boundary);
+        assert_eq!(kv.page_refs(boundary), 1, "fork dropped A's ref");
+        assert_eq!(kv.pool_stats().cow_forks, 1);
+        assert_eq!(kv.pool_stats().used_pages, 4);
+        // The page went exclusive: both writers are now write-through.
+        assert_eq!(kv.prepare_write(a).unwrap(), PrepareWrite::Ready);
+        assert_eq!(kv.prepare_write(b).unwrap(), PrepareWrite::Ready);
+        assert!(kv.pool_conserved());
+        // Full teardown frees exactly what was allocated.
+        kv.release(a).unwrap();
+        kv.release(b).unwrap();
+        let stats = kv.pool_stats();
+        assert_eq!(stats.used_pages, 0);
+        assert_eq!(stats.allocs, stats.releases, "4 allocated, 4 freed");
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn release_drops_a_ref_not_the_page() {
+        let mut kv = sharing_pool(3, 8);
+        let ids = ids40();
+        let a = kv.allocate_shared(&ids).unwrap();
+        let b = kv.allocate_shared(&ids).unwrap();
+        // The donor retires first (this is also the preempt path): every
+        // shared page must survive for the sharer.
+        kv.release(a).unwrap();
+        assert_eq!(kv.pool_stats().used_pages, 3, "B still maps all three");
+        assert_eq!(kv.pool_stats().releases, 0, "refs dropped, no page freed");
+        for &p in kv.blocks(b) {
+            assert_eq!(kv.page_refs(p), 1);
+        }
+        // B is now the live registrant: a third identical prompt shares
+        // against B's pages.
+        let c = kv.allocate_shared(&ids).unwrap();
+        assert_eq!(kv.blocks(c), kv.blocks(b));
+        assert_eq!(kv.pool_stats().prefix_hits, 2);
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn divergent_suffix_shares_only_full_pages() {
+        let mut kv = sharing_pool(3, 8);
+        let a_ids = ids40();
+        let mut b_ids = ids40();
+        // Same two full chunks, different tail: the boundary claim must
+        // not match, so B allocates its own boundary page.
+        b_ids[36] = 999;
+        let a = kv.allocate_shared(&a_ids).unwrap();
+        let b = kv.allocate_shared(&b_ids).unwrap();
+        assert_eq!(kv.blocks(b)[..2], kv.blocks(a)[..2]);
+        assert_ne!(kv.blocks(b)[2], kv.blocks(a)[2]);
+        assert_eq!(kv.pool_stats().allocs, 4, "one fresh boundary page for B");
+        // Neither writer touches a shared page: both boundaries private.
+        assert_eq!(kv.prepare_write(a).unwrap(), PrepareWrite::Ready);
+        assert_eq!(kv.prepare_write(b).unwrap(), PrepareWrite::Ready);
+        // A shorter tail of the same prompt is also no boundary match
+        // (equal tails only), but still shares the full chunks.
+        let c_ids: Vec<u32> = ids40()[..36].to_vec();
+        let c = kv.allocate_shared(&c_ids).unwrap();
+        assert_eq!(kv.blocks(c)[..2], kv.blocks(a)[..2]);
+        assert_ne!(kv.blocks(c)[2], kv.blocks(a)[2]);
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn boundary_share_demands_fork_slack_at_the_gate() {
+        // 3-page pool: A takes all three. An identical prompt would share
+        // all three pages (zero fresh), but the shared boundary means the
+        // first write forks — with zero free pages that admission must be
+        // deferred, not born starved.
+        let mut kv = sharing_pool(3, 3);
+        let ids = ids40();
+        kv.allocate_shared(&ids).unwrap();
+        assert!(!kv.can_admit_shared(&ids), "no slack page for the fork");
+        assert!(kv.allocate_shared(&ids).is_err());
+        // One more page of budget and the sharer fits.
+        let mut kv = sharing_pool(3, 4);
+        kv.allocate_shared(&ids).unwrap();
+        assert!(kv.can_admit_shared(&ids));
+        let b = kv.allocate_shared(&ids).unwrap();
+        assert_eq!(kv.prepare_write(b).unwrap(), PrepareWrite::Forked);
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn fork_under_a_dry_pool_reports_pool_exhausted() {
+        let mut kv = sharing_pool(4, 4);
+        let ids = ids40();
+        let a = kv.allocate_shared(&ids).unwrap();
+        let b = kv.allocate_shared(&ids).unwrap();
+        // A forks into the last free page; B's fork then finds the pool
+        // dry and must leave the slot untouched (preempt-or-truncate is
+        // the caller's call).
+        assert_eq!(kv.prepare_write(a).unwrap(), PrepareWrite::Forked);
+        assert_eq!(kv.prepare_write(b).unwrap(), PrepareWrite::PoolExhausted);
+        assert_eq!(kv.state(b), SlotState::Active { pos: 40 });
+        // Releasing A frees its private fork; B's retry succeeds.
+        kv.release(a).unwrap();
+        assert_eq!(kv.prepare_write(b).unwrap(), PrepareWrite::Forked);
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn sharing_survives_resize_and_reregistration() {
+        let mut kv = sharing_pool(4, 8);
+        let ids = ids40();
+        let a = kv.allocate_shared(&ids).unwrap();
+        let b = kv.allocate_shared(&ids).unwrap();
+        assert_eq!((a, b), (0, 1));
+        let before_a: Vec<usize> = kv.blocks(a).to_vec();
+        // Shrink 4 -> 2: tables and index registrations move with their
+        // slots; refcounts are slot-agnostic so no page is touched.
+        let moves = kv.resize(2).unwrap();
+        assert_eq!(moves, vec![(0, 0), (1, 1)]);
+        assert_eq!(kv.blocks(0), before_a.as_slice());
+        assert!(kv.pool_conserved());
+        // Release the donor through the moved registration, then verify a
+        // new identical prompt still finds the survivor's pages.
+        kv.release(0).unwrap();
+        let c = kv.allocate_shared(&ids).unwrap();
+        assert_eq!(kv.blocks(c), kv.blocks(1));
+        assert_eq!(kv.pool_stats().used_pages, 3);
+        assert!(kv.pool_conserved());
+    }
+
+    #[test]
+    fn sub_page_prompts_share_through_the_root_claim() {
+        // Prompts shorter than one page register an equal-tail claim under
+        // the trie root.
+        let mut kv = sharing_pool(2, 4);
+        let ids: Vec<u32> = (7..18).collect(); // 11 tokens, 1 page
+        let a = kv.allocate_shared(&ids).unwrap();
+        let b = kv.allocate_shared(&ids).unwrap();
+        assert_eq!(kv.blocks(a), kv.blocks(b));
+        assert_eq!(kv.pool_stats().used_pages, 1);
+        assert_eq!(kv.prepare_write(b).unwrap(), PrepareWrite::Forked);
+        assert_eq!(kv.pool_stats().used_pages, 2);
+        assert!(kv.pool_conserved());
     }
 }

@@ -44,7 +44,7 @@ use anyhow::Result;
 use crate::coordinator::admission::{AdmissionQueue, AdmitOutcome};
 use crate::coordinator::cost::{cheapest_rung, CostModel, PreemptCandidate, SlotStepCostModel};
 use crate::coordinator::cot::{self, CotPolicy};
-use crate::coordinator::kv::{Advance, KvConfig, KvSlots, PoolStats, SlotState};
+use crate::coordinator::kv::{Advance, KvConfig, KvSlots, PoolStats, PrepareWrite, SlotState};
 use crate::coordinator::request::{PreemptedSeq, Request, Response};
 use crate::coordinator::sampling;
 use crate::quant::Precision;
@@ -384,7 +384,18 @@ pub struct SchedReport {
     pub kv_pages_allocated: usize,
     /// KV pages returned over the session.
     pub kv_pages_released: usize,
+    /// Admissions that reused at least one live sequence's prefix pages
+    /// (only a pool with [`KvConfig::with_prefix_sharing`] ever counts).
+    pub kv_prefix_hits: usize,
+    /// Pages reused by reference instead of freshly allocated — each is a
+    /// whole page of prompt KV the device never had to hold twice.
+    pub kv_shared_pages_reused: usize,
+    /// Copy-on-write forks: first writes into a shared page that cloned a
+    /// private copy instead of writing through.
+    pub kv_cow_forks: usize,
     /// Peak used fraction of the KV pool budget (0.0 for unbounded pools).
+    /// Under prefix sharing "used" counts *unique* pages, so the same
+    /// workload peaks lower than a non-shared pool.
     pub kv_peak_pool_util: f64,
     /// Modeled HBM bytes per KV token under the session's pool
     /// configuration (0.0 when the pool was not sized from a memory
@@ -428,6 +439,9 @@ impl SchedReport {
     fn fold_pool(&mut self, stats: &PoolStats) {
         self.kv_pages_allocated += stats.allocs;
         self.kv_pages_released += stats.releases;
+        self.kv_prefix_hits += stats.prefix_hits;
+        self.kv_shared_pages_reused += stats.retains;
+        self.kv_cow_forks += stats.cow_forks;
         if let Some(cap) = stats.capacity_pages {
             if cap > 0 {
                 self.kv_peak_pool_util =
@@ -516,6 +530,9 @@ impl SchedReport {
         self.preempt_stall_steps += other.preempt_stall_steps;
         self.kv_pages_allocated += other.kv_pages_allocated;
         self.kv_pages_released += other.kv_pages_released;
+        self.kv_prefix_hits += other.kv_prefix_hits;
+        self.kv_shared_pages_reused += other.kv_shared_pages_reused;
+        self.kv_cow_forks += other.kv_cow_forks;
         self.kv_peak_pool_util = self.kv_peak_pool_util.max(other.kv_peak_pool_util);
         self.kv_bytes_per_token = self.kv_bytes_per_token.max(other.kv_bytes_per_token);
         self.prefill_ms += other.prefill_ms;
@@ -672,6 +689,10 @@ impl<'t> Scheduler<'t> {
             !self.cfg.preempt.enabled || self.cfg.preempt.max_per_seq > 0,
             "preempt max_per_seq must be positive when preemption is enabled"
         );
+        // A sub-page budget (or sharing over a non-paged policy) is a
+        // configuration bug, not a load condition: fail with the typed
+        // `KvConfigError` instead of running a pool that can admit nothing.
+        self.cfg.kv.validate()?;
         let mut report = SchedReport {
             kv_bytes_per_token: self.cfg.kv.bytes_per_token,
             ..SchedReport::default()
@@ -740,6 +761,7 @@ impl<'t> Scheduler<'t> {
         on_response: &mut dyn FnMut(Response),
     ) -> Result<Option<(usize, Vec<i32>, i32, SlotCtx)>> {
         let pad = self.tokenizer.pad as i32;
+        let sharing = self.cfg.kv.sharing();
         loop {
             // Gate candidates on the pool's headroom via the exact prompt
             // length ([`Request::prompt_tokens_hint`]). Requests whose
@@ -749,9 +771,21 @@ impl<'t> Scheduler<'t> {
             // (A drained pool needs no extra escape — with zero occupants
             // every page is free, so can_reserve and can_ever_reserve
             // agree and one of the two disjuncts decides.)
+            //
+            // Under prefix sharing the gate prices the *unshared suffix*
+            // instead of the whole prompt, so a request that mostly
+            // overlaps a live sequence admits into a pool a whole-prompt
+            // reservation would defer on. That needs the encoded ids
+            // (prompt encoding is deterministic, so re-encoding below for
+            // the winner reproduces them exactly).
             let outcome = queue.admit_gated(Instant::now(), &mut |req| {
-                let hint = req.prompt_tokens_hint();
-                kv.can_reserve(hint) || !kv.can_ever_reserve(hint)
+                if sharing {
+                    let ids = cot::build_prompt(self.tokenizer, req.mode, &req.examples);
+                    kv.can_admit_shared(&ids) || !kv.can_ever_reserve(ids.len())
+                } else {
+                    let hint = req.prompt_tokens_hint();
+                    kv.can_reserve(hint) || !kv.can_ever_reserve(hint)
+                }
             });
             let req = match outcome {
                 AdmitOutcome::Admitted(req) => req,
@@ -768,7 +802,9 @@ impl<'t> Scheduler<'t> {
                     continue;
                 }
             };
-            if !kv.can_reserve(ids.len()) {
+            let reservable =
+                if sharing { kv.can_admit_shared(&ids) } else { kv.can_reserve(ids.len()) };
+            if !reservable {
                 // The gate only passes unbackable prompts through when
                 // their reservation exceeds the pool's total capacity:
                 // such a request can never be admitted — reject, don't
@@ -780,7 +816,11 @@ impl<'t> Scheduler<'t> {
                 reject(&req, report, on_response);
                 continue;
             }
-            let slot = kv.allocate(ids.len())?;
+            // `allocate_shared` maps any full prefix pages this prompt
+            // shares with a live sequence by reference and reserves only
+            // the unshared suffix; without sharing it is exactly
+            // `allocate(ids.len())`.
+            let slot = kv.allocate_shared(&ids)?;
             let mut row = vec![pad; prompt_len];
             for (j, &t) in ids.iter().enumerate() {
                 row[j] = t as i32;
@@ -1370,6 +1410,84 @@ impl<'t> Scheduler<'t> {
                     } else if ctx.output.len() >= ctx.budget {
                         ctx.truncated = true;
                         kv.finish(slot)?;
+                    }
+                }
+            }
+
+            // ---- copy-on-write fork pass ------------------------------
+            // Under prefix sharing, a slot whose next write lands in a
+            // page it shares must fork a private copy BEFORE the decode
+            // below executes the write — the backend contract rejects any
+            // write-through of a multi-mapped page. Runs between sampling
+            // and retirement so just-finished slots (skipped by the Active
+            // check) never waste a fork, and a slot truncated here is
+            // retired by the very next loop before it can reach decode.
+            if self.cfg.kv.sharing() {
+                for slot in 0..bucket {
+                    loop {
+                        if !matches!(kv.state(slot), SlotState::Active { .. }) {
+                            break;
+                        }
+                        match kv.prepare_write(slot)? {
+                            PrepareWrite::Ready => break,
+                            PrepareWrite::Forked => {
+                                // A fork swaps one table entry at constant
+                                // length, so the count-gated sync_blocks
+                                // would miss it: republish unconditionally.
+                                backend.bind_blocks(slot, kv.blocks(slot))?;
+                                break;
+                            }
+                            PrepareWrite::PoolExhausted => {
+                                // The same preempt-or-truncate site as a
+                                // failed page-boundary crossing, one step
+                                // earlier: the fork needs a free page and
+                                // the pool has none.
+                                let mut preempted = false;
+                                if self.cfg.preempt.enabled {
+                                    // Pre-decode freeze positions: every
+                                    // live row last wrote at position-1
+                                    // (it has not decoded this step yet).
+                                    let mut pre_pos = vec![0i32; bucket];
+                                    for (s, p) in pre_pos.iter_mut().enumerate() {
+                                        *p = kv
+                                            .position(s)
+                                            .map(|v| v as i32 - 1)
+                                            .unwrap_or(hold_pos[s]);
+                                    }
+                                    let (new_st, hit) = self.try_preempt(
+                                        backend,
+                                        queue,
+                                        &mut kv,
+                                        slots,
+                                        &mut hold_pos,
+                                        &mut bound,
+                                        st,
+                                        &pre_pos,
+                                        precision,
+                                        report,
+                                    )?;
+                                    st = new_st;
+                                    preempted = hit;
+                                }
+                                if preempted {
+                                    // Retry: the victim may have freed a
+                                    // page (or parked this very slot —
+                                    // the Active check above ends the
+                                    // loop). Candidates strictly shrink
+                                    // per preemption, so this terminates.
+                                    continue;
+                                }
+                                // No relief: finish truncated with the
+                                // tokens sampled so far (the write that
+                                // needed the fork never executes).
+                                kv.finish(slot)?;
+                                slots[slot]
+                                    .as_mut()
+                                    .expect("active slot has context")
+                                    .truncated = true;
+                                break;
+                            }
+                        }
                     }
                 }
             }
@@ -2035,6 +2153,71 @@ mod tests {
             "post-shrink steps charged at the small rung: {:?}",
             report.rungs
         );
+    }
+
+    #[test]
+    fn sub_page_kv_budget_is_rejected_at_session_start() {
+        // Bugfix pin: a budget smaller than one page used to floor to a
+        // 0-capacity pool that deferred every admission forever with no
+        // diagnosis. It is now a typed configuration error before any
+        // device work happens.
+        let tk = fixture();
+        let mut be = MockBackend::new(64, 48, 96, |_: &[i32]| vec![2]);
+        let cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 15));
+        let sched = Scheduler::new(&tk, cfg);
+        let mut queue = AdmissionQueue::new(AdmitConfig::default());
+        queue.push(request(1, CotMode::NoThink));
+        let err = sched
+            .run(&mut be, &mut queue, &mut |_| {}, &mut |_| {})
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("smaller than one"),
+            "expected the typed sub-page budget error, got: {err}"
+        );
+        assert_eq!(be.prefills, 0, "rejected before any device work");
+    }
+
+    // ---- shared-prefix copy-on-write pages ------------------------------
+
+    /// Four identical prompts (the n-best sampling shape) over a 6-page
+    /// pool: without sharing only two 3-page prompts fit; with sharing all
+    /// four ride the same prefix pages and each forks exactly one private
+    /// boundary page on its first write — and the outputs stay
+    /// byte-identical to a sharing-off run on an ample pool.
+    #[test]
+    fn prefix_sharing_admits_nbest_burst_and_forks_on_first_write() {
+        let tk = fixture();
+        let workload = || (0..4).map(|i| request(i, CotMode::NoThink)).collect::<Vec<_>>();
+        let mut shared_be =
+            MockBackend::new(64, 48, 96, mode_scripts(&tk, 8)).with_page_tokens(16);
+        let shared_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 6 * 16).with_prefix_sharing());
+        let (shared, srep) =
+            Scheduler::new(&tk, shared_cfg).run_batch(&mut shared_be, &workload()).unwrap();
+        assert_eq!(srep.completed, 4);
+        assert_eq!(srep.deferred, 0, "every sharer admitted on the first round");
+        assert_eq!(srep.max_live, 4, "all four concurrent on a 2-prompt budget");
+        assert_eq!(srep.kv_prefix_hits, 3, "three admissions reused the first prompt");
+        assert_eq!(srep.kv_shared_pages_reused, 9, "3 pages referenced by each sharer");
+        assert_eq!(srep.kv_cow_forks, 3, "each sharer forks its boundary page once");
+        assert_eq!(
+            srep.kv_pages_allocated, srep.kv_pages_released,
+            "refcounted churn still conserves pages"
+        );
+
+        let mut plain_be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 8));
+        let plain_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 4096));
+        let (plain, prep) =
+            Scheduler::new(&tk, plain_cfg).run_batch(&mut plain_be, &workload()).unwrap();
+        assert_eq!(prep.kv_cow_forks, 0);
+        assert_eq!(prep.kv_prefix_hits, 0);
+        for (s, p) in shared.iter().zip(&plain) {
+            assert_eq!(s.id, p.id);
+            assert_eq!(s.tokens, p.tokens, "request {} diverged under sharing", s.id);
+            assert!(!s.truncated);
+        }
     }
 
     // ---- preempt-and-recompute ----------------------------------------

@@ -328,6 +328,12 @@ pub(crate) fn record_session(
     metrics.inc("preempt_stall_steps", report.preempt_stall_steps as u64);
     metrics.inc("kv_pages_allocated", report.kv_pages_allocated as u64);
     metrics.inc("kv_pages_released", report.kv_pages_released as u64);
+    // Shared-prefix copy-on-write accounting: admissions that mapped a
+    // cached prefix, pages reused by reference instead of freshly
+    // allocated, and first-write forks. All zero with sharing off.
+    metrics.inc("kv_prefix_hits", report.kv_prefix_hits as u64);
+    metrics.inc("kv_shared_pages_reused", report.kv_shared_pages_reused as u64);
+    metrics.inc("kv_cow_forks", report.kv_cow_forks as u64);
     metrics.observe("kv_pool_peak_util", report.kv_peak_pool_util);
     if report.kv_bytes_per_token > 0.0 {
         metrics.observe("kv_bytes_per_token", report.kv_bytes_per_token);

@@ -13,6 +13,8 @@
 //!               --model M, --variant V, --mode MODE, --iters N,
 //!               --cost atlas|slot-step (serve: ladder cost model),
 //!               --kv paged|window|unbounded (serve: KV pool policy),
+//!               --share-prefix (serve: copy-on-write shared-prefix pages,
+//!               requires --kv paged),
 //!               --preempt (serve: preempt-and-recompute on pool exhaustion),
 //!               --devices N --router cost|round-robin
 //!               --device-budget-pages P (serve: fleet mode)
@@ -196,16 +198,30 @@ fn serve(args: &Args) -> Result<()> {
     let atlas = AtlasCostModel::openpangu_7b()
         .with_kv_precision(KvPrecision::for_weights(precision));
     let top_bucket = buckets.last().copied().unwrap_or(8);
-    let paged = atlas.kv_config(precision, PageGeometry::default(), top_bucket);
+    let mut paged = atlas.kv_config(precision, PageGeometry::default(), top_bucket);
+    // Shared-prefix reuse: requests whose prompts share a prefix map the
+    // same pool pages by reference and fork on first write (CoW). Only
+    // meaningful for the paged pool — whole-window and unbounded modes
+    // have no pages to share.
+    let share = args.flag("share-prefix");
+    if share {
+        paged = paged.with_prefix_sharing();
+    }
     match args.get_or("kv", "paged") {
         "paged" => {
             sched_cfg = sched_cfg.with_kv(paged);
+        }
+        "window" if share => {
+            anyhow::bail!("--share-prefix requires --kv paged");
         }
         "window" => {
             sched_cfg = sched_cfg.with_kv(KvConfig {
                 policy: pangu_atlas_quant::coordinator::kv::ReservePolicy::WholeWindow,
                 ..paged
             });
+        }
+        "unbounded" if share => {
+            anyhow::bail!("--share-prefix requires --kv paged");
         }
         "unbounded" => {}
         other => anyhow::bail!("--kv expects paged|window|unbounded, got {other:?}"),
@@ -267,19 +283,25 @@ fn serve(args: &Args) -> Result<()> {
 /// behind the cost-priced router (`--router round-robin` for the
 /// baseline). Traffic is deliberately skewed: long slow_think traces
 /// alternating with short no_think ones, the pattern that makes a
-/// skew-blind router pile all the expensive work on one device.
+/// skew-blind router pile all the expensive work on one device — and,
+/// under `--share-prefix`, the repeated example sets mean most prompts
+/// map cached prefix pages by reference instead of allocating.
 fn serve_fleet(args: &Args, devices: usize) -> Result<()> {
     let tk = Tokenizer::minilang_default();
     let n_req = args.usize_or("requests", 32);
     let pages = args.usize_or("device-budget-pages", 10);
     anyhow::ensure!(pages > 0, "--device-budget-pages must be positive");
+    let share = args.flag("share-prefix");
     let policy: Box<dyn RouterPolicy> = match args.get_or("router", "cost") {
         "cost" => Box::new(LeastLoadedRouter::new()),
         "round-robin" => Box::new(RoundRobinRouter::new()),
         other => anyhow::bail!("--router expects cost|round-robin, got {other:?}"),
     };
-    let mut sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
-        .with_kv(KvConfig::paged(16, pages * 16));
+    let mut kv = KvConfig::paged(16, pages * 16);
+    if share {
+        kv = kv.with_prefix_sharing();
+    }
+    let mut sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous).with_kv(kv);
     if args.flag("preempt") {
         sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
     }
@@ -289,7 +311,15 @@ fn serve_fleet(args: &Args, devices: usize) -> Result<()> {
         AdmitConfig::with_wait(false, Duration::ZERO),
     );
     let providers: Vec<_> = (0..devices)
-        .map(|_| MockProvider::new(MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 8))))
+        .map(|_| {
+            let mut be = MockBackend::new(64, 48, 96, minilang_mock_script(&tk, 8));
+            if share {
+                // Page-aware sharing contract: reads of a multi-mapped
+                // page are fine, an advancing write into one is rejected.
+                be = be.with_page_tokens(16);
+            }
+            MockProvider::new(be)
+        })
         .collect();
     let (mut server, handle) = FleetServer::new(providers, &tk, fleet_cfg, policy)?;
     let client = std::thread::spawn(move || {

@@ -109,12 +109,17 @@ pub trait Backend {
 
     /// Paged-KV block-table view: the scheduler publishes `slot`'s current
     /// page list whenever it changes — after admission, after a decode
-    /// step that grew the table by a page, and (with an empty list) after
-    /// the slot's pages return to the pool. Backends with device-side
-    /// paged attention address KV through this table; backends without one
-    /// may ignore it (the default is a no-op). [`MockBackend`] uses it to
-    /// enforce the pool's central safety contract loudly: no page is ever
-    /// mapped by two live slots. A `migrate` moves each carried slot's
+    /// step that grew the table by a page, after a copy-on-write fork
+    /// swapped a page in place, and (with an empty list) after the slot's
+    /// pages return to the pool. Backends with device-side paged attention
+    /// address KV through this table; backends without one may ignore it
+    /// (the default is a no-op). [`MockBackend`] uses it to enforce the
+    /// pool's central safety contract loudly. Without prefix sharing, no
+    /// page is ever mapped by two live slots; with sharing
+    /// ([`MockBackend::with_page_tokens`]), multiple slots may *read* a
+    /// shared prefix page, but an advancing decode write into a page
+    /// mapped by more than one live slot is rejected — the scheduler must
+    /// fork a private copy first. A `migrate` moves each carried slot's
     /// table to its new index (the backend sees the plan); only *newly
     /// admitted* slots need a fresh `bind_blocks` after it.
     fn bind_blocks(&mut self, slot: usize, blocks: &[usize]) -> Result<()> {
@@ -455,7 +460,10 @@ pub struct MockState {
 /// fails loudly when a caller breaks the position contract — per-slot `pos`
 /// must be strictly monotone (+1 per step) while the slot advances and
 /// frozen once it stops — the paged-KV block contract — no page mapped
-/// by two live slots at once ([`Backend::bind_blocks`]) — or the
+/// by two live slots at once, relaxed by
+/// [`MockBackend::with_page_tokens`] to the sharing contract: shared
+/// *reads* are fine, but an advancing write into a page with more than
+/// one live mapping is rejected ([`Backend::bind_blocks`]) — or the
 /// replay-prefix contract — a [`MigrateSlot::Restore`]d slot's replayed
 /// tokens must equal its pre-eviction trace.
 pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
@@ -476,8 +484,12 @@ pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     pub restores: usize,
     /// Block-table publications received ([`Backend::bind_blocks`]).
     pub binds: usize,
-    /// Live page ownership (page id -> slot), validated on every bind.
-    block_owner: std::collections::HashMap<usize, usize>,
+    /// `None` (default): strict single-ownership — a page bound by two
+    /// live slots fails the bind. `Some(page_tokens)`: shared-prefix mode
+    /// — multi-mapping is legal, and `decode` instead rejects any
+    /// *advancing write* into a page mapped by more than one live slot
+    /// (the scheduler must copy-on-write fork first).
+    page_tokens: Option<usize>,
     /// Per-slot published page lists (migrate remaps them with the plan).
     slot_blocks: std::collections::HashMap<usize, Vec<usize>>,
 }
@@ -496,14 +508,38 @@ impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
             migrations: 0,
             restores: 0,
             binds: 0,
-            block_owner: std::collections::HashMap::new(),
+            page_tokens: None,
             slot_blocks: std::collections::HashMap::new(),
         }
     }
 
-    /// Pages currently mapped across all slots (block-contract view).
+    /// Switch the block contract to shared-prefix mode: pages may be
+    /// mapped by several live slots (refcounted prefix sharing), and the
+    /// guarded invariant becomes write-isolation — `decode` fails any
+    /// advancing write whose position lands in a page (of `page_tokens`
+    /// tokens) still mapped by another live slot.
+    pub fn with_page_tokens(mut self, page_tokens: usize) -> Self {
+        self.page_tokens = Some(page_tokens.max(1));
+        self
+    }
+
+    /// Pages currently mapped across all slots (block-contract view);
+    /// a page shared by several slots counts once.
     pub fn mapped_pages(&self) -> usize {
-        self.block_owner.len()
+        let mut pages: Vec<usize> =
+            self.slot_blocks.values().flat_map(|bl| bl.iter().copied()).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        pages.len()
+    }
+
+    /// Live mappings of one page across all published tables.
+    fn page_mappings(&self, page: usize) -> usize {
+        self.slot_blocks
+            .values()
+            .flat_map(|bl| bl.iter())
+            .filter(|&&b| b == page)
+            .count()
     }
 }
 
@@ -527,7 +563,6 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         // A whole-batch prefill starts a fresh session/pool lifetime: any
         // block view from the previous batch (e.g. left by an aborted
         // session) is obsolete, and its page ids are about to be reissued.
-        self.block_owner.clear();
         self.slot_blocks.clear();
         let mut scripts = Vec::with_capacity(batch);
         for b in 0..batch {
@@ -673,13 +708,9 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         // state); admitted/vacant slots start unmapped and are re-published
         // by the scheduler after the migrate.
         let mut old_tables = std::mem::take(&mut self.slot_blocks);
-        self.block_owner.clear();
         for (slot, entry) in plan.iter().enumerate() {
             if let MigrateSlot::Carry { from } = entry {
                 if let Some(blocks) = old_tables.remove(from) {
-                    for &b in &blocks {
-                        self.block_owner.insert(b, slot);
-                    }
                     self.slot_blocks.insert(slot, blocks);
                 }
             }
@@ -704,6 +735,24 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
                     s.next_pos[slot] - 1
                 );
             } else if p == s.next_pos[slot] {
+                // Shared-prefix mode: an advancing write lands KV at `p`,
+                // and the page holding `p` must be exclusively this
+                // slot's — a write-through of a still-shared page would
+                // silently corrupt every sharer's prefix.
+                if let Some(pt) = self.page_tokens {
+                    if s.occupied[slot] {
+                        let k = p as usize / pt;
+                        if let Some(&page) =
+                            self.slot_blocks.get(&slot).and_then(|bl| bl.get(k))
+                        {
+                            anyhow::ensure!(
+                                self.page_mappings(page) <= 1,
+                                "slot {slot}: write-through of shared page {page} \
+                                 at position {p}"
+                            );
+                        }
+                    }
+                }
                 s.next_pos[slot] += 1; // strictly monotone advance
             } else if p == s.next_pos[slot] - 1 {
                 s.frozen[slot] = true; // finished/evicted slot holds position
@@ -742,18 +791,21 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
     fn bind_blocks(&mut self, slot: usize, blocks: &[usize]) -> Result<()> {
         self.binds += 1;
         // Drop the slot's previous mapping first (a re-publication replaces
-        // it wholesale), then claim the new pages, failing loudly if any is
-        // live under another slot — the pool contract this mock enforces.
-        if let Some(old) = self.slot_blocks.remove(&slot) {
-            for b in old {
-                self.block_owner.remove(&b);
+        // it wholesale). In strict mode the new pages must not be live
+        // under another slot — the single-ownership pool contract; in
+        // shared-prefix mode multi-mapping is legal and `decode` guards
+        // write isolation instead.
+        self.slot_blocks.remove(&slot);
+        if self.page_tokens.is_none() {
+            for &b in blocks {
+                if let Some((&owner, _)) =
+                    self.slot_blocks.iter().find(|(_, bl)| bl.contains(&b))
+                {
+                    anyhow::bail!(
+                        "page {b} double-mapped: live under slot {owner}, bound to {slot}"
+                    );
+                }
             }
-        }
-        for &b in blocks {
-            if let Some(&owner) = self.block_owner.get(&b) {
-                anyhow::bail!("page {b} double-mapped: live under slot {owner}, bound to {slot}");
-            }
-            self.block_owner.insert(b, slot);
         }
         if !blocks.is_empty() {
             self.slot_blocks.insert(slot, blocks.to_vec());
@@ -1095,6 +1147,48 @@ mod tests {
         be.bind_blocks(1, &[11, 12]).unwrap();
         // ...but slot 0 claiming them still trips the contract.
         assert!(be.bind_blocks(0, &[11]).is_err());
+    }
+
+    #[test]
+    fn shared_mode_allows_multi_mapping_but_rejects_write_through() {
+        // Page size 4: two slots share prefix page 7 (positions 0..4) and
+        // hold private pages for positions 4..8.
+        let mut be =
+            MockBackend::new(8, 4, 16, |_: &[i32]| vec![5; 10]).with_page_tokens(4);
+        let tokens = vec![1, 1, 1, 0, 1, 1, 1, 0];
+        let state = be.prefill(2, &tokens, &[3, 3]).unwrap();
+        be.bind_blocks(0, &[7, 8]).unwrap();
+        be.bind_blocks(1, &[7, 9]).unwrap(); // legal multi-map of page 7
+        assert_eq!(be.mapped_pages(), 3, "shared page counts once");
+        // Writes at position 3 land in shared page 7: rejected for both.
+        let err = be.decode(state, &[5, 5], &[3, 3]).unwrap_err();
+        assert!(err.to_string().contains("write-through of shared page 7"), "{err}");
+        // After slot 0 forks (its table swaps page 7 for private page 10)
+        // and re-publishes, the same write is clean for both slots: page 7
+        // is now exclusively slot 1's.
+        let state = be.prefill(2, &tokens, &[3, 3]).unwrap();
+        be.bind_blocks(0, &[10, 8]).unwrap();
+        be.bind_blocks(1, &[7, 9]).unwrap();
+        let state = be.decode(state, &[5, 5], &[3, 3]).unwrap();
+        // Next writes (position 4) land in the private second pages.
+        let _ = be.decode(state, &[5, 5], &[4, 4]).unwrap();
+    }
+
+    #[test]
+    fn shared_mode_frozen_rows_are_exempt_from_the_write_guard() {
+        let mut be =
+            MockBackend::new(8, 4, 16, |_: &[i32]| vec![5; 10]).with_page_tokens(4);
+        // Slot 0's prompt fills page 0 exactly (len 4), so its advancing
+        // writes land in its private page 8; slot 1 shares page 7 and
+        // freezes immediately (finished — it re-writes position 2 forever).
+        let tokens = vec![1, 1, 1, 1, 1, 1, 1, 0];
+        let state = be.prefill(2, &tokens, &[4, 3]).unwrap();
+        be.bind_blocks(0, &[7, 8]).unwrap();
+        be.bind_blocks(1, &[7, 9]).unwrap();
+        // Slot 1's held position 2 sits inside shared page 7, but a hold is
+        // a re-write of already-written KV, not an advancing write: exempt.
+        let state = be.decode(state, &[5, 5], &[4, 2]).unwrap();
+        let _ = be.decode(state, &[5, 5], &[5, 2]).unwrap();
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::time::Duration;
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel, SlotStepCostModel};
-use pangu_atlas_quant::coordinator::kv::{Advance, KvConfig, KvSlots, SlotState};
+use pangu_atlas_quant::coordinator::kv::{Advance, KvConfig, KvSlots, PrepareWrite, SlotState};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, PreemptConfig, Scheduler, SchedulerConfig,
@@ -650,6 +650,252 @@ fn prop_preempt_block_conservation_under_churn() {
             ensure_eq(stats.allocs, stats.releases, "alloc/release ledger balances")?;
             verify(&kv)
         },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shared-prefix copy-on-write: the refcount conservation suite
+// ---------------------------------------------------------------------------
+
+/// Randomized refcount churn over a sharing-enabled pool: admissions drawn
+/// from prefixes of one common token stream (heavy sharing at every
+/// depth), decode steps through the CoW `prepare_write` hook, preemptions
+/// that park-and-release, restores through the non-shared replay path, and
+/// resizes. At every step the multiset of pages across live tables must
+/// equal the pool's per-page refcounts (`pool_conserved` — no double-free,
+/// no page mapped while free), the unique-page footprint must respect the
+/// budget, releasing a sharer must drop exactly one ref per page (shared
+/// pages survive for their sharers), and a write cursor must never sit on
+/// a page with refcount > 1 after `prepare_write` says go.
+#[test]
+fn prop_cow_refcounts_conserved_under_churn() {
+    const PT: usize = 8;
+    let total_retains = std::cell::Cell::new(0usize);
+    let total_forks = std::cell::Cell::new(0usize);
+    check(
+        "cow-refcount-conservation",
+        60,
+        0xC0DE,
+        |rng| {
+            let bucket = rng.range(2, 6);
+            let pages = rng.range(3, 12);
+            let ops: Vec<u8> = (0..rng.range(10, 80)).map(|_| rng.range(0, 5) as u8).collect();
+            // Admission specs: a prefix length into the common stream,
+            // plus a 30% chance the last token diverges (breaking the
+            // equal-tail boundary claim, never the full-chunk match).
+            let admits: Vec<(usize, bool)> = (0..rng.range(4, 20))
+                .map(|_| (rng.range(1, 29), rng.chance(0.3)))
+                .collect();
+            (bucket, pages, ops, admits)
+        },
+        |(bucket, pages, ops, admits)| {
+            let base: Vec<u32> = (0..64).map(|i| (i as u32 * 7 + 3) % 50).collect();
+            let mut kv = KvSlots::with_config(
+                *bucket,
+                96,
+                KvConfig::paged(PT, pages * PT).with_prefix_sharing(),
+            );
+            let verify = |kv: &KvSlots| -> Result<(), String> {
+                ensure(kv.pool_conserved(), "refcount/table multiset conservation broken")?;
+                ensure(
+                    kv.pool_stats().used_pages <= *pages,
+                    "pool overran its unique-page budget",
+                )
+            };
+            // Releasing (retire or preempt) drops exactly one ref per
+            // mapped page; a page with surviving sharers must stay live.
+            let checked_release = |kv: &mut KvSlots, slot: usize| -> Result<(), String> {
+                let before: Vec<(usize, usize)> =
+                    kv.blocks(slot).iter().map(|&b| (b, kv.page_refs(b))).collect();
+                kv.release(slot).map_err(|e| e.to_string())?;
+                for (b, refs) in before {
+                    ensure_eq(kv.page_refs(b), refs - 1, "release drops exactly one ref")?;
+                    if refs > 1 {
+                        ensure(kv.page_refs(b) >= 1, "shared page freed under its sharers")?;
+                    }
+                }
+                Ok(())
+            };
+            let mut admit_cursor = 0usize;
+            let mut parked: Vec<usize> = Vec::new();
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    0 => {
+                        // Shared admission (cycled through the spec list).
+                        let (len, diverge) = admits[admit_cursor % admits.len()];
+                        admit_cursor += 1;
+                        let mut ids = base[..len].to_vec();
+                        if diverge {
+                            ids[len - 1] = 100 + admit_cursor as u32;
+                        }
+                        if kv.can_admit_shared(&ids) {
+                            kv.allocate_shared(&ids).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    1 => {
+                        // One decode step per active slot, through the CoW
+                        // hook exactly as the scheduler drives it.
+                        for slot in 0..kv.bucket() {
+                            if !matches!(kv.state(slot), SlotState::Active { .. }) {
+                                continue;
+                            }
+                            match kv.prepare_write(slot).map_err(|e| e.to_string())? {
+                                PrepareWrite::Ready | PrepareWrite::Forked => {
+                                    let pos = kv.position(slot).expect("active slot");
+                                    let page = kv.blocks(slot)[pos / PT];
+                                    ensure_eq(
+                                        kv.page_refs(page),
+                                        1,
+                                        "write cursor sits on an exclusively owned page",
+                                    )?;
+                                    let _ = kv.try_advance(slot).map_err(|e| e.to_string())?;
+                                }
+                                PrepareWrite::PoolExhausted => {
+                                    // Fork starved: preempt this slot — its
+                                    // shared pages must drop refs, not free.
+                                    let pos = kv.position(slot).expect("active slot");
+                                    checked_release(&mut kv, slot)?;
+                                    parked.push(pos + 1);
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        // Retire the first occupied slot.
+                        if let Some(slot) = (0..kv.bucket())
+                            .find(|&s| !matches!(kv.state(s), SlotState::Free))
+                        {
+                            kv.finish(slot).map_err(|e| e.to_string())?;
+                            checked_release(&mut kv, slot)?;
+                        }
+                    }
+                    3 => {
+                        // Preempt the last active slot (park its replay).
+                        if let Some(slot) = (0..kv.bucket())
+                            .rev()
+                            .find(|&s| matches!(kv.state(s), SlotState::Active { .. }))
+                        {
+                            let pos = kv.position(slot).expect("active slot");
+                            checked_release(&mut kv, slot)?;
+                            parked.push(pos + 1);
+                        }
+                    }
+                    4 => {
+                        // Restore the parked head through the non-shared
+                        // replay path (replayed pages mix prompt and
+                        // generated tokens — the index must never serve
+                        // them).
+                        if let Some(&replay) = parked.first() {
+                            if kv.can_restore(replay, 1) {
+                                parked.remove(0);
+                                kv.allocate(replay).map_err(|e| e.to_string())?;
+                            }
+                        }
+                    }
+                    _ => {
+                        // Resize to a shape that still fits the occupants.
+                        let occ = kv.occupied_count().max(1);
+                        kv.resize(occ + i % 4).map_err(|e| e.to_string())?;
+                    }
+                }
+                verify(&kv)?;
+            }
+            // Drain: every unique page returns to the free list and the
+            // alloc/release ledger balances (retains are ref bumps, not
+            // allocations — they must not leak pages).
+            kv.reset();
+            ensure_eq(kv.pool_stats().used_pages, 0, "drained pool is empty")?;
+            let stats = kv.pool_stats();
+            ensure_eq(stats.allocs, stats.releases, "alloc/release ledger balances")?;
+            total_retains.set(total_retains.get() + stats.retains);
+            total_forks.set(total_forks.get() + stats.cow_forks);
+            verify(&kv)
+        },
+    );
+    assert!(
+        total_retains.get() > 0,
+        "the generator never shared a page: the property was vacuous"
+    );
+    assert!(
+        total_forks.get() > 0,
+        "the churn never forced a CoW fork: the property was vacuous"
+    );
+}
+
+/// Full-scheduler identity: on an ample budget, a sharing-enabled session
+/// produces byte-identical responses (tokens, truncation) to the plain
+/// paged pool over the same workload — sharing changes the HBM footprint,
+/// never the bytes. The sharing run drives a page-aware mock whose
+/// contract rejects any advancing write into a multi-mapped page, so a
+/// clean run additionally proves no write-through ever reached the
+/// backend.
+#[test]
+fn prop_shared_prefix_scheduler_byte_identical() {
+    let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+    let total_hits = std::cell::Cell::new(0usize);
+    let run = |share: bool,
+               bucket: usize,
+               shapes: &[(u8, u8)]|
+     -> Result<(Vec<(u64, Vec<u32>, bool)>, usize, usize), String> {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut kv = KvConfig::paged(16, 4096);
+        if share {
+            kv = kv.with_prefix_sharing();
+            be = be.with_page_tokens(16);
+        }
+        let sched =
+            Scheduler::new(&tk, SchedulerConfig::fixed(bucket, AdmitGate::Continuous).with_kv(kv));
+        let requests: Vec<Request> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(tag, examples))| {
+                let ex: Vec<(Vec<u8>, Vec<u8>)> = (0..examples)
+                    .map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]))
+                    .collect();
+                Request::new(i as u64, "7b-sim", "int8", modes[tag as usize], ex)
+            })
+            .collect();
+        let (resps, report) = sched.run_batch(&mut be, &requests).map_err(|e| e.to_string())?;
+        ensure_eq(
+            report.kv_pages_allocated,
+            report.kv_pages_released,
+            "page ledger balances under sharing",
+        )?;
+        Ok((
+            resps.into_iter().map(|r| (r.id, r.tokens, r.truncated)).collect(),
+            report.deferred,
+            report.kv_prefix_hits,
+        ))
+    };
+    check(
+        "shared-prefix-byte-identical",
+        25,
+        0xC0B1,
+        |rng| {
+            let bucket = rng.range(2, 6);
+            // Shapes drawn from a small alphabet so duplicate prompts (and
+            // therefore shared prefixes) actually occur.
+            let shapes: Vec<(u8, u8)> = (0..rng.range(2, 8))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            (bucket, shapes)
+        },
+        |(bucket, shapes)| {
+            let (plain, plain_deferred, plain_hits) = run(false, *bucket, shapes)?;
+            let (shared, shared_deferred, hits) = run(true, *bucket, shapes)?;
+            ensure_eq(plain_hits, 0, "sharing off records no prefix hits")?;
+            ensure_eq(plain_deferred, 0, "ample plain pool never defers")?;
+            ensure_eq(shared_deferred, 0, "ample shared pool never defers")?;
+            ensure(shared == plain, "shared-prefix run diverged from the plain paged run")?;
+            total_hits.set(total_hits.get() + hits);
+            Ok(())
+        },
+    );
+    assert!(
+        total_hits.get() > 0,
+        "the generator never shared a prefix: the property was vacuous"
     );
 }
 

@@ -512,6 +512,115 @@ fn paged_pool_outadmits_whole_window_under_same_hbm_budget() {
     assert!(paged.kv_peak_pool_util > 0.0 && window.kv_peak_pool_util > 0.0);
 }
 
+/// The ISSUE 7 acceptance test. An n-best workload — eight requests over
+/// one shared preamble (identical 41-token prompts, 3 pages each) —
+/// under the SAME 6-page budget:
+///
+///   * the **shared-prefix CoW** pool admits strictly more concurrent
+///     sequences than the plain paged pool (sharers retain the donor's
+///     prompt pages instead of allocating their own) and defers strictly
+///     fewer admissions;
+///   * every sharer's first decode write forks a private boundary page —
+///     and the page-aware mock rejects any advancing write into a
+///     multi-mapped page, so a clean run proves no write-through ever
+///     reached the backend;
+///   * sharing never bends generation: outputs are byte-identical to the
+///     unbounded slot-granular run.
+#[test]
+fn shared_prefix_cow_outadmits_plain_paging_on_nbest_workload() {
+    let nbest_request = |id: u64| -> Request {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+            (vec![2, 3, 4, 5, 6], vec![6, 5, 4, 3, 2]),
+        ];
+        Request::new(id, "7b-sim", "int8", CotMode::NoThink, ex)
+    };
+    let workload = || -> Vec<Request> { (0..8).map(nbest_request).collect() };
+    // 6 pages: one donor's 3 prompt pages + 3 CoW forks fit exactly; the
+    // plain pool can hold only two whole 3-page prompts at once.
+    let budget_tokens = 6 * 16;
+    let run = |kv_cfg: Option<KvConfig>| {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 6);
+        let share = kv_cfg.as_ref().map_or(false, |c| c.sharing());
+        let mut be = MockBackend::new(64, 48, 96, script);
+        if share {
+            be = be.with_page_tokens(16);
+        }
+        let mut cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous);
+        if let Some(kv_cfg) = kv_cfg {
+            cfg = cfg.with_kv(kv_cfg);
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let (resps, report) = sched.run_batch(&mut be, &workload()).expect("session");
+        assert_eq!(resps.len(), 8, "every request answered");
+        (resps, report)
+    };
+
+    let (baseline_resps, baseline) = run(None); // unbounded slot-granular
+    let (plain_resps, plain) = run(Some(KvConfig::paged(16, budget_tokens)));
+    let (shared_resps, shared) =
+        run(Some(KvConfig::paged(16, budget_tokens).with_prefix_sharing()));
+
+    for report in [&baseline, &plain, &shared] {
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.rejected, 0);
+    }
+    // Sharing admits strictly more concurrent sequences than paying full
+    // prompt pages per admission...
+    assert!(
+        shared.max_live > plain.max_live,
+        "shared max_live {} !> plain paged {}",
+        shared.max_live,
+        plain.max_live
+    );
+    // ...and defers strictly fewer admissions under the same budget.
+    assert!(plain.deferred >= 1, "the plain pool must actually hit the budget");
+    assert!(
+        shared.deferred < plain.deferred,
+        "shared deferred {} !< plain {}",
+        shared.deferred,
+        plain.deferred
+    );
+    // The sharing story is visible in the counters: every admission after
+    // a donor maps cached pages by reference, and each sharer's first
+    // write forks exactly one private boundary page.
+    assert!(shared.kv_prefix_hits >= 6, "prefix hits {} < 6", shared.kv_prefix_hits);
+    assert!(shared.kv_shared_pages_reused >= 9, "reused {} < 9", shared.kv_shared_pages_reused);
+    assert!(shared.kv_cow_forks >= 3, "CoW forks {} < 3", shared.kv_cow_forks);
+    assert_eq!(plain.kv_prefix_hits, 0, "plain paging never shares");
+    assert_eq!(plain.kv_cow_forks, 0, "plain paging never forks");
+    // Reference-counted reuse means fewer unique pages ever allocated.
+    assert!(
+        shared.kv_pages_allocated < plain.kv_pages_allocated,
+        "shared {} pages allocated !< plain {}",
+        shared.kv_pages_allocated,
+        plain.kv_pages_allocated
+    );
+    assert_eq!(
+        shared.kv_pages_allocated, shared.kv_pages_released,
+        "refcounted pool conserves pages"
+    );
+    // Sharing never bends generation: byte-identical to the unbounded run.
+    for (s, b) in shared_resps.iter().zip(&baseline_resps) {
+        assert_eq!(s.id, b.id);
+        assert_eq!(s.tokens, b.tokens, "request {} diverged under sharing", s.id);
+        assert!(!s.truncated, "no pool-exhaustion truncation under sharing");
+    }
+    for (p, b) in plain_resps.iter().zip(&baseline_resps) {
+        assert_eq!(p.tokens, b.tokens, "request {} diverged under plain paging", p.id);
+    }
+    // Admitting the whole n-best group at once drains the workload in
+    // strictly fewer slot-steps than serializing two-at-a-time.
+    assert!(
+        shared.slot_steps() < plain.slot_steps(),
+        "concurrency gain must show up as fewer slot-steps: shared {} vs plain {}",
+        shared.slot_steps(),
+        plain.slot_steps()
+    );
+}
+
 /// The ISSUE 5 acceptance test: the PR 4 `--long-cot` tight-budget
 /// scenario (the same 16-page modeled HBM budget), pushed until the pool
 /// genuinely starves mid-decode, run preempt-vs-truncate:
