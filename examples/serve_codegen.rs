@@ -6,6 +6,7 @@
 //!     cargo run --release --example serve_codegen -- \
 //!         [--artifacts DIR] [--requests N] [--variant int8] [--clients 4] \
 //!         [--long-cot] [--kv-page 16] [--preempt] [--share-prefix] \
+//!         [--slo-ms MS] [--inflation F] \
 //!         [--devices N [--device-budget-pages P]]
 //!
 //! `--devices N` switches to the artifact-free multi-device fleet demo:
@@ -27,6 +28,12 @@
 //! whose prompts share a prefix with a live sequence map the cached pages
 //! by reference and fork a private copy on first write (the pool report
 //! then shows prefix hits / pages reused / CoW forks).
+//! `--slo-ms MS` attaches a modeled latency budget to every request and
+//! enables SLO-aware admission: requests may be downgraded (slow_think →
+//! auto_think → no_think, fp16 → int8 → w4a8) to fit their deadline.
+//! `--inflation F` sets the W4A8 token-inflation factor the cost model
+//! prices expected trace lengths with (1.0 = identity; low-bit variants
+//! emit longer CoT traces, so honest pricing inflates their lengths).
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -36,6 +43,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use pangu_atlas_quant::atlas::memory_model::{KvPrecision, PageGeometry};
+use pangu_atlas_quant::atlas::perf_model::TokenInflation;
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring::{self, Outcome};
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
@@ -43,6 +51,7 @@ use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, PreemptConfig, SchedulerConfig};
 use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::coordinator::slo::SloPolicy;
 use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::runtime::backend::DeviceProvider;
 use pangu_atlas_quant::runtime::Runtime;
@@ -61,6 +70,24 @@ fn main() -> Result<()> {
     let page_tokens = args.usize_or("kv-page", 16);
     let preempt = args.flag("preempt");
     let share = args.flag("share-prefix");
+    let slo_ms = match args.get("slo-ms") {
+        Some(raw) => {
+            let ms: f64 = raw.parse().map_err(|_| anyhow!("--slo-ms expects a number"))?;
+            anyhow::ensure!(ms > 0.0, "--slo-ms must be positive");
+            Some(ms)
+        }
+        None => None,
+    };
+    // --inflation F is the W4A8 factor; INT8 scales at a quarter of the
+    // excess, mirroring the A2 calibration's 1.06 / 1.24 ratio.
+    let inflation = match args.get("inflation") {
+        Some(raw) => {
+            let w4a8: f64 = raw.parse().map_err(|_| anyhow!("--inflation expects a number"))?;
+            anyhow::ensure!(w4a8 >= 1.0, "--inflation must be >= 1.0");
+            TokenInflation { int8: 1.0 + (w4a8 - 1.0) * 0.25, w4a8 }
+        }
+        None => TokenInflation::IDENTITY,
+    };
     let devices = args.usize_or("devices", 0);
     if devices > 0 {
         return serve_fleet(devices, n_requests, args.usize_or("device-budget-pages", 10), share);
@@ -89,7 +116,9 @@ fn main() -> Result<()> {
     // variants store KV at INT8, halving the per-token footprint.
     let weight_precision = Precision::parse(&variant).unwrap_or(Precision::Fp16);
     let kv_precision = KvPrecision::for_weights(weight_precision);
-    let cost_model = AtlasCostModel::openpangu_7b().with_kv_precision(kv_precision);
+    let cost_model = AtlasCostModel::openpangu_7b()
+        .with_kv_precision(kv_precision)
+        .with_token_inflation(inflation);
     let mut kv_cfg = cost_model.kv_config(
         weight_precision,
         PageGeometry { page_tokens },
@@ -114,6 +143,14 @@ fn main() -> Result<()> {
         // recompute cost the pool report prints below.
         sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
         println!("preempt-and-recompute: ON (pool exhaustion evicts, never truncates)");
+    }
+    if let Some(ms) = slo_ms {
+        sched_cfg = sched_cfg.with_slo(SloPolicy::default());
+        println!(
+            "SLO-aware admission: ON ({ms} ms budget per request, \
+             inflation int8 {:.2} / w4a8 {:.2})",
+            inflation.int8, inflation.w4a8
+        );
     }
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
@@ -159,6 +196,9 @@ fn main() -> Result<()> {
                     // Let the trace run to the CoT policy's cap instead of
                     // the default per-request budget.
                     req.params.max_new = usize::MAX;
+                }
+                if let Some(ms) = slo_ms {
+                    req = req.with_slo_ms(ms);
                 }
                 rxs.push((*i, handle.submit(req).unwrap()));
             }

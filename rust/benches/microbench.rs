@@ -17,9 +17,10 @@
 use std::cell::RefCell;
 use std::sync::Arc;
 
+use pangu_atlas_quant::atlas::perf_model::TokenInflation;
 use pangu_atlas_quant::bench_suite::repetition::{detect, RepetitionConfig};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
-use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
+use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel};
 use pangu_atlas_quant::coordinator::fleet;
 use pangu_atlas_quant::coordinator::kv::KvConfig;
 use pangu_atlas_quant::coordinator::request::Request;
@@ -27,7 +28,8 @@ use pangu_atlas_quant::coordinator::sampling;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, PreemptConfig, Scheduler, SchedulerConfig,
 };
-use pangu_atlas_quant::quant::{hadamard, int4, int8};
+use pangu_atlas_quant::coordinator::slo::SloPolicy;
+use pangu_atlas_quant::quant::{hadamard, int4, int8, Precision};
 use pangu_atlas_quant::runtime::backend::MockBackend;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::benchkit::{BenchConfig, Group, JsonEmitter};
@@ -372,6 +374,63 @@ fn main() {
             report.rollup().deferred,
             report.rebalances,
             report.rollup().modeled_total_ms()
+        ));
+    }
+    emitter.add(&g);
+    g.finish();
+
+    // ---- SLO-aware admission: naive vs inflation-honest pricing ---------
+    // A W4A8-heavy slow_think workload under a per-request deadline sized
+    // 5% above the *naive* (identity-inflation) service estimate: pricing
+    // that ignores token inflation admits the arrival pair as feasible,
+    // while the A2-calibrated model (W4A8 emits ~1.24x the FP16 tokens)
+    // prices the same trace over budget and downgrades think-mode at
+    // admission. The notes carry the downgrade/miss counters next to the
+    // slot-step bill so the honest model's shorter drains stay visible.
+    let mut g = Group::new("slo-inflation");
+    let w4a8_requests = |slo_ms: f64| -> Vec<Request> {
+        (0..6)
+            .map(|i| {
+                Request::new(i as u64, "7b-sim", "w4a8", CotMode::SlowThink, examples.clone())
+                    .with_slo_ms(slo_ms)
+            })
+            .collect()
+    };
+    let identity = AtlasCostModel::openpangu_7b();
+    let sample = Request::new(0, "7b-sim", "w4a8", CotMode::SlowThink, examples.clone());
+    let horizon = LadderConfig::default().grow_horizon;
+    let naive_steps = identity.expected_decode_steps(Precision::W4A8, CotMode::SlowThink, horizon);
+    let naive_ms =
+        identity.place_request_ms(Precision::W4A8, sample.prompt_tokens_hint(), naive_steps);
+    let slo_ms = naive_ms * 1.05;
+    for (name, inflation) in [
+        ("slo w4a8-heavy naive pricing", TokenInflation::IDENTITY),
+        ("slo w4a8-heavy inflation-honest pricing", TokenInflation::a2_calibrated()),
+    ] {
+        let last = RefCell::new(None);
+        g.run(name, &quick, || {
+            let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 40);
+            let mut be = MockBackend::new(64, 48, 96, script);
+            let cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+                .with_kv(KvConfig::paged(16, 16 * 16))
+                .with_cost(Arc::new(identity.with_token_inflation(inflation)))
+                .with_slo(SloPolicy::default());
+            let sched = Scheduler::new(&tk, cfg);
+            let (resps, report) =
+                sched.run_batch(&mut be, &w4a8_requests(slo_ms)).expect("mock session");
+            assert_eq!(resps.len(), 6);
+            std::hint::black_box(report.slo_misses_modeled);
+            *last.borrow_mut() = Some(report);
+        });
+        let report = last.into_inner().expect("bench ran at least once");
+        g.note(&format!(
+            "{} mode / {} precision downgrades, {} modeled misses, {} slot-steps, \
+             modeled {:.1} ms",
+            report.slo_downgrades_mode,
+            report.slo_downgrades_precision,
+            report.slo_misses_modeled,
+            report.slot_steps(),
+            report.modeled_total_ms()
         ));
     }
     emitter.add(&g);

@@ -131,6 +131,54 @@ pub fn decode_latency(
     }
 }
 
+/// Per-precision decode-trace inflation factors ("Quantization Inflates
+/// Reasoning", PAPERS.md): low-bit models emit *longer* CoT traces than the
+/// FP16 baseline for the same task, so honest cost models must multiply the
+/// expected decode-step count — W4A8's memory savings are partly repaid in
+/// extra steps. FP16 is the 1.0 reference by definition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TokenInflation {
+    /// W8A8 trace-length multiplier vs FP16 (>= 1.0 in practice).
+    pub int8: f64,
+    /// W4A8-family trace-length multiplier vs FP16.
+    pub w4a8: f64,
+}
+
+impl TokenInflation {
+    /// No inflation anywhere: every precision prices the FP16 trace length.
+    /// With this value all inflated quantities are bit-exact with the
+    /// uninflated path (the factor-1.0 multiply is exact in f64).
+    pub const IDENTITY: TokenInflation = TokenInflation { int8: 1.0, w4a8: 1.0 };
+
+    /// Defaults calibrated against the A2 eval harness: W8A8 traces run a
+    /// few percent long, W4A8 traces meaningfully longer (the token-inflation
+    /// paper reports up to tens of percent on reasoning workloads).
+    pub fn a2_calibrated() -> TokenInflation {
+        TokenInflation { int8: 1.06, w4a8: 1.24 }
+    }
+
+    /// Trace-length multiplier for `precision` (FP16 = 1.0 baseline).
+    pub fn factor(&self, precision: Precision) -> f64 {
+        match precision {
+            Precision::Fp16 => 1.0,
+            Precision::Int8 => self.int8,
+            _ => self.w4a8,
+        }
+    }
+
+    /// Expected decode steps after inflation, rounded up (a partial extra
+    /// token still occupies a full decode step). Exact identity at 1.0.
+    pub fn inflate_steps(&self, precision: Precision, steps: usize) -> usize {
+        (steps as f64 * self.factor(precision)).ceil() as usize
+    }
+}
+
+impl Default for TokenInflation {
+    fn default() -> Self {
+        TokenInflation::IDENTITY
+    }
+}
+
 /// Prefill speedup of a precision vs FP16 at a batch size.
 pub fn speedup_vs_fp16(spec: &AtlasSpec, dims: &ModelDims, p: Precision, batch: usize) -> f64 {
     let fp = prefill_latency(spec, dims, Precision::Fp16, batch).total_ms();
@@ -210,6 +258,25 @@ mod tests {
             let i8t = decode_latency(&spec, &dims, Precision::Int8, b).total_ms();
             assert!(i8t < fp, "b={b}: int8 {i8t} !< fp16 {fp}");
         }
+    }
+
+    #[test]
+    fn inflation_identity_is_exact_and_calibrated_orders_precisions() {
+        let id = TokenInflation::IDENTITY;
+        for p in Precision::ALL {
+            assert_eq!(id.factor(p), 1.0);
+            for steps in [0usize, 1, 7, 40, 1000] {
+                assert_eq!(id.inflate_steps(p, steps), steps, "{p} x{steps}");
+            }
+        }
+        let cal = TokenInflation::a2_calibrated();
+        assert_eq!(cal.factor(Precision::Fp16), 1.0);
+        assert!(cal.factor(Precision::Int8) > 1.0);
+        assert!(cal.factor(Precision::W4A8) > cal.factor(Precision::Int8));
+        assert_eq!(cal.factor(Precision::W4A8Smooth), cal.factor(Precision::W4A8));
+        // ceil: 1.24 x 10 = 12.4 -> 13 steps.
+        assert_eq!(cal.inflate_steps(Precision::W4A8, 10), 13);
+        assert_eq!(cal.inflate_steps(Precision::Fp16, 10), 10);
     }
 
     #[test]

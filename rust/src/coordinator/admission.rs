@@ -215,6 +215,19 @@ impl AdmissionQueue {
         self.demand_sum
     }
 
+    /// Queued requests counted per CoT mode, indexed as
+    /// [`CotMode::ALL`] — the queue-depth input to the SLO policy's
+    /// completion estimate ([`crate::coordinator::slo::SloSnapshot`]).
+    /// O(n) over the backlog; called once per SLO-bearing admission, not
+    /// per decode step, so the scan stays off the hot loop.
+    pub fn mode_demand(&self) -> [usize; 3] {
+        let mut counts = [0usize; 3];
+        for r in &self.queue {
+            counts[mode_rank(r.mode) as usize] += 1;
+        }
+        counts
+    }
+
     /// Launch readiness for a *new* session over a `bucket`-slot batch:
     /// either the queue can fill the bucket in one prefill, or the head
     /// request has aged past `launch_deadline` (the wave-era batching
@@ -452,6 +465,19 @@ mod tests {
         assert_eq!(q.demand(), 4, "slow_think counts double");
         q.admit(Instant::now()).unwrap();
         assert!(q.demand() < 4);
+    }
+
+    #[test]
+    fn mode_demand_counts_per_mode_in_all_order() {
+        let mut q = queue(true, 50);
+        assert_eq!(q.mode_demand(), [0, 0, 0]);
+        q.push(req(0, CotMode::NoThink));
+        q.push(req(1, CotMode::SlowThink));
+        q.push(req(2, CotMode::SlowThink));
+        q.push(req(3, CotMode::AutoThink));
+        assert_eq!(q.mode_demand(), [1, 1, 2]);
+        q.admit(Instant::now()).unwrap(); // mode-aware: takes the no_think
+        assert_eq!(q.mode_demand(), [0, 1, 2]);
     }
 
     #[test]

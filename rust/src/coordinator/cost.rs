@@ -52,9 +52,12 @@
 use std::fmt;
 
 use crate::atlas::memory_model::KvPrecision;
+use crate::atlas::perf_model::TokenInflation;
 use crate::atlas::{memory_model, perf_model, AtlasSpec, ModelDims};
+use crate::coordinator::cot;
 use crate::coordinator::kv::{KvConfig, PoolHeadroom};
 use crate::quant::Precision;
+use crate::tokenizer::CotMode;
 
 /// Inputs to a grow decision ([`CostModel::grow_pays_off`]): the shapes
 /// involved, the backlog, and the already-computed migration price.
@@ -249,6 +252,33 @@ pub trait CostModel: fmt::Debug + Send + Sync {
         let _ = prompt_tokens;
         self.prefill_ms(precision, 1) + expected_steps as f64 * self.decode_step_ms(precision, 1)
     }
+
+    /// Per-precision trace-length inflation this model prices with
+    /// ([`TokenInflation`], PAPERS.md "Quantization Inflates Reasoning"):
+    /// low-bit models emit longer traces, so every expected-length quantity
+    /// must be multiplied by the precision's factor to stay honest.
+    ///
+    /// Default: [`TokenInflation::IDENTITY`] — no inflation, so existing
+    /// models and configurations price exactly as before.
+    fn token_inflation(&self) -> TokenInflation {
+        TokenInflation::IDENTITY
+    }
+
+    /// Expected decode-step count for one request: the CoT mode's relative
+    /// length weight ([`cot::mode_length_weight`]: no=1x, auto=2x, slow=4x)
+    /// in `grow_horizon` units, inflated by the precision's
+    /// [`CostModel::token_inflation`] factor. This is the ONE
+    /// expected-length path — the fleet router's placement pricing, the SLO
+    /// policy's completion estimates, and grow amortization all call it.
+    fn expected_decode_steps(
+        &self,
+        precision: Precision,
+        mode: CotMode,
+        grow_horizon: usize,
+    ) -> usize {
+        self.token_inflation()
+            .inflate_steps(precision, cot::mode_length_weight(mode) * grow_horizon.max(1))
+    }
 }
 
 /// Smallest-cost feasible rung covering `demand` slots: the launch-time
@@ -346,13 +376,23 @@ pub struct AtlasCostModel {
     /// KV-cache element precision the deployment stores (the paper's
     /// Table 3 pairing is FP16 KV; W8A8-with-INT8-KV halves the KV term).
     pub kv_precision: KvPrecision,
+    /// Trace-length inflation factors used by every expected-length price
+    /// ([`CostModel::expected_decode_steps`]). Identity by default, so a
+    /// model built without [`AtlasCostModel::with_token_inflation`] prices
+    /// exactly as before this field existed.
+    pub inflation: TokenInflation,
 }
 
 impl AtlasCostModel {
     /// Cost model over explicit device and model dimensions (FP16 KV —
     /// the paper's deployment pairing).
     pub fn new(spec: AtlasSpec, dims: ModelDims) -> AtlasCostModel {
-        AtlasCostModel { spec, dims, kv_precision: KvPrecision::Fp16 }
+        AtlasCostModel {
+            spec,
+            dims,
+            kv_precision: KvPrecision::Fp16,
+            inflation: TokenInflation::IDENTITY,
+        }
     }
 
     /// Default A2 card serving openPangu-Embedded-7B (the paper's Table 3
@@ -365,6 +405,13 @@ impl AtlasCostModel {
     /// and live) follows the quantized-KV footprint.
     pub fn with_kv_precision(mut self, kv: KvPrecision) -> AtlasCostModel {
         self.kv_precision = kv;
+        self
+    }
+
+    /// Builder: price expected trace lengths with per-precision inflation
+    /// factors instead of the FP16 baseline length everywhere.
+    pub fn with_token_inflation(mut self, inflation: TokenInflation) -> AtlasCostModel {
+        self.inflation = inflation;
         self
     }
 
@@ -416,6 +463,10 @@ impl CostModel for AtlasCostModel {
             None => self.rung_feasible(precision, bucket),
         }
     }
+
+    fn token_inflation(&self) -> TokenInflation {
+        self.inflation
+    }
 }
 
 #[cfg(test)]
@@ -462,6 +513,36 @@ mod tests {
         let long = a.place_request_ms(Precision::Int8, 40, 64);
         assert!(short > 0.0, "roofline prefill + decode is never free");
         assert!(long > short, "more expected steps cost strictly more");
+    }
+
+    /// The single expected-length path: at identity inflation it reproduces
+    /// the fleet router's historical 1/2/4 x grow_horizon mapping exactly,
+    /// for every precision; with inflation on, low-bit steps grow and FP16
+    /// stays put.
+    #[test]
+    fn expected_decode_steps_pins_mode_weights_and_inflates() {
+        let m = SlotStepCostModel;
+        for horizon in [1usize, 6, 24] {
+            for p in Precision::ALL {
+                assert_eq!(m.expected_decode_steps(p, CotMode::NoThink, horizon), horizon);
+                assert_eq!(m.expected_decode_steps(p, CotMode::AutoThink, horizon), 2 * horizon);
+                assert_eq!(m.expected_decode_steps(p, CotMode::SlowThink, horizon), 4 * horizon);
+            }
+        }
+        // Degenerate horizon clamps to 1 unit, as the router always did.
+        assert_eq!(m.expected_decode_steps(Precision::Int8, CotMode::SlowThink, 0), 4);
+
+        let a = AtlasCostModel::openpangu_7b()
+            .with_token_inflation(TokenInflation::a2_calibrated());
+        assert_eq!(a.expected_decode_steps(Precision::Fp16, CotMode::SlowThink, 6), 24);
+        assert!(a.expected_decode_steps(Precision::W4A8, CotMode::SlowThink, 6) > 24);
+        assert!(
+            a.expected_decode_steps(Precision::W4A8, CotMode::SlowThink, 6)
+                >= a.expected_decode_steps(Precision::Int8, CotMode::SlowThink, 6)
+        );
+        // Identity inflation on the Atlas model is still the exact mapping.
+        let id = AtlasCostModel::openpangu_7b();
+        assert_eq!(id.expected_decode_steps(Precision::W4A8, CotMode::SlowThink, 6), 24);
     }
 
     #[test]

@@ -37,6 +37,20 @@ impl CotPolicy {
     }
 }
 
+/// Relative expected trace length per CoT mode, in grow-horizon units
+/// (Fig. 2's reasoning-shape bookkeeping, made quantitative): a no_think
+/// answer is the unit, auto_think traces about twice that, slow_think about
+/// four times. This is the single source for expected-length pricing — the
+/// fleet router and the SLO policy both multiply it by the ladder's grow
+/// horizon via [`crate::coordinator::cost::CostModel::expected_decode_steps`].
+pub fn mode_length_weight(mode: CotMode) -> usize {
+    match mode {
+        CotMode::NoThink => 1,
+        CotMode::AutoThink => 2,
+        CotMode::SlowThink => 4,
+    }
+}
+
 /// Build the full prompt ids for a request (directive + examples).
 pub fn build_prompt(
     tk: &Tokenizer,

@@ -50,6 +50,8 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use crate::coordinator::cost::CostModel;
+use crate::coordinator::cot;
 use crate::coordinator::kv::PoolHeadroom;
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::scheduler::{SchedReport, Scheduler, SchedulerConfig};
@@ -109,13 +111,16 @@ impl FleetConfig {
 /// length grows no_think < auto_think < slow_think). A projection, not a
 /// promise: the router only needs placement prices to *rank* devices
 /// consistently.
+///
+/// This is the *identity-inflation* specialization of
+/// [`CostModel::expected_decode_steps`] — same
+/// [`cot::mode_length_weight`] source, no per-precision inflation — kept
+/// for callers without a cost model in hand. [`DeviceState::price`] goes
+/// through the trait method so a device whose cost model carries an
+/// [`crate::atlas::perf_model::TokenInflation`] prices the inflated
+/// length; with identity inflation the two agree exactly.
 pub fn expected_decode_steps(mode: CotMode, grow_horizon: usize) -> usize {
-    let mult = match mode {
-        CotMode::NoThink => 1,
-        CotMode::AutoThink => 2,
-        CotMode::SlowThink => 4,
-    };
-    mult * grow_horizon.max(1)
+    cot::mode_length_weight(mode) * grow_horizon.max(1)
 }
 
 /// One device: its scheduler configuration, admission queue, and
@@ -154,20 +159,35 @@ impl DeviceState {
     }
 
     /// Placement price of `req` on THIS device, under its own cost model
-    /// and ladder horizon (heterogeneous devices price differently).
+    /// and ladder horizon (heterogeneous devices price differently). The
+    /// expected length comes from the cost model's own
+    /// [`CostModel::expected_decode_steps`], so a device configured with a
+    /// token-inflation factor prices the *inflated* trace of a low-bit
+    /// variant instead of its FP16 length.
     fn price(&self, req: &Request) -> f64 {
         let precision = Precision::parse(&req.variant).unwrap_or(Precision::Fp16);
-        let steps = expected_decode_steps(req.mode, self.cfg.ladder.grow_horizon);
+        let steps =
+            self.cfg.cost.expected_decode_steps(precision, req.mode, self.cfg.ladder.grow_horizon);
         self.cfg.cost.place_request_ms(precision, req.prompt_tokens_hint(), steps)
     }
 
-    /// Estimated pages of `req`'s admission reservation on this device.
+    /// Estimated pages of `req`'s admission reservation on this device:
+    /// the prompt's pages plus the pages its *excess* decode tokens claim
+    /// beyond an FP16-length trace (inflation-adjusted headroom — a
+    /// low-bit variant's longer expected trace competes for pool pages at
+    /// routing time, not just at decode time). Identity inflation charges
+    /// zero excess, byte-identical to the prompt-only estimator.
     /// Deliberately a conservative upper bound when the device's pool runs
     /// prefix sharing: the estimate prices the whole prompt even though a
     /// shared prefix would reserve only the unshared suffix — routing sees
     /// the worst case, and sharing shows up as extra live headroom.
     fn est_pages(&self, req: &Request) -> usize {
-        req.prompt_tokens_hint().div_ceil(self.cfg.kv.page_tokens.max(1)).max(1)
+        let pt = self.cfg.kv.page_tokens.max(1);
+        let precision = Precision::parse(&req.variant).unwrap_or(Precision::Fp16);
+        let horizon = self.cfg.ladder.grow_horizon;
+        let inflated = self.cfg.cost.expected_decode_steps(precision, req.mode, horizon);
+        let excess = inflated.saturating_sub(expected_decode_steps(req.mode, horizon));
+        req.prompt_tokens_hint().div_ceil(pt).max(1) + excess.div_ceil(pt)
     }
 
     fn charge(&mut self, req: &Request) {
@@ -540,6 +560,24 @@ mod tests {
 
     fn admit() -> AdmitConfig {
         AdmitConfig::with_wait(false, Duration::ZERO)
+    }
+
+    #[test]
+    fn expected_steps_delegate_pins_the_legacy_mapping_at_identity() {
+        use crate::coordinator::cost::SlotStepCostModel;
+        for horizon in [1usize, 6, 24] {
+            for (mode, mult) in
+                [(CotMode::NoThink, 1usize), (CotMode::AutoThink, 2), (CotMode::SlowThink, 4)]
+            {
+                assert_eq!(expected_decode_steps(mode, horizon), mult * horizon);
+                assert_eq!(
+                    SlotStepCostModel.expected_decode_steps(Precision::Int8, mode, horizon),
+                    expected_decode_steps(mode, horizon),
+                    "identity-inflation trait path must reproduce the legacy mapping"
+                );
+            }
+        }
+        assert_eq!(expected_decode_steps(CotMode::SlowThink, 0), 4, "horizon clamps to 1");
     }
 
     #[test]

@@ -93,7 +93,7 @@ impl FleetReport {
             out.push_str(&format!(
                 "device {}: sessions={} placements={} completed={} slot_steps={} \
                  occupancy={:.3} modeled_ms={:.1} deferred={} preemptions={} \
-                 peak_pool_util={:.3}\n",
+                 peak_pool_util={:.3} slo_downgrades={}/{} slo_misses={}\n",
                 d.device,
                 d.sessions,
                 d.placements,
@@ -104,13 +104,16 @@ impl FleetReport {
                 d.report.deferred,
                 d.report.preemptions,
                 d.report.kv_peak_pool_util,
+                d.report.slo_downgrades_mode,
+                d.report.slo_downgrades_precision,
+                d.report.slo_misses_modeled,
             ));
         }
         let total = self.rollup();
         out.push_str(&format!(
             "fleet:    completed={} slot_steps={} makespan_slot_steps={} \
              imbalance={:.3} modeled_ms={:.1} deferred={} preemptions={} \
-             tokens={}\n",
+             tokens={} slo_downgrades={}/{} slo_misses={}\n",
             total.completed,
             self.total_slot_steps(),
             self.makespan_slot_steps(),
@@ -119,6 +122,9 @@ impl FleetReport {
             total.deferred,
             total.preemptions,
             total.tokens_generated,
+            total.slo_downgrades_mode,
+            total.slo_downgrades_precision,
+            total.slo_misses_modeled,
         ));
         out
     }

@@ -18,6 +18,9 @@
 //!   * [`fleet`]     — multi-device serving: per-device scheduler + KV pool
 //!                     pairs behind a cost-priced router, with cross-device
 //!                     rebalance of queued work and rolled-up reporting
+//!   * [`slo`]       — SLO-aware admission-time (precision, CoT mode)
+//!                     selection priced with token-inflation-honest
+//!                     expected trace lengths
 //!   * [`metrics`]   — counters + latency summaries
 //!
 //! Scheduling model: *continuous batching at slot granularity over an
@@ -50,3 +53,4 @@ pub mod request;
 pub mod sampling;
 pub mod scheduler;
 pub mod server;
+pub mod slo;

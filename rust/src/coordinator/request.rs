@@ -37,6 +37,11 @@ pub struct Request {
     pub params: GenParams,
     /// Enqueue timestamp (latency accounting).
     pub arrived: Instant,
+    /// Per-request latency budget in modeled milliseconds, `None` =
+    /// unconstrained (the default — and with it the SLO machinery is
+    /// structurally inert: [`crate::coordinator::slo::SloPolicy`] never
+    /// runs, so scheduling is byte-identical to a build without it).
+    pub slo_ms: Option<f64>,
 }
 
 impl Request {
@@ -55,7 +60,16 @@ impl Request {
             examples,
             params: GenParams::default(),
             arrived: Instant::now(),
+            slo_ms: None,
         }
+    }
+
+    /// Builder: attach a latency SLO in modeled milliseconds. The admission
+    /// path's [`crate::coordinator::slo::SloPolicy`] may then downgrade the
+    /// request's CoT mode and/or precision to fit the budget.
+    pub fn with_slo_ms(mut self, ms: f64) -> Request {
+        self.slo_ms = Some(ms);
+        self
     }
 
     /// Queue key: requests sharing an engine (model x variant) batch together.

@@ -47,6 +47,7 @@ use crate::coordinator::cot::{self, CotPolicy};
 use crate::coordinator::kv::{Advance, KvConfig, KvSlots, PoolStats, PrepareWrite, SlotState};
 use crate::coordinator::request::{PreemptedSeq, Request, Response};
 use crate::coordinator::sampling;
+use crate::coordinator::slo::{SloPolicy, SloSnapshot};
 use crate::quant::Precision;
 use crate::runtime::backend::{Backend, MigrateSlot, StateHandle};
 use crate::tokenizer::Tokenizer;
@@ -198,6 +199,11 @@ pub struct SchedulerConfig {
     /// truncate (default — the pinned legacy behavior) or
     /// preempt-and-recompute ([`PreemptConfig::enabled`]).
     pub preempt: PreemptConfig,
+    /// SLO-aware admission-time (precision, CoT mode) selection
+    /// ([`SloPolicy`]). `None` (the default) and requests without a
+    /// [`Request::slo_ms`] budget both leave admission untouched — the
+    /// pinned byte-identical legacy behavior.
+    pub slo: Option<SloPolicy>,
 }
 
 impl SchedulerConfig {
@@ -252,6 +258,7 @@ impl SchedulerConfig {
             cost: Arc::new(SlotStepCostModel),
             kv: KvConfig::unbounded(),
             preempt: PreemptConfig::default(),
+            slo: None,
         })
     }
 
@@ -277,6 +284,15 @@ impl SchedulerConfig {
     /// starvation parks-and-restores instead of truncating.
     pub fn with_preempt(mut self, preempt: PreemptConfig) -> SchedulerConfig {
         self.preempt = preempt;
+        self
+    }
+
+    /// Enable SLO-aware (precision, mode) selection (builder style): a
+    /// request carrying [`Request::slo_ms`] is re-pointed at admission to
+    /// the least-degraded pair whose modeled completion fits its budget.
+    /// Requests without a budget are untouched even with a policy set.
+    pub fn with_slo(mut self, slo: SloPolicy) -> SchedulerConfig {
+        self.slo = Some(slo);
         self
     }
 
@@ -312,6 +328,15 @@ fn detect_precision(slots: &[Option<SlotCtx>], queue: &AdmissionQueue) -> Option
         .chain(queue.front().map(|r| r.variant.as_str()))
         .next()
         .map(|v| Precision::parse(v).unwrap_or(Precision::Fp16))
+}
+
+/// Precision one request's variant key routes to — the per-slot binding the
+/// scheduler publishes via [`Backend::bind_precision`] at every admission
+/// and restore. With SLO-aware admission a slot's binding can differ from
+/// the session's pricing precision (the variant may have been downgraded).
+/// Unknown variant strings bind conservatively as FP16.
+fn request_precision(req: &Request) -> Precision {
+    Precision::parse(&req.variant).unwrap_or(Precision::Fp16)
 }
 
 /// Steps executed at one bucket shape of the ladder.
@@ -414,6 +439,16 @@ pub struct SchedReport {
     /// including the backend's replay depth
     /// ([`Backend::migrate_replay_depth`]).
     pub modeled_migrate_ms: f64,
+    /// Admissions where the [`SloPolicy`] downgraded the CoT mode
+    /// (slow_think → auto_think → no_think) to fit the request's budget.
+    pub slo_downgrades_mode: usize,
+    /// Admissions where the [`SloPolicy`] downgraded the precision
+    /// (fp16 → int8 → w4a8) to fit the request's budget.
+    pub slo_downgrades_precision: usize,
+    /// SLO-bearing admissions where no (precision, mode) candidate fit the
+    /// budget even fully degraded — the cheapest pair was taken and the
+    /// modeled completion still exceeds the budget.
+    pub slo_misses_modeled: usize,
 }
 
 impl SchedReport {
@@ -540,6 +575,9 @@ impl SchedReport {
         self.modeled_decode_ms += other.modeled_decode_ms;
         self.modeled_prefill_ms += other.modeled_prefill_ms;
         self.modeled_migrate_ms += other.modeled_migrate_ms;
+        self.slo_downgrades_mode += other.slo_downgrades_mode;
+        self.slo_downgrades_precision += other.slo_downgrades_precision;
+        self.slo_misses_modeled += other.slo_misses_modeled;
     }
 }
 
@@ -742,6 +780,48 @@ impl<'t> Scheduler<'t> {
         Ok(())
     }
 
+    /// SLO-aware admission-time selection: when a policy is configured
+    /// *and* the request carries a latency budget, re-point the request at
+    /// the least-degraded (precision, CoT mode) pair whose modeled
+    /// completion — queue wait plus inflation-honest service time — fits
+    /// the budget under current pool headroom, and count the decision.
+    /// Either condition absent leaves the request byte-identical.
+    ///
+    /// The rewrite changes what the request *asks for* (its directive
+    /// token, generation budget, and variant routing key); the session's
+    /// execution-pricing precision stays the one locked at launch — a
+    /// deliberate modeling boundary, since one batch runs one engine.
+    fn apply_slo(
+        &self,
+        req: &mut Request,
+        queue: &AdmissionQueue,
+        kv: &KvSlots,
+        report: &mut SchedReport,
+    ) {
+        let (Some(policy), Some(slo_ms)) = (self.cfg.slo.as_ref(), req.slo_ms) else {
+            return;
+        };
+        let arrival_precision = request_precision(req);
+        let snap = SloSnapshot {
+            prompt_tokens: req.prompt_tokens_hint(),
+            queued_by_mode: queue.mode_demand(),
+            headroom: kv.headroom(),
+            grow_horizon: self.cfg.ladder.grow_horizon,
+        };
+        let d = policy.decide(&*self.cfg.cost, (arrival_precision, req.mode), slo_ms, &snap);
+        if d.downgraded_mode {
+            report.slo_downgrades_mode += 1;
+            req.mode = d.mode;
+        }
+        if d.downgraded_precision {
+            report.slo_downgrades_precision += 1;
+            req.variant = d.precision.key().to_string();
+        }
+        if d.modeled_miss {
+            report.slo_misses_modeled += 1;
+        }
+    }
+
     /// Draw the next *admissible* request from the queue: malformed ones
     /// are rejected inline (each gets its empty truncated response),
     /// the winner gets a KV slot, a right-padded prompt row, and a slot
@@ -787,7 +867,7 @@ impl<'t> Scheduler<'t> {
                     kv.can_reserve(hint) || !kv.can_ever_reserve(hint)
                 }
             });
-            let req = match outcome {
+            let mut req = match outcome {
                 AdmitOutcome::Admitted(req) => req,
                 AdmitOutcome::Deferred => {
                     report.deferred += 1;
@@ -795,6 +875,14 @@ impl<'t> Scheduler<'t> {
                 }
                 AdmitOutcome::Empty => return Ok(None),
             };
+            // SLO-aware (precision, mode) selection fires here — after the
+            // winner is drawn, before its prompt is encoded, so the chosen
+            // mode's directive token and generation budget flow through the
+            // normal encode path. Mode does not change the prompt length
+            // (one mode token either way), so the gate's reservation math
+            // above stays valid; the post-encode `reservable` check below
+            // re-validates the rewritten ids regardless.
+            self.apply_slo(&mut req, queue, kv, report);
             let (ids, budget) = match self.encode(&req, prompt_len, max_seq) {
                 Ok(enc) => enc,
                 Err(_) => {
@@ -1037,6 +1125,17 @@ impl<'t> Scheduler<'t> {
         for slot in 0..new_bucket {
             Self::sync_blocks(backend, kv, bound, slot)?;
         }
+        // Publish the per-slot precision of the slots this rebuild admitted
+        // or restored (carried bindings moved with the plan, like their
+        // block tables). Must follow the migrate: the rebuild re-keys the
+        // backend's per-slot views, so a pre-migrate bind would be dropped.
+        for (slot, entry) in plan.iter().enumerate() {
+            if matches!(entry, MigrateSlot::Admit { .. } | MigrateSlot::Restore { .. }) {
+                if let Some(ctx) = &slots[slot] {
+                    backend.bind_precision(slot, request_precision(&ctx.req))?;
+                }
+            }
+        }
         Ok((st, true))
     }
 
@@ -1250,9 +1349,14 @@ impl<'t> Scheduler<'t> {
                         st = backend.evict(st, slot)?;
                         hold_pos[slot] = lens[slot];
                     }
-                    // Publish every admitted slot's block table.
+                    // Publish every admitted slot's block table and
+                    // precision (binding must follow the prefill — a
+                    // whole-batch prefill resets the backend's slot views).
                     for slot in 0..bucket {
                         Self::sync_blocks(backend, &kv, &mut bound, slot)?;
+                        if let Some(ctx) = &slots[slot] {
+                            backend.bind_precision(slot, request_precision(&ctx.req))?;
+                        }
                     }
                     state = Some(st);
                 } else if kv.headroom().map_or(true, |h| h.free_pages > 0) {
@@ -1309,13 +1413,22 @@ impl<'t> Scheduler<'t> {
                                 self.cfg.cost.migrate_ms(precision, bucket, buckets[t])
                                     + replay as f64
                                         * self.cfg.cost.decode_step_ms(precision, buckets[t]);
+                            // Amortize the migration over the *inflated*
+                            // horizon: a low-bit session emits more tokens
+                            // per request, so the grown bucket has longer
+                            // to pay the move off. Identity inflation
+                            // reproduces `grow_horizon` exactly.
                             let grow = crate::coordinator::cost::GrowContext {
                                 from: bucket,
                                 to: buckets[t],
                                 queued: queue.queued(),
                                 free_now: kv.free_count(),
                                 migrate_ms,
-                                horizon_steps: ladder.grow_horizon,
+                                horizon_steps: self
+                                    .cfg
+                                    .cost
+                                    .token_inflation()
+                                    .inflate_steps(precision, ladder.grow_horizon),
                             };
                             if self.cfg.cost.grow_pays_off(precision, grow) {
                                 target = t;
@@ -1370,6 +1483,7 @@ impl<'t> Scheduler<'t> {
                             report.modeled_prefill_ms +=
                                 self.cfg.cost.prefill_ms(precision, 1);
                             Self::sync_blocks(backend, &kv, &mut bound, slot)?;
+                            backend.bind_precision(slot, request_precision(&ctx.req))?;
                             slots[slot] = Some(ctx);
                             report.joins += 1;
                         }
@@ -1695,6 +1809,59 @@ mod tests {
         id.merge(&SchedReport::default());
         assert_eq!(id.slot_steps(), ra.slot_steps());
         assert_eq!(id.completed, ra.completed);
+    }
+
+    /// The SLO admission path end to end at scheduler granularity: an
+    /// unconstrained workload under a configured policy is byte-identical
+    /// to a policy-free scheduler, an impossible budget degrades fully
+    /// (mode AND precision) with every decision counted, and the chosen
+    /// precision is published to the backend's per-slot binding.
+    #[test]
+    fn slo_admission_downgrades_counts_and_binds_the_chosen_precision() {
+        let tk = fixture();
+        let atlas = || crate::coordinator::cost::AtlasCostModel::openpangu_7b();
+        let base_cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_cost(Arc::new(atlas()));
+        let slo_cfg = || {
+            SchedulerConfig::fixed(2, AdmitGate::Continuous)
+                .with_cost(Arc::new(atlas()))
+                .with_slo(SloPolicy::default())
+        };
+
+        let reqs = vec![request(1, CotMode::SlowThink), request(2, CotMode::NoThink)];
+        let mut be_a = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let mut be_b = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let (base, base_report) =
+            Scheduler::new(&tk, base_cfg).run_batch(&mut be_a, &reqs).unwrap();
+        let (with_policy, report) =
+            Scheduler::new(&tk, slo_cfg()).run_batch(&mut be_b, &reqs).unwrap();
+        for (a, b) in base.iter().zip(&with_policy) {
+            assert_eq!(a.tokens, b.tokens, "unconstrained requests are untouched");
+        }
+        assert_eq!(report.decode_steps, base_report.decode_steps);
+        assert_eq!(report.slo_downgrades_mode, 0);
+        assert_eq!(report.slo_downgrades_precision, 0);
+        assert_eq!(report.slo_misses_modeled, 0);
+
+        // Budget 0: infeasible everywhere, so the policy takes the global
+        // cheapest pair — no_think at the fastest ladder precision — and
+        // records both downgrades plus the modeled miss, per request.
+        let tight: Vec<Request> =
+            (0..2).map(|i| request(i, CotMode::SlowThink).with_slo_ms(0.0)).collect();
+        let mut be = MockBackend::new(64, 48, 96, mode_scripts(&tk, 12));
+        let (resps, report) =
+            Scheduler::new(&tk, slo_cfg()).run_batch(&mut be, &tight).unwrap();
+        assert_eq!(report.slo_downgrades_mode, 2);
+        assert_eq!(report.slo_downgrades_precision, 2);
+        assert_eq!(report.slo_misses_modeled, 2);
+        for r in &resps {
+            assert_eq!(r.tokens.len(), 3, "served the no_think completion");
+        }
+        assert_eq!(
+            be.slot_precision(0),
+            Some(Precision::W4A8),
+            "the downgraded precision was bound to the slot"
+        );
     }
 
     #[test]

@@ -334,6 +334,13 @@ pub(crate) fn record_session(
     metrics.inc("kv_prefix_hits", report.kv_prefix_hits as u64);
     metrics.inc("kv_shared_pages_reused", report.kv_shared_pages_reused as u64);
     metrics.inc("kv_cow_forks", report.kv_cow_forks as u64);
+    // SLO-aware admission accounting: (precision, mode) downgrades taken
+    // to fit per-request budgets and admissions whose modeled completion
+    // missed even fully degraded. All zero without an SloPolicy (or with
+    // only unconstrained requests).
+    metrics.inc("slo_downgrades_mode", report.slo_downgrades_mode as u64);
+    metrics.inc("slo_downgrades_precision", report.slo_downgrades_precision as u64);
+    metrics.inc("slo_misses_modeled", report.slo_misses_modeled as u64);
     metrics.observe("kv_pool_peak_util", report.kv_peak_pool_util);
     if report.kv_bytes_per_token > 0.0 {
         metrics.observe("kv_bytes_per_token", report.kv_bytes_per_token);

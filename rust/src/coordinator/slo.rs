@@ -1,0 +1,371 @@
+//! SLO-aware per-request precision and think-mode selection.
+//!
+//! The paper's core trade-off — W8A8 keeps >90% of FP16 accuracy at a
+//! 1.5x prefill speedup while W4A8 trades accuracy for memory — is
+//! invisible to a scheduler that runs every request at one precision and
+//! whatever CoT mode it arrived with. This module makes it schedulable:
+//! a request may carry a latency budget
+//! ([`crate::coordinator::request::Request::slo_ms`]), and at admission an
+//! [`SloPolicy`] picks the least-degraded (precision, [`CotMode`]) pair
+//! whose *modeled* completion time fits that budget given the current
+//! queue depth and KV-pool headroom.
+//!
+//! Pricing is token-inflation-honest: expected trace lengths come from the
+//! one [`CostModel::expected_decode_steps`] path, which multiplies the CoT
+//! mode's length weight by the precision's
+//! [`crate::atlas::perf_model::TokenInflation`] factor (PAPERS.md
+//! "Quantization Inflates Reasoning") — so W4A8's cheaper steps are
+//! honestly offset by its longer traces before the policy credits a
+//! downgrade with any savings.
+//!
+//! # The degradation lattice
+//!
+//! Candidates are enumerated in a fixed least-degraded-first order:
+//! precision downgrades (FP16 → W8A8 → W4A8, which keep most accuracy)
+//! are tried before think-mode downgrades (slow_think → auto_think →
+//! no_think, which change the reasoning contract), and the arrival pair is
+//! always rank 0. The policy scans this order and takes the **first**
+//! candidate that fits the budget and the pool; when none fits, it takes
+//! the globally cheapest candidate and flags a modeled miss. Because a
+//! tighter budget only shrinks the feasible set, the chosen rank is
+//! monotone in the budget — a tighter SLO never selects a less-degraded
+//! (slower) pair. A mode the user pinned (mode downgrades disabled, or
+//! [`SloPolicy::pinned`]) is never upgraded *or* downgraded.
+
+use crate::coordinator::cost::CostModel;
+use crate::coordinator::cot;
+use crate::coordinator::kv::PoolHeadroom;
+use crate::quant::Precision;
+use crate::tokenizer::CotMode;
+
+/// What the admission path knows when an SLO decision fires: the request's
+/// own footprint plus the scheduler state the completion estimate prices.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSnapshot {
+    /// Encoded prompt length of the request being decided.
+    pub prompt_tokens: usize,
+    /// Admissible queued requests ahead of this one, counted per CoT mode
+    /// (indexed as [`CotMode::ALL`]) — the queue-wait term of the estimate.
+    pub queued_by_mode: [usize; 3],
+    /// Paged-pool headroom, `None` when the pool is unbounded.
+    pub headroom: Option<PoolHeadroom>,
+    /// Expected per-request service horizon in decode steps
+    /// ([`crate::coordinator::scheduler::LadderConfig::grow_horizon`]).
+    pub grow_horizon: usize,
+}
+
+impl SloSnapshot {
+    /// A snapshot with nothing queued and an unbounded pool: the decision
+    /// then prices the request's own service time alone.
+    pub fn unloaded(prompt_tokens: usize, grow_horizon: usize) -> SloSnapshot {
+        SloSnapshot {
+            prompt_tokens,
+            queued_by_mode: [0; 3],
+            headroom: None,
+            grow_horizon,
+        }
+    }
+}
+
+/// One admission-time selection: the pair to run, its modeled completion
+/// time, and the bookkeeping the report counters are fed from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloDecision {
+    /// Precision the request will run at.
+    pub precision: Precision,
+    /// CoT mode the request will run in.
+    pub mode: CotMode,
+    /// Modeled completion time of the chosen pair (queue wait + service).
+    pub modeled_ms: f64,
+    /// Position of the chosen pair in the fixed degradation order
+    /// (0 = the arrival pair). Monotone in the budget: tightening the SLO
+    /// never decreases this rank.
+    pub rank: usize,
+    /// The chosen mode differs from the arrival mode.
+    pub downgraded_mode: bool,
+    /// The chosen precision differs from the arrival precision.
+    pub downgraded_precision: bool,
+    /// No candidate fit the budget; the cheapest one was chosen anyway.
+    pub modeled_miss: bool,
+}
+
+/// Admission-time (precision, mode) selection policy. Plain data — cloned
+/// into [`crate::coordinator::scheduler::SchedulerConfig`] — and a pure
+/// function of its inputs, so identical snapshots always decide
+/// identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloPolicy {
+    /// Precision downgrade ladder, least degraded first. A request arriving
+    /// at a precision in this ladder may move to any *later* entry (never
+    /// an earlier one); a request arriving at a precision outside it is
+    /// pinned to that precision.
+    pub precisions: Vec<Precision>,
+    /// Allow think-mode downgrades (slow_think → auto_think → no_think).
+    /// Off = every request's arrival mode is pinned.
+    pub allow_mode_downgrade: bool,
+}
+
+impl Default for SloPolicy {
+    /// The paper's deployment lattice: FP16 → W8A8 → W4A8, with mode
+    /// downgrades enabled.
+    fn default() -> Self {
+        SloPolicy {
+            precisions: vec![Precision::Fp16, Precision::Int8, Precision::W4A8],
+            allow_mode_downgrade: true,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// A policy with no freedom: every request runs exactly the pair it
+    /// arrived with, and the decision only measures whether that pair's
+    /// modeled completion fits the budget (the modeled-miss baseline the
+    /// e2e deadline gate compares against).
+    pub fn pinned() -> SloPolicy {
+        SloPolicy { precisions: Vec::new(), allow_mode_downgrade: false }
+    }
+
+    /// The candidate (precision, mode) pairs for an arrival, least
+    /// degraded first: for each admissible mode (arrival mode, then its
+    /// downgrades when enabled), every admissible precision (arrival
+    /// precision, then its ladder suffix) — so precision downgrades
+    /// outrank mode downgrades, and index 0 is always the arrival pair.
+    pub fn candidates(&self, arrival: (Precision, CotMode)) -> Vec<(Precision, CotMode)> {
+        let (ap, am) = arrival;
+        let precisions: Vec<Precision> = match self.precisions.iter().position(|&p| p == ap) {
+            Some(i) => self.precisions[i..].to_vec(),
+            None => vec![ap],
+        };
+        let modes: Vec<CotMode> = if self.allow_mode_downgrade {
+            // Downgrade chain: every mode no longer than the arrival's,
+            // longest first (so the chain starts at the arrival mode).
+            let mut chain: Vec<CotMode> = CotMode::ALL
+                .into_iter()
+                .filter(|&m| cot::mode_length_weight(m) <= cot::mode_length_weight(am))
+                .collect();
+            chain.sort_by_key(|&m| std::cmp::Reverse(cot::mode_length_weight(m)));
+            chain
+        } else {
+            vec![am]
+        };
+        let mut out = Vec::with_capacity(precisions.len() * modes.len());
+        for &m in &modes {
+            for &p in &precisions {
+                out.push((p, m));
+            }
+        }
+        out
+    }
+
+    /// Modeled wait for the backlog ahead of this request, priced at the
+    /// precision the queued work will actually execute at (the arrival /
+    /// session precision — our candidate choice does not re-price other
+    /// requests). Constant across candidates, so it shifts every estimate
+    /// equally without reordering them.
+    pub fn queue_wait_ms(
+        cost: &dyn CostModel,
+        session_precision: Precision,
+        snap: &SloSnapshot,
+    ) -> f64 {
+        let step = cost.decode_step_ms(session_precision, 1);
+        CotMode::ALL
+            .into_iter()
+            .zip(snap.queued_by_mode)
+            .map(|(m, n)| {
+                n as f64
+                    * cost.expected_decode_steps(session_precision, m, snap.grow_horizon) as f64
+                    * step
+            })
+            .sum()
+    }
+
+    /// Modeled service time of one candidate pair: placement price over the
+    /// inflation-honest expected trace length.
+    pub fn service_ms(
+        cost: &dyn CostModel,
+        precision: Precision,
+        mode: CotMode,
+        snap: &SloSnapshot,
+    ) -> f64 {
+        let steps = cost.expected_decode_steps(precision, mode, snap.grow_horizon);
+        cost.place_request_ms(precision, snap.prompt_tokens, steps)
+    }
+
+    /// Whether a candidate's inflated footprint (prompt + expected trace)
+    /// fits the pool's free pages right now. Unbounded pools always fit.
+    pub fn pool_fits(
+        cost: &dyn CostModel,
+        precision: Precision,
+        mode: CotMode,
+        snap: &SloSnapshot,
+    ) -> bool {
+        let Some(h) = snap.headroom else { return true };
+        let steps = cost.expected_decode_steps(precision, mode, snap.grow_horizon);
+        let pages = (snap.prompt_tokens + steps).div_ceil(h.page_tokens.max(1));
+        pages <= h.free_pages
+    }
+
+    /// Choose the pair to run: the first candidate in degradation order
+    /// whose modeled completion fits `slo_ms` and whose footprint fits the
+    /// pool; when none does, the globally cheapest candidate (earliest
+    /// rank on ties), flagged as a modeled miss. Deterministic: identical
+    /// inputs always return the identical decision.
+    pub fn decide(
+        &self,
+        cost: &dyn CostModel,
+        arrival: (Precision, CotMode),
+        slo_ms: f64,
+        snap: &SloSnapshot,
+    ) -> SloDecision {
+        let wait = Self::queue_wait_ms(cost, arrival.0, snap);
+        let candidates = self.candidates(arrival);
+        let mut cheapest: Option<(usize, f64)> = None;
+        for (rank, &(p, m)) in candidates.iter().enumerate() {
+            let ms = wait + Self::service_ms(cost, p, m, snap);
+            if ms <= slo_ms && Self::pool_fits(cost, p, m, snap) {
+                return self.decision(arrival, (p, m), ms, rank, false);
+            }
+            if cheapest.map_or(true, |(_, best)| ms < best) {
+                cheapest = Some((rank, ms));
+            }
+        }
+        let (rank, ms) = cheapest.expect("candidate set is never empty");
+        self.decision(arrival, candidates[rank], ms, rank, true)
+    }
+
+    fn decision(
+        &self,
+        arrival: (Precision, CotMode),
+        chosen: (Precision, CotMode),
+        modeled_ms: f64,
+        rank: usize,
+        modeled_miss: bool,
+    ) -> SloDecision {
+        SloDecision {
+            precision: chosen.0,
+            mode: chosen.1,
+            modeled_ms,
+            rank,
+            downgraded_mode: chosen.1 != arrival.1,
+            downgraded_precision: chosen.0 != arrival.0,
+            modeled_miss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cost::{AtlasCostModel, SlotStepCostModel};
+
+    fn snap() -> SloSnapshot {
+        SloSnapshot::unloaded(12, 6)
+    }
+
+    #[test]
+    fn candidate_order_starts_at_arrival_and_prefers_precision_downgrades() {
+        let p = SloPolicy::default();
+        let cands = p.candidates((Precision::Fp16, CotMode::SlowThink));
+        assert_eq!(cands[0], (Precision::Fp16, CotMode::SlowThink));
+        assert_eq!(cands[1], (Precision::Int8, CotMode::SlowThink));
+        assert_eq!(cands[2], (Precision::W4A8, CotMode::SlowThink));
+        assert_eq!(cands[3], (Precision::Fp16, CotMode::AutoThink));
+        assert_eq!(cands.len(), 9, "3 precisions x 3 modes");
+        // Arrival mid-ladder: only later precisions are candidates.
+        let mid = p.candidates((Precision::Int8, CotMode::NoThink));
+        assert_eq!(
+            mid,
+            vec![(Precision::Int8, CotMode::NoThink), (Precision::W4A8, CotMode::NoThink)]
+        );
+        // Off-ladder precision is pinned.
+        let off = p.candidates((Precision::W4A8Smooth, CotMode::NoThink));
+        assert_eq!(off, vec![(Precision::W4A8Smooth, CotMode::NoThink)]);
+    }
+
+    #[test]
+    fn pinned_policy_has_exactly_the_arrival_pair() {
+        let p = SloPolicy::pinned();
+        let arrival = (Precision::Fp16, CotMode::SlowThink);
+        assert_eq!(p.candidates(arrival), vec![arrival]);
+        let d = p.decide(&SlotStepCostModel, arrival, 0.0, &snap());
+        assert!(d.modeled_miss, "budget 0 cannot fit any pair");
+        assert_eq!((d.precision, d.mode), arrival, "pinned never moves");
+        assert!(!d.downgraded_mode && !d.downgraded_precision);
+    }
+
+    #[test]
+    fn generous_budget_keeps_the_arrival_pair() {
+        let p = SloPolicy::default();
+        let arrival = (Precision::Fp16, CotMode::SlowThink);
+        let d = p.decide(&AtlasCostModel::openpangu_7b(), arrival, 1e12, &snap());
+        assert_eq!(d.rank, 0);
+        assert_eq!((d.precision, d.mode), arrival);
+        assert!(!d.downgraded_mode && !d.downgraded_precision && !d.modeled_miss);
+    }
+
+    #[test]
+    fn rank_is_monotone_as_the_budget_tightens() {
+        let p = SloPolicy::default();
+        let cost = AtlasCostModel::openpangu_7b();
+        let arrival = (Precision::Fp16, CotMode::SlowThink);
+        let mut prev_rank = 0usize;
+        let mut budget = 1e9;
+        while budget > 1e-3 {
+            let d = p.decide(&cost, arrival, budget, &snap());
+            assert!(
+                d.rank >= prev_rank || d.modeled_miss,
+                "tightening the budget moved UP the lattice: {} -> {}",
+                prev_rank,
+                d.rank
+            );
+            if !d.modeled_miss {
+                prev_rank = d.rank;
+                assert!(d.modeled_ms <= budget);
+            }
+            budget /= 4.0;
+        }
+        // The floor: an impossible budget is a miss on the cheapest pair.
+        let miss = p.decide(&cost, arrival, 0.0, &snap());
+        assert!(miss.modeled_miss);
+        let all_ms: Vec<f64> = p
+            .candidates(arrival)
+            .into_iter()
+            .map(|(pp, mm)| SloPolicy::service_ms(&cost, pp, mm, &snap()))
+            .collect();
+        let min = all_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+        let wait = SloPolicy::queue_wait_ms(&cost, arrival.0, &snap());
+        assert_eq!(miss.modeled_ms, min + wait, "miss picks the cheapest candidate");
+    }
+
+    #[test]
+    fn pool_pressure_skips_candidates_that_do_not_fit() {
+        let cost = SlotStepCostModel;
+        let mut s = snap();
+        // 2 free 16-token pages = 32 tokens of room. slow_think at
+        // horizon 6 wants 12 + 24 = 36 tokens; no_think wants 12 + 6 = 18.
+        s.headroom = Some(PoolHeadroom {
+            page_tokens: 16,
+            used_pages: 6,
+            free_pages: 2,
+            capacity_pages: 8,
+        });
+        let arrival = (Precision::Int8, CotMode::SlowThink);
+        assert!(!SloPolicy::pool_fits(&cost, Precision::Int8, CotMode::SlowThink, &s));
+        assert!(SloPolicy::pool_fits(&cost, Precision::Int8, CotMode::NoThink, &s));
+        let d = SloPolicy::default().decide(&cost, arrival, 1e12, &s);
+        assert_eq!(d.mode, CotMode::NoThink, "pool headroom forces the short mode");
+        assert!(d.downgraded_mode && !d.modeled_miss);
+    }
+
+    #[test]
+    fn queue_wait_shifts_every_candidate_equally() {
+        let cost = SlotStepCostModel;
+        let mut s = snap();
+        s.queued_by_mode = [3, 0, 1]; // 3 no_think + 1 slow_think ahead
+        let wait = SloPolicy::queue_wait_ms(&cost, Precision::Int8, &s);
+        // SlotStep: step=1ms, horizon 6 -> 3x6 + 1x24 = 42ms.
+        assert_eq!(wait, 42.0);
+        let idle = SloPolicy::queue_wait_ms(&cost, Precision::Int8, &snap());
+        assert_eq!(idle, 0.0);
+    }
+}

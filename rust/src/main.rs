@@ -16,6 +16,10 @@
 //!               --share-prefix (serve: copy-on-write shared-prefix pages,
 //!               requires --kv paged),
 //!               --preempt (serve: preempt-and-recompute on pool exhaustion),
+//!               --slo-ms MS (serve: per-request latency budget; enables
+//!               SLO-aware precision/mode downgrades at admission),
+//!               --inflation F (serve: W4A8 token-inflation factor for
+//!               expected-length pricing; 1.0 = identity),
 //!               --devices N --router cost|round-robin
 //!               --device-budget-pages P (serve: fleet mode)
 
@@ -25,6 +29,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use pangu_atlas_quant::atlas::memory_model::{KvPrecision, PageGeometry};
+use pangu_atlas_quant::atlas::perf_model::TokenInflation;
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::coordinator::admission::AdmitConfig;
 use pangu_atlas_quant::coordinator::cost::AtlasCostModel;
@@ -37,6 +42,7 @@ use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, PreemptConfig, Scheduler, SchedulerConfig,
 };
 use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::coordinator::slo::SloPolicy;
 use pangu_atlas_quant::harness::{self, Harness};
 use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::runtime::backend::{
@@ -135,6 +141,31 @@ fn parse_mode(args: &Args) -> Result<CotMode> {
     CotMode::parse(args.get_or("mode", "slow_think"))
 }
 
+/// Parse `--inflation F` into a [`TokenInflation`]: `F` is the W4A8
+/// token-inflation factor; INT8 scales at a quarter of the excess,
+/// mirroring the A2 calibration's 1.06 / 1.24 ratio. Absent or 1.0 means
+/// identity pricing — byte-identical scheduling to a build without it.
+fn parse_inflation(args: &Args) -> Result<TokenInflation> {
+    let Some(raw) = args.get("inflation") else {
+        return Ok(TokenInflation::IDENTITY);
+    };
+    let w4a8: f64 = raw.parse().map_err(|_| anyhow!("--inflation expects a number"))?;
+    anyhow::ensure!(w4a8 >= 1.0, "--inflation must be >= 1.0");
+    Ok(TokenInflation { int8: 1.0 + (w4a8 - 1.0) * 0.25, w4a8 })
+}
+
+/// Parse `--slo-ms MS`: the per-request modeled latency budget attached to
+/// every synthetic request. `None` (flag absent) leaves requests
+/// unconstrained and the SLO machinery inert.
+fn parse_slo_ms(args: &Args) -> Result<Option<f64>> {
+    let Some(raw) = args.get("slo-ms") else {
+        return Ok(None);
+    };
+    let ms: f64 = raw.parse().map_err(|_| anyhow!("--slo-ms expects a number"))?;
+    anyhow::ensure!(ms > 0.0, "--slo-ms must be positive");
+    Ok(Some(ms))
+}
+
 fn generate(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let mut h = Harness::open(&dir)?;
@@ -195,8 +226,11 @@ fn serve(args: &Args) -> Result<()> {
     // (quantized variants store KV at INT8). --kv window keeps the
     // whole-window reservation baseline under the same budget; --kv
     // unbounded disables the budget entirely.
+    let slo_ms = parse_slo_ms(args)?;
+    let inflation = parse_inflation(args)?;
     let atlas = AtlasCostModel::openpangu_7b()
-        .with_kv_precision(KvPrecision::for_weights(precision));
+        .with_kv_precision(KvPrecision::for_weights(precision))
+        .with_token_inflation(inflation);
     let top_bucket = buckets.last().copied().unwrap_or(8);
     let mut paged = atlas.kv_config(precision, PageGeometry::default(), top_bucket);
     // Shared-prefix reuse: requests whose prompts share a prefix map the
@@ -239,6 +273,13 @@ fn serve(args: &Args) -> Result<()> {
         // recomputed_tokens / preempt_stall_steps).
         sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
     }
+    if slo_ms.is_some() {
+        // Budgeted requests may be downgraded at admission (slow_think →
+        // auto_think → no_think, fp16 → int8 → w4a8) to fit their modeled
+        // deadline (metrics: slo_downgrades_mode / slo_downgrades_precision
+        // / slo_misses_modeled).
+        sched_cfg = sched_cfg.with_slo(SloPolicy::default());
+    }
     let (mut server, handle) = Server::new(
         DeviceProvider::new(rt),
         &tk,
@@ -252,7 +293,10 @@ fn serve(args: &Args) -> Result<()> {
         let mut rxs = Vec::new();
         for (i, task) in tasks.iter().enumerate() {
             let mode = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink][i % 3];
-            let req = Request::new(i as u64, &mv.0, &mv.1, mode, task.examples.clone());
+            let mut req = Request::new(i as u64, &mv.0, &mv.1, mode, task.examples.clone());
+            if let Some(ms) = slo_ms {
+                req = req.with_slo_ms(ms);
+            }
             rxs.push(handle.submit(req).unwrap());
         }
         let mut latencies = Vec::new();
@@ -301,9 +345,22 @@ fn serve_fleet(args: &Args, devices: usize) -> Result<()> {
     if share {
         kv = kv.with_prefix_sharing();
     }
+    let slo_ms = parse_slo_ms(args)?;
+    let inflation = parse_inflation(args)?;
     let mut sched_cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous).with_kv(kv);
     if args.flag("preempt") {
         sched_cfg = sched_cfg.with_preempt(PreemptConfig::enabled());
+    }
+    if inflation != TokenInflation::IDENTITY {
+        // Non-identity inflation needs a precision-aware cost model so the
+        // router's placement prices and headroom estimates see the longer
+        // low-bit traces (the default slot-step model prices steps only).
+        sched_cfg = sched_cfg.with_cost(std::sync::Arc::new(
+            AtlasCostModel::openpangu_7b().with_token_inflation(inflation),
+        ));
+    }
+    if slo_ms.is_some() {
+        sched_cfg = sched_cfg.with_slo(SloPolicy::default());
     }
     let fleet_cfg = FleetConfig::homogeneous(
         devices,
@@ -335,7 +392,10 @@ fn serve_fleet(args: &Args, devices: usize) -> Result<()> {
             } else {
                 vec![(vec![1, 2, 3], vec![3, 2, 1]), (vec![2, 3, 4], vec![4, 3, 2])]
             };
-            let req = Request::new(i as u64, "7b-sim", "int8", mode, examples);
+            let mut req = Request::new(i as u64, "7b-sim", "int8", mode, examples);
+            if let Some(ms) = slo_ms {
+                req = req.with_slo_ms(ms);
+            }
             rxs.push(handle.submit(req).unwrap());
         }
         let mut latencies = Vec::new();

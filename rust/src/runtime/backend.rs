@@ -21,6 +21,8 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::quant::Precision;
+
 use super::{DeviceState, Runtime};
 
 /// Opaque per-batch serving state.
@@ -124,6 +126,19 @@ pub trait Backend {
     /// admitted* slots need a fresh `bind_blocks` after it.
     fn bind_blocks(&mut self, slot: usize, blocks: &[usize]) -> Result<()> {
         let _ = (slot, blocks);
+        Ok(())
+    }
+
+    /// Per-slot quantization precision, published by the scheduler whenever
+    /// a slot admits or restores a request. With SLO-aware admission
+    /// ([`crate::coordinator::slo::SloPolicy`]) the request's precision may
+    /// have been downgraded from its arrival variant, so KV accounting and
+    /// kernel selection must read the slot's binding, not the session's.
+    /// Backends without per-slot kernels may ignore it (the default no-op);
+    /// [`MockBackend`] records it so tests can assert what the scheduler
+    /// published.
+    fn bind_precision(&mut self, slot: usize, precision: Precision) -> Result<()> {
+        let _ = (slot, precision);
         Ok(())
     }
 }
@@ -492,6 +507,9 @@ pub struct MockBackend<F: Fn(&[i32]) -> Vec<u32>> {
     page_tokens: Option<usize>,
     /// Per-slot published page lists (migrate remaps them with the plan).
     slot_blocks: std::collections::HashMap<usize, Vec<usize>>,
+    /// Per-slot published precisions ([`Backend::bind_precision`]);
+    /// re-keyed across `migrate` exactly like the block tables.
+    slot_precisions: std::collections::HashMap<usize, Precision>,
 }
 
 impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
@@ -510,6 +528,7 @@ impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
             binds: 0,
             page_tokens: None,
             slot_blocks: std::collections::HashMap::new(),
+            slot_precisions: std::collections::HashMap::new(),
         }
     }
 
@@ -531,6 +550,13 @@ impl<F: Fn(&[i32]) -> Vec<u32>> MockBackend<F> {
         pages.sort_unstable();
         pages.dedup();
         pages.len()
+    }
+
+    /// Precision last published for `slot` ([`Backend::bind_precision`]),
+    /// `None` if the scheduler never bound one (or the slot was vacated by
+    /// a whole-batch prefill).
+    pub fn slot_precision(&self, slot: usize) -> Option<Precision> {
+        self.slot_precisions.get(&slot).copied()
     }
 
     /// Live mappings of one page across all published tables.
@@ -564,6 +590,7 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         // block view from the previous batch (e.g. left by an aborted
         // session) is obsolete, and its page ids are about to be reissued.
         self.slot_blocks.clear();
+        self.slot_precisions.clear();
         let mut scripts = Vec::with_capacity(batch);
         for b in 0..batch {
             let prompt = &tokens[b * self.prompt_len..(b + 1) * self.prompt_len];
@@ -708,10 +735,14 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         // state); admitted/vacant slots start unmapped and are re-published
         // by the scheduler after the migrate.
         let mut old_tables = std::mem::take(&mut self.slot_blocks);
+        let mut old_precisions = std::mem::take(&mut self.slot_precisions);
         for (slot, entry) in plan.iter().enumerate() {
             if let MigrateSlot::Carry { from } = entry {
                 if let Some(blocks) = old_tables.remove(from) {
                     self.slot_blocks.insert(slot, blocks);
+                }
+                if let Some(p) = old_precisions.remove(from) {
+                    self.slot_precisions.insert(slot, p);
                 }
             }
         }
@@ -810,6 +841,11 @@ impl<F: Fn(&[i32]) -> Vec<u32>> Backend for MockBackend<F> {
         if !blocks.is_empty() {
             self.slot_blocks.insert(slot, blocks.to_vec());
         }
+        Ok(())
+    }
+
+    fn bind_precision(&mut self, slot: usize, precision: Precision) -> Result<()> {
+        self.slot_precisions.insert(slot, precision);
         Ok(())
     }
 }

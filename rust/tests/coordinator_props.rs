@@ -6,15 +6,19 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
+use pangu_atlas_quant::atlas::perf_model::TokenInflation;
 use pangu_atlas_quant::bench_suite::vm::{Op, Program};
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel, SlotStepCostModel};
-use pangu_atlas_quant::coordinator::kv::{Advance, KvConfig, KvSlots, PrepareWrite, SlotState};
+use pangu_atlas_quant::coordinator::kv::{
+    Advance, KvConfig, KvSlots, PoolHeadroom, PrepareWrite, SlotState,
+};
 use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, PreemptConfig, Scheduler, SchedulerConfig,
 };
-use pangu_atlas_quant::quant::{int4, int8};
+use pangu_atlas_quant::coordinator::slo::{SloPolicy, SloSnapshot};
+use pangu_atlas_quant::quant::{int4, int8, Precision};
 use pangu_atlas_quant::runtime::backend::MockBackend;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
 use pangu_atlas_quant::util::propcheck::{check, check_vec, ensure, ensure_eq};
@@ -1027,6 +1031,100 @@ fn prop_kv_release_recycles_slots() {
             }
             ensure(kv.allocate(10).is_err(), "bucket full again")?;
             Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// SLO decision table: feasible-or-cheapest, deterministic, totally ordered
+// ---------------------------------------------------------------------------
+
+/// Fuzz of [`SloPolicy::decide`] against a reference oracle over the full
+/// candidate table, across random budgets, queue depths, pool headroom,
+/// arrival pairs, and inflation factors: the decision is always the FIRST
+/// feasible candidate in degradation order, or (when nothing is feasible)
+/// the globally cheapest one — earliest rank on ties — flagged as a miss;
+/// identical snapshots always decide identically; every candidate cost is
+/// finite, so the cost comparison is a genuine (antisymmetric) total order;
+/// and the downgrade flags exactly reflect pair-vs-arrival inequality.
+#[test]
+fn prop_slo_decision_feasible_or_cheapest_and_deterministic() {
+    check(
+        "slo-decision-table",
+        120,
+        0x510D,
+        |rng| {
+            let prompt = rng.range(1, 64);
+            let queued = [rng.range(0, 6), rng.range(0, 6), rng.range(0, 6)];
+            let headroom = if rng.chance(0.5) {
+                let capacity = rng.range(2, 24);
+                Some((capacity, rng.range(0, capacity)))
+            } else {
+                None
+            };
+            let horizon = rng.range(1, 32);
+            let ap = rng.range(0, 4); // inclusive: every Precision
+            let am = rng.range(0, 2); // inclusive: every CotMode
+            let budget_c = rng.range(0, 1_000_000); // centi-ms: 0..=10s
+            let i8x = 100 + rng.range(0, 40);
+            let w4x = 100 + rng.range(0, 60);
+            let allow_mode = rng.chance(0.8);
+            (prompt, queued, headroom, horizon, ap, am, budget_c, i8x, w4x, allow_mode)
+        },
+        |&(prompt, queued, headroom, horizon, ap, am, budget_c, i8x, w4x, allow_mode)| {
+            let cost = AtlasCostModel::openpangu_7b().with_token_inflation(TokenInflation {
+                int8: i8x as f64 / 100.0,
+                w4a8: w4x as f64 / 100.0,
+            });
+            let policy = SloPolicy { allow_mode_downgrade: allow_mode, ..SloPolicy::default() };
+            let modes = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+            let arrival = (Precision::ALL[ap], modes[am]);
+            let snap = SloSnapshot {
+                prompt_tokens: prompt,
+                queued_by_mode: queued,
+                headroom: headroom.map(|(capacity, free)| PoolHeadroom {
+                    page_tokens: 16,
+                    used_pages: capacity - free,
+                    free_pages: free,
+                    capacity_pages: capacity,
+                }),
+                grow_horizon: horizon,
+            };
+            let slo_ms = budget_c as f64 / 100.0;
+            let d = policy.decide(&cost, arrival, slo_ms, &snap);
+            ensure(
+                policy.decide(&cost, arrival, slo_ms, &snap) == d,
+                "identical snapshots decided differently",
+            )?;
+            let wait = SloPolicy::queue_wait_ms(&cost, arrival.0, &snap);
+            let cands = policy.candidates(arrival);
+            ensure(cands[0] == arrival, "rank 0 must be the arrival pair")?;
+            let costs: Vec<f64> = cands
+                .iter()
+                .map(|&(p, m)| wait + SloPolicy::service_ms(&cost, p, m, &snap))
+                .collect();
+            for &c in &costs {
+                ensure(c.is_finite(), format!("candidate cost must be finite, got {c}"))?;
+            }
+            let feasible: Vec<bool> = cands
+                .iter()
+                .zip(&costs)
+                .map(|(&(p, m), &ms)| ms <= slo_ms && SloPolicy::pool_fits(&cost, p, m, &snap))
+                .collect();
+            if let Some(first) = feasible.iter().position(|&f| f) {
+                ensure(!d.modeled_miss, "a feasible candidate existed but the decision missed")?;
+                ensure_eq(d.rank, first, "decide must take the FIRST feasible rank")?;
+                ensure_eq((d.precision, d.mode), cands[first], "pair matches the chosen rank")?;
+                ensure_eq(d.modeled_ms, costs[first], "modeled ms matches the table")?;
+            } else {
+                ensure(d.modeled_miss, "no candidate was feasible but no miss was flagged")?;
+                let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let argmin = costs.iter().position(|&c| c == min).unwrap();
+                ensure_eq(d.rank, argmin, "a miss takes the cheapest candidate, first on ties")?;
+                ensure_eq(d.modeled_ms, min, "miss modeled ms is the table minimum")?;
+            }
+            ensure_eq(d.downgraded_mode, d.mode != arrival.1, "mode flag consistent")?;
+            ensure_eq(d.downgraded_precision, d.precision != arrival.0, "precision flag")
         },
     );
 }

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
+use pangu_atlas_quant::atlas::perf_model::TokenInflation;
 use pangu_atlas_quant::bench_suite::dataset::Benchmark;
 use pangu_atlas_quant::bench_suite::scoring;
 use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
@@ -23,6 +24,7 @@ use pangu_atlas_quant::coordinator::request::Request;
 use pangu_atlas_quant::coordinator::scheduler::{
     AdmitGate, LadderConfig, PreemptConfig, SchedReport, Scheduler, SchedulerConfig,
 };
+use pangu_atlas_quant::coordinator::slo::{SloPolicy, SloSnapshot};
 use pangu_atlas_quant::quant::Precision;
 use pangu_atlas_quant::coordinator::server::Server;
 use pangu_atlas_quant::runtime::backend::{MockBackend, MockProvider};
@@ -928,6 +930,255 @@ fn fleet_rebalance_moves_queued_work_off_a_starved_device() {
         d1.report.completed >= 4,
         "device 1 completed {} requests; expected the rebalanced one too",
         d1.report.completed
+    );
+}
+
+// ---------------------------------------------------------------------------
+// SLO-aware precision/mode selection (ISSUE 8)
+// ---------------------------------------------------------------------------
+
+/// The ISSUE 8 deadline gate. Four FP16 slow_think requests carry budgets
+/// computed from the same inflation-honest cost model the scheduler prices
+/// with: each budget is its own modeled queue wait plus the CHEAPEST
+/// candidate's service time — strictly below the arrival pair's cost, so a
+/// pinned scheduler cannot meet any of them:
+///
+///   * [`SloPolicy::pinned`] records a modeled miss on every admission
+///     (4/4) and, running the un-degraded FP16 slow_think traces anyway,
+///     starves the 16-page pool into truncation;
+///   * [`SloPolicy::default`] degrades every request to the pair the
+///     budget was derived from and meets every modeled deadline (>= 3/4
+///     required; 0 misses achieved), serving untruncated;
+///   * nobody is dropped either way.
+#[test]
+fn slo_deadline_gate_default_policy_meets_where_pinned_fp16_misses() {
+    let tk = Tokenizer::minilang_default();
+    let cost =
+        AtlasCostModel::openpangu_7b().with_token_inflation(TokenInflation::a2_calibrated());
+    let horizon = LadderConfig::default().grow_horizon;
+    let arrival = (Precision::Fp16, CotMode::SlowThink);
+    let fp16_request = |id: u64| {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+        ];
+        Request::new(id, "7b-sim", "fp16", CotMode::SlowThink, ex)
+    };
+    let prompt_tokens = fp16_request(0).prompt_tokens_hint();
+    // Request i is admitted with 3-i slow_think requests still queued
+    // behind it (FIFO within one mode), so its budget prices exactly the
+    // wait the admission-time decision will see — through the same public
+    // pricing functions `decide` uses, making the f64 comparison exact.
+    let budget = |queued_ahead: usize| -> f64 {
+        let snap = SloSnapshot {
+            prompt_tokens,
+            queued_by_mode: [0, 0, queued_ahead],
+            headroom: None,
+            grow_horizon: horizon,
+        };
+        let wait = SloPolicy::queue_wait_ms(&cost, arrival.0, &snap);
+        let cheapest = SloPolicy::default()
+            .candidates(arrival)
+            .into_iter()
+            .map(|(p, m)| SloPolicy::service_ms(&cost, p, m, &snap))
+            .fold(f64::INFINITY, f64::min);
+        wait + cheapest
+    };
+    // The gate is genuinely tight: the arrival pair alone busts the budget.
+    let unloaded = SloSnapshot::unloaded(prompt_tokens, horizon);
+    let fp16_ms = SloPolicy::service_ms(&cost, arrival.0, arrival.1, &unloaded);
+    assert!(
+        budget(0) < fp16_ms,
+        "budget {:.1} ms must undercut FP16 slow_think at {:.1} ms",
+        budget(0),
+        fp16_ms
+    );
+
+    let run = |policy: SloPolicy| {
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 40);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let cfg = SchedulerConfig::fixed(4, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 16 * 16))
+            .with_cost(Arc::new(cost))
+            .with_slo(policy);
+        let reqs: Vec<Request> =
+            (0..4u64).map(|i| fp16_request(i).with_slo_ms(budget(3 - i as usize))).collect();
+        let (resps, report) =
+            Scheduler::new(&tk, cfg).run_batch(&mut be, &reqs).expect("session");
+        assert_eq!(resps.len(), 4, "every request answered");
+        (resps, report)
+    };
+
+    let (pinned_resps, pinned) = run(SloPolicy::pinned());
+    assert_eq!(pinned.slo_misses_modeled, 4, "pinned FP16 slow_think misses 4/4");
+    assert_eq!(pinned.slo_downgrades_mode, 0, "pinned never moves a request");
+    assert_eq!(pinned.slo_downgrades_precision, 0);
+    assert!(
+        pinned_resps.iter().any(|r| r.truncated),
+        "running the un-degraded traces must starve the 16-page pool"
+    );
+
+    let (adaptive_resps, adaptive) = run(SloPolicy::default());
+    assert!(
+        adaptive.slo_misses_modeled <= 1,
+        "policy must meet modeled deadlines on >= 3/4 (missed {})",
+        adaptive.slo_misses_modeled
+    );
+    assert_eq!(adaptive.slo_misses_modeled, 0, "fully satisfiable by degrading");
+    assert_eq!(adaptive.slo_downgrades_mode, 4, "every budget forces the short mode");
+    assert_eq!(adaptive.slo_downgrades_precision, 4, "and the fast precision");
+    for r in &adaptive_resps {
+        assert!(!r.truncated, "request {} truncated under the SLO policy", r.id);
+        assert!(!r.tokens.is_empty(), "request {} got no tokens", r.id);
+    }
+}
+
+/// The ISSUE 8 identity pin, through the FULL server loop: a configured
+/// [`SloPolicy`] with no request carrying a budget is byte-identical to a
+/// policy-free server — same tokens, same truncation flags — and every
+/// `slo_*` metric stays zero on both sides.
+#[test]
+fn slo_policy_without_budgets_is_byte_identical_through_the_server() -> Result<()> {
+    let run = |with_policy: bool| -> Result<(Vec<(u64, Vec<u32>, bool)>, [u64; 3])> {
+        let tk = Tokenizer::minilang_default();
+        let mut cfg = SchedulerConfig::fixed(2, AdmitGate::Continuous)
+            .with_kv(KvConfig::paged(16, 16 * 16))
+            .with_cost(Arc::new(
+                AtlasCostModel::openpangu_7b()
+                    .with_token_inflation(TokenInflation::a2_calibrated()),
+            ));
+        if with_policy {
+            cfg = cfg.with_slo(SloPolicy::default());
+        }
+        let (mut server, handle) = Server::new(
+            mock_provider(&tk, 16),
+            &tk,
+            cfg,
+            AdmitConfig::with_wait(false, Duration::from_millis(50)),
+        );
+        let rxs: Vec<_> = [
+            request(0, CotMode::SlowThink),
+            request(1, CotMode::NoThink),
+            request(2, CotMode::AutoThink),
+            request(3, CotMode::NoThink),
+        ]
+        .into_iter()
+        .map(|r| handle.submit(r).unwrap())
+        .collect();
+        drop(handle);
+        let processed = server.run_until_idle(Duration::from_millis(200))?;
+        assert_eq!(processed, 4);
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv().map(|r| (r.id, r.tokens, r.truncated)))
+            .collect::<Result<Vec<_>, _>>()?;
+        let slo = [
+            server.metrics.counter("slo_downgrades_mode"),
+            server.metrics.counter("slo_downgrades_precision"),
+            server.metrics.counter("slo_misses_modeled"),
+        ];
+        Ok((out, slo))
+    };
+    let (base, base_slo) = run(false)?;
+    let (gated, gated_slo) = run(true)?;
+    assert_eq!(base, gated, "unconstrained requests must be byte-identical");
+    assert_eq!(base_slo, [0; 3], "no policy, no slo accounting");
+    assert_eq!(gated_slo, [0; 3], "a policy without budgets never fires");
+    Ok(())
+}
+
+/// Inflation-adjusted headroom steering (ISSUE 8, fleet variant). Two
+/// devices differ only in pool size (3 pages vs 16); a W4A8 slow_think
+/// request expects ceil(96 x 1.24) = 120 decode tokens under a2-calibrated
+/// inflation, so its estimated footprint (2 prompt + 2 excess pages)
+/// overflows the small card that its FP16-length estimate (2 pages) would
+/// fit:
+///
+///   * the inflation-honest fleet routes it to the big card and serves the
+///     full 40-token trace untruncated;
+///   * the identity-priced fleet parks it on the small card (index tie
+///     break among fitting devices) and truncates mid-trace — the modeled
+///     gap made visible;
+///   * an unmeetably budgeted sibling exercises the `slo_*` counters
+///     through the per-device reports, the fleet rollup, and rendering.
+#[test]
+fn fleet_router_respects_inflation_adjusted_headroom() {
+    use pangu_atlas_quant::coordinator::fleet::{
+        Fleet, FleetConfig, LeastLoadedRouter, RebalanceConfig,
+    };
+    let tk = Tokenizer::minilang_default();
+    let w4a8_request = |id: u64, mode: CotMode| {
+        let ex = vec![
+            (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]),
+            (vec![0, 1, 2, 3, 4], vec![4, 3, 2, 1, 0]),
+        ];
+        Request::new(id, "7b-sim", "w4a8", mode, ex)
+    };
+    let requests = vec![
+        w4a8_request(0, CotMode::SlowThink),
+        w4a8_request(1, CotMode::NoThink),
+        // Budget 0 is unmeetable; W4A8 is the ladder tail, so the policy
+        // records one mode downgrade and one modeled miss fleet-wide.
+        w4a8_request(2, CotMode::SlowThink).with_slo_ms(0.0),
+    ];
+    let run = |inflation: TokenInflation| {
+        let device = |pages: usize| {
+            SchedulerConfig::fixed(2, AdmitGate::Continuous)
+                .with_kv(KvConfig::paged(16, pages * 16))
+                .with_cost(Arc::new(
+                    AtlasCostModel::openpangu_7b().with_token_inflation(inflation),
+                ))
+                .with_slo(SloPolicy::default())
+        };
+        let cfg = FleetConfig {
+            devices: vec![device(3), device(16)],
+            admit: AdmitConfig::with_wait(false, Duration::ZERO),
+            rebalance: RebalanceConfig::default(),
+        };
+        let mut fleet =
+            Fleet::new(&tk, cfg, Box::new(LeastLoadedRouter::new())).expect("fleet");
+        let mut providers = vec![mock_provider(&tk, 40), mock_provider(&tk, 40)];
+        let (resps, report) =
+            fleet.run_batch(&mut providers, &requests).expect("fleet batch");
+        assert_eq!(resps.len(), 3, "every request answered exactly once");
+        (resps, report)
+    };
+
+    let (honest_resps, honest) = run(TokenInflation::a2_calibrated());
+    // The fat request landed on the big card: full trace, no truncation,
+    // and the small card served only the 3-token no_think.
+    assert_eq!(honest_resps[0].tokens.len(), 40, "slow_think served in full");
+    for r in &honest_resps {
+        assert!(!r.truncated, "request {} truncated despite honest routing", r.id);
+    }
+    assert_eq!(honest.devices[0].report.completed, 1);
+    assert_eq!(honest.devices[1].report.completed, 2);
+    assert_eq!(honest.devices[0].report.tokens_generated, 3);
+    // SLO accounting flows through the per-device reports into the fleet
+    // rollup and its rendering.
+    assert_eq!(honest.rollup().slo_downgrades_mode, 1);
+    assert_eq!(honest.rollup().slo_downgrades_precision, 0);
+    assert_eq!(honest.rollup().slo_misses_modeled, 1);
+    let rendered = honest.render();
+    assert!(rendered.contains("slo_downgrades=1/0"), "render: {rendered}");
+    assert!(rendered.contains("slo_misses=1"), "render: {rendered}");
+    assert_eq!(
+        honest.rollup().kv_pages_allocated,
+        honest.rollup().kv_pages_released,
+        "fleet-wide page conservation"
+    );
+
+    // Identity pricing estimates the FP16-length trace, routes the fat
+    // request onto the small card, and pays with a mid-trace truncation.
+    let (naive_resps, naive) = run(TokenInflation::IDENTITY);
+    assert!(
+        naive_resps[0].truncated,
+        "identity-priced placement must starve the small pool"
+    );
+    assert!(naive_resps[0].tokens.len() < 40, "the trace was cut short");
+    assert!(
+        naive.devices[0].report.tokens_generated > 3,
+        "the fat request ran on device 0"
     );
 }
 

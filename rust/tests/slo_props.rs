@@ -1,0 +1,307 @@
+//! Property suite for SLO-aware admission ([`pangu_atlas_quant::coordinator::slo`]):
+//!
+//!   * modeled completion time is monotone in the token-inflation factors —
+//!     an honest cost model never prices an inflated trace *cheaper*;
+//!   * with identity inflation, a scheduler carrying the full SLO machinery
+//!     (config present, requests unconstrained or generously budgeted) is
+//!     byte-identical to the plain scheduler — outputs AND counters;
+//!   * a satisfiable budget (at or above the cheapest candidate) is never
+//!     flagged as a modeled miss;
+//!   * downgrades are monotone in the budget: tightening the SLO never
+//!     selects a less-degraded (slower) pair, and a miss at a loose budget
+//!     stays exactly the same miss at any tighter one.
+
+use std::sync::Arc;
+
+use pangu_atlas_quant::atlas::perf_model::TokenInflation;
+use pangu_atlas_quant::coordinator::cost::{AtlasCostModel, CostModel};
+use pangu_atlas_quant::coordinator::cot;
+use pangu_atlas_quant::coordinator::kv::{KvConfig, PoolHeadroom};
+use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, Scheduler, SchedulerConfig};
+use pangu_atlas_quant::coordinator::slo::{SloPolicy, SloSnapshot};
+use pangu_atlas_quant::quant::Precision;
+use pangu_atlas_quant::runtime::backend::MockBackend;
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
+use pangu_atlas_quant::util::propcheck::{check, ensure, ensure_eq};
+
+// ---------------------------------------------------------------------------
+// Inflation monotonicity
+// ---------------------------------------------------------------------------
+
+/// Raising either inflation factor never shrinks the expected trace length
+/// or the modeled completion time, and identity inflation prices exactly
+/// the legacy `mode_weight * horizon` mapping.
+#[test]
+fn prop_modeled_completion_monotone_in_inflation() {
+    check(
+        "slo-inflation-monotone",
+        120,
+        0x51A0,
+        |rng| {
+            let prompt = rng.range(1, 64);
+            let horizon = rng.range(1, 48);
+            let p = rng.range(0, 4); // inclusive: every Precision
+            let m = rng.range(0, 2); // inclusive: every CotMode
+            // Factors in [1.00, 1.40] / [1.00, 1.60], hi >= lo elementwise.
+            let base_i8 = 100 + rng.range(0, 40);
+            let base_w4 = 100 + rng.range(0, 60);
+            let bump_i8 = rng.range(0, 40);
+            let bump_w4 = rng.range(0, 60);
+            (prompt, horizon, p, m, base_i8, base_w4, bump_i8, bump_w4)
+        },
+        |&(prompt, horizon, p, m, bi, bw, di, dw)| {
+            let lo = TokenInflation { int8: bi as f64 / 100.0, w4a8: bw as f64 / 100.0 };
+            let hi = TokenInflation {
+                int8: (bi + di) as f64 / 100.0,
+                w4a8: (bw + dw) as f64 / 100.0,
+            };
+            let precision = Precision::ALL[p];
+            let mode = CotMode::ALL[m];
+            let cost_lo = AtlasCostModel::openpangu_7b().with_token_inflation(lo);
+            let cost_hi = AtlasCostModel::openpangu_7b().with_token_inflation(hi);
+            let steps_lo = cost_lo.expected_decode_steps(precision, mode, horizon);
+            let steps_hi = cost_hi.expected_decode_steps(precision, mode, horizon);
+            ensure(
+                steps_lo <= steps_hi,
+                format!("expected steps shrank as inflation grew: {steps_lo} -> {steps_hi}"),
+            )?;
+            let snap = SloSnapshot::unloaded(prompt, horizon);
+            let ms_lo = SloPolicy::service_ms(&cost_lo, precision, mode, &snap);
+            let ms_hi = SloPolicy::service_ms(&cost_hi, precision, mode, &snap);
+            ensure(
+                ms_lo <= ms_hi,
+                format!("modeled completion shrank as inflation grew: {ms_lo} -> {ms_hi}"),
+            )?;
+            // Identity inflation is the legacy mapping, exactly.
+            let identity = AtlasCostModel::openpangu_7b();
+            ensure_eq(
+                identity.expected_decode_steps(precision, mode, horizon),
+                cot::mode_length_weight(mode) * horizon,
+                "identity inflation must reproduce mode_weight * horizon",
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Identity / unconstrained byte-identity with the plain scheduler
+// ---------------------------------------------------------------------------
+
+/// Randomized workloads at identity inflation: a scheduler with the SLO
+/// policy configured produces byte-identical responses and identical
+/// schedule counters to the plain scheduler, both when requests carry no
+/// budget (the machinery is structurally inert) and when every budget is
+/// generous (rank 0 always fits) — and the generous run records zero
+/// downgrades and zero modeled misses (a satisfiable SLO is never a miss).
+#[test]
+fn prop_identity_inflation_and_unconstrained_slo_are_byte_identical() {
+    type RunOut = (Vec<(u64, Vec<u32>, bool, usize)>, [usize; 6], [usize; 3]);
+    let run = |with_slo_cfg: bool,
+               slo_ms: Option<f64>,
+               bucket: usize,
+               shapes: &[(u8, u8)],
+               paged: bool|
+     -> Result<RunOut, String> {
+        let tk = Tokenizer::minilang_default();
+        let script = pangu_atlas_quant::runtime::backend::minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut cfg = SchedulerConfig::fixed(bucket, AdmitGate::Continuous)
+            .with_cost(Arc::new(AtlasCostModel::openpangu_7b()));
+        if paged {
+            cfg = cfg.with_kv(KvConfig::paged(16, 4096));
+        }
+        if with_slo_cfg {
+            cfg = cfg.with_slo(SloPolicy::default());
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let requests: Vec<Request> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(tag, examples))| {
+                let ex: Vec<(Vec<u8>, Vec<u8>)> = (0..examples)
+                    .map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]))
+                    .collect();
+                let mut r =
+                    Request::new(i as u64, "7b-sim", "fp16", CotMode::ALL[tag as usize], ex);
+                if let Some(ms) = slo_ms {
+                    r = r.with_slo_ms(ms);
+                }
+                r
+            })
+            .collect();
+        let (resps, report) = sched.run_batch(&mut be, &requests).map_err(|e| e.to_string())?;
+        Ok((
+            resps
+                .into_iter()
+                .map(|r| (r.id, r.tokens, r.truncated, r.first_token_step))
+                .collect(),
+            [
+                report.admitted,
+                report.completed,
+                report.decode_steps,
+                report.slot_steps(),
+                report.deferred,
+                report.joins,
+            ],
+            [
+                report.slo_downgrades_mode,
+                report.slo_downgrades_precision,
+                report.slo_misses_modeled,
+            ],
+        ))
+    };
+    check(
+        "slo-identity-byte-identical",
+        20,
+        0x51B1,
+        |rng| {
+            let bucket = rng.range(1, 5);
+            let shapes: Vec<(u8, u8)> = (0..rng.range(1, 8))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            let paged = rng.chance(0.5);
+            (bucket, shapes, paged)
+        },
+        |(bucket, shapes, paged)| {
+            let (base, base_counters, base_slo) = run(false, None, *bucket, shapes, *paged)?;
+            ensure_eq(base_slo, [0; 3], "no SLO config, no SLO counters")?;
+            let (inert, inert_counters, inert_slo) = run(true, None, *bucket, shapes, *paged)?;
+            ensure(inert == base, "SLO config with unconstrained requests diverged")?;
+            ensure_eq(inert_counters, base_counters, "counters diverged (inert SLO)")?;
+            ensure_eq(inert_slo, [0; 3], "unconstrained requests fired the SLO path")?;
+            let (gen_out, gen_counters, gen_slo) = run(true, Some(1e12), *bucket, shapes, *paged)?;
+            ensure(gen_out == base, "generous-budget run diverged from the baseline")?;
+            ensure_eq(gen_counters, base_counters, "counters diverged (generous SLO)")?;
+            ensure_eq(gen_slo, [0; 3], "a satisfiable SLO recorded a downgrade or miss")?;
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Satisfiable budgets never miss
+// ---------------------------------------------------------------------------
+
+/// Any budget at or above the cheapest candidate's modeled completion is
+/// satisfiable by construction — the decision must choose a fitting pair
+/// and never flag a modeled miss.
+#[test]
+fn prop_satisfiable_budget_never_flags_a_modeled_miss() {
+    check(
+        "slo-satisfiable-no-miss",
+        150,
+        0x51C2,
+        |rng| {
+            let prompt = rng.range(1, 64);
+            let horizon = rng.range(1, 32);
+            let queued = [rng.range(0, 5), rng.range(0, 5), rng.range(0, 5)];
+            let ap = rng.range(0, 4);
+            let am = rng.range(0, 2);
+            let i8x = 100 + rng.range(0, 40);
+            let w4x = 100 + rng.range(0, 60);
+            let slack = rng.range(0, 100);
+            (prompt, horizon, queued, ap, am, i8x, w4x, slack)
+        },
+        |&(prompt, horizon, queued, ap, am, i8x, w4x, slack)| {
+            let cost = AtlasCostModel::openpangu_7b().with_token_inflation(TokenInflation {
+                int8: i8x as f64 / 100.0,
+                w4a8: w4x as f64 / 100.0,
+            });
+            let policy = SloPolicy::default();
+            let arrival = (Precision::ALL[ap], CotMode::ALL[am]);
+            let snap = SloSnapshot {
+                prompt_tokens: prompt,
+                queued_by_mode: queued,
+                headroom: None,
+                grow_horizon: horizon,
+            };
+            let wait = SloPolicy::queue_wait_ms(&cost, arrival.0, &snap);
+            let cheapest = policy
+                .candidates(arrival)
+                .into_iter()
+                .map(|(p, m)| wait + SloPolicy::service_ms(&cost, p, m, &snap))
+                .fold(f64::INFINITY, f64::min);
+            let slo_ms = cheapest * (1.0 + slack as f64 / 100.0);
+            let d = policy.decide(&cost, arrival, slo_ms, &snap);
+            ensure(
+                !d.modeled_miss,
+                format!("budget {slo_ms} >= cheapest candidate {cheapest} flagged a miss"),
+            )?;
+            ensure(d.modeled_ms <= slo_ms, "the chosen pair must fit the budget")
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Budget-monotone downgrades
+// ---------------------------------------------------------------------------
+
+/// Tightening the budget never selects a less-degraded (earlier-rank,
+/// slower) pair, and once a budget is a modeled miss every tighter budget
+/// is the *identical* miss (the cheapest candidate does not depend on the
+/// budget at all).
+#[test]
+fn prop_downgrades_monotone_as_the_budget_tightens() {
+    check(
+        "slo-budget-monotone",
+        150,
+        0x51D3,
+        |rng| {
+            let prompt = rng.range(1, 64);
+            let horizon = rng.range(1, 32);
+            let queued = [rng.range(0, 5), rng.range(0, 5), rng.range(0, 5)];
+            let headroom = if rng.chance(0.4) {
+                let capacity = rng.range(2, 24);
+                Some((capacity, rng.range(0, capacity)))
+            } else {
+                None
+            };
+            let ap = rng.range(0, 4);
+            let am = rng.range(0, 2);
+            let i8x = 100 + rng.range(0, 40);
+            let w4x = 100 + rng.range(0, 60);
+            // Budgets in [0.1, 10_000] ms; the tighter one is a fraction.
+            let hi_tenths = rng.range(1, 100_000);
+            let frac = rng.range(0, 100);
+            let allow_mode = rng.chance(0.8);
+            (prompt, horizon, queued, headroom, ap, am, i8x, w4x, hi_tenths, frac, allow_mode)
+        },
+        |&(prompt, horizon, queued, headroom, ap, am, i8x, w4x, hi_tenths, frac, allow_mode)| {
+            let cost = AtlasCostModel::openpangu_7b().with_token_inflation(TokenInflation {
+                int8: i8x as f64 / 100.0,
+                w4a8: w4x as f64 / 100.0,
+            });
+            let policy = SloPolicy { allow_mode_downgrade: allow_mode, ..SloPolicy::default() };
+            let arrival = (Precision::ALL[ap], CotMode::ALL[am]);
+            let snap = SloSnapshot {
+                prompt_tokens: prompt,
+                queued_by_mode: queued,
+                headroom: headroom.map(|(capacity, free)| PoolHeadroom {
+                    page_tokens: 16,
+                    used_pages: capacity - free,
+                    free_pages: free,
+                    capacity_pages: capacity,
+                }),
+                grow_horizon: horizon,
+            };
+            let hi = hi_tenths as f64 / 10.0;
+            let lo = hi * (frac as f64 / 100.0);
+            let d_hi = policy.decide(&cost, arrival, hi, &snap);
+            let d_lo = policy.decide(&cost, arrival, lo, &snap);
+            if d_hi.modeled_miss {
+                ensure(d_lo.modeled_miss, "a tighter budget cannot become feasible")?;
+                ensure(d_lo == d_hi, "the miss decision must not depend on the budget")?;
+            } else if !d_lo.modeled_miss {
+                ensure(
+                    d_lo.rank >= d_hi.rank,
+                    format!(
+                        "tightening the budget moved UP the lattice: rank {} -> {}",
+                        d_hi.rank, d_lo.rank
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
