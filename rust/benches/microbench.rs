@@ -7,12 +7,18 @@
 //!     cargo bench --bench microbench
 //!     cargo bench --bench microbench -- --smoke   # CI: 1 iteration each
 //!     cargo bench --bench microbench -- --smoke --json BENCH_scheduler.json
+//!     cargo bench --bench microbench -- --smoke --json out.json \
+//!         --baseline BENCH_baseline.json   # CI regression gate
 //!
 //! `--smoke` runs every bench exactly once with no warmup so CI exercises
 //! the bench code paths (they can't bit-rot) without paying measurement
 //! time. `--json <path>` additionally writes the groups/medians/notes as a
 //! machine-readable perf snapshot (uploaded as a CI artifact — the start
-//! of the perf trajectory).
+//! of the perf trajectory). `--baseline <path>` compares this run's
+//! per-group medians against a saved snapshot and exits non-zero on any
+//! group regressing past the threshold (`BENCH_REGRESSION_THRESHOLD` env,
+//! default 4.0x — generous because CI runners are noisy and smoke runs
+//! measure a single iteration).
 
 use std::cell::RefCell;
 use std::sync::Arc;
@@ -32,8 +38,10 @@ use pangu_atlas_quant::coordinator::slo::SloPolicy;
 use pangu_atlas_quant::quant::{hadamard, int4, int8, Precision};
 use pangu_atlas_quant::runtime::backend::MockBackend;
 use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
-use pangu_atlas_quant::util::benchkit::{BenchConfig, Group, JsonEmitter};
-use pangu_atlas_quant::util::json::Json;
+use pangu_atlas_quant::util::benchkit::{
+    regression_threshold, Baseline, BenchConfig, Group, JsonEmitter,
+};
+use pangu_atlas_quant::util::json::{Json, JsonSlice};
 use pangu_atlas_quant::util::prng::Rng;
 
 fn main() {
@@ -42,6 +50,11 @@ fn main() {
     let json_path: Option<std::path::PathBuf> = args
         .iter()
         .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from);
+    let baseline_path: Option<std::path::PathBuf> = args
+        .iter()
+        .position(|a| a == "--baseline")
         .and_then(|i| args.get(i + 1))
         .map(std::path::PathBuf::from);
     let mut emitter = JsonEmitter::new();
@@ -449,8 +462,168 @@ fn main() {
     emitter.add(&g);
     g.finish();
 
+    // ---- host hot paths: zero-copy vs legacy-shape references ----------
+    // Each group benches the interned/borrowed path next to an inline
+    // reproduction of the pre-refactor shape (per-value owned strings,
+    // collect-then-join, unsized buffers), so the "strictly lower median"
+    // claim is re-measured on every run and recorded as a note in the
+    // snapshot — the groups the checked-in BENCH_baseline.json gates on.
+    let reps = 1000usize;
+
+    let mut g = Group::new("tokenizer-encode");
+    let enc_examples: Vec<(Vec<u8>, Vec<u8>)> = (0..3u8)
+        .map(|i| (vec![i; 5], vec![5 - i; 5]))
+        .collect();
+    let fast_p50 = {
+        let mut out = Vec::with_capacity(tk.prompt_len(&enc_examples));
+        g.run("encode_prompt_into reused buffer 3ex x1000", &cfg, || {
+            for _ in 0..reps {
+                out.clear();
+                tk.encode_prompt_into(CotMode::SlowThink, &enc_examples, &mut out);
+            }
+            std::hint::black_box(out.len());
+        })
+        .ms
+        .p50
+    };
+    g.run("encode_prompt presized 3ex x1000", &cfg, || {
+        for _ in 0..reps {
+            std::hint::black_box(tk.encode_prompt(CotMode::SlowThink, &enc_examples).len());
+        }
+    });
+    let legacy_p50 = g
+        .run("encode legacy unsized-vec 3ex x1000", &cfg, || {
+            for _ in 0..reps {
+                // The pre-refactor shape: a growing Vec with no size hint.
+                let mut ids = vec![tk.bos, tk.mode_token(CotMode::SlowThink)];
+                for (i, (xs, ys)) in enc_examples.iter().enumerate() {
+                    if i > 0 {
+                        ids.push(tk.sep);
+                    }
+                    ids.push(tk.tok_in);
+                    ids.extend(xs.iter().map(|&v| tk.digit(v)));
+                    ids.push(tk.tok_out);
+                    ids.extend(ys.iter().map(|&v| tk.digit(v)));
+                }
+                ids.push(tk.ask);
+                std::hint::black_box(ids.len());
+            }
+        })
+        .ms
+        .p50;
+    g.note(&format!(
+        "zero-copy p50 {fast_p50:.4} ms vs legacy-shape {legacy_p50:.4} ms ({:.2}x)",
+        legacy_p50 / fast_p50.max(1e-9)
+    ));
+    emitter.add(&g);
+    g.finish();
+
+    let mut g = Group::new("json-parse");
+    // A manifest-shaped document (~1 KB): vocab strings, nested minilang
+    // block, numeric arrays — the shape the loading hot path actually sees.
+    let manifest_doc = {
+        let vocab: Vec<Json> = (0..64).map(|i| Json::str(format!("TOKEN_{i:03}"))).collect();
+        Json::obj([
+            ("vocab", Json::Arr(vocab)),
+            (
+                "minilang",
+                Json::obj([
+                    ("mod", Json::num(16.0)),
+                    ("seq_len", Json::num(5.0)),
+                    ("ops", Json::Arr((0..12).map(|i| Json::str(format!("OP{i}"))).collect())),
+                ]),
+            ),
+            ("serve_buckets", Json::arr_u32(&[1, 2, 4, 8])),
+            ("latency_buckets", Json::arr_f64(&[0.5, 1.0, 2.0, 4.0])),
+        ])
+        .to_string()
+    };
+    let slice_p50 = g
+        .run("slice parse manifest-1KB x100", &cfg, || {
+            for _ in 0..100 {
+                std::hint::black_box(JsonSlice::parse(&manifest_doc).unwrap());
+            }
+        })
+        .ms
+        .p50;
+    let owned_p50 = g
+        .run("owned parse manifest-1KB x100", &cfg, || {
+            // The pre-refactor shape: every string becomes an owned String,
+            // every object a BTreeMap, before any field is read.
+            for _ in 0..100 {
+                std::hint::black_box(Json::parse(&manifest_doc).unwrap());
+            }
+        })
+        .ms
+        .p50;
+    g.note(&format!(
+        "zero-copy p50 {slice_p50:.4} ms vs owned-tree {owned_p50:.4} ms ({:.2}x)",
+        owned_p50 / slice_p50.max(1e-9)
+    ));
+    emitter.add(&g);
+    g.finish();
+
+    let mut g = Group::new("render");
+    let trace_ids: Vec<u32> = {
+        let mut ids = tk.encode_prompt(CotMode::SlowThink, &enc_examples);
+        ids.extend([tk.trace, tk.step, tk.ops["REV"], tk.ops["ADD1"]]);
+        ids.extend((0..16).map(|i| tk.digit(i % 16)));
+        ids.extend([tk.endtrace, tk.prog, tk.ops["REV"], tk.ops["ADD1"], tk.end]);
+        ids
+    };
+    let fast_p50 = {
+        let mut out = String::new();
+        g.run("render_into reused buffer 48tok x1000", &cfg, || {
+            for _ in 0..reps {
+                out.clear();
+                tk.render_into(&trace_ids, &mut out);
+            }
+            std::hint::black_box(out.len());
+        })
+        .ms
+        .p50
+    };
+    g.run("render presized 48tok x1000", &cfg, || {
+        for _ in 0..reps {
+            std::hint::black_box(tk.render(&trace_ids).len());
+        }
+    });
+    let legacy_p50 = g
+        .run("render legacy collect-join 48tok x1000", &cfg, || {
+            for _ in 0..reps {
+                // The pre-refactor shape: per-token name Vec, then join.
+                let s = trace_ids
+                    .iter()
+                    .map(|&t| tk.name(t))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                std::hint::black_box(s.len());
+            }
+        })
+        .ms
+        .p50;
+    g.note(&format!(
+        "zero-copy p50 {fast_p50:.4} ms vs legacy-shape {legacy_p50:.4} ms ({:.2}x)",
+        legacy_p50 / fast_p50.max(1e-9)
+    ));
+    emitter.add(&g);
+    g.finish();
+
     if let Some(path) = json_path {
         emitter.write(&path).expect("write perf snapshot");
         println!("\nperf snapshot written to {}", path.display());
+    }
+
+    // ---- bench regression gate (criterion save/compare idiom, offline) --
+    if let Some(path) = baseline_path {
+        let baseline = Baseline::load(&path)
+            .unwrap_or_else(|e| panic!("load bench baseline {}: {e}", path.display()));
+        let current = Baseline::of_emitter(&emitter);
+        let threshold = regression_threshold(4.0);
+        let report = baseline.compare(&current, threshold);
+        print!("\n{}", report.render());
+        if !report.passed() {
+            std::process::exit(1);
+        }
     }
 }

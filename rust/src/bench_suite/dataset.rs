@@ -5,7 +5,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonSlice};
 
 /// One benchmark task: prompt examples shown to the model, held-out tests
 /// used for pass@1 scoring, and the reference program (diagnostics only —
@@ -26,7 +26,7 @@ pub struct Benchmark {
     pub tasks: Vec<Task>,
 }
 
-fn parse_pairs(v: &Json) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+fn parse_pairs(v: &JsonSlice<'_>) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
     v.as_arr()
         .ok_or_else(|| anyhow!("pair list not an array"))?
         .iter()
@@ -48,8 +48,11 @@ fn parse_pairs(v: &Json) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
 }
 
 impl Benchmark {
-    pub fn from_json(j: &Json) -> Result<Benchmark> {
-        let name = j.req_str("name")?.to_string();
+    /// Primary builder: reads straight off the borrowed tree, so `load`
+    /// never materializes an owned `Json` (only the final `Task` fields
+    /// are copied out).
+    pub fn from_slice(j: &JsonSlice<'_>) -> Result<Benchmark> {
+        let name = j.req_str("name")?.into_owned();
         let seq_len = j.req_usize("seq_len")?;
         let tasks = j
             .req_arr("tasks")?
@@ -64,7 +67,7 @@ impl Benchmark {
                         .iter()
                         .map(|o| {
                             o.as_str()
-                                .map(String::from)
+                                .map(|s| s.into_owned())
                                 .ok_or_else(|| anyhow!("bad op name"))
                         })
                         .collect::<Result<_>>()?,
@@ -75,8 +78,17 @@ impl Benchmark {
         Ok(Benchmark { name, seq_len, tasks })
     }
 
+    /// Compatibility shim over an owned tree (fixtures, tests).
+    pub fn from_json(j: &Json) -> Result<Benchmark> {
+        Benchmark::from_slice(&j.as_slice())
+    }
+
     pub fn load(path: &Path) -> Result<Benchmark> {
-        Benchmark::from_json(&Json::parse_file(path)?)
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let slice = JsonSlice::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        Benchmark::from_slice(&slice)
     }
 
     /// Sanity validation: every example/test pair must be consistent with

@@ -132,8 +132,10 @@ fn ew(xs: &mut [u8], f: impl Fn(u16) -> u16) {
 pub struct Program(pub Vec<Op>);
 
 impl Program {
-    pub fn parse(names: &[String]) -> Result<Program> {
-        Ok(Program(names.iter().map(|n| Op::parse(n)).collect::<Result<_>>()?))
+    /// Parse from any string-slice sequence — owned names (dataset
+    /// references) or names borrowed from the tokenizer's intern arena.
+    pub fn parse<S: AsRef<str>>(names: &[S]) -> Result<Program> {
+        Ok(Program(names.iter().map(|n| Op::parse(n.as_ref())).collect::<Result<_>>()?))
     }
 
     /// Execute with a fuel bound (defensive: programs are short, but the

@@ -77,6 +77,12 @@ impl Request {
         (self.model.clone(), self.variant.clone())
     }
 
+    /// Borrowed form of [`Request::route_key`] for comparisons — no
+    /// per-call `String` clones on the reply-rendering hot path.
+    pub fn route_key_ref(&self) -> (&str, &str) {
+        (&self.model, &self.variant)
+    }
+
     /// Exact encoded prompt length in tokens, computed without a
     /// tokenizer: the MiniLang prompt layout is
     /// `BOS MODE (IN xs OUT ys | SEP)* ASK`, so the length depends only on

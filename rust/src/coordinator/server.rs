@@ -246,7 +246,9 @@ impl<'t, P: BackendProvider> Server<'t, P> {
                         // server can rotate routes (no cross-route
                         // starvation under sustained traffic).
                         while let Ok(env) = rx.try_recv() {
-                            if foreign.is_empty() && env.request.route_key() == *key {
+                            if foreign.is_empty()
+                                && env.request.route_key_ref() == (key.0.as_str(), key.1.as_str())
+                            {
                                 pending.borrow_mut().register(env.request.id, env.reply);
                                 q.push(env.request);
                                 pumped_in += 1;

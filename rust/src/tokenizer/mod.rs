@@ -2,6 +2,12 @@
 //! compile path (python/compile/minilang.py) and shipped in
 //! artifacts/manifest.json; this module provides the Rust-side encoder /
 //! decoder plus prompt construction (the CoT directive mechanism).
+//!
+//! The vocabulary is *interned*: one arena `String` holds every name and
+//! per-id spans slice into it, so `name()` borrows, `id()` is a
+//! binary search over raw byte slices (plain `u8` compares — the ASCII
+//! fast path, no char decoding, no hashing, no key allocation), and
+//! `encode_prompt` / `render_into` allocate nothing per token.
 
 use std::collections::HashMap;
 
@@ -50,8 +56,16 @@ impl CotMode {
 /// Token-id vocabulary with the structural ids used by the serving engine.
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
-    names: Vec<String>,
-    ids: HashMap<String, u32>,
+    /// Every vocab name, concatenated; `spans[id]` slices it.
+    arena: String,
+    /// Byte range of each token's name inside `arena`, indexed by id.
+    spans: Vec<(u32, u32)>,
+    /// Token ids sorted by name bytes — the allocation-free `id()` index.
+    by_name: Vec<u32>,
+    /// O(1) `is_op` membership, indexed by id.
+    op_mask: Vec<bool>,
+    /// Directive token per `CotMode` discriminant.
+    mode_ids: [u32; 3],
     pub pad: u32,
     pub bos: u32,
     pub end: u32,
@@ -77,42 +91,65 @@ impl Tokenizer {
             .get("vocab")
             .as_arr()
             .ok_or_else(|| anyhow!("manifest missing vocab"))?;
-        let names: Vec<String> = vocab
-            .iter()
-            .map(|v| v.as_str().map(String::from).ok_or_else(|| anyhow!("vocab entry not a string")))
-            .collect::<Result<_>>()?;
-        let ids: HashMap<String, u32> = names
-            .iter()
-            .enumerate()
-            .map(|(i, n)| (n.clone(), i as u32))
-            .collect();
-        let get = |n: &str| -> Result<u32> {
-            ids.get(n).copied().ok_or_else(|| anyhow!("vocab missing token {n}"))
+        let total: usize = vocab.iter().map(|v| v.as_str().map_or(0, str::len)).sum();
+        let mut arena = String::with_capacity(total);
+        let mut spans = Vec::with_capacity(vocab.len());
+        for v in vocab {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow!("vocab entry not a string"))?;
+            let start = arena.len() as u32;
+            arena.push_str(name);
+            spans.push((start, arena.len() as u32));
+        }
+        let name_bytes = |id: u32| -> &[u8] {
+            let (s, e) = spans[id as usize];
+            &arena.as_bytes()[s as usize..e as usize]
         };
+        let mut by_name: Vec<u32> = (0..spans.len() as u32).collect();
+        by_name.sort_by(|&a, &b| name_bytes(a).cmp(name_bytes(b)));
+        let find = |n: &str| -> Result<u32> {
+            by_name
+                .binary_search_by(|&id| name_bytes(id).cmp(n.as_bytes()))
+                .map(|pos| by_name[pos])
+                .map_err(|_| anyhow!("vocab missing token {n}"))
+        };
+
         let value_mod = manifest.get("minilang").req_usize("mod")? as u32;
         let op_names = manifest.get("minilang").req_arr("ops")?;
+        let mut op_mask = vec![false; spans.len()];
         let mut ops = HashMap::new();
         for op in op_names {
             let name = op.as_str().ok_or_else(|| anyhow!("op not a string"))?;
-            ops.insert(name.to_string(), get(name)?);
+            let id = find(name)?;
+            op_mask[id as usize] = true;
+            ops.insert(name.to_string(), id);
         }
+        let mode_ids = [
+            find(CotMode::NoThink.directive())?,
+            find(CotMode::AutoThink.directive())?,
+            find(CotMode::SlowThink.directive())?,
+        ];
         Ok(Tokenizer {
-            pad: get("PAD")?,
-            bos: get("BOS")?,
-            end: get("END")?,
-            ask: get("ASK")?,
-            prog: get("PROG")?,
-            trace: get("TRACE")?,
-            endtrace: get("ENDTRACE")?,
-            step: get("STEP")?,
-            sep: get("SEP")?,
-            tok_in: get("IN")?,
-            tok_out: get("OUT")?,
-            digit_base: get("D0")?,
+            pad: find("PAD")?,
+            bos: find("BOS")?,
+            end: find("END")?,
+            ask: find("ASK")?,
+            prog: find("PROG")?,
+            trace: find("TRACE")?,
+            endtrace: find("ENDTRACE")?,
+            step: find("STEP")?,
+            sep: find("SEP")?,
+            tok_in: find("IN")?,
+            tok_out: find("OUT")?,
+            digit_base: find("D0")?,
             value_mod,
             ops,
-            names,
-            ids,
+            op_mask,
+            mode_ids,
+            arena,
+            spans,
+            by_name,
         })
     }
 
@@ -135,11 +172,11 @@ impl Tokenizer {
         while vocab.len() < 64 {
             vocab.push(Json::str(format!("UNUSED{}", vocab.len())));
         }
-        let manifest = Json::obj(vec![
+        let manifest = Json::obj([
             ("vocab", Json::Arr(vocab)),
             (
                 "minilang",
-                Json::obj(vec![
+                Json::obj([
                     ("mod", Json::num(16.0)),
                     ("seq_len", Json::num(5.0)),
                     ("ops", Json::Arr(ops.iter().map(|s| Json::str(*s)).collect())),
@@ -150,18 +187,30 @@ impl Tokenizer {
     }
 
     pub fn vocab_size(&self) -> usize {
-        self.names.len()
+        self.spans.len()
     }
 
+    /// The token's name, borrowed from the intern arena ("?" if out of
+    /// vocabulary — rendering is total over arbitrary ids).
     pub fn name(&self, id: u32) -> &str {
-        self.names
+        self.spans
             .get(id as usize)
-            .map(|s| s.as_str())
+            .map(|&(s, e)| &self.arena[s as usize..e as usize])
             .unwrap_or("?")
     }
 
+    /// Reverse lookup without allocating: binary search over interned
+    /// byte slices.
     pub fn id(&self, name: &str) -> Option<u32> {
-        self.ids.get(name).copied()
+        self.by_name
+            .binary_search_by(|&id| self.name_bytes(id).cmp(name.as_bytes()))
+            .ok()
+            .map(|pos| self.by_name[pos])
+    }
+
+    fn name_bytes(&self, id: u32) -> &[u8] {
+        let (s, e) = self.spans[id as usize];
+        &self.arena.as_bytes()[s as usize..e as usize]
     }
 
     pub fn digit(&self, v: u8) -> u32 {
@@ -178,53 +227,87 @@ impl Tokenizer {
     }
 
     pub fn is_op(&self, id: u32) -> bool {
-        self.ops.values().any(|&v| v == id)
+        self.op_mask.get(id as usize).copied().unwrap_or(false)
     }
 
     pub fn mode_token(&self, mode: CotMode) -> u32 {
-        self.ids[mode.directive()]
+        self.mode_ids[mode as usize]
+    }
+
+    /// Exact encoded prompt length, kept in lockstep with the layout
+    /// below (and with `Request::prompt_tokens_hint`).
+    pub fn prompt_len(&self, examples: &[(Vec<u8>, Vec<u8>)]) -> usize {
+        3 + examples
+            .iter()
+            .map(|(xs, ys)| 2 + xs.len() + ys.len())
+            .sum::<usize>()
+            + examples.len().saturating_sub(1)
     }
 
     /// Prompt layout (must match python minilang.encode_prompt):
     /// BOS MODE (IN xs OUT ys | SEP)* ASK
     pub fn encode_prompt(&self, mode: CotMode, examples: &[(Vec<u8>, Vec<u8>)]) -> Vec<u32> {
-        let mut ids = vec![self.bos, self.mode_token(mode)];
-        for (i, (xs, ys)) in examples.iter().enumerate() {
-            if i > 0 {
-                ids.push(self.sep);
-            }
-            ids.push(self.tok_in);
-            ids.extend(xs.iter().map(|&v| self.digit(v)));
-            ids.push(self.tok_out);
-            ids.extend(ys.iter().map(|&v| self.digit(v)));
-        }
-        ids.push(self.ask);
+        let mut ids = Vec::with_capacity(self.prompt_len(examples));
+        self.encode_prompt_into(mode, examples, &mut ids);
         ids
     }
 
+    /// Streaming variant of [`Tokenizer::encode_prompt`]: appends to a
+    /// caller-owned buffer (no allocation when `out` has capacity).
+    pub fn encode_prompt_into(
+        &self,
+        mode: CotMode,
+        examples: &[(Vec<u8>, Vec<u8>)],
+        out: &mut Vec<u32>,
+    ) {
+        out.push(self.bos);
+        out.push(self.mode_token(mode));
+        for (i, (xs, ys)) in examples.iter().enumerate() {
+            if i > 0 {
+                out.push(self.sep);
+            }
+            out.push(self.tok_in);
+            out.extend(xs.iter().map(|&v| self.digit(v)));
+            out.push(self.tok_out);
+            out.extend(ys.iter().map(|&v| self.digit(v)));
+        }
+        out.push(self.ask);
+    }
+
     /// Decode a token sequence to space-separated names (diagnostics).
+    /// Pre-sized single pass — no per-token strings, no join.
     pub fn render(&self, ids: &[u32]) -> String {
-        ids.iter()
-            .map(|&t| self.name(t))
-            .collect::<Vec<_>>()
-            .join(" ")
+        let cap: usize = ids.iter().map(|&t| self.name(t).len() + 1).sum();
+        let mut out = String::with_capacity(cap.saturating_sub(1));
+        self.render_into(ids, &mut out);
+        out
+    }
+
+    /// Streaming variant of [`Tokenizer::render`]: appends to a
+    /// caller-owned buffer, byte-identical to `render`.
+    pub fn render_into(&self, ids: &[u32], out: &mut String) {
+        for (i, &t) in ids.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(self.name(t));
+        }
     }
 
     /// Extract the program from a generated completion: op tokens between
     /// the *last* PROG and the first following END (mirror of
-    /// minilang.extract_program).
-    pub fn extract_program(&self, ids: &[u32]) -> Option<Vec<String>> {
+    /// minilang.extract_program). Names borrow from the intern arena.
+    pub fn extract_program(&self, ids: &[u32]) -> Option<Vec<&str>> {
         let start = ids.iter().rposition(|&t| t == self.prog)?;
         let mut ops = Vec::new();
         for &t in &ids[start + 1..] {
             if t == self.end {
                 return if ops.is_empty() { None } else { Some(ops) };
             }
-            let name = self.name(t);
-            if !self.ops.contains_key(name) {
+            if !self.is_op(t) {
                 return None;
             }
-            ops.push(name.to_string());
+            ops.push(self.name(t));
         }
         None
     }
@@ -250,6 +333,16 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn interned_lookup_is_total_and_inverse() {
+        let tk = test_tokenizer();
+        for id in 0..tk.vocab_size() as u32 {
+            assert_eq!(tk.id(tk.name(id)), Some(id), "id {id}");
+        }
+        assert_eq!(tk.id("NOT_A_TOKEN"), None);
+        assert_eq!(tk.id(""), None);
+    }
+
+    #[test]
     fn prompt_layout_matches_python() {
         let tk = test_tokenizer();
         let ex = vec![(vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1])];
@@ -261,6 +354,37 @@ pub(crate) mod tests {
         assert_eq!(ids[8], tk.tok_out);
         assert_eq!(*ids.last().unwrap(), tk.ask);
         assert_eq!(ids.len(), 2 + 1 + 5 + 1 + 5 + 1);
+        assert_eq!(ids.len(), tk.prompt_len(&ex));
+    }
+
+    #[test]
+    fn encode_prompt_presizes_exactly() {
+        let tk = test_tokenizer();
+        for examples in [
+            vec![],
+            vec![(vec![1, 2], vec![2, 1])],
+            vec![(vec![0; 5], vec![1; 5]), (vec![2; 3], vec![3; 3])],
+        ] {
+            let ids = tk.encode_prompt(CotMode::AutoThink, &examples);
+            assert_eq!(ids.len(), tk.prompt_len(&examples), "hint must be exact");
+        }
+    }
+
+    #[test]
+    fn empty_prompt_is_bos_mode_ask() {
+        let tk = test_tokenizer();
+        let ids = tk.encode_prompt(CotMode::NoThink, &[]);
+        assert_eq!(ids, vec![tk.bos, tk.mode_token(CotMode::NoThink), tk.ask]);
+    }
+
+    #[test]
+    fn encode_prompt_into_appends() {
+        let tk = test_tokenizer();
+        let ex = vec![(vec![1u8, 2], vec![2u8, 1])];
+        let mut out = vec![tk.pad];
+        tk.encode_prompt_into(CotMode::AutoThink, &ex, &mut out);
+        assert_eq!(out[0], tk.pad);
+        assert_eq!(&out[1..], tk.encode_prompt(CotMode::AutoThink, &ex).as_slice());
     }
 
     #[test]
@@ -272,7 +396,7 @@ pub(crate) mod tests {
         let mut ids = vec![tk.trace, tk.step, rev];
         ids.extend((0..5).map(|i| tk.digit(i)));
         ids.extend([tk.endtrace, tk.prog, rev, add1, tk.end]);
-        assert_eq!(tk.extract_program(&ids), Some(vec!["REV".into(), "ADD1".into()]));
+        assert_eq!(tk.extract_program(&ids), Some(vec!["REV", "ADD1"]));
     }
 
     #[test]
@@ -285,6 +409,8 @@ pub(crate) mod tests {
         // op tokens but no END
         let rev = tk.ops["REV"];
         assert_eq!(tk.extract_program(&[tk.prog, rev]), None);
+        // out-of-vocab token id inside the program region
+        assert_eq!(tk.extract_program(&[tk.prog, 9999, tk.end]), None);
     }
 
     #[test]
@@ -293,5 +419,81 @@ pub(crate) mod tests {
             assert_eq!(CotMode::parse(m.name()).unwrap(), m);
         }
         assert!(CotMode::parse("fast_think").is_err());
+    }
+
+    #[test]
+    fn mode_tokens_match_directives() {
+        let tk = test_tokenizer();
+        assert_eq!(tk.mode_token(CotMode::NoThink), tk.id("MODE_NOTHINK").unwrap());
+        assert_eq!(tk.mode_token(CotMode::AutoThink), tk.id("MODE_AUTO").unwrap());
+        assert_eq!(tk.mode_token(CotMode::SlowThink), tk.id("MODE_SLOW").unwrap());
+    }
+
+    // ---------- UTF-8 / byte-boundary edges ----------
+
+    /// A vocabulary whose names include multi-byte UTF-8: byte-wise
+    /// interning and comparison must be oblivious to char width.
+    fn utf8_tokenizer() -> Tokenizer {
+        let names = [
+            "PAD", "BOS", "END", "MODE_NOTHINK", "MODE_AUTO", "MODE_SLOW", "IN", "OUT", "SEP",
+            "ASK", "TRACE", "ENDTRACE", "STEP", "PROG", "D0", "D1", "λ-REV", "日本語",
+            "éclair", "e\u{0301}clair", // NFC vs NFD: distinct byte strings, distinct ids
+        ];
+        let manifest = Json::obj([
+            (
+                "vocab",
+                Json::Arr(names.iter().map(|s| Json::str(*s)).collect()),
+            ),
+            (
+                "minilang",
+                Json::obj([
+                    ("mod", Json::num(2.0)),
+                    ("ops", Json::Arr(vec![Json::str("λ-REV"), Json::str("日本語")])),
+                ]),
+            ),
+        ]);
+        Tokenizer::from_manifest(&manifest).expect("utf8 vocab is well-formed")
+    }
+
+    #[test]
+    fn multi_byte_vocab_entries_intern_cleanly() {
+        let tk = utf8_tokenizer();
+        for id in 0..tk.vocab_size() as u32 {
+            assert_eq!(tk.id(tk.name(id)), Some(id));
+        }
+        // NFC/NFD forms are different byte strings — must not collide.
+        assert_ne!(tk.id("éclair"), tk.id("e\u{0301}clair"));
+        let lam = tk.id("λ-REV").unwrap();
+        assert!(tk.is_op(lam));
+        assert_eq!(tk.extract_program(&[tk.prog, lam, tk.end]), Some(vec!["λ-REV"]));
+        assert_eq!(tk.render(&[lam, tk.id("日本語").unwrap()]), "λ-REV 日本語");
+    }
+
+    #[test]
+    fn unknown_ids_fall_back_to_question_mark() {
+        let tk = test_tokenizer();
+        assert_eq!(tk.name(u32::MAX), "?");
+        assert_eq!(tk.render(&[tk.bos, 9999, tk.end]), "BOS ? END");
+        assert!(!tk.is_op(u32::MAX));
+        assert_eq!(tk.digit_value(u32::MAX), None);
+    }
+
+    #[test]
+    fn render_into_is_byte_identical_to_legacy_join() {
+        let tk = test_tokenizer();
+        // A recorded-trace-shaped sequence: prompt, trace, program, end,
+        // plus an out-of-vocab id to exercise the "?" path.
+        let mut ids = tk.encode_prompt(CotMode::SlowThink, &[(vec![1, 2, 3], vec![3, 2, 1])]);
+        ids.extend([tk.trace, tk.step, tk.ops["REV"], tk.endtrace, tk.prog, tk.ops["REV"]]);
+        ids.push(77777);
+        ids.push(tk.end);
+        // The pre-refactor implementation: collect names, then join.
+        let legacy: String = ids.iter().map(|&t| tk.name(t)).collect::<Vec<_>>().join(" ");
+        assert_eq!(tk.render(&ids), legacy);
+        let mut streamed = String::new();
+        tk.render_into(&ids, &mut streamed);
+        assert_eq!(streamed, legacy);
+        // Empty input renders empty on both paths.
+        assert_eq!(tk.render(&[]), "");
     }
 }

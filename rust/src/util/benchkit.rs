@@ -143,9 +143,29 @@ impl Group {
 /// Bench binaries call [`JsonEmitter::add`] on each group before
 /// `finish()` and [`JsonEmitter::write`] at exit when `--json <path>` was
 /// passed; CI uploads the file as the perf-trajectory artifact.
+///
+/// Results are held as plain structs; the `Json` tree is built once, at
+/// [`JsonEmitter::snapshot`] time (not per `add`), and serialized in a
+/// single pre-sized pass.
+#[derive(Debug, Clone)]
+pub struct BenchSnap {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub notes: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GroupSnap {
+    pub title: String,
+    pub benches: Vec<BenchSnap>,
+}
+
 #[derive(Default)]
 pub struct JsonEmitter {
-    groups: Vec<Json>,
+    groups: Vec<GroupSnap>,
 }
 
 impl JsonEmitter {
@@ -155,36 +175,57 @@ impl JsonEmitter {
 
     /// Record one group's results (call before `Group::finish`).
     pub fn add(&mut self, group: &Group) {
-        let benches: Vec<Json> = group
+        let benches = group
             .results
             .iter()
             .enumerate()
-            .map(|(i, r)| {
-                let notes: Vec<Json> = group
+            .map(|(i, r)| BenchSnap {
+                name: r.name.clone(),
+                iters: r.iters,
+                mean_ms: r.ms.mean,
+                p50_ms: r.ms.p50,
+                p90_ms: r.ms.p90,
+                notes: group
                     .notes
                     .iter()
                     .filter(|&&(at, _)| at == i)
-                    .map(|(_, text)| Json::str(text.clone()))
-                    .collect();
-                Json::obj(vec![
-                    ("name", Json::str(r.name.clone())),
-                    ("iters", Json::num(r.iters as f64)),
-                    ("mean_ms", Json::num(r.ms.mean)),
-                    ("p50_ms", Json::num(r.ms.p50)),
-                    ("p90_ms", Json::num(r.ms.p90)),
-                    ("notes", Json::Arr(notes)),
-                ])
+                    .map(|(_, text)| text.clone())
+                    .collect(),
             })
             .collect();
-        self.groups.push(Json::obj(vec![
-            ("title", Json::str(group.title.clone())),
-            ("benches", Json::Arr(benches)),
-        ]));
+        self.groups.push(GroupSnap { title: group.title.clone(), benches });
     }
 
     /// The snapshot as a JSON value (tested without touching disk).
     pub fn snapshot(&self) -> Json {
-        Json::obj(vec![("groups", Json::Arr(self.groups.clone()))])
+        let groups: Vec<Json> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let benches: Vec<Json> = g
+                    .benches
+                    .iter()
+                    .map(|b| {
+                        Json::obj([
+                            ("name", Json::str(b.name.clone())),
+                            ("iters", Json::num(b.iters as f64)),
+                            ("mean_ms", Json::num(b.mean_ms)),
+                            ("p50_ms", Json::num(b.p50_ms)),
+                            ("p90_ms", Json::num(b.p90_ms)),
+                            (
+                                "notes",
+                                Json::Arr(b.notes.iter().map(|n| Json::str(n.clone())).collect()),
+                            ),
+                        ])
+                    })
+                    .collect();
+                Json::obj([
+                    ("title", Json::str(g.title.clone())),
+                    ("benches", Json::Arr(benches)),
+                ])
+            })
+            .collect();
+        Json::obj([("groups", Json::Arr(groups))])
     }
 
     /// Write the snapshot to `path` (pretty-printed).
@@ -192,6 +233,178 @@ impl JsonEmitter {
         std::fs::write(path, self.snapshot().to_string_pretty())
             .map_err(|e| anyhow::anyhow!("write perf snapshot {}: {e}", path.display()))
     }
+}
+
+// ====================================================================
+// Baseline save/compare — the criterion baseline idiom, offline
+// ====================================================================
+
+/// Per-group bench medians distilled from a perf snapshot: the unit of
+/// regression comparison. Save one as `BENCH_baseline.json` (the full
+/// snapshot is the on-disk format — a baseline is just a *view* of it),
+/// re-load it in CI, and [`Baseline::compare`] against the current run.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    /// group title -> bench name -> p50 ms.
+    pub groups: std::collections::BTreeMap<String, std::collections::BTreeMap<String, f64>>,
+}
+
+/// One group whose median regressed past the threshold.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub group: String,
+    pub baseline_ms: f64,
+    pub current_ms: f64,
+    /// current / baseline.
+    pub ratio: f64,
+}
+
+/// Outcome of [`Baseline::compare`].
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub threshold: f64,
+    pub regressions: Vec<Regression>,
+    /// Baseline groups with no comparable benches in the current run
+    /// (renamed/removed benches surface here instead of silently passing).
+    pub missing: Vec<String>,
+    /// Groups actually compared.
+    pub checked: usize,
+}
+
+impl CompareReport {
+    /// A gate passes only when something was compared and nothing
+    /// regressed. Missing groups are reported but do not fail the gate —
+    /// bench sets evolve; the baseline refresh procedure covers renames.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.checked > 0
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regressions {
+            out.push_str(&format!(
+                "REGRESSION {}: median {:.4} ms -> {:.4} ms ({:.2}x > {:.2}x threshold)\n",
+                r.group, r.baseline_ms, r.current_ms, r.ratio, self.threshold
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("MISSING {m}: no comparable benches in current run\n"));
+        }
+        out.push_str(&format!(
+            "bench-regression: {} group(s) checked, {} regression(s), threshold {:.2}x -> {}\n",
+            self.checked,
+            self.regressions.len(),
+            self.threshold,
+            if self.passed() { "PASS" } else { "FAIL" }
+        ));
+        out
+    }
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("bench times are finite"));
+    xs[xs.len() / 2]
+}
+
+impl Baseline {
+    /// Distill a baseline from a perf snapshot (`JsonEmitter` schema).
+    pub fn from_snapshot(snap: &Json) -> anyhow::Result<Baseline> {
+        let mut groups = std::collections::BTreeMap::new();
+        for g in snap.req_arr("groups")? {
+            let title = g.req_str("title")?.to_string();
+            let mut benches = std::collections::BTreeMap::new();
+            for b in g.req_arr("benches")? {
+                benches.insert(b.req_str("name")?.to_string(), b.req_f64("p50_ms")?);
+            }
+            groups.insert(title, benches);
+        }
+        Ok(Baseline { groups })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Baseline> {
+        Baseline::from_snapshot(&Json::parse_file(path)?)
+    }
+
+    /// The current run's baseline view, straight off the emitter.
+    pub fn of_emitter(em: &JsonEmitter) -> Baseline {
+        let mut groups = std::collections::BTreeMap::new();
+        for g in &em.groups {
+            let benches = g
+                .benches
+                .iter()
+                .map(|b| (b.name.clone(), b.p50_ms))
+                .collect();
+            groups.insert(g.title.clone(), benches);
+        }
+        Baseline { groups }
+    }
+
+    /// Median of a group's bench p50s (the per-group statistic the gate
+    /// compares). `None` for unknown/empty groups.
+    pub fn group_median(&self, group: &str) -> Option<f64> {
+        let benches = self.groups.get(group)?;
+        if benches.is_empty() {
+            return None;
+        }
+        Some(median(benches.values().copied().collect()))
+    }
+
+    /// Compare `current` against `self` (the saved baseline): for every
+    /// baseline group, the median over the benches present in *both* runs
+    /// must not exceed `threshold` x the baseline median. Groups only in
+    /// `current` are ignored (new benches never fail the gate); baseline
+    /// groups with no comparable benches are reported as missing.
+    pub fn compare(&self, current: &Baseline, threshold: f64) -> CompareReport {
+        let mut regressions = Vec::new();
+        let mut missing = Vec::new();
+        let mut checked = 0usize;
+        for (title, benches) in &self.groups {
+            let shared: Vec<(f64, f64)> = current
+                .groups
+                .get(title)
+                .map(|cur| {
+                    benches
+                        .iter()
+                        .filter_map(|(name, &base)| cur.get(name).map(|&c| (base, c)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            if shared.is_empty() {
+                missing.push(title.clone());
+                continue;
+            }
+            checked += 1;
+            let baseline_ms = median(shared.iter().map(|p| p.0).collect());
+            let current_ms = median(shared.iter().map(|p| p.1).collect());
+            let ratio = if baseline_ms > 0.0 {
+                current_ms / baseline_ms
+            } else if current_ms > 0.0 {
+                f64::INFINITY
+            } else {
+                1.0
+            };
+            if ratio > threshold {
+                regressions.push(Regression {
+                    group: title.clone(),
+                    baseline_ms,
+                    current_ms,
+                    ratio,
+                });
+            }
+        }
+        CompareReport { threshold, regressions, missing, checked }
+    }
+}
+
+/// The gate's threshold: `BENCH_REGRESSION_THRESHOLD` env (a ratio, e.g.
+/// `4.0` = fail past 4x the baseline median) or `default`. Env-tunable so
+/// noisy shared runners can loosen the gate without a code change.
+pub fn regression_threshold(default: f64) -> f64 {
+    std::env::var("BENCH_REGRESSION_THRESHOLD")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|t| *t > 0.0)
+        .unwrap_or(default)
 }
 
 #[cfg(test)]
@@ -259,6 +472,105 @@ mod tests {
         let back = Json::parse_file(&path).unwrap();
         assert_eq!(back, snap);
         let _ = std::fs::remove_file(&path);
+    }
+
+    fn baseline_of(groups: &[(&str, &[(&str, f64)])]) -> Baseline {
+        let mut b = Baseline::default();
+        for (title, benches) in groups {
+            b.groups.insert(
+                title.to_string(),
+                benches.iter().map(|(n, v)| (n.to_string(), *v)).collect(),
+            );
+        }
+        b
+    }
+
+    #[test]
+    fn baseline_distills_snapshot_and_roundtrips_through_disk() {
+        let cfg = BenchConfig::smoke();
+        let mut g = Group::new("baseline-test");
+        g.run("a", &cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        g.run("b", &cfg, || {
+            std::hint::black_box(2 + 2);
+        });
+        let mut em = JsonEmitter::new();
+        em.add(&g);
+        g.finish();
+        let direct = Baseline::of_emitter(&em);
+        let via_snapshot = Baseline::from_snapshot(&em.snapshot()).unwrap();
+        assert_eq!(direct.groups, via_snapshot.groups);
+        assert!(direct.group_median("baseline-test").is_some());
+        assert_eq!(direct.group_median("nope"), None);
+        let path = std::env::temp_dir().join("benchkit_baseline_test.json");
+        em.write(&path).unwrap();
+        let loaded = Baseline::load(&path).unwrap();
+        assert_eq!(loaded.groups, direct.groups);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The gate's teeth: an injected slowdown past the threshold fails the
+    /// compare, and the identical tree passes. This is the local proof the
+    /// CI bench-regression job relies on (the job itself runs the same
+    /// `compare` through the microbench `--baseline` flag).
+    #[test]
+    fn compare_fails_on_injected_slowdown_and_passes_on_parity() {
+        let base =
+            baseline_of(&[("tokenizer-encode", &[("encode 3ex", 1.0), ("encode 1ex", 0.5)])]);
+        // Parity: identical medians pass at any threshold > 1.
+        let report = base.compare(&base.clone(), 1.5);
+        assert!(report.passed(), "{}", report.render());
+        assert_eq!(report.checked, 1);
+        // Injected slowdown: every bench 3x slower must fail a 2x gate...
+        let slowed =
+            baseline_of(&[("tokenizer-encode", &[("encode 3ex", 3.0), ("encode 1ex", 1.5)])]);
+        let report = base.compare(&slowed, 2.0);
+        assert!(!report.passed());
+        assert_eq!(report.regressions.len(), 1);
+        assert!((report.regressions[0].ratio - 3.0).abs() < 1e-9);
+        assert!(report.render().contains("REGRESSION tokenizer-encode"));
+        // ...and pass once the gate is loosened past the slowdown.
+        assert!(base.compare(&slowed, 4.0).passed());
+        // A speedup never trips the gate.
+        let faster = baseline_of(&[(
+            "tokenizer-encode",
+            &[("encode 3ex", 0.2), ("encode 1ex", 0.1)],
+        )]);
+        assert!(base.compare(&faster, 2.0).passed());
+    }
+
+    #[test]
+    fn compare_reports_missing_groups_and_ignores_new_ones() {
+        let base = baseline_of(&[("gone", &[("x", 1.0)]), ("kept", &[("y", 1.0)])]);
+        let current =
+            baseline_of(&[("kept", &[("y", 1.0)]), ("brand-new", &[("z", 100.0)])]);
+        let report = base.compare(&current, 2.0);
+        assert_eq!(report.missing, vec!["gone".to_string()]);
+        assert_eq!(report.checked, 1);
+        assert!(report.passed(), "missing groups warn, new groups are ignored");
+        // Renamed benches inside a surviving group also surface as missing.
+        let renamed = baseline_of(&[("gone", &[("x2", 1.0)]), ("kept", &[("y", 1.0)])]);
+        let report = base.compare(&renamed, 2.0);
+        assert_eq!(report.missing, vec!["gone".to_string()]);
+        // Comparing against an empty run: nothing checked -> not a pass.
+        let report = base.compare(&Baseline::default(), 2.0);
+        assert!(!report.passed());
+        assert_eq!(report.checked, 0);
+    }
+
+    #[test]
+    fn threshold_env_parsing_falls_back_on_garbage() {
+        // Avoid cross-test env races: this test owns the variable.
+        std::env::remove_var("BENCH_REGRESSION_THRESHOLD");
+        assert_eq!(regression_threshold(2.0), 2.0);
+        std::env::set_var("BENCH_REGRESSION_THRESHOLD", "3.5");
+        assert_eq!(regression_threshold(2.0), 3.5);
+        std::env::set_var("BENCH_REGRESSION_THRESHOLD", "not-a-number");
+        assert_eq!(regression_threshold(2.0), 2.0);
+        std::env::set_var("BENCH_REGRESSION_THRESHOLD", "-1");
+        assert_eq!(regression_threshold(2.0), 2.0);
+        std::env::remove_var("BENCH_REGRESSION_THRESHOLD");
     }
 
     #[test]

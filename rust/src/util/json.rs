@@ -1,12 +1,32 @@
 //! Minimal JSON parser / serializer (offline build has no serde).
 //!
-//! Supports the full JSON grammar; numbers are stored as f64 (all values in
-//! our artifacts fit exactly: token ids, scales, small ints). Used to load
-//! dataset / manifest artifacts produced by the Python compile path and to
-//! emit experiment reports.
+//! Two layers, in the hifijson slice/iterator style:
+//!
+//! - **Zero-copy lexer.** [`Lexer`] is a pull parser yielding [`Event`]s
+//!   over the input bytes. String events carry a [`JsonStr`]: the raw
+//!   slice between the quotes, escape syntax validated but *unresolved* —
+//!   [`JsonStr::unescape`] resolves lazily and borrows (`Cow::Borrowed`)
+//!   whenever the raw slice contains no escapes, which is the common case
+//!   for manifests and datasets. [`JsonSlice`] is the borrowed tree view
+//!   built from the events: no owned `String` is allocated anywhere on
+//!   its happy path.
+//! - **Owned tree.** [`Json`] is the legacy owned value, now a thin
+//!   `.to_owned()` layer over the same lexer (both `Json::parse` and
+//!   `JsonSlice::parse` share one grammar implementation). Serialization
+//!   is single-pass [`Json::write_into`] with capacity pre-sizing via
+//!   [`Json::size_hint`].
+//!
+//! Numbers are stored as f64 (all values in our artifacts fit exactly:
+//! token ids, scales, small ints). Errors carry the byte offset *and* the
+//! 1-based line/column of the failure point.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
-use std::fmt;
+use std::fmt::{self, Write as _};
+
+/// Containers deeper than this are rejected instead of risking stack
+/// exhaustion in the recursive tree builders (fuzz inputs like `[[[[…`).
+const MAX_DEPTH: usize = 128;
 
 /// A JSON value. Object keys are ordered (BTreeMap) for deterministic output.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,16 +42,693 @@ pub enum Json {
 #[derive(Debug)]
 pub struct JsonError {
     pub msg: String,
+    /// Byte offset of the failure point in the input.
     pub offset: usize,
+    /// 1-based line of the failure point.
+    pub line: usize,
+    /// 1-based column (in bytes) of the failure point.
+    pub col: usize,
+}
+
+impl JsonError {
+    /// Build an error at `offset`, deriving line/column by scanning the
+    /// prefix — error paths only, so the scan cost is irrelevant.
+    fn at(input: &[u8], offset: usize, msg: &str) -> JsonError {
+        let offset = offset.min(input.len());
+        let mut line = 1;
+        let mut col = 1;
+        for &b in &input[..offset] {
+            if b == b'\n' {
+                line += 1;
+                col = 1;
+            } else {
+                col += 1;
+            }
+        }
+        JsonError { msg: msg.to_string(), offset, line, col }
+    }
 }
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+        write!(
+            f,
+            "json error at line {}, column {} (byte {}): {}",
+            self.line, self.col, self.offset, self.msg
+        )
     }
 }
 
 impl std::error::Error for JsonError {}
+
+// ====================================================================
+// Zero-copy layer: JsonStr, Event, Lexer, JsonSlice
+// ====================================================================
+
+/// A borrowed JSON string: the raw bytes between the quotes, escape
+/// syntax already validated by the lexer but not resolved. Equality is
+/// raw-syntax equality; use [`JsonStr::eq_plain`] / [`JsonStr::unescape`]
+/// for logical comparison.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JsonStr<'a> {
+    raw: &'a str,
+    escaped: bool,
+}
+
+impl<'a> JsonStr<'a> {
+    /// Wrap an already-unescaped string (e.g. one held by an owned
+    /// [`Json`]): the raw slice *is* the logical value.
+    pub fn plain(s: &'a str) -> JsonStr<'a> {
+        JsonStr { raw: s, escaped: false }
+    }
+
+    /// The raw slice (escapes unresolved).
+    pub fn raw(&self) -> &'a str {
+        self.raw
+    }
+
+    pub fn is_escaped(&self) -> bool {
+        self.escaped
+    }
+
+    /// The logical string, resolving escapes lazily: borrowed straight
+    /// from the input when the raw slice contains none (the happy path —
+    /// no allocation).
+    pub fn unescape(&self) -> Cow<'a, str> {
+        if !self.escaped {
+            return Cow::Borrowed(self.raw);
+        }
+        let b = self.raw.as_bytes();
+        let mut s = String::with_capacity(b.len());
+        let mut i = 0;
+        while i < b.len() {
+            if b[i] != b'\\' {
+                // Copy a run of literal bytes verbatim; run boundaries are
+                // ASCII (backslash / start / end), so the slice is valid.
+                let start = i;
+                while i < b.len() && b[i] != b'\\' {
+                    i += 1;
+                }
+                s.push_str(&self.raw[start..i]);
+                continue;
+            }
+            i += 1;
+            match b[i] {
+                b'"' => s.push('"'),
+                b'\\' => s.push('\\'),
+                b'/' => s.push('/'),
+                b'n' => s.push('\n'),
+                b't' => s.push('\t'),
+                b'r' => s.push('\r'),
+                b'b' => s.push('\u{0008}'),
+                b'f' => s.push('\u{000C}'),
+                b'u' => {
+                    let cp = hex4(&b[i + 1..i + 5]);
+                    if (0xD800..0xDC00).contains(&cp) {
+                        let lo = hex4(&b[i + 7..i + 11]);
+                        let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                        s.push(char::from_u32(c).expect("surrogate pair validated at lex time"));
+                        i += 10;
+                    } else {
+                        s.push(char::from_u32(cp).expect("codepoint validated at lex time"));
+                        i += 4;
+                    }
+                }
+                _ => unreachable!("escape validated at lex time"),
+            }
+            i += 1;
+        }
+        Cow::Owned(s)
+    }
+
+    /// Logical equality against a plain (unescaped) string, borrowing
+    /// when possible.
+    pub fn eq_plain(&self, s: &str) -> bool {
+        if !self.escaped {
+            self.raw == s
+        } else {
+            self.unescape() == s
+        }
+    }
+}
+
+/// Decode 4 hex digits validated at lex time.
+fn hex4(b: &[u8]) -> u32 {
+    let hex = std::str::from_utf8(&b[..4]).expect("hex digits are ascii");
+    u32::from_str_radix(hex, 16).expect("hex escape validated at lex time")
+}
+
+/// One lexer event. Containers are bracketed by `ArrStart`/`ArrEnd` and
+/// `ObjStart`/`ObjEnd`; inside an object every value is preceded by its
+/// `Key` event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(JsonStr<'a>),
+    ArrStart,
+    ArrEnd,
+    ObjStart,
+    Key(JsonStr<'a>),
+    ObjEnd,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Expect {
+    Value,
+    ValueOrArrEnd,
+    KeyOrObjEnd,
+    Key,
+    CommaOrEnd,
+    Done,
+}
+
+/// Incremental pull lexer over borrowed input. Drive it directly via
+/// [`Lexer::next_event`] (or the `Iterator` impl), or through the tree
+/// builders [`JsonSlice::parse`] / [`Json::parse`]. The state machine
+/// enforces the full JSON grammar, so a well-typed event stream is
+/// guaranteed: keys only inside objects, ends matching starts.
+pub struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    /// Open containers: `true` = object, `false` = array.
+    stack: Vec<bool>,
+    expect: Expect,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(input: &'a str) -> Lexer<'a> {
+        Lexer { b: input.as_bytes(), i: 0, stack: Vec::new(), expect: Expect::Value }
+    }
+
+    /// Current byte offset (error reporting / diagnostics).
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError::at(self.b, self.i, msg)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn post_value(&mut self) {
+        self.expect = if self.stack.is_empty() { Expect::Done } else { Expect::CommaOrEnd };
+    }
+
+    /// Pull the next event; `Ok(None)` at a clean end of input. After an
+    /// error the lexer state is unspecified — stop pulling.
+    pub fn next_event(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        self.skip_ws();
+        match self.expect {
+            Expect::Done => {
+                if self.i == self.b.len() {
+                    Ok(None)
+                } else {
+                    Err(self.err("trailing data"))
+                }
+            }
+            Expect::Value => self.value_event().map(Some),
+            Expect::ValueOrArrEnd => {
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    self.stack.pop();
+                    self.post_value();
+                    Ok(Some(Event::ArrEnd))
+                } else {
+                    self.value_event().map(Some)
+                }
+            }
+            Expect::KeyOrObjEnd => {
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    self.stack.pop();
+                    self.post_value();
+                    Ok(Some(Event::ObjEnd))
+                } else {
+                    self.key_event().map(Some)
+                }
+            }
+            Expect::Key => self.key_event().map(Some),
+            Expect::CommaOrEnd => {
+                let in_obj = *self.stack.last().expect("CommaOrEnd implies an open container");
+                match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                        self.expect = if in_obj { Expect::Key } else { Expect::Value };
+                        self.next_event()
+                    }
+                    Some(b']') if !in_obj => {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.post_value();
+                        Ok(Some(Event::ArrEnd))
+                    }
+                    Some(b'}') if in_obj => {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.post_value();
+                        Ok(Some(Event::ObjEnd))
+                    }
+                    _ => Err(self.err(if in_obj {
+                        "expected `,` or `}`"
+                    } else {
+                        "expected `,` or `]`"
+                    })),
+                }
+            }
+        }
+    }
+
+    /// Assert the input is fully consumed (used by the tree builders).
+    fn finish(&mut self) -> Result<(), JsonError> {
+        match self.next_event()? {
+            None => Ok(()),
+            Some(_) => unreachable!("finish called before the top-level value completed"),
+        }
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.stack.push(true);
+                self.expect = Expect::KeyOrObjEnd;
+                Ok(Event::ObjStart)
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.stack.push(false);
+                self.expect = Expect::ValueOrArrEnd;
+                Ok(Event::ArrStart)
+            }
+            Some(b'"') => {
+                let s = self.string_raw()?;
+                self.post_value();
+                Ok(Event::Str(s))
+            }
+            Some(b't') => {
+                self.lit("true")?;
+                self.post_value();
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                self.post_value();
+                Ok(Event::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                self.post_value();
+                Ok(Event::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let x = self.number()?;
+                self.post_value();
+                Ok(Event::Num(x))
+            }
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected `\"`"));
+        }
+        let s = self.string_raw()?;
+        self.skip_ws();
+        if self.peek() != Some(b':') {
+            return Err(self.err("expected `:`"));
+        }
+        self.i += 1;
+        self.expect = Expect::Value;
+        Ok(Event::Key(s))
+    }
+
+    fn lit(&mut self, word: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("number bytes are ascii");
+        text.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+
+    /// Lex one string: scan to the closing quote validating escape syntax
+    /// (including surrogate pairing) and UTF-8, but build nothing — the
+    /// returned [`JsonStr`] borrows the raw span.
+    fn string_raw(&mut self) -> Result<JsonStr<'a>, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.i += 1;
+        let start = self.i;
+        let mut escaped = false;
+        loop {
+            match self.b.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let raw = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| {
+                        JsonError::at(self.b, start + e.valid_up_to(), "invalid utf-8")
+                    })?;
+                    self.i += 1;
+                    return Ok(JsonStr { raw, escaped });
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.i += 1;
+                    self.validate_escape()?;
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    /// Validate the escape starting at `self.i` (the byte after the
+    /// backslash) and advance past it. Full validation here is what makes
+    /// [`JsonStr::unescape`] infallible.
+    fn validate_escape(&mut self) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {
+                self.i += 1;
+                Ok(())
+            }
+            Some(b'u') => {
+                let cp = self.hex4_at(self.i + 1)?;
+                if (0xD800..0xDC00).contains(&cp) {
+                    // High surrogate: must pair with \uDC00-\uDFFF.
+                    if self.b.get(self.i + 5) != Some(&b'\\')
+                        || self.b.get(self.i + 6) != Some(&b'u')
+                    {
+                        return Err(self.err("unpaired surrogate"));
+                    }
+                    let lo = self.hex4_at(self.i + 7)?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(self.err("invalid low surrogate"));
+                    }
+                    self.i += 11;
+                } else {
+                    if char::from_u32(cp).is_none() {
+                        return Err(self.err("bad codepoint"));
+                    }
+                    self.i += 5;
+                }
+                Ok(())
+            }
+            _ => Err(self.err("bad escape")),
+        }
+    }
+
+    fn hex4_at(&self, at: usize) -> Result<u32, JsonError> {
+        let bytes = self.b.get(at..at + 4).ok_or_else(|| self.err("truncated \\u escape"))?;
+        let hex = std::str::from_utf8(bytes).map_err(|_| self.err("bad \\u escape"))?;
+        if hex.starts_with('+') {
+            // from_str_radix tolerates a leading sign; JSON does not.
+            return Err(self.err("bad \\u escape"));
+        }
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
+    }
+}
+
+impl<'a> Iterator for Lexer<'a> {
+    type Item = Result<Event<'a>, JsonError>;
+
+    /// Yields events until the clean end of input; an `Err` item means the
+    /// input is malformed (stop iterating — the lexer state is unspecified
+    /// after an error).
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_event().transpose()
+    }
+}
+
+/// Borrowed JSON tree: strings are [`JsonStr`] slices into the input,
+/// resolved lazily. The mirror of [`Json`] for read-mostly paths —
+/// convert with [`JsonSlice::to_owned`] where ownership is needed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonSlice<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(JsonStr<'a>),
+    Arr(Vec<JsonSlice<'a>>),
+    /// Members in document order. Duplicate keys are preserved here;
+    /// [`JsonSlice::get`] and [`JsonSlice::to_owned`] resolve to the last
+    /// occurrence, matching the owned parser's insert semantics.
+    Obj(Vec<(JsonStr<'a>, JsonSlice<'a>)>),
+}
+
+static NULL_SLICE: JsonSlice<'static> = JsonSlice::Null;
+
+impl<'a> JsonSlice<'a> {
+    /// Parse a borrowed tree off `input` without allocating any owned
+    /// string (the zero-copy path).
+    pub fn parse(input: &'a str) -> Result<JsonSlice<'a>, JsonError> {
+        let mut lx = Lexer::new(input);
+        let ev = match lx.next_event()? {
+            Some(ev) => ev,
+            None => unreachable!("Expect::Value never yields a clean end"),
+        };
+        let v = build_slice(&mut lx, ev, 0)?;
+        lx.finish()?;
+        Ok(v)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonSlice::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|x| x as i64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(|x| if x >= 0.0 { Some(x as usize) } else { None })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonSlice::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The string value, lazily unescaped (borrowed when escape-free).
+    pub fn as_str(&self) -> Option<Cow<'a, str>> {
+        match self {
+            JsonSlice::Str(s) => Some(s.unescape()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonSlice<'a>]> {
+        match self {
+            JsonSlice::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(JsonStr<'a>, JsonSlice<'a>)]> {
+        match self {
+            JsonSlice::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup (last occurrence wins, mirroring the owned
+    /// tree); `JsonSlice::Null` if missing or not an object.
+    pub fn get(&self, key: &str) -> &JsonSlice<'a> {
+        match self {
+            JsonSlice::Obj(m) => m
+                .iter()
+                .rev()
+                .find(|(k, _)| k.eq_plain(key))
+                .map(|(_, v)| v)
+                .unwrap_or(&NULL_SLICE),
+            _ => &NULL_SLICE,
+        }
+    }
+
+    /// Array index; `JsonSlice::Null` when out of bounds.
+    pub fn idx(&self, i: usize) -> &JsonSlice<'a> {
+        match self {
+            JsonSlice::Arr(v) => v.get(i).unwrap_or(&NULL_SLICE),
+            _ => &NULL_SLICE,
+        }
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<Cow<'a, str>> {
+        self.get(key)
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field `{key}`"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field `{key}`"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid number field `{key}`"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[JsonSlice<'a>]> {
+        self.get(key)
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid array field `{key}`"))
+    }
+
+    pub fn to_f64_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    pub fn to_u32_vec(&self) -> Option<Vec<u32>> {
+        self.as_arr()?.iter().map(|v| v.as_f64().map(|x| x as u32)).collect()
+    }
+
+    /// Materialize the owned tree (the only point strings are copied).
+    pub fn to_owned(&self) -> Json {
+        match self {
+            JsonSlice::Null => Json::Null,
+            JsonSlice::Bool(b) => Json::Bool(*b),
+            JsonSlice::Num(x) => Json::Num(*x),
+            JsonSlice::Str(s) => Json::Str(s.unescape().into_owned()),
+            JsonSlice::Arr(v) => Json::Arr(v.iter().map(JsonSlice::to_owned).collect()),
+            JsonSlice::Obj(m) => Json::Obj(
+                m.iter().map(|(k, v)| (k.unescape().into_owned(), v.to_owned())).collect(),
+            ),
+        }
+    }
+}
+
+fn build_slice<'a>(
+    lx: &mut Lexer<'a>,
+    ev: Event<'a>,
+    depth: usize,
+) -> Result<JsonSlice<'a>, JsonError> {
+    if depth > MAX_DEPTH {
+        return Err(lx.err("nesting too deep"));
+    }
+    Ok(match ev {
+        Event::Null => JsonSlice::Null,
+        Event::Bool(b) => JsonSlice::Bool(b),
+        Event::Num(x) => JsonSlice::Num(x),
+        Event::Str(s) => JsonSlice::Str(s),
+        Event::ArrStart => {
+            let mut v = Vec::new();
+            loop {
+                match lx.next_event()? {
+                    Some(Event::ArrEnd) => break JsonSlice::Arr(v),
+                    Some(ev) => v.push(build_slice(lx, ev, depth + 1)?),
+                    None => unreachable!("lexer closes containers before a clean end"),
+                }
+            }
+        }
+        Event::ObjStart => {
+            let mut m = Vec::new();
+            loop {
+                match lx.next_event()? {
+                    Some(Event::ObjEnd) => break JsonSlice::Obj(m),
+                    Some(Event::Key(k)) => {
+                        let vev = match lx.next_event()? {
+                            Some(ev) => ev,
+                            None => unreachable!("a value always follows a key"),
+                        };
+                        m.push((k, build_slice(lx, vev, depth + 1)?));
+                    }
+                    _ => unreachable!("objects yield only Key/ObjEnd events"),
+                }
+            }
+        }
+        Event::ArrEnd | Event::ObjEnd | Event::Key(_) => {
+            unreachable!("container-end/key event in value position")
+        }
+    })
+}
+
+fn build_owned(lx: &mut Lexer<'_>, ev: Event<'_>, depth: usize) -> Result<Json, JsonError> {
+    if depth > MAX_DEPTH {
+        return Err(lx.err("nesting too deep"));
+    }
+    Ok(match ev {
+        Event::Null => Json::Null,
+        Event::Bool(b) => Json::Bool(b),
+        Event::Num(x) => Json::Num(x),
+        Event::Str(s) => Json::Str(s.unescape().into_owned()),
+        Event::ArrStart => {
+            let mut v = Vec::new();
+            loop {
+                match lx.next_event()? {
+                    Some(Event::ArrEnd) => break Json::Arr(v),
+                    Some(ev) => v.push(build_owned(lx, ev, depth + 1)?),
+                    None => unreachable!("lexer closes containers before a clean end"),
+                }
+            }
+        }
+        Event::ObjStart => {
+            let mut m = BTreeMap::new();
+            loop {
+                match lx.next_event()? {
+                    Some(Event::ObjEnd) => break Json::Obj(m),
+                    Some(Event::Key(k)) => {
+                        let vev = match lx.next_event()? {
+                            Some(ev) => ev,
+                            None => unreachable!("a value always follows a key"),
+                        };
+                        m.insert(k.unescape().into_owned(), build_owned(lx, vev, depth + 1)?);
+                    }
+                    _ => unreachable!("objects yield only Key/ObjEnd events"),
+                }
+            }
+        }
+        Event::ArrEnd | Event::ObjEnd | Event::Key(_) => {
+            unreachable!("container-end/key event in value position")
+        }
+    })
+}
+
+// ====================================================================
+// Owned layer
+// ====================================================================
 
 impl Json {
     // ---------- accessors ----------
@@ -76,6 +773,20 @@ impl Json {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
+        }
+    }
+
+    /// Borrowed view of the owned tree (strings borrow as plain text).
+    pub fn as_slice(&self) -> JsonSlice<'_> {
+        match self {
+            Json::Null => JsonSlice::Null,
+            Json::Bool(b) => JsonSlice::Bool(*b),
+            Json::Num(x) => JsonSlice::Num(*x),
+            Json::Str(s) => JsonSlice::Str(JsonStr::plain(s)),
+            Json::Arr(v) => JsonSlice::Arr(v.iter().map(Json::as_slice).collect()),
+            Json::Obj(m) => JsonSlice::Obj(
+                m.iter().map(|(k, v)| (JsonStr::plain(k), v.as_slice())).collect(),
+            ),
         }
     }
 
@@ -136,7 +847,12 @@ impl Json {
 
     // ---------- constructors ----------
 
-    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    /// Build an object from `(key, value)` pairs — any iterator (slice,
+    /// array, `vec![…]`) works; no `Vec` is forced on the caller.
+    pub fn obj<'a, I>(pairs: I) -> Json
+    where
+        I: IntoIterator<Item = (&'a str, Json)>,
+    {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
@@ -158,17 +874,16 @@ impl Json {
 
     // ---------- parse ----------
 
+    /// Parse an owned tree. Shares the grammar with [`JsonSlice::parse`]
+    /// (one lexer); strings are copied only when building the owned nodes.
     pub fn parse(input: &str) -> Result<Json, JsonError> {
-        let mut p = Parser {
-            b: input.as_bytes(),
-            i: 0,
+        let mut lx = Lexer::new(input);
+        let ev = match lx.next_event()? {
+            Some(ev) => ev,
+            None => unreachable!("Expect::Value never yields a clean end"),
         };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing data"));
-        }
+        let v = build_owned(&mut lx, ev, 0)?;
+        lx.finish()?;
         Ok(v)
     }
 
@@ -180,14 +895,39 @@ impl Json {
 
     // ---------- serialize ----------
 
+    /// Estimated compact serialized length, used to pre-size buffers.
+    pub fn size_hint(&self) -> usize {
+        match self {
+            Json::Null | Json::Bool(_) => 5,
+            Json::Num(_) => 12,
+            Json::Str(s) => s.len() + 2,
+            Json::Arr(v) => 2 + v.iter().map(|x| x.size_hint() + 1).sum::<usize>(),
+            Json::Obj(m) => {
+                2 + m.iter().map(|(k, v)| k.len() + 4 + v.size_hint()).sum::<usize>()
+            }
+        }
+    }
+
+    /// Compact serialization, pre-sized via [`Json::size_hint`].
+    /// Deliberately inherent (no `Display`): serialization is a one-shot
+    /// sized write, not a `fmt` stream.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
+        let mut s = String::with_capacity(self.size_hint());
+        self.write_into(&mut s);
         s
     }
 
+    /// Single-pass compact serialization appended to `out` (no
+    /// intermediate strings; numbers format straight into the buffer).
+    pub fn write_into(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     pub fn to_string_pretty(&self) -> String {
-        let mut s = String::new();
+        // Indentation roughly doubles small documents; growth past the
+        // estimate is amortized.
+        let mut s = String::with_capacity(self.size_hint() * 2);
         self.write(&mut s, Some(2), 0);
         s.push('\n');
         s
@@ -200,9 +940,9 @@ impl Json {
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 9.0e15 {
-                    out.push_str(&format!("{}", *x as i64));
+                    let _ = write!(out, "{}", *x as i64);
                 } else {
-                    out.push_str(&format!("{x}"));
+                    let _ = write!(out, "{x}");
                 }
             }
             Json::Str(s) => write_escaped(out, s),
@@ -261,216 +1001,13 @@ fn write_escaped(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }
     out.push('"');
-}
-
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError {
-            msg: msg.to_string(),
-            offset: self.i,
-        }
-    }
-
-    fn skip_ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
-            self.i += 1;
-        }
-    }
-
-    fn peek(&self) -> Option<u8> {
-        self.b.get(self.i).copied()
-    }
-
-    fn eat(&mut self, c: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected `{}`", c as char)))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        }
-    }
-
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
-            self.i += word.len();
-            Ok(v)
-        } else {
-            Err(self.err("invalid literal"))
-        }
-    }
-
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.i;
-        if self.peek() == Some(b'-') {
-            self.i += 1;
-        }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.i += 1;
-        }
-        if self.peek() == Some(b'.') {
-            self.i += 1;
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
-            self.i += 1;
-            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
-                self.i += 1;
-            }
-            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-                self.i += 1;
-            }
-        }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            match self.peek() {
-                None => return Err(self.err("unterminated string")),
-                Some(b'"') => {
-                    self.i += 1;
-                    return Ok(s);
-                }
-                Some(b'\\') => {
-                    self.i += 1;
-                    match self.peek() {
-                        Some(b'"') => s.push('"'),
-                        Some(b'\\') => s.push('\\'),
-                        Some(b'/') => s.push('/'),
-                        Some(b'n') => s.push('\n'),
-                        Some(b't') => s.push('\t'),
-                        Some(b'r') => s.push('\r'),
-                        Some(b'b') => s.push('\u{0008}'),
-                        Some(b'f') => s.push('\u{000C}'),
-                        Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("truncated \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs: decode \uD800-\uDBFF + \uDC00-\uDFFF.
-                            if (0xD800..0xDC00).contains(&cp) {
-                                if self.b.len() < self.i + 11
-                                    || self.b[self.i + 5] != b'\\'
-                                    || self.b[self.i + 6] != b'u'
-                                {
-                                    return Err(self.err("unpaired surrogate"));
-                                }
-                                let hex2 =
-                                    std::str::from_utf8(&self.b[self.i + 7..self.i + 11]).unwrap();
-                                let lo = u32::from_str_radix(hex2, 16)
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                                if !(0xDC00..0xE000).contains(&lo) {
-                                    return Err(self.err("invalid low surrogate"));
-                                }
-                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                                s.push(char::from_u32(c).ok_or_else(|| self.err("bad codepoint"))?);
-                                self.i += 10;
-                            } else {
-                                s.push(
-                                    char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?,
-                                );
-                                self.i += 4;
-                            }
-                        }
-                        _ => return Err(self.err("bad escape")),
-                    }
-                    self.i += 1;
-                }
-                Some(_) => {
-                    // Consume one UTF-8 encoded char.
-                    let rest = std::str::from_utf8(&self.b[self.i..])
-                        .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
-                    s.push(c);
-                    self.i += c.len_utf8();
-                }
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'[')?;
-        let mut v = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.i += 1;
-            return Ok(Json::Arr(v));
-        }
-        loop {
-            self.skip_ws();
-            v.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b']') => {
-                    self.i += 1;
-                    return Ok(Json::Arr(v));
-                }
-                _ => return Err(self.err("expected `,` or `]`")),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.eat(b'{')?;
-        let mut m = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
-            return Ok(Json::Obj(m));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.eat(b':')?;
-            self.skip_ws();
-            let val = self.value()?;
-            m.insert(key, val);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => self.i += 1,
-                Some(b'}') => {
-                    self.i += 1;
-                    return Ok(Json::Obj(m));
-                }
-                _ => return Err(self.err("expected `,` or `}`")),
-            }
-        }
-    }
 }
 
 #[cfg(test)]
@@ -518,12 +1055,35 @@ mod tests {
     }
 
     #[test]
+    fn surrogate_pair_escapes() {
+        // U+1F600 encoded as the escaped surrogate pair D83D/DE00.
+        let v = Json::parse("\"\\uD83D\\uDE00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        assert!(Json::parse(r#""\uD83Dx""#).is_err()); // unpaired high
+        assert!(Json::parse(r#""\uDE00""#).is_err()); // lone low
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("01x").is_err());
         assert!(Json::parse("\"abc").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("[1 2]").is_err());
+        assert!(Json::parse("{,}").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_overflowed() {
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        assert!(JsonSlice::parse(&deep).is_err());
+        let mut ok = "[".repeat(MAX_DEPTH);
+        ok.push('1');
+        ok.push_str(&"]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]
@@ -537,5 +1097,133 @@ mod tests {
         let v = Json::arr_u32(&[0, 7, 4_000_000_000]);
         let back = Json::parse(&v.to_string()).unwrap().to_u32_vec().unwrap();
         assert_eq!(back, vec![0, 7, 4_000_000_000]);
+    }
+
+    // ---------- zero-copy layer ----------
+
+    #[test]
+    fn lexer_yields_the_event_stream() {
+        let mut lx = Lexer::new(r#"{"a":[1,true],"b":"x"}"#);
+        let mut evs = Vec::new();
+        while let Some(ev) = lx.next_event().unwrap() {
+            evs.push(ev);
+        }
+        assert_eq!(
+            evs,
+            vec![
+                Event::ObjStart,
+                Event::Key(JsonStr::plain("a")),
+                Event::ArrStart,
+                Event::Num(1.0),
+                Event::Bool(true),
+                Event::ArrEnd,
+                Event::Key(JsonStr::plain("b")),
+                Event::Str(JsonStr::plain("x")),
+                Event::ObjEnd,
+            ]
+        );
+    }
+
+    #[test]
+    fn slice_parse_borrows_escape_free_strings() {
+        let doc = r#"{"name":"plain","esc":"a\nb"}"#;
+        let v = JsonSlice::parse(doc).unwrap();
+        match v.get("name").as_str().unwrap() {
+            Cow::Borrowed(s) => assert_eq!(s, "plain"),
+            Cow::Owned(_) => panic!("escape-free string must borrow"),
+        }
+        match v.get("esc").as_str().unwrap() {
+            Cow::Owned(s) => assert_eq!(s, "a\nb"),
+            Cow::Borrowed(_) => panic!("escaped string must resolve"),
+        }
+    }
+
+    #[test]
+    fn slice_to_owned_matches_owned_parse() {
+        let doc = r#"{"a":[1,2.5,{"s":"x\ty","u":"é😀"}],"b":null,"c":false}"#;
+        assert_eq!(JsonSlice::parse(doc).unwrap().to_owned(), Json::parse(doc).unwrap());
+    }
+
+    #[test]
+    fn slice_accessors_mirror_owned() {
+        let doc = r#"{"n":3,"arr":[10,20],"s":"hi","f":false}"#;
+        let v = JsonSlice::parse(doc).unwrap();
+        assert_eq!(v.get("n").as_usize(), Some(3));
+        assert_eq!(v.get("arr").to_u32_vec(), Some(vec![10, 20]));
+        assert_eq!(v.get("arr").idx(1).as_f64(), Some(20.0));
+        assert_eq!(v.get("f").as_bool(), Some(false));
+        assert_eq!(v.req_str("s").unwrap(), "hi");
+        assert!(v.req_str("missing").is_err());
+        assert_eq!(v.get("nope"), &JsonSlice::Null);
+        assert_eq!(v.idx(0), &JsonSlice::Null);
+    }
+
+    #[test]
+    fn owned_as_slice_roundtrips() {
+        let v = Json::parse(r#"{"a":[1,"two"],"b":{"c":null}}"#).unwrap();
+        assert_eq!(v.as_slice().to_owned(), v);
+        assert_eq!(v.as_slice().get("a").idx(1).as_str().unwrap(), "two");
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins_on_both_paths() {
+        let doc = r#"{"k":1,"k":2}"#;
+        assert_eq!(Json::parse(doc).unwrap().get("k").as_f64(), Some(2.0));
+        let s = JsonSlice::parse(doc).unwrap();
+        assert_eq!(s.get("k").as_f64(), Some(2.0));
+        assert_eq!(s.to_owned().get("k").as_f64(), Some(2.0));
+    }
+
+    // ---------- error positions ----------
+
+    #[test]
+    fn errors_carry_line_and_column() {
+        // Error on line 3: "tasks" value is a bare word.
+        let doc = "{\n  \"name\": \"x\",\n  \"tasks\": nope\n}";
+        let err = Json::parse(doc).unwrap_err();
+        assert_eq!(err.line, 3);
+        assert_eq!(err.col, 12);
+        assert_eq!(err.offset, 30);
+        let shown = err.to_string();
+        assert!(shown.contains("line 3"), "{shown}");
+        assert!(shown.contains("column 12"), "{shown}");
+        // The slice path reports the identical position.
+        let serr = JsonSlice::parse(doc).unwrap_err();
+        assert_eq!((serr.line, serr.col, serr.offset), (err.line, err.col, err.offset));
+    }
+
+    #[test]
+    fn error_position_on_first_line_counts_from_one() {
+        let err = Json::parse("[1,]").unwrap_err();
+        assert_eq!((err.line, err.col), (1, 4));
+    }
+
+    // ---------- constructors / serialization ----------
+
+    #[test]
+    fn obj_takes_arrays_and_iterators() {
+        let from_arr = Json::obj([("a", Json::num(1.0)), ("b", Json::str("x"))]);
+        let from_vec = Json::obj(vec![("a", Json::num(1.0)), ("b", Json::str("x"))]);
+        let from_iter = Json::obj([("a", 1.0), ("b", 0.0)].iter().map(|(k, v)| {
+            (*k, if *k == "b" { Json::str("x") } else { Json::num(*v) })
+        }));
+        assert_eq!(from_arr, from_vec);
+        assert_eq!(from_arr, from_iter);
+    }
+
+    #[test]
+    fn write_into_appends_single_pass() {
+        let v = Json::obj([("a", Json::arr_u32(&[1, 2]))]);
+        let mut out = String::from("prefix:");
+        v.write_into(&mut out);
+        assert_eq!(out, r#"prefix:{"a":[1,2]}"#);
+    }
+
+    #[test]
+    fn to_string_presizes_enough() {
+        let v = Json::parse(r#"{"key":"value","arr":[1,2,3],"n":null}"#).unwrap();
+        let s = v.to_string();
+        assert!(v.size_hint() >= s.len(), "hint {} < actual {}", v.size_hint(), s.len());
+        assert_eq!(Json::parse(&s).unwrap(), v);
     }
 }

@@ -1,0 +1,464 @@
+//! Fuzz-style randomized property tests over the zero-copy hot paths:
+//!
+//!   * tokenizer: encode/render round-trips on arbitrary example shapes,
+//!     streaming `_into` variants byte-identical to their allocating twins,
+//!     rendering total over arbitrary (out-of-vocab) ids;
+//!   * util/json: parse <-> serialize round-trips (compact and pretty,
+//!     escapes / unicode / nesting), borrowed-slice path identical to the
+//!     owned path, parser totality on random byte soup (no panics, errors
+//!     carry consistent line/column positions);
+//!   * quant: int8 round-trip error bounded by scale/2, int4 pack/unpack
+//!     a perfect inverse plus the same round-trip bound.
+//!
+//! Driven by `util::propcheck`; case counts scale with `PROPCHECK_SCALE`
+//! (the props-extended CI job runs these at 8x).
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+
+use pangu_atlas_quant::quant::{int4, int8};
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
+use pangu_atlas_quant::util::json::{Json, JsonSlice};
+use pangu_atlas_quant::util::prng::Rng;
+use pangu_atlas_quant::util::propcheck::{check, ensure, ensure_eq};
+
+// ---------------------------------------------------------------- tokenizer
+
+fn gen_examples(rng: &mut Rng) -> Vec<(Vec<u8>, Vec<u8>)> {
+    let n = rng.range(0, 4);
+    (0..n)
+        .map(|_| {
+            let xs: Vec<u8> = (0..rng.range(0, 6)).map(|_| rng.below(16) as u8).collect();
+            let ys: Vec<u8> = (0..rng.range(0, 6)).map(|_| rng.below(16) as u8).collect();
+            (xs, ys)
+        })
+        .collect()
+}
+
+fn gen_mode(rng: &mut Rng) -> CotMode {
+    *rng.choose(&[CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink])
+}
+
+/// Decode an encoded prompt back to (mode, examples) by walking the layout
+/// `BOS MODE (IN xs OUT ys | SEP)* ASK` — the inverse the encoder must admit.
+fn decode_prompt(tk: &Tokenizer, ids: &[u32]) -> Option<(u32, Vec<(Vec<u8>, Vec<u8>)>)> {
+    if ids.len() < 3 || ids[0] != tk.bos || *ids.last().unwrap() != tk.ask {
+        return None;
+    }
+    let mode = ids[1];
+    let mut examples = Vec::new();
+    let body = &ids[2..ids.len() - 1];
+    let mut i = 0;
+    while i < body.len() {
+        if !examples.is_empty() {
+            if body[i] != tk.sep {
+                return None;
+            }
+            i += 1;
+        }
+        if body.get(i) != Some(&tk.tok_in) {
+            return None;
+        }
+        i += 1;
+        let mut xs = Vec::new();
+        while let Some(v) = body.get(i).and_then(|&t| tk.digit_value(t)) {
+            xs.push(v);
+            i += 1;
+        }
+        if body.get(i) != Some(&tk.tok_out) {
+            return None;
+        }
+        i += 1;
+        let mut ys = Vec::new();
+        while let Some(v) = body.get(i).and_then(|&t| tk.digit_value(t)) {
+            ys.push(v);
+            i += 1;
+        }
+        examples.push((xs, ys));
+    }
+    Some((mode, examples))
+}
+
+#[test]
+fn prop_encode_prompt_roundtrips_and_sizes_exactly() {
+    let tk = Tokenizer::minilang_default();
+    check(
+        "encode-prompt-roundtrip",
+        300,
+        0xF022_0001,
+        |rng| (gen_mode(rng), gen_examples(rng)),
+        |(mode, examples)| {
+            let ids = tk.encode_prompt(*mode, examples);
+            ensure_eq(ids.len(), tk.prompt_len(examples), "prompt_len must be exact")?;
+            let (got_mode, got_examples) =
+                decode_prompt(&tk, &ids).ok_or("encoded prompt does not match the layout")?;
+            ensure_eq(got_mode, tk.mode_token(*mode), "mode token")?;
+            ensure_eq(got_examples, examples.clone(), "examples round-trip")
+        },
+    );
+}
+
+#[test]
+fn prop_encode_prompt_into_is_identical_to_encode_prompt() {
+    let tk = Tokenizer::minilang_default();
+    check(
+        "encode-prompt-into-identity",
+        300,
+        0xF022_0002,
+        |rng| (gen_mode(rng), gen_examples(rng), rng.range(0, 8)),
+        |(mode, examples, prefix)| {
+            let fresh = tk.encode_prompt(*mode, examples);
+            // Appending into a dirty reused buffer must not disturb the
+            // prefix and must append exactly the fresh encoding.
+            let mut out: Vec<u32> = vec![u32::MAX; *prefix];
+            tk.encode_prompt_into(*mode, examples, &mut out);
+            ensure(
+                out[..*prefix].iter().all(|&t| t == u32::MAX),
+                "prefix clobbered",
+            )?;
+            ensure_eq(&out[*prefix..], fresh.as_slice(), "appended encoding")
+        },
+    );
+}
+
+#[test]
+fn prop_render_is_total_and_matches_the_legacy_join() {
+    let tk = Tokenizer::minilang_default();
+    check(
+        "render-total-legacy-identity",
+        300,
+        0xF022_0003,
+        |rng| {
+            let n = rng.range(0, 24);
+            (0..n)
+                .map(|_| {
+                    if rng.chance(0.2) {
+                        // Out-of-vocab, including ids near u32::MAX.
+                        (rng.next_u64() >> 32) as u32
+                    } else {
+                        rng.below(tk.vocab_size() as u64) as u32
+                    }
+                })
+                .collect::<Vec<u32>>()
+        },
+        |ids| {
+            // Legacy shape: per-token owned Strings + join. render/_into
+            // must be byte-identical to it for any ids, in or out of vocab.
+            let legacy = ids
+                .iter()
+                .map(|&t| tk.name(t).to_string())
+                .collect::<Vec<_>>()
+                .join(" ");
+            ensure_eq(tk.render(ids), legacy.clone(), "render vs legacy join")?;
+            let mut streamed = String::from("head ");
+            tk.render_into(ids, &mut streamed);
+            ensure_eq(streamed, format!("head {legacy}"), "render_into appends")
+        },
+    );
+}
+
+#[test]
+fn prop_render_of_known_ids_inverts_through_id_lookup() {
+    let tk = Tokenizer::minilang_default();
+    check(
+        "render-id-inverse",
+        300,
+        0xF022_0004,
+        |rng| {
+            (0..rng.range(1, 24))
+                .map(|_| rng.below(tk.vocab_size() as u64) as u32)
+                .collect::<Vec<u32>>()
+        },
+        |ids| {
+            let text = tk.render(ids);
+            let back: Option<Vec<u32>> = text.split(' ').map(|name| tk.id(name)).collect();
+            ensure_eq(back, Some(ids.clone()), "split + id() recovers the ids")
+        },
+    );
+}
+
+// --------------------------------------------------------------------- json
+
+/// Random strings biased toward the interesting cases: escapes, control
+/// characters, multi-byte unicode (including astral-plane chars that
+/// serialize via surrogate pairs), and plain ASCII.
+fn gen_string(rng: &mut Rng) -> String {
+    let pool: &[char] = &[
+        'a', 'b', 'z', '0', ' ', '"', '\\', '/', '\n', '\t', '\r', '\u{0}', '\u{1f}', 'é', 'λ',
+        '日', '\u{1F600}', '\u{FFFD}',
+    ];
+    (0..rng.range(0, 12)).map(|_| *rng.choose(pool)).collect()
+}
+
+/// Finite numbers only (JSON has no NaN/inf); mix of exact integers and
+/// fractional values — both must survive parse -> serialize -> parse.
+fn gen_num(rng: &mut Rng) -> f64 {
+    match rng.below(4) {
+        0 => rng.range(0, 1_000_000) as f64 - 500_000.0,
+        1 => rng.normal() * 1e3,
+        2 => rng.f64() * 1e-6,
+        _ => rng.normal() * 1e12,
+    }
+}
+
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    let leaf_only = depth == 0;
+    match rng.below(if leaf_only { 4 } else { 6 }) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num(gen_num(rng)),
+        3 => Json::Str(gen_string(rng)),
+        4 => Json::Arr((0..rng.range(0, 5)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range(0, 5))
+                .map(|_| (gen_string(rng), gen_json(rng, depth - 1)))
+                .collect::<BTreeMap<_, _>>(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_compact_and_pretty() {
+    check(
+        "json-roundtrip",
+        300,
+        0xF022_0005,
+        |rng| gen_json(rng, 4),
+        |v| {
+            let compact = v.to_string();
+            ensure_eq(
+                Json::parse(&compact).map_err(|e| e.to_string())?,
+                v.clone(),
+                "compact round-trip",
+            )?;
+            let pretty = v.to_string_pretty();
+            ensure_eq(
+                Json::parse(&pretty).map_err(|e| e.to_string())?,
+                v.clone(),
+                "pretty round-trip",
+            )?;
+            // Serialization is a function of the value alone: re-serializing
+            // the reparsed tree reproduces the bytes.
+            ensure_eq(
+                Json::parse(&compact).unwrap().to_string(),
+                compact,
+                "serialize is idempotent",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_slice_path_is_identical_to_owned_path() {
+    check(
+        "json-slice-owned-identity",
+        300,
+        0xF022_0006,
+        |rng| gen_json(rng, 4).to_string(),
+        |text| {
+            let owned = Json::parse(text).map_err(|e| e.to_string())?;
+            let slice = JsonSlice::parse(text).map_err(|e| e.to_string())?;
+            ensure_eq(slice.to_owned(), owned.clone(), "slice.to_owned == owned parse")?;
+            // Accessors agree too (spot-check strings: lazily-unescaped
+            // Cow must equal the eagerly-unescaped owned String).
+            if let (Some(a), Some(b)) = (slice.as_str(), owned.as_str()) {
+                ensure_eq::<Cow<'_, str>>(a, Cow::Borrowed(b), "as_str")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Mutate a valid document or emit raw char soup — either way both parsers
+/// must terminate without panicking and agree on accept/reject.
+fn gen_soup(rng: &mut Rng) -> String {
+    let pool: &[char] = &[
+        '{', '}', '[', ']', '"', ':', ',', '\\', 'u', 'e', 't', 'f', 'n', '0', '9', '-', '+',
+        '.', ' ', '\n', 'é', '\u{1F600}',
+    ];
+    match rng.below(3) {
+        0 => (0..rng.range(0, 40)).map(|_| *rng.choose(pool)).collect(),
+        1 => {
+            // Structured seed with random single-char edits.
+            let mut s: Vec<char> = gen_json(rng, 3).to_string().chars().collect();
+            for _ in 0..rng.range(1, 4) {
+                if s.is_empty() {
+                    break;
+                }
+                let at = rng.range(0, s.len() - 1);
+                if rng.chance(0.5) {
+                    s[at] = *rng.choose(pool);
+                } else {
+                    s.remove(at);
+                }
+            }
+            s.into_iter().collect()
+        }
+        _ => {
+            // Deep nesting: crosses the MAX_DEPTH=128 rejection boundary
+            // in both directions without ever overflowing the stack.
+            let depth = rng.range(1, 300);
+            let open = if rng.chance(0.5) { "[" } else { "{" };
+            open.repeat(depth)
+        }
+    }
+}
+
+#[test]
+fn prop_parser_is_total_on_byte_soup() {
+    check(
+        "json-parser-totality",
+        400,
+        0xF022_0007,
+        gen_soup,
+        |text| {
+            let owned = Json::parse(text);
+            let slice = JsonSlice::parse(text);
+            ensure_eq(
+                owned.is_ok(),
+                slice.is_ok(),
+                "owned and slice paths agree on accept/reject",
+            )?;
+            match owned {
+                Ok(v) => {
+                    // Accepted soup must reach a serialization fixpoint.
+                    let s = v.to_string();
+                    ensure_eq(
+                        Json::parse(&s).map_err(|e| e.to_string())?,
+                        v,
+                        "reparse of reserialized soup",
+                    )?;
+                    ensure_eq(
+                        slice.unwrap().to_owned().to_string(),
+                        s,
+                        "slice path serializes identically",
+                    )
+                }
+                Err(e) => {
+                    // Error positions stay self-consistent: offset in
+                    // bounds, line/col 1-based and derivable from offset.
+                    ensure(e.offset <= text.len(), format!("offset {} out of bounds", e.offset))?;
+                    let prefix = &text.as_bytes()[..e.offset];
+                    let line = 1 + prefix.iter().filter(|&&b| b == b'\n').count();
+                    let col = 1 + prefix.iter().rev().take_while(|&&b| b != b'\n').count();
+                    ensure_eq(e.line, line, "line derives from offset")?;
+                    ensure_eq(e.col, col, "col derives from offset")
+                }
+            }
+        },
+    );
+}
+
+// -------------------------------------------------------------------- quant
+
+fn gen_matrix(rng: &mut Rng, max_dim: usize) -> (Vec<f32>, usize, usize) {
+    let k = rng.range(1, max_dim) * 2; // even K so int4 packing applies too
+    let n = rng.range(1, max_dim);
+    let scale = 10f64.powi(rng.range(0, 6) as i32 - 3);
+    let w: Vec<f32> = (0..k * n).map(|_| (rng.normal() * scale) as f32).collect();
+    (w, k, n)
+}
+
+#[test]
+fn prop_int8_roundtrip_error_is_bounded_by_half_scale() {
+    check(
+        "int8-weight-roundtrip",
+        200,
+        0xF022_0008,
+        |rng| gen_matrix(rng, 8),
+        |(w, k, n)| {
+            let (q, scales) = int8::quant_weight_per_channel(w, *k, *n);
+            let dq = int8::dequant_per_channel(&q, &scales, *k, *n);
+            for row in 0..*k {
+                for col in 0..*n {
+                    let (x, y) = (w[row * n + col], dq[row * n + col]);
+                    // Half the quantization step, plus slack for f32
+                    // division/product rounding at large magnitudes.
+                    let bound = scales[col] * 0.5001 + 1e-6;
+                    ensure(
+                        (x - y).abs() <= bound,
+                        format!("w[{row},{col}]={x} dequants to {y}, bound {bound}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int8_activation_roundtrip_error_is_bounded_by_half_scale() {
+    check(
+        "int8-act-roundtrip",
+        200,
+        0xF022_0009,
+        |rng| {
+            let m = rng.range(1, 8);
+            let k = rng.range(1, 8);
+            let x: Vec<f32> = (0..m * k).map(|_| (rng.normal() * 4.0) as f32).collect();
+            (x, m, k)
+        },
+        |(x, m, k)| {
+            let (q, scales) = int8::quant_act_per_token(x, *m, *k);
+            for row in 0..*m {
+                for col in 0..*k {
+                    let v = x[row * k + col];
+                    let dq = q[row * k + col] as f32 * scales[row];
+                    let bound = scales[row] * 0.5001 + 1e-6;
+                    ensure(
+                        (v - dq).abs() <= bound,
+                        format!("x[{row},{col}]={v} dequants to {dq}, bound {bound}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_int4_pack_unpack_is_the_identity() {
+    check(
+        "int4-pack-unpack",
+        200,
+        0xF022_000A,
+        |rng| {
+            let k = rng.range(1, 8) * 2;
+            let n = rng.range(1, 8);
+            let q: Vec<i8> = (0..k * n).map(|_| rng.range(0, 14) as i8 - 7).collect();
+            (q, k, n)
+        },
+        |(q, k, n)| {
+            let packed = int4::pack(q, *k, *n);
+            ensure_eq(packed.len(), k / 2 * n, "packed size halves K")?;
+            ensure_eq(int4::unpack(&packed, k / 2, *n), q.clone(), "unpack(pack(q)) == q")
+        },
+    );
+}
+
+#[test]
+fn prop_int4_roundtrip_error_is_bounded_by_half_scale() {
+    check(
+        "int4-weight-roundtrip",
+        200,
+        0xF022_000B,
+        |rng| gen_matrix(rng, 8),
+        |(w, k, n)| {
+            let (q, scales) = int4::quant_weight_per_channel(w, *k, *n);
+            let restored = int4::unpack(&int4::pack(&q, *k, *n), k / 2, *n);
+            ensure_eq(restored, q.clone(), "pack survives the quantized grid")?;
+            for row in 0..*k {
+                for col in 0..*n {
+                    let x = w[row * n + col];
+                    let dq = q[row * n + col] as f32 * scales[col];
+                    let bound = scales[col] * 0.5001 + 1e-6;
+                    ensure(
+                        (x - dq).abs() <= bound,
+                        format!("w[{row},{col}]={x} dequants to {dq}, bound {bound}"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
