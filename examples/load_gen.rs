@@ -1,0 +1,283 @@
+//! Streaming load generator: drives concurrent streaming sessions through
+//! the typed frontend against `MockBackend`, with deliberately stalled
+//! consumers, and publishes throughput + TTFT / inter-token-latency
+//! percentiles through `benchkit` (same snapshot schema as
+//! `BENCH_scheduler.json`).
+//!
+//!     cargo run --release --example load_gen -- \
+//!         [--sessions 1000] [--stalled 8] [--workers 8] [--capacity 32] \
+//!         [--trace 20] [--idle-ms 300] [--json BENCH_loadgen.json]
+//!
+//! Every session goes through `POST /v1/stream/:model/:variant` and is
+//! drained live by a pool of consumer threads while the server decodes on
+//! its own thread. The last `--stalled` sessions are never read until the
+//! run ends — they exercise the flush-degradation ladder (token → chunk →
+//! final-only) and must not slow anyone else down (the no-head-of-line
+//! property is pinned in `tests/stream_props.rs`; this driver reports the
+//! degradation counters at scale).
+//!
+//! Invariant checked here: for every session, the concatenated streamed
+//! chunks are a prefix of the final `Response::tokens` — and byte-equal
+//! whenever nothing was dropped at retirement (consumers that keep up).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use pangu_atlas_quant::coordinator::admission::AdmitConfig;
+use pangu_atlas_quant::coordinator::frontend::{Frontend, Reply};
+use pangu_atlas_quant::coordinator::scheduler::{AdmitGate, SchedulerConfig};
+use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::coordinator::stream::StreamingResponse;
+use pangu_atlas_quant::runtime::backend::{minilang_mock_script, MockBackend, MockProvider};
+use pangu_atlas_quant::tokenizer::Tokenizer;
+use pangu_atlas_quant::util::benchkit::JsonEmitter;
+use pangu_atlas_quant::util::cli::Args;
+use pangu_atlas_quant::util::stats::Summary;
+
+/// One live streaming session as the consumer pool sees it.
+struct Session {
+    stream: StreamingResponse,
+    submitted: Instant,
+    first_chunk: Option<Instant>,
+    last_chunk: Option<Instant>,
+    /// Inter-chunk gaps in ms (the streamed ITL signal).
+    itl_ms: Vec<f64>,
+    streamed: Vec<u32>,
+}
+
+/// Drained results of one session.
+struct Done {
+    ttft_ms: Option<f64>,
+    itl_ms: Vec<f64>,
+    latency_ms: f64,
+    tokens: usize,
+    /// Streamed chunks concatenated byte-equal to the final response.
+    exact: bool,
+    /// Streamed chunks are a strict prefix (tail dropped under pressure).
+    prefix: bool,
+}
+
+impl Session {
+    /// Final accounting once the chunk channel disconnected.
+    fn finish(self) -> Result<Done> {
+        let resp = self
+            .stream
+            .done
+            .recv()
+            .map_err(|_| anyhow!("stream closed without a final response"))?;
+        let exact = self.streamed == resp.tokens;
+        let prefix = resp.tokens.starts_with(&self.streamed);
+        Ok(Done {
+            ttft_ms: self
+                .first_chunk
+                .map(|at| at.duration_since(self.submitted).as_secs_f64() * 1e3),
+            itl_ms: self.itl_ms,
+            latency_ms: resp.latency_ms,
+            tokens: resp.tokens.len(),
+            exact,
+            prefix,
+        })
+    }
+}
+
+/// Poll-drain a set of sessions until all of their chunk channels close.
+fn drain_sessions(mut live: Vec<Session>) -> Result<Vec<Done>> {
+    let mut done = Vec::with_capacity(live.len());
+    while !live.is_empty() {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < live.len() {
+            let mut closed = false;
+            loop {
+                match live[i].stream.chunks.try_recv() {
+                    Ok(chunk) => {
+                        progressed = true;
+                        let now = Instant::now();
+                        let s = &mut live[i];
+                        if s.first_chunk.is_none() {
+                            s.first_chunk = Some(now);
+                        } else if let Some(prev) = s.last_chunk {
+                            s.itl_ms.push(now.duration_since(prev).as_secs_f64() * 1e3);
+                        }
+                        s.last_chunk = Some(now);
+                        s.streamed.extend_from_slice(&chunk.tokens);
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            if closed {
+                done.push(live.swap_remove(i).finish()?);
+                progressed = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !progressed {
+            // Nothing ready on any stream: let the decode thread run.
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    Ok(done)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[]);
+    let sessions = args.usize_or("sessions", 1000);
+    let stalled = args.usize_or("stalled", 8).min(sessions.saturating_sub(1));
+    let workers = args.usize_or("workers", 8).max(1);
+    let capacity = args.usize_or("capacity", 32);
+    let trace = args.usize_or("trace", 20).max(6);
+    let idle_ms = args.u64_or("idle-ms", 300);
+    let json_path = std::path::PathBuf::from(args.get_or("json", "BENCH_loadgen.json"));
+
+    let tk = Tokenizer::minilang_default();
+    let script = minilang_mock_script(&tk, trace);
+    let provider = MockProvider::new(MockBackend::new(64, 48, 96, script));
+    let sched = SchedulerConfig::ladder(vec![4, 8, 16, 32], AdmitGate::Continuous)
+        .expect("ascending ladder");
+    let admit = AdmitConfig::with_wait(true, Duration::from_millis(2));
+    let (mut server, handle) = Server::new(provider, &tk, sched, admit);
+    let frontend = Frontend::new(handle).with_stream_capacity(capacity);
+
+    println!(
+        "load_gen: {sessions} streaming sessions ({stalled} stalled), \
+         {workers} consumer threads, chunk capacity {capacity}"
+    );
+
+    // Submit every session up front through the typed route — mixed think
+    // modes, shared route so they batch together.
+    let t0 = Instant::now();
+    let mut live: Vec<Session> = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let mode = ["no_think", "auto_think", "slow_think"][i % 3];
+        let body = format!(
+            r#"{{"mode": "{mode}", "examples": [[[1,2,3],[3,2,1]], [[4,5],[5,4]]]}}"#
+        );
+        match frontend.dispatch("POST", "/v1/stream/7b-sim/int8", &body) {
+            Reply::Stream(stream) => live.push(Session {
+                stream,
+                submitted: Instant::now(),
+                first_chunk: None,
+                last_chunk: None,
+                itl_ms: Vec::new(),
+                streamed: Vec::new(),
+            }),
+            Reply::Json { status, body } => {
+                return Err(anyhow!("submit {i} failed: {status} {}", body.to_string()))
+            }
+        }
+    }
+    drop(frontend); // close the submit side: the server drains and exits
+
+    // The stalled tail is held back — nobody reads these until the very
+    // end, so their chunk channels fill and the server must degrade them
+    // instead of blocking decode.
+    let stalled_sessions: Vec<Session> = live.split_off(sessions - stalled);
+
+    let (processed, server, drained) = std::thread::scope(|s| -> Result<_> {
+        let srv = s.spawn(move || -> Result<_> {
+            let processed = server.run_until_idle(Duration::from_millis(idle_ms))?;
+            Ok((processed, server))
+        });
+        // Split the draining consumers across the worker pool.
+        let mut shards: Vec<Vec<Session>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, sess) in live.into_iter().enumerate() {
+            shards[i % workers].push(sess);
+        }
+        let consumers: Vec<_> = shards
+            .into_iter()
+            .map(|shard| s.spawn(move || drain_sessions(shard)))
+            .collect();
+        let mut drained = Vec::new();
+        for c in consumers {
+            drained.extend(c.join().expect("consumer thread")?);
+        }
+        let (processed, server) = srv.join().expect("server thread")?;
+        Ok((processed, server, drained))
+    })?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Stalled consumers drain only now, long after the server retired them.
+    let mut stalled_done = Vec::new();
+    for sess in stalled_sessions {
+        stalled_done.push(drain_sessions(vec![sess])?.remove(0));
+    }
+
+    // ---- verification ------------------------------------------------
+    anyhow::ensure!(
+        processed == sessions,
+        "server processed {processed} of {sessions} sessions"
+    );
+    let all: Vec<&Done> = drained.iter().chain(stalled_done.iter()).collect();
+    let broken = all.iter().filter(|d| !d.prefix).count();
+    anyhow::ensure!(
+        broken == 0,
+        "{broken} sessions streamed tokens that are not a prefix of the final response"
+    );
+    // Byte-identity for a consumer that keeps up is pinned deterministically
+    // in tests/stream_props.rs; under load a fast decode can retire a session
+    // before its consumer drains (tail legitimately dropped), so here we only
+    // require that *some* draining consumers observed the full stream.
+    let exact = all.iter().filter(|d| d.exact).count();
+    let draining_exact = drained.iter().filter(|d| d.exact).count();
+    anyhow::ensure!(
+        drained.is_empty() || draining_exact > 0,
+        "no draining consumer ever observed a byte-identical stream"
+    );
+
+    // ---- report ------------------------------------------------------
+    let ttft: Vec<f64> = drained.iter().filter_map(|d| d.ttft_ms).collect();
+    let itl: Vec<f64> = drained.iter().flat_map(|d| d.itl_ms.iter().copied()).collect();
+    let latency: Vec<f64> = all.iter().map(|d| d.latency_ms).collect();
+    let total_tokens: usize = all.iter().map(|d| d.tokens).sum();
+    let tok_s = total_tokens as f64 / wall_s;
+
+    let m = &server.metrics;
+    println!("\n--- load_gen results ---");
+    println!("sessions           {sessions} ({stalled} stalled)");
+    println!("wall time          {wall_s:.3} s");
+    println!("tokens generated   {total_tokens} ({tok_s:.0} tok/s end-to-end)");
+    println!("byte-identical     {exact}/{} (stalled consumers may drop tails)", all.len());
+    for name in ["ttft_ms", "itl_ms", "latency_ms"] {
+        let xs = match name {
+            "ttft_ms" => &ttft,
+            "itl_ms" => &itl,
+            _ => &latency,
+        };
+        let s = Summary::of(xs);
+        println!(
+            "{name:<18} n={} p50={:.3} p90={:.3} p99={:.3} (ms)",
+            s.n, s.p50, s.p90, s.p99
+        );
+    }
+    println!(
+        "degradations       to_chunk={} to_final={} tail_dropped={}",
+        m.counter("stream_degraded_to_chunk"),
+        m.counter("stream_degraded_to_final"),
+        m.counter("stream_tail_dropped"),
+    );
+    print!("\n{}", m.render());
+
+    let mut emitter = JsonEmitter::new();
+    let notes = vec![
+        format!("sessions {sessions} stalled {stalled} capacity {capacity}"),
+        format!("throughput {tok_s:.0} tok/s over {wall_s:.3} s"),
+        format!(
+            "degraded_to_chunk {} degraded_to_final {}",
+            m.counter("stream_degraded_to_chunk"),
+            m.counter("stream_degraded_to_final")
+        ),
+    ];
+    emitter.add_series("load-gen", "ttft_ms", &ttft, notes);
+    emitter.add_series("load-gen", "inter_token_ms", &itl, vec![]);
+    emitter.add_series("load-gen", "request_latency_ms", &latency, vec![]);
+    emitter.write(&json_path)?;
+    println!("\nTTFT/ITL snapshot written to {}", json_path.display());
+    Ok(())
+}

@@ -619,7 +619,10 @@ fn main() {
         let baseline = Baseline::load(&path)
             .unwrap_or_else(|e| panic!("load bench baseline {}: {e}", path.display()));
         let current = Baseline::of_emitter(&emitter);
-        let threshold = regression_threshold(4.0);
+        // A malformed env threshold fails the gate loudly (no silent
+        // fallback to the default).
+        let threshold =
+            regression_threshold(4.0).unwrap_or_else(|e| panic!("bench regression gate: {e}"));
         let report = baseline.compare(&current, threshold);
         print!("\n{}", report.render());
         if !report.passed() {

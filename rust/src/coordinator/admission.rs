@@ -242,6 +242,17 @@ impl AdmissionQueue {
             })
     }
 
+    /// The instant at which [`AdmissionQueue::ready`] will hold for a
+    /// not-yet-full bucket: the head request's arrival plus the launch
+    /// deadline. Lets an idle server block until exactly then (one
+    /// `recv_timeout`) instead of sleep-polling. `None` when the queue is
+    /// empty (nothing to wake for) or the deadline overflows the clock.
+    pub fn ready_at(&self) -> Option<Instant> {
+        self.queue
+            .front()
+            .and_then(|r| r.arrived.checked_add(self.cfg.launch_deadline))
+    }
+
     /// Pick the next request to fill one freed slot. `now` is injected for
     /// testability.
     pub fn admit(&mut self, now: Instant) -> Option<Request> {
@@ -452,6 +463,21 @@ mod tests {
         // ...while the (huge) starvation bound still governs the pick.
         q.push(req(1, CotMode::NoThink));
         assert_eq!(q.admit(later).unwrap().id, 0, "FIFO within one mode");
+    }
+
+    /// `ready_at` is the wake-up instant behind the server's blocking
+    /// `recv_timeout` idle wait: it must agree with `ready` exactly.
+    #[test]
+    fn ready_at_matches_ready_for_an_underfull_bucket() {
+        let mut q = queue(false, 50);
+        assert_eq!(q.ready_at(), None, "empty queue has no wake-up");
+        q.push(req(0, CotMode::NoThink));
+        let at = q.ready_at().expect("queued head has a wake-up");
+        assert!(
+            !q.ready(2, at - Duration::from_millis(1)),
+            "not ready just before the wake-up instant"
+        );
+        assert!(q.ready(2, at), "ready exactly at the wake-up instant");
     }
 
     #[test]

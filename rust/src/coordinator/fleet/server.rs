@@ -24,7 +24,7 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Request;
-use crate::coordinator::server::{record_session, Envelope, ReplyBook, ServerHandle};
+use crate::coordinator::server::{count_delivery, record_session, Envelope, ReplyBook, ServerHandle};
 use crate::runtime::backend::BackendProvider;
 use crate::tokenizer::Tokenizer;
 
@@ -77,6 +77,15 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
     }
 
     fn enqueue(&mut self, env: Envelope) -> Result<()> {
+        // The fleet front end delivers whole responses only: a streaming
+        // submission's chunk channel is dropped here, so the client's chunk
+        // receiver disconnects immediately while the full response still
+        // arrives on the reply path — degrade-to-final at the fleet edge,
+        // counted as `stream_final_only`. (Per-token fleet streaming needs
+        // a sink plumbed through `Fleet::run_session`; open item.)
+        if env.stream.is_some() {
+            self.metrics.inc("stream_final_only", 1);
+        }
         self.pending.borrow_mut().register(env.request.id, env.reply);
         self.fleet.route(env.request)?;
         self.metrics.inc("requests_received", 1);
@@ -121,11 +130,35 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
                 processed += self.run_device_session(dev)?;
                 self.last_device = dev;
                 last_activity = Instant::now();
-            } else if closed || (last_activity.elapsed() >= deadline_idle && self.fleet.queued() == 0)
+            } else if closed
+                || (last_activity.elapsed() >= deadline_idle && self.fleet.queued() == 0)
             {
                 return Ok(processed);
             } else {
-                std::thread::sleep(Duration::from_millis(1));
+                // Mirror of the single-device server's idle wait: block on
+                // the envelope channel until a new arrival, the earliest
+                // queued head's launch deadline, or the idle deadline —
+                // no sleep/poll spinning.
+                let now = Instant::now();
+                let next_ready = self
+                    .fleet
+                    .devices
+                    .iter()
+                    .filter_map(|d| d.queue.ready_at())
+                    .min();
+                let wake = if self.fleet.queued() > 0 {
+                    next_ready.unwrap_or_else(|| now + Duration::from_millis(10))
+                } else {
+                    last_activity + deadline_idle
+                };
+                match self.rx.recv_timeout(wake.saturating_duration_since(now)) {
+                    Ok(env) => {
+                        self.enqueue(env)?;
+                        last_activity = Instant::now();
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                }
             }
         }
     }
@@ -136,6 +169,7 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
     /// own sessions.
     fn run_device_session(&mut self, dev: usize) -> Result<usize> {
         let mut pumped_in: u64 = 0;
+        let mut pumped_final_only: u64 = 0;
         let result = {
             let FleetServer {
                 ref mut fleet,
@@ -150,6 +184,11 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
                 dev,
                 &mut || match rx.try_recv() {
                     Ok(env) => {
+                        // Same degrade-to-final as enqueue(): the chunk
+                        // sender is dropped with the envelope.
+                        if env.stream.is_some() {
+                            pumped_final_only += 1;
+                        }
                         pending.borrow_mut().register(env.request.id, env.reply);
                         pumped_in += 1;
                         Some(env.request)
@@ -159,12 +198,16 @@ impl<'t, P: BackendProvider> FleetServer<'t, P> {
                 &mut |resp| {
                     metrics.observe("request_latency_ms", resp.latency_ms);
                     metrics.observe("ttft_ms", resp.ttft_ms);
-                    pending.borrow_mut().deliver(resp);
+                    let outcome = pending.borrow_mut().deliver(resp);
+                    count_delivery(metrics, outcome);
                 },
             )
         };
         // Received is received regardless of the session outcome.
         self.metrics.inc("requests_received", pumped_in);
+        if pumped_final_only > 0 {
+            self.metrics.inc("stream_final_only", pumped_final_only);
+        }
         let report = result?;
         record_session(&mut self.device_metrics[dev], &report);
         Ok(report.completed)
@@ -290,6 +333,10 @@ mod tests {
         drop(handle);
         let processed = server.run_until_idle(Duration::from_millis(5)).unwrap();
         assert_eq!(processed, 6);
+        // Reply loss is counted, not silent: every receiver was dropped, so
+        // every delivery lands on a hung-up channel.
+        assert_eq!(server.metrics.counter("replies_dropped"), 6);
+        assert_eq!(server.metrics.counter("replies_unclaimed"), 0);
         let fr = server.fleet_report();
         for d in &fr.devices {
             assert_eq!(d.placements, 2, "round-robin places 6 over 3 evenly");

@@ -1,0 +1,486 @@
+//! Typed HTTP-shaped routes over `util/json` — the socket-shaped edge of
+//! the serving stack, wrapping a [`ServerHandle`].
+//!
+//! There is no HTTP stack in the offline build, so the surface is
+//! transport-agnostic: [`Frontend::dispatch`] takes `(method, path, body)`
+//! and returns a [`Reply`] — a status + JSON document, or a live
+//! [`StreamingResponse`]. A real socket listener (or a test) is one thin
+//! loop over `dispatch`. Routes are declared as `:param` patterns, bodies
+//! are extracted into typed structs ([`GenerateBody`]) with field-level
+//! error messages, and every failure renders as a structured JSON error
+//! carrying the parser's line/column when the body itself was malformed.
+//!
+//! Routes:
+//!
+//! | method | path                          | reply                       |
+//! |--------|-------------------------------|-----------------------------|
+//! | GET    | `/v1/healthz`                 | `{"ok": true}`              |
+//! | POST   | `/v1/generate`                | final response JSON (blocks)|
+//! | POST   | `/v1/generate/:model/:variant`| final response JSON (blocks)|
+//! | POST   | `/v1/stream`                  | [`Reply::Stream`]           |
+//! | POST   | `/v1/stream/:model/:variant`  | [`Reply::Stream`]           |
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::request::Request;
+use crate::coordinator::server::ServerHandle;
+use crate::coordinator::stream::{StreamChunk, StreamingResponse};
+use crate::tokenizer::CotMode;
+use crate::util::json::{Json, JsonError, JsonSlice};
+
+/// Structured route/extraction failure: HTTP-ish status plus a stable
+/// machine-readable code. Rendered by [`ApiError::body`] as
+/// `{"error": {"code", "message"}}`.
+#[derive(Debug)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError { status: 400, code: "bad_request", message: message.into() }
+    }
+
+    pub fn not_found(path: &str) -> ApiError {
+        ApiError { status: 404, code: "not_found", message: format!("no route for {path}") }
+    }
+
+    pub fn method_not_allowed(method: &str, allowed: &str) -> ApiError {
+        ApiError {
+            status: 405,
+            code: "method_not_allowed",
+            message: format!("{method} not allowed (use {allowed})"),
+        }
+    }
+
+    pub fn unavailable() -> ApiError {
+        ApiError { status: 503, code: "unavailable", message: "server is gone".to_string() }
+    }
+
+    pub fn body(&self) -> Json {
+        Json::obj([(
+            "error",
+            Json::obj([
+                ("code", Json::str(self.code)),
+                ("message", Json::str(self.message.clone())),
+            ]),
+        )])
+    }
+}
+
+impl From<JsonError> for ApiError {
+    /// A malformed body keeps the parser's line/column (the `JsonError`
+    /// display carries them) so the client can point at the byte at fault.
+    fn from(e: JsonError) -> ApiError {
+        ApiError { status: 400, code: "invalid_json", message: e.to_string() }
+    }
+}
+
+/// Match a `/`-separated pattern with `:name` parameter segments against a
+/// concrete path; returns the extracted `(name, value)` pairs in pattern
+/// order, or `None` on any mismatch (including arity).
+fn match_path<'p, 'a>(pattern: &'p str, path: &'a str) -> Option<Vec<(&'p str, &'a str)>> {
+    let mut params = Vec::new();
+    let mut pat = pattern.trim_matches('/').split('/');
+    let mut got = path.trim_matches('/').split('/');
+    loop {
+        match (pat.next(), got.next()) {
+            (None, None) => return Some(params),
+            (Some(p), Some(g)) => {
+                if let Some(name) = p.strip_prefix(':') {
+                    if g.is_empty() {
+                        return None;
+                    }
+                    params.push((name, g));
+                } else if p != g {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+}
+
+fn param<'a>(params: &[(&str, &'a str)], name: &str) -> Option<&'a str> {
+    params.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+}
+
+/// Typed extraction of a generate/stream request body. Path parameters
+/// (when the route carries them) take precedence over body fields.
+#[derive(Debug, Clone)]
+pub struct GenerateBody {
+    pub model: String,
+    pub variant: String,
+    pub mode: CotMode,
+    /// MiniLang I/O examples: `[[[1,2],[2,1]], ...]` — pairs of byte
+    /// arrays.
+    pub examples: Vec<(Vec<u8>, Vec<u8>)>,
+    pub id: Option<u64>,
+    pub max_new: Option<usize>,
+    pub seed: Option<u64>,
+    pub slo_ms: Option<f64>,
+}
+
+impl GenerateBody {
+    /// Extract from a parsed body. `path_model`/`path_variant` come from
+    /// `:model`/`:variant` route parameters when present.
+    pub fn from_slice(
+        v: &JsonSlice<'_>,
+        path_model: Option<&str>,
+        path_variant: Option<&str>,
+    ) -> Result<GenerateBody, ApiError> {
+        if v.as_obj().is_none() {
+            return Err(ApiError::bad_request("body must be a JSON object"));
+        }
+        let field_str = |key: &str, from_path: Option<&str>| -> Result<String, ApiError> {
+            if let Some(p) = from_path {
+                return Ok(p.to_string());
+            }
+            v.req_str(key)
+                .map(|s| s.into_owned())
+                .map_err(|e| ApiError::bad_request(e.to_string()))
+        };
+        let model = field_str("model", path_model)?;
+        let variant = field_str("variant", path_variant)?;
+        let mode = match v.get("mode").as_str() {
+            None => CotMode::AutoThink,
+            Some(s) => CotMode::parse(&s)
+                .map_err(|_| ApiError::bad_request(format!("unknown CoT mode {s:?}")))?,
+        };
+        let examples = Self::examples_field(v)?;
+        let opt_u64 = |key: &str| -> Result<Option<u64>, ApiError> {
+            match v.get(key) {
+                JsonSlice::Null => Ok(None),
+                field => match field.as_f64() {
+                    Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(Some(x as u64)),
+                    _ => Err(ApiError::bad_request(format!(
+                        "field `{key}` must be a whole non-negative number"
+                    ))),
+                },
+            }
+        };
+        let slo_ms = match v.get("slo_ms") {
+            JsonSlice::Null => None,
+            field => match field.as_f64() {
+                Some(x) if x.is_finite() && x > 0.0 => Some(x),
+                _ => {
+                    return Err(ApiError::bad_request("field `slo_ms` must be a positive number"))
+                }
+            },
+        };
+        Ok(GenerateBody {
+            model,
+            variant,
+            mode,
+            examples,
+            id: opt_u64("id")?,
+            max_new: opt_u64("max_new")?.map(|x| x as usize),
+            seed: opt_u64("seed")?,
+            slo_ms,
+        })
+    }
+
+    fn examples_field(v: &JsonSlice<'_>) -> Result<Vec<(Vec<u8>, Vec<u8>)>, ApiError> {
+        let arr = v
+            .req_arr("examples")
+            .map_err(|e| ApiError::bad_request(e.to_string()))?;
+        let byte_vec = |side: &JsonSlice<'_>, i: usize| -> Result<Vec<u8>, ApiError> {
+            let xs = side.as_arr().ok_or_else(|| {
+                ApiError::bad_request(format!("examples[{i}] sides must be arrays of bytes"))
+            })?;
+            xs.iter()
+                .map(|x| match x.as_f64() {
+                    Some(b) if (0.0..=255.0).contains(&b) && b.fract() == 0.0 => Ok(b as u8),
+                    _ => Err(ApiError::bad_request(format!(
+                        "examples[{i}] values must be integers in 0..=255"
+                    ))),
+                })
+                .collect()
+        };
+        arr.iter()
+            .enumerate()
+            .map(|(i, pair)| {
+                let sides = pair.as_arr().filter(|s| s.len() == 2).ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "examples[{i}] must be a [input, output] pair"
+                    ))
+                })?;
+                Ok((byte_vec(&sides[0], i)?, byte_vec(&sides[1], i)?))
+            })
+            .collect()
+    }
+}
+
+/// A dispatched route's result.
+pub enum Reply {
+    /// Status + JSON document (success or structured error).
+    Json { status: u16, body: Json },
+    /// A live stream: chunks as decode produces them, final response on
+    /// `done`. Render chunks with [`chunk_json`] for a wire format.
+    Stream(StreamingResponse),
+}
+
+/// Typed route dispatcher over a [`ServerHandle`].
+pub struct Frontend {
+    handle: ServerHandle,
+    /// Fallback ids for bodies that do not pin one. Starts high so
+    /// auto-assigned ids stay clear of typical explicit test ids.
+    next_id: AtomicU64,
+    /// Chunk-channel capacity for `/v1/stream` submissions.
+    stream_capacity: usize,
+}
+
+impl Frontend {
+    pub fn new(handle: ServerHandle) -> Frontend {
+        Frontend { handle, next_id: AtomicU64::new(1 << 32), stream_capacity: 64 }
+    }
+
+    /// Builder: chunk-buffer capacity per streaming client (consumers that
+    /// fall further behind degrade to coarser flushes; see
+    /// [`crate::coordinator::stream`]).
+    pub fn with_stream_capacity(mut self, capacity: usize) -> Frontend {
+        self.stream_capacity = capacity.max(1);
+        self
+    }
+
+    /// Dispatch one request. Never panics on client input: any failure is a
+    /// `Reply::Json` carrying the structured error body.
+    pub fn dispatch(&self, method: &str, path: &str, body: &str) -> Reply {
+        match self.route(method, path, body) {
+            Ok(reply) => reply,
+            Err(e) => Reply::Json { status: e.status, body: e.body() },
+        }
+    }
+
+    fn route(&self, method: &str, path: &str, body: &str) -> Result<Reply, ApiError> {
+        if match_path("/v1/healthz", path).is_some() {
+            if method != "GET" {
+                return Err(ApiError::method_not_allowed(method, "GET"));
+            }
+            return Ok(Reply::Json { status: 200, body: Json::obj([("ok", Json::Bool(true))]) });
+        }
+        const ROUTES: [(&str, bool); 4] = [
+            ("/v1/generate/:model/:variant", false),
+            ("/v1/generate", false),
+            ("/v1/stream/:model/:variant", true),
+            ("/v1/stream", true),
+        ];
+        for (pattern, streaming) in ROUTES {
+            let Some(params) = match_path(pattern, path) else { continue };
+            if method != "POST" {
+                return Err(ApiError::method_not_allowed(method, "POST"));
+            }
+            let parsed = JsonSlice::parse(body).map_err(ApiError::from)?;
+            let gb = GenerateBody::from_slice(
+                &parsed,
+                param(&params, "model"),
+                param(&params, "variant"),
+            )?;
+            let req = self.to_request(gb);
+            return if streaming {
+                let stream = self
+                    .handle
+                    .submit_streaming(req, self.stream_capacity)
+                    .map_err(|_| ApiError::unavailable())?;
+                Ok(Reply::Stream(stream))
+            } else {
+                let rx = self.handle.submit(req).map_err(|_| ApiError::unavailable())?;
+                let resp = rx.recv().map_err(|_| ApiError::unavailable())?;
+                Ok(Reply::Json { status: 200, body: response_json(&resp) })
+            };
+        }
+        Err(ApiError::not_found(path))
+    }
+
+    fn to_request(&self, gb: GenerateBody) -> Request {
+        let id = gb.id.unwrap_or_else(|| self.next_id.fetch_add(1, Ordering::Relaxed));
+        let mut req = Request::new(id, &gb.model, &gb.variant, gb.mode, gb.examples);
+        if let Some(max_new) = gb.max_new {
+            req.params.max_new = max_new.max(1);
+        }
+        if let Some(seed) = gb.seed {
+            req.params.seed = seed;
+        }
+        if let Some(slo) = gb.slo_ms {
+            req = req.with_slo_ms(slo);
+        }
+        req
+    }
+}
+
+/// Final-response wire format (shared by the blocking route and the `done`
+/// side of a drained stream).
+pub fn response_json(resp: &crate::coordinator::request::Response) -> Json {
+    Json::obj([
+        ("id", Json::num(resp.id as f64)),
+        ("tokens", Json::arr_u32(&resp.tokens)),
+        ("truncated", Json::Bool(resp.truncated)),
+        ("latency_ms", Json::num(resp.latency_ms)),
+        ("ttft_ms", Json::num(resp.ttft_ms)),
+        ("first_token_step", Json::num(resp.first_token_step as f64)),
+    ])
+}
+
+/// One stream chunk's wire format.
+pub fn chunk_json(chunk: &StreamChunk) -> Json {
+    Json::obj([
+        ("tokens", Json::arr_u32(&chunk.tokens)),
+        ("decode_step", Json::num(chunk.decode_step as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    use crate::coordinator::admission::AdmitConfig;
+    use crate::coordinator::scheduler::{AdmitGate, SchedulerConfig};
+    use crate::coordinator::server::Server;
+    use crate::runtime::backend::{minilang_mock_script, MockBackend, MockProvider};
+    use crate::tokenizer::Tokenizer;
+
+    #[test]
+    fn match_path_extracts_params_and_rejects_mismatches() {
+        assert_eq!(match_path("/v1/healthz", "/v1/healthz"), Some(vec![]));
+        assert_eq!(match_path("/v1/healthz", "v1/healthz/"), Some(vec![]));
+        let params = match_path("/v1/generate/:model/:variant", "/v1/generate/7b-sim/int8")
+            .expect("params extract");
+        assert_eq!(param(&params, "model"), Some("7b-sim"));
+        assert_eq!(param(&params, "variant"), Some("int8"));
+        assert_eq!(match_path("/v1/generate/:model/:variant", "/v1/generate/7b-sim"), None);
+        assert_eq!(match_path("/v1/generate", "/v1/generate/extra"), None);
+        assert_eq!(match_path("/v1/generate/:model/:variant", "/v1/generate//int8"), None);
+    }
+
+    #[test]
+    fn generate_body_extraction_is_typed_and_strict() {
+        let body = r#"{"model": "7b-sim", "variant": "int8", "mode": "no_think",
+                       "examples": [[[1,2],[2,1]]], "max_new": 8, "slo_ms": 50.0}"#;
+        let v = JsonSlice::parse(body).unwrap();
+        let gb = GenerateBody::from_slice(&v, None, None).unwrap();
+        assert_eq!(gb.model, "7b-sim");
+        assert_eq!(gb.mode, CotMode::NoThink);
+        assert_eq!(gb.examples, vec![(vec![1, 2], vec![2, 1])]);
+        assert_eq!(gb.max_new, Some(8));
+        assert_eq!(gb.slo_ms, Some(50.0));
+
+        // Path params override/replace body routing fields.
+        let v = JsonSlice::parse(r#"{"examples": []}"#).unwrap();
+        let gb = GenerateBody::from_slice(&v, Some("1b-sim"), Some("fp16")).unwrap();
+        assert_eq!((gb.model.as_str(), gb.variant.as_str()), ("1b-sim", "fp16"));
+        assert_eq!(gb.mode, CotMode::AutoThink, "mode defaults to auto_think");
+
+        for (body, needle) in [
+            (r#"{"variant": "int8", "examples": []}"#, "model"),
+            (r#"{"model": "m", "variant": "v"}"#, "examples"),
+            (r#"{"model": "m", "variant": "v", "mode": "warp", "examples": []}"#, "warp"),
+            (r#"{"model": "m", "variant": "v", "examples": [[[1],[300]]]}"#, "0..=255"),
+            (r#"{"model": "m", "variant": "v", "examples": [[[1]]]}"#, "pair"),
+            (r#"{"model": "m", "variant": "v", "examples": [], "slo_ms": -3}"#, "slo_ms"),
+            (r#"{"model": "m", "variant": "v", "examples": [], "max_new": 1.5}"#, "max_new"),
+        ] {
+            let v = JsonSlice::parse(body).unwrap();
+            let err = GenerateBody::from_slice(&v, None, None)
+                .expect_err(&format!("{body} must be rejected"));
+            assert_eq!(err.status, 400);
+            assert!(err.message.contains(needle), "{needle} not in: {}", err.message);
+        }
+    }
+
+    fn test_server() -> (Server<'static, MockProvider<impl Fn(&[i32]) -> Vec<u32>>>, Frontend) {
+        // Leaked tokenizer: test-only, keeps the server 'static so it can
+        // cross into a scoped thread alongside the frontend.
+        let tk: &'static Tokenizer = Box::leak(Box::new(Tokenizer::minilang_default()));
+        let script = minilang_mock_script(tk, 12);
+        let provider = MockProvider::new(MockBackend::new(64, 48, 96, script));
+        let (server, handle) = Server::new(
+            provider,
+            tk,
+            SchedulerConfig::fixed(2, AdmitGate::Continuous),
+            AdmitConfig::with_wait(false, Duration::ZERO),
+        );
+        (server, Frontend::new(handle))
+    }
+
+    const GEN_BODY: &str =
+        r#"{"examples": [[[1,2,3],[3,2,1]], [[4,5],[5,4]]], "mode": "no_think"}"#;
+
+    #[test]
+    fn dispatch_serves_health_errors_and_generate() {
+        let (mut server, fe) = test_server();
+        // Routing errors need no server loop.
+        match fe.dispatch("GET", "/v1/healthz", "") {
+            Reply::Json { status, body } => {
+                assert_eq!(status, 200);
+                assert_eq!(body.get("ok").as_bool(), Some(true));
+            }
+            Reply::Stream(_) => panic!("healthz is not a stream"),
+        }
+        for (method, path, body, status, code) in [
+            ("POST", "/v1/healthz", "", 405, "method_not_allowed"),
+            ("GET", "/v1/nope", "", 404, "not_found"),
+            ("POST", "/v1/generate/7b-sim/int8", "{", 400, "invalid_json"),
+            ("POST", "/v1/generate/7b-sim/int8", "{}", 400, "bad_request"),
+        ] {
+            match fe.dispatch(method, path, body) {
+                Reply::Json { status: s, body: b } => {
+                    assert_eq!(s, status, "{method} {path}");
+                    assert_eq!(b.get("error").get("code").as_str(), Some(code));
+                }
+                Reply::Stream(_) => panic!("errors are not streams"),
+            }
+        }
+        // Malformed JSON reports the parser's line/column.
+        match fe.dispatch("POST", "/v1/generate/7b-sim/int8", "{\n  \"examples\": [,]\n}") {
+            Reply::Json { status, body } => {
+                assert_eq!(status, 400);
+                let msg = body.get("error").get("message").as_str().unwrap().to_string();
+                assert!(msg.contains("line 2"), "line/col in {msg}");
+            }
+            Reply::Stream(_) => panic!(),
+        }
+        // The blocking route needs the server loop running concurrently.
+        std::thread::scope(|s| {
+            // `move` the frontend in: mpsc senders are Send, and nothing
+            // else submits after this.
+            let client =
+                s.spawn(move || fe.dispatch("POST", "/v1/generate/7b-sim/int8", GEN_BODY));
+            server.run_until_idle(Duration::from_millis(200)).unwrap();
+            match client.join().unwrap() {
+                Reply::Json { status, body } => {
+                    assert_eq!(status, 200);
+                    let toks = body.get("tokens").as_arr().unwrap();
+                    assert!(!toks.is_empty(), "generated tokens in the reply");
+                }
+                Reply::Stream(_) => panic!("generate is not a stream"),
+            }
+        });
+    }
+
+    #[test]
+    fn dispatch_streams_chunks_that_concat_to_the_final_response() {
+        let (mut server, fe) = test_server();
+        let stream = match fe.dispatch("POST", "/v1/stream/7b-sim/int8", GEN_BODY) {
+            Reply::Stream(s) => s,
+            Reply::Json { body, .. } => panic!("expected stream, got {}", body.to_string()),
+        };
+        drop(fe); // close the submit side so the server drains and exits
+        server.run_until_idle(Duration::from_millis(50)).unwrap();
+        let (chunks, resp) = stream.collect().unwrap();
+        assert!(!chunks.is_empty());
+        let streamed: Vec<u32> = chunks.iter().flat_map(|c| c.tokens.clone()).collect();
+        assert_eq!(streamed, resp.tokens, "streamed bytes == final response");
+        // The wire formats agree with the raw values.
+        let cj = chunk_json(&chunks[0]);
+        assert_eq!(
+            cj.get("tokens").as_arr().unwrap().len(),
+            chunks[0].tokens.len()
+        );
+        let rj = response_json(&resp);
+        assert_eq!(rj.get("tokens").as_arr().unwrap().len(), resp.tokens.len());
+        assert_eq!(server.metrics.counter("stream_tokens"), resp.tokens.len() as u64);
+    }
+}

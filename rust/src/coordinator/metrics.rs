@@ -28,8 +28,11 @@ impl Metrics {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Summary over a sample series; `None` when the series is absent or
+    /// holds no finite observations (the all-zero summary of a poisoned
+    /// series would read as a real measurement).
     pub fn summary(&self, name: &str) -> Option<Summary> {
-        self.samples.get(name).filter(|v| !v.is_empty()).map(|v| Summary::of(v))
+        self.samples.get(name).map(|v| Summary::of(v)).filter(|s| s.n > 0)
     }
 
     /// Throughput helper: counter / elapsed seconds.
@@ -66,8 +69,20 @@ impl Metrics {
                 continue;
             }
             let s = Summary::of(v);
+            // A poisoned series (NaN observation) renders its drop count
+            // instead of panicking the whole report or printing zeros that
+            // look like measurements.
+            if s.n == 0 {
+                out.push_str(&format!("{k:<36} n=0 ({} non-finite dropped)\n", s.dropped));
+                continue;
+            }
+            let tail = if s.dropped > 0 {
+                format!(" ({} non-finite dropped)", s.dropped)
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "{k:<36} n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3}\n",
+                "{k:<36} n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3}{tail}\n",
                 s.n, s.mean, s.p50, s.p90, s.p99
             ));
         }
@@ -129,5 +144,23 @@ mod tests {
         let r = m.render();
         assert!(r.contains("waves"));
         assert!(r.contains("wave_ms"));
+    }
+
+    /// Regression: one NaN observation used to panic `render` (via the
+    /// summary sort) mid-serve. It must render, and mark the drop.
+    #[test]
+    fn render_survives_non_finite_observations() {
+        let mut m = Metrics::new();
+        m.observe("latency_ms", 1.0);
+        m.observe("latency_ms", f64::NAN);
+        m.observe("poisoned_ms", f64::NAN);
+        let r = m.render();
+        assert!(r.contains("latency_ms"));
+        assert!(r.contains("(1 non-finite dropped)"));
+        assert!(r.contains("poisoned_ms"));
+        assert!(r.contains("n=0"));
+        // A fully poisoned series is not a measurement.
+        assert!(m.summary("poisoned_ms").is_none());
+        assert_eq!(m.summary("latency_ms").unwrap().n, 1);
     }
 }

@@ -15,6 +15,13 @@
 //!                     [`crate::runtime::backend::Backend`]
 //!   * [`server`]    — request loop: channel front-end, per-variant queues,
 //!                     generic over backend construction
+//!   * [`stream`]    — per-token streaming delivery: the decode loop's
+//!                     `TokenSink` hook, per-client bounded channels, and a
+//!                     flush-granularity ladder (token → chunk → final-only)
+//!                     that degrades slow consumers instead of blocking decode
+//!   * [`frontend`]  — typed HTTP-shaped routes over `util/json`: path/body
+//!                     extraction into `Request`s, structured JSON error
+//!                     responses, blocking and streaming dispatch
 //!   * [`fleet`]     — multi-device serving: per-device scheduler + KV pool
 //!                     pairs behind a cost-priced router, with cross-device
 //!                     rebalance of queued work and rolled-up reporting
@@ -47,6 +54,7 @@ pub mod admission;
 pub mod cost;
 pub mod cot;
 pub mod fleet;
+pub mod frontend;
 pub mod kv;
 pub mod metrics;
 pub mod request;
@@ -54,3 +62,4 @@ pub mod sampling;
 pub mod scheduler;
 pub mod server;
 pub mod slo;
+pub mod stream;

@@ -48,6 +48,7 @@ use crate::coordinator::kv::{Advance, KvConfig, KvSlots, PoolStats, PrepareWrite
 use crate::coordinator::request::{PreemptedSeq, Request, Response};
 use crate::coordinator::sampling;
 use crate::coordinator::slo::{SloPolicy, SloSnapshot};
+use crate::coordinator::stream::{self, TokenSink};
 use crate::quant::Precision;
 use crate::runtime::backend::{Backend, MigrateSlot, StateHandle};
 use crate::tokenizer::Tokenizer;
@@ -707,6 +708,25 @@ impl<'t> Scheduler<'t> {
         pump: &mut dyn FnMut(&mut AdmissionQueue),
         on_response: &mut dyn FnMut(Response),
     ) -> Result<SchedReport> {
+        self.run_streaming(backend, queue, pump, on_response, &mut stream::NullSink)
+    }
+
+    /// [`Scheduler::run`] with a [`TokenSink`]: every freshly sampled token
+    /// is pushed into `sink` the moment it is sampled (before END/budget
+    /// checks retire the slot), so a serving front end can stream tokens
+    /// incrementally instead of waiting for slot drain. The whole-`Response`
+    /// path is derived from the same sequence — each token is pushed into
+    /// the sink exactly once, in `Response::tokens` order, including across
+    /// preempt-and-recompute (replayed tokens are restored, never
+    /// re-sampled).
+    pub fn run_streaming<B: Backend + ?Sized>(
+        &self,
+        backend: &mut B,
+        queue: &mut AdmissionQueue,
+        pump: &mut dyn FnMut(&mut AdmissionQueue),
+        on_response: &mut dyn FnMut(Response),
+        sink: &mut dyn TokenSink,
+    ) -> Result<SchedReport> {
         anyhow::ensure!(!self.cfg.buckets.is_empty(), "bucket ladder must not be empty");
         anyhow::ensure!(self.cfg.buckets[0] > 0, "scheduler buckets must be positive");
         anyhow::ensure!(
@@ -736,7 +756,8 @@ impl<'t> Scheduler<'t> {
             ..SchedReport::default()
         };
         let mut slots: Vec<Option<SlotCtx>> = Vec::new();
-        let result = self.run_core(backend, queue, pump, on_response, &mut slots, &mut report);
+        let result =
+            self.run_core(backend, queue, pump, on_response, sink, &mut slots, &mut report);
         if result.is_err() {
             // Backend failure mid-session: every in-flight request still
             // gets its partial output back (marked truncated) so no caller
@@ -1145,6 +1166,7 @@ impl<'t> Scheduler<'t> {
         queue: &mut AdmissionQueue,
         pump: &mut dyn FnMut(&mut AdmissionQueue),
         on_response: &mut dyn FnMut(Response),
+        sink: &mut dyn TokenSink,
         slots: &mut Vec<Option<SlotCtx>>,
         report: &mut SchedReport,
     ) -> Result<()> {
@@ -1518,6 +1540,7 @@ impl<'t> Scheduler<'t> {
                         ctx.first_token_step = report.decode_steps;
                     }
                     ctx.output.push(tok);
+                    sink.on_token(ctx.req.id, tok, report.decode_steps);
                     next[slot] = tok as i32;
                     if tok == tk.end {
                         kv.finish(slot)?;

@@ -29,6 +29,7 @@ use crate::coordinator::admission::{AdmissionQueue, AdmitConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, Response};
 use crate::coordinator::scheduler::{Scheduler, SchedulerConfig};
+use crate::coordinator::stream::{BookSink, StreamBook, StreamChunk, StreamingResponse};
 use crate::runtime::backend::{Backend, BackendProvider};
 use crate::tokenizer::Tokenizer;
 
@@ -36,6 +37,11 @@ use crate::tokenizer::Tokenizer;
 pub struct Envelope {
     pub request: Request,
     pub reply: mpsc::Sender<Response>,
+    /// Bounded per-client chunk channel for streaming submissions; `None`
+    /// for whole-response submissions. The channel being bounded is what
+    /// makes backpressure non-blocking: the decode loop only ever
+    /// `try_send`s into it (see [`StreamBook`]).
+    pub stream: Option<mpsc::SyncSender<StreamChunk>>,
 }
 
 /// Client-side handle (cheap to clone across threads).
@@ -57,9 +63,27 @@ impl ServerHandle {
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Response>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Envelope { request, reply })
+            .send(Envelope { request, reply, stream: None })
             .map_err(|_| anyhow::anyhow!("server is gone"))?;
         Ok(rx)
+    }
+
+    /// Submit a request for per-token streaming delivery. `capacity` bounds
+    /// the chunk channel: a consumer that falls more than `capacity` chunks
+    /// behind degrades to coarser flush granularity (never blocking the
+    /// decode loop — see [`crate::coordinator::stream`]). The final whole
+    /// `Response` arrives on `done` regardless of how much was streamed.
+    pub fn submit_streaming(
+        &self,
+        request: Request,
+        capacity: usize,
+    ) -> Result<StreamingResponse> {
+        let (chunk_tx, chunks) = mpsc::sync_channel(capacity.max(1));
+        let (reply, done) = mpsc::channel();
+        self.tx
+            .send(Envelope { request, reply, stream: Some(chunk_tx) })
+            .map_err(|_| anyhow::anyhow!("server is gone"))?;
+        Ok(StreamingResponse { chunks, done })
     }
 }
 
@@ -85,26 +109,59 @@ impl ReplyBook {
         self.pending.entry(id).or_default().push_back(reply);
     }
 
-    /// Deliver a response to the oldest caller registered for its id; a
-    /// response nobody registered for (or whose receiver hung up) is
-    /// dropped silently.
-    pub fn deliver(&mut self, resp: Response) {
-        if let Some(txs) = self.pending.get_mut(&resp.id) {
-            let tx = txs.pop_front();
-            if txs.is_empty() {
-                self.pending.remove(&resp.id);
-            }
-            if let Some(tx) = tx {
-                let _ = tx.send(resp);
+    /// Deliver a response to the oldest caller registered for its id. A
+    /// response that cannot be handed to a live receiver is reported — not
+    /// silently swallowed — so the serving loops can count reply loss
+    /// (`replies_unclaimed` / `replies_dropped` in [`Metrics`]).
+    pub fn deliver(&mut self, resp: Response) -> Delivered {
+        let Some(txs) = self.pending.get_mut(&resp.id) else {
+            return Delivered::NoRegistrant;
+        };
+        let tx = txs.pop_front();
+        if txs.is_empty() {
+            self.pending.remove(&resp.id);
+        }
+        match tx {
+            // Unreachable in practice (emptied queues are removed), but a
+            // missing sender is still an unclaimed response.
+            None => Delivered::NoRegistrant,
+            Some(tx) => {
+                if tx.send(resp).is_ok() {
+                    Delivered::Sent
+                } else {
+                    Delivered::Hungup
+                }
             }
         }
     }
 }
 
-/// One route's admission queue plus its reply book.
+/// Outcome of [`ReplyBook::deliver`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivered {
+    /// Handed to a live receiver.
+    Sent,
+    /// Nobody ever registered for this id (counted `replies_unclaimed`).
+    NoRegistrant,
+    /// The registered receiver hung up (counted `replies_dropped`).
+    Hungup,
+}
+
+/// Count a delivery outcome — the shared [`Server`]/FleetServer mapping
+/// from [`Delivered`] to metric names.
+pub(crate) fn count_delivery(metrics: &mut Metrics, outcome: Delivered) {
+    match outcome {
+        Delivered::Sent => {}
+        Delivered::NoRegistrant => metrics.inc("replies_unclaimed", 1),
+        Delivered::Hungup => metrics.inc("replies_dropped", 1),
+    }
+}
+
+/// One route's admission queue plus its reply and stream books.
 struct RouteQueue {
     queue: AdmissionQueue,
     pending: ReplyBook,
+    streams: StreamBook,
 }
 
 pub struct Server<'t, P: BackendProvider> {
@@ -148,8 +205,12 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         let rq = self.queues.entry(key).or_insert_with(|| RouteQueue {
             queue: AdmissionQueue::new(cfg),
             pending: ReplyBook::new(),
+            streams: StreamBook::default(),
         });
         rq.pending.register(env.request.id, env.reply);
+        if let Some(tx) = env.stream {
+            rq.streams.register(env.request.id, tx);
+        }
         rq.queue.push(env.request);
         self.metrics.inc("requests_received", 1);
     }
@@ -213,7 +274,33 @@ impl<'t, P: BackendProvider> Server<'t, P> {
             {
                 return Ok(processed);
             } else {
-                std::thread::sleep(Duration::from_millis(1));
+                // Nothing is launch-ready: block on the envelope channel
+                // instead of spinning a sleep/poll loop. Wake at the
+                // earliest of a new arrival, the instant the oldest queued
+                // head ages past its launch deadline, or the idle deadline.
+                let now = Instant::now();
+                let next_ready = self
+                    .queues
+                    .values()
+                    .filter_map(|rq| rq.queue.ready_at())
+                    .min();
+                let any_queued = self.queues.values().any(|rq| !rq.queue.is_empty());
+                let wake = if any_queued {
+                    // A non-empty queue always has a head, so `ready_at` is
+                    // `None` only when the launch deadline overflows the
+                    // clock — a bounded recheck is harmless there.
+                    next_ready.unwrap_or_else(|| now + Duration::from_millis(10))
+                } else {
+                    last_activity + deadline_idle
+                };
+                match self.rx.recv_timeout(wake.saturating_duration_since(now)) {
+                    Ok(env) => {
+                        self.enqueue(env);
+                        last_activity = Instant::now();
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                }
             }
         }
     }
@@ -223,9 +310,10 @@ impl<'t, P: BackendProvider> Server<'t, P> {
     /// the live batch mid-flight; requests for other routes are buffered
     /// and queued when the session ends.
     fn run_session(&mut self, key: &(String, String)) -> Result<usize> {
-        let RouteQueue { mut queue, pending } =
+        let RouteQueue { mut queue, pending, streams } =
             self.queues.remove(key).expect("session key is queued");
         let pending = RefCell::new(pending);
+        let streams = RefCell::new(streams);
         let mut foreign: Vec<Envelope> = Vec::new();
         // Same-route arrivals admitted by the pump bypass enqueue(); count
         // them here so requests_received stays accurate.
@@ -236,7 +324,7 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         let result = {
             let Server { ref mut provider, ref rx, ref mut metrics, .. } = *self;
             provider.with_backend(&key.0, &key.1, &mut |backend: &mut dyn Backend| {
-                scheduler.run(
+                scheduler.run_streaming(
                     backend,
                     &mut queue,
                     &mut |q| {
@@ -250,6 +338,9 @@ impl<'t, P: BackendProvider> Server<'t, P> {
                                 && env.request.route_key_ref() == (key.0.as_str(), key.1.as_str())
                             {
                                 pending.borrow_mut().register(env.request.id, env.reply);
+                                if let Some(tx) = env.stream {
+                                    streams.borrow_mut().register(env.request.id, tx);
+                                }
                                 q.push(env.request);
                                 pumped_in += 1;
                             } else {
@@ -260,9 +351,14 @@ impl<'t, P: BackendProvider> Server<'t, P> {
                     &mut |resp| {
                         metrics.observe("request_latency_ms", resp.latency_ms);
                         metrics.observe("ttft_ms", resp.ttft_ms);
+                        // Close the client's chunk stream (best-effort tail
+                        // flush + sender drop) before the final response.
+                        streams.borrow_mut().finish(&resp);
                         // Deliver by id; the receiver may have given up.
-                        pending.borrow_mut().deliver(resp);
+                        let outcome = pending.borrow_mut().deliver(resp);
+                        count_delivery(metrics, outcome);
                     },
+                    &mut BookSink { book: &streams },
                 )
             })
         };
@@ -273,9 +369,11 @@ impl<'t, P: BackendProvider> Server<'t, P> {
         // survive a failed session. (In-flight requests of a failed session
         // were already answered by the scheduler's abort drain.)
         self.metrics.inc("requests_received", pumped_in);
+        let mut streams = streams.into_inner();
+        streams.fold_into(&mut self.metrics);
         self.queues.insert(
             key.clone(),
-            RouteQueue { queue, pending: pending.into_inner() },
+            RouteQueue { queue, pending: pending.into_inner(), streams },
         );
         for env in foreign {
             self.enqueue(env);

@@ -1,0 +1,400 @@
+//! Per-token streaming delivery with non-blocking backpressure.
+//!
+//! The scheduler's decode loop pushes every freshly sampled token into a
+//! [`TokenSink`] the moment it is sampled; the server routes those pushes
+//! into per-client bounded channels via a [`StreamBook`]. A slow consumer
+//! never stalls the batch: when a client's channel is full the book keeps
+//! the undelivered tokens buffered server-side and *degrades* that client's
+//! flush granularity down a ladder (per-token → per-chunk → final-only)
+//! instead of blocking. The whole-`Response` path is untouched — chunks are
+//! a prefix view of the same token sequence, and a draining consumer sees
+//! the exact bytes of `Response::tokens` (pinned by `tests/stream_props.rs`).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Response;
+
+/// Receives each freshly sampled token from the scheduler's decode loop,
+/// before end-of-sequence/budget checks retire the slot. `decode_step` is
+/// the scheduler's decode-step counter at sampling time (the same clock as
+/// `Response::first_token_step`). Implementations MUST NOT block: they run
+/// inside the batch-wide decode loop.
+pub trait TokenSink {
+    fn on_token(&mut self, id: u64, token: u32, decode_step: usize);
+}
+
+/// The non-streaming path: tokens accumulate only in the slot context and
+/// surface at retirement as a whole `Response`.
+pub struct NullSink;
+
+impl TokenSink for NullSink {
+    fn on_token(&mut self, _id: u64, _token: u32, _decode_step: usize) {}
+}
+
+/// One flushed span of a streamed generation. At `FlushLevel::Token` each
+/// chunk holds a single token; coarser levels coalesce several.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamChunk {
+    /// Tokens in generation order, never empty.
+    pub tokens: Vec<u32>,
+    /// Decode-step at which the *last* token in this chunk was sampled.
+    pub decode_step: usize,
+}
+
+/// Client-side end of one streaming submission: incremental chunks plus the
+/// final whole `Response` (delivered through the ordinary reply path once
+/// the slot retires). The chunk receiver disconnecting is the end-of-stream
+/// signal; the final response is always complete even if tail chunks were
+/// dropped under backpressure.
+pub struct StreamingResponse {
+    pub chunks: mpsc::Receiver<StreamChunk>,
+    pub done: mpsc::Receiver<Response>,
+}
+
+impl StreamingResponse {
+    /// Drain the stream to completion: blocks until the server closes the
+    /// chunk channel, then returns all received chunks and the final
+    /// response.
+    pub fn collect(self) -> anyhow::Result<(Vec<StreamChunk>, Response)> {
+        let mut chunks = Vec::new();
+        while let Ok(c) = self.chunks.recv() {
+            chunks.push(c);
+        }
+        let resp = self
+            .done
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the stream before replying"))?;
+        Ok((chunks, resp))
+    }
+}
+
+/// Flush-granularity ladder. Every client starts at `Token`; each time its
+/// bounded channel is full at flush time the book steps the client one rung
+/// down rather than blocking the decode loop. `FinalOnly` clients get a
+/// single best-effort tail chunk at retirement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FlushLevel {
+    Token,
+    Chunk,
+    FinalOnly,
+}
+
+/// Counters folded into server [`Metrics`] after each session.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StreamCounters {
+    pub tokens_streamed: u64,
+    pub chunks_sent: u64,
+    /// Token→Chunk degradations (channel full at per-token granularity).
+    pub degraded_to_chunk: u64,
+    /// Chunk→FinalOnly degradations (channel still full when coalescing).
+    pub degraded_to_final: u64,
+    /// Retirement-time tail chunks dropped because the channel was full.
+    pub tail_dropped: u64,
+    /// Clients whose chunk receiver hung up mid-stream.
+    pub clients_gone: u64,
+}
+
+/// Server-side state for one streaming client.
+struct ClientStream {
+    tx: mpsc::SyncSender<StreamChunk>,
+    /// Sampled-but-unflushed tokens, in order. Nothing is ever dropped
+    /// mid-stream: a full channel leaves tokens here to coalesce into the
+    /// next (coarser) flush.
+    pending: Vec<u32>,
+    level: FlushLevel,
+    last_step: usize,
+    /// Receiver hung up — stop buffering for it.
+    gone: bool,
+}
+
+/// Routes decode-loop token pushes to per-client bounded channels, keyed by
+/// request id. Duplicate ids queue FIFO, mirroring `ReplyBook`: tokens go
+/// to the oldest not-yet-retired registrant.
+pub struct StreamBook {
+    clients: BTreeMap<u64, VecDeque<ClientStream>>,
+    /// Coalescing size at `FlushLevel::Chunk`.
+    chunk_tokens: usize,
+    pub counters: StreamCounters,
+}
+
+impl Default for StreamBook {
+    fn default() -> Self {
+        StreamBook::new(16)
+    }
+}
+
+impl StreamBook {
+    pub fn new(chunk_tokens: usize) -> StreamBook {
+        StreamBook {
+            clients: BTreeMap::new(),
+            chunk_tokens: chunk_tokens.max(1),
+            counters: StreamCounters::default(),
+        }
+    }
+
+    /// Register a streaming client for `id`. Called by the server when it
+    /// dequeues a streaming envelope.
+    pub fn register(&mut self, id: u64, tx: mpsc::SyncSender<StreamChunk>) {
+        self.clients.entry(id).or_default().push_back(ClientStream {
+            tx,
+            pending: Vec::new(),
+            level: FlushLevel::Token,
+            last_step: 0,
+            gone: false,
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    /// Route one freshly sampled token. Non-blocking by construction: the
+    /// only send primitive used is `try_send`.
+    pub fn push(&mut self, id: u64, token: u32, decode_step: usize) {
+        let Some(q) = self.clients.get_mut(&id) else {
+            return;
+        };
+        let Some(c) = q.front_mut() else { return };
+        if c.gone {
+            return;
+        }
+        c.pending.push(token);
+        c.last_step = decode_step;
+        let due = match c.level {
+            FlushLevel::Token => true,
+            FlushLevel::Chunk => c.pending.len() >= self.chunk_tokens,
+            FlushLevel::FinalOnly => false,
+        };
+        if due {
+            Self::try_flush(c, &mut self.counters, true);
+        }
+    }
+
+    /// Retire the client for `resp.id`: one last best-effort flush of any
+    /// coalesced tail, then drop the sender so the client's chunk receiver
+    /// disconnects (end-of-stream). The full `Response` travels separately
+    /// through the reply path, so a dropped tail loses nothing.
+    pub fn finish(&mut self, resp: &Response) {
+        let Some(q) = self.clients.get_mut(&resp.id) else {
+            return;
+        };
+        let Some(mut c) = q.pop_front() else { return };
+        if q.is_empty() {
+            self.clients.remove(&resp.id);
+        }
+        Self::try_flush(&mut c, &mut self.counters, false);
+        if !c.pending.is_empty() && !c.gone {
+            self.counters.tail_dropped += 1;
+        }
+        // Dropping `c` drops the SyncSender: the receiver sees disconnect
+        // after draining whatever was delivered.
+    }
+
+    /// Attempt one non-blocking flush of `c.pending`. On a full channel the
+    /// tokens are restored (order intact) and, when `escalate` is set, the
+    /// client steps one rung down the granularity ladder.
+    fn try_flush(c: &mut ClientStream, k: &mut StreamCounters, escalate: bool) {
+        if c.pending.is_empty() || c.gone {
+            return;
+        }
+        let chunk = StreamChunk {
+            tokens: std::mem::take(&mut c.pending),
+            decode_step: c.last_step,
+        };
+        let n = chunk.tokens.len() as u64;
+        match c.tx.try_send(chunk) {
+            Ok(()) => {
+                k.chunks_sent += 1;
+                k.tokens_streamed += n;
+            }
+            Err(mpsc::TrySendError::Full(chunk)) => {
+                c.pending = chunk.tokens;
+                if escalate {
+                    match c.level {
+                        FlushLevel::Token => {
+                            c.level = FlushLevel::Chunk;
+                            k.degraded_to_chunk += 1;
+                        }
+                        FlushLevel::Chunk => {
+                            c.level = FlushLevel::FinalOnly;
+                            k.degraded_to_final += 1;
+                        }
+                        FlushLevel::FinalOnly => {}
+                    }
+                }
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                c.gone = true;
+                c.pending.clear();
+                k.clients_gone += 1;
+            }
+        }
+    }
+
+    /// Fold (and reset) the session's counters into server metrics.
+    pub fn fold_into(&mut self, metrics: &mut Metrics) {
+        let k = std::mem::take(&mut self.counters);
+        for (name, v) in [
+            ("stream_tokens", k.tokens_streamed),
+            ("stream_chunks", k.chunks_sent),
+            ("stream_degraded_to_chunk", k.degraded_to_chunk),
+            ("stream_degraded_to_final", k.degraded_to_final),
+            ("stream_tail_dropped", k.tail_dropped),
+            ("stream_clients_gone", k.clients_gone),
+        ] {
+            if v > 0 {
+                metrics.inc(name, v);
+            }
+        }
+    }
+}
+
+/// [`TokenSink`] adapter over a shared [`StreamBook`]. The server's pump
+/// and on-response closures also need the book (to register arrivals and
+/// retire clients), so the sink takes a per-call borrow of the same
+/// `RefCell` — the scheduler never holds the sink borrow across a pump or
+/// response callback.
+pub struct BookSink<'a> {
+    pub book: &'a RefCell<StreamBook>,
+}
+
+impl TokenSink for BookSink<'_> {
+    fn on_token(&mut self, id: u64, token: u32, decode_step: usize) {
+        self.book.borrow_mut().push(id, token, decode_step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64) -> Response {
+        Response {
+            id,
+            tokens: vec![],
+            truncated: false,
+            latency_ms: 0.0,
+            service_ms: 0.0,
+            ttft_ms: 0.0,
+            first_token_step: 0,
+        }
+    }
+
+    #[test]
+    fn token_level_streams_each_token_as_a_chunk() {
+        let mut book = StreamBook::new(4);
+        let (tx, rx) = mpsc::sync_channel(16);
+        book.register(7, tx);
+        for (i, t) in [10u32, 11, 12].iter().enumerate() {
+            book.push(7, *t, i);
+        }
+        book.finish(&resp(7));
+        let chunks: Vec<StreamChunk> = rx.iter().collect();
+        assert_eq!(chunks.len(), 3);
+        let flat: Vec<u32> = chunks.iter().flat_map(|c| c.tokens.clone()).collect();
+        assert_eq!(flat, vec![10, 11, 12]);
+        assert_eq!(chunks[2].decode_step, 2);
+        assert_eq!(book.counters.chunks_sent, 3);
+        assert_eq!(book.counters.tokens_streamed, 3);
+        assert_eq!(book.counters.degraded_to_chunk, 0);
+    }
+
+    #[test]
+    fn full_channel_degrades_down_the_ladder_without_losing_order() {
+        // Capacity 1 and a consumer that never reads: the first token is
+        // delivered, the second flush finds the channel full (degrade to
+        // Chunk), the flush at chunk-granularity finds it full again
+        // (degrade to FinalOnly), and everything after coalesces into the
+        // pending tail.
+        let mut book = StreamBook::new(2);
+        let (tx, rx) = mpsc::sync_channel(1);
+        book.register(1, tx);
+        for t in 0..10u32 {
+            book.push(1, t, t as usize);
+        }
+        book.finish(&resp(1));
+        assert_eq!(book.counters.degraded_to_chunk, 1);
+        assert_eq!(book.counters.degraded_to_final, 1);
+        // The tail flush at retirement found the channel still full.
+        assert_eq!(book.counters.tail_dropped, 1);
+        // What WAS delivered is a strict prefix, in order.
+        let chunks: Vec<StreamChunk> = rx.iter().collect();
+        let flat: Vec<u32> = chunks.iter().flat_map(|c| c.tokens.clone()).collect();
+        assert_eq!(flat, vec![0]);
+    }
+
+    #[test]
+    fn draining_consumer_after_degradation_still_gets_a_prefix_then_tail() {
+        // Channel capacity 1, but the consumer drains between pushes after
+        // the first stall: degradation to Chunk happens once, then chunks
+        // of size `chunk_tokens` flow again. No token is ever dropped
+        // mid-stream; only the retirement tail can be dropped.
+        let mut book = StreamBook::new(2);
+        let (tx, rx) = mpsc::sync_channel(1);
+        book.register(3, tx);
+        book.push(3, 100, 0); // delivered (capacity 1 -> now full)
+        book.push(3, 101, 1); // full -> degrade to Chunk, pending=[101]
+        assert_eq!(book.counters.degraded_to_chunk, 1);
+        let first = rx.recv().unwrap();
+        assert_eq!(first.tokens, vec![100]);
+        book.push(3, 102, 2); // pending=[101,102] -> chunk flush succeeds
+        let second = rx.recv().unwrap();
+        assert_eq!(second.tokens, vec![101, 102]);
+        book.push(3, 103, 3);
+        book.finish(&resp(3)); // tail flush delivers [103]
+        let rest: Vec<StreamChunk> = rx.iter().collect();
+        let flat: Vec<u32> = rest.iter().flat_map(|c| c.tokens.clone()).collect();
+        assert_eq!(flat, vec![103]);
+        assert_eq!(book.counters.tail_dropped, 0);
+    }
+
+    #[test]
+    fn hung_up_consumer_is_detached_and_counted() {
+        let mut book = StreamBook::new(2);
+        let (tx, rx) = mpsc::sync_channel(4);
+        book.register(5, tx);
+        book.push(5, 1, 0);
+        drop(rx);
+        book.push(5, 2, 1); // try_send sees Disconnected
+        assert_eq!(book.counters.clients_gone, 1);
+        book.push(5, 3, 2); // no-op: client marked gone
+        book.finish(&resp(5));
+        assert_eq!(book.counters.tail_dropped, 0);
+        assert_eq!(book.counters.tokens_streamed, 1);
+    }
+
+    #[test]
+    fn duplicate_ids_queue_fifo_like_replybook() {
+        let mut book = StreamBook::new(2);
+        let (tx1, rx1) = mpsc::sync_channel(8);
+        let (tx2, rx2) = mpsc::sync_channel(8);
+        book.register(9, tx1);
+        book.register(9, tx2);
+        book.push(9, 1, 0);
+        book.finish(&resp(9)); // retires the first registrant
+        book.push(9, 2, 1); // routed to the second
+        book.finish(&resp(9));
+        assert!(book.is_empty());
+        let a: Vec<u32> = rx1.iter().flat_map(|c| c.tokens).collect();
+        let b: Vec<u32> = rx2.iter().flat_map(|c| c.tokens).collect();
+        assert_eq!(a, vec![1]);
+        assert_eq!(b, vec![2]);
+    }
+
+    #[test]
+    fn fold_into_resets_counters() {
+        let mut book = StreamBook::new(2);
+        let (tx, _rx) = mpsc::sync_channel(8);
+        book.register(1, tx);
+        book.push(1, 7, 0);
+        let mut m = Metrics::default();
+        book.fold_into(&mut m);
+        assert_eq!(m.counter("stream_tokens"), 1);
+        assert_eq!(book.counters.tokens_streamed, 0);
+        book.fold_into(&mut m);
+        assert_eq!(m.counter("stream_tokens"), 1);
+    }
+}

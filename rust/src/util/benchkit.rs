@@ -196,6 +196,28 @@ impl JsonEmitter {
         self.groups.push(GroupSnap { title: group.title.clone(), benches });
     }
 
+    /// Record an externally measured sample series (milliseconds) as one
+    /// bench entry under `group` — the load-generator path, where
+    /// per-request timings come from live concurrent traffic rather than a
+    /// closed-loop bench closure. Appends to an existing group of the same
+    /// title so several series land in one group. Non-finite samples are
+    /// dropped by the underlying [`Summary`].
+    pub fn add_series(&mut self, group: &str, name: &str, ms: &[f64], notes: Vec<String>) {
+        let s = Summary::of(ms);
+        let snap = BenchSnap {
+            name: name.to_string(),
+            iters: s.n,
+            mean_ms: s.mean,
+            p50_ms: s.p50,
+            p90_ms: s.p90,
+            notes,
+        };
+        match self.groups.iter_mut().find(|g| g.title == group) {
+            Some(g) => g.benches.push(snap),
+            None => self.groups.push(GroupSnap { title: group.to_string(), benches: vec![snap] }),
+        }
+    }
+
     /// The snapshot as a JSON value (tested without touching disk).
     pub fn snapshot(&self) -> Json {
         let groups: Vec<Json> = self
@@ -397,14 +419,28 @@ impl Baseline {
 }
 
 /// The gate's threshold: `BENCH_REGRESSION_THRESHOLD` env (a ratio, e.g.
-/// `4.0` = fail past 4x the baseline median) or `default`. Env-tunable so
-/// noisy shared runners can loosen the gate without a code change.
-pub fn regression_threshold(default: f64) -> f64 {
-    std::env::var("BENCH_REGRESSION_THRESHOLD")
-        .ok()
-        .and_then(|v| v.parse::<f64>().ok())
-        .filter(|t| *t > 0.0)
-        .unwrap_or(default)
+/// `4.0` = fail past 4x the baseline median) or `default` when the
+/// variable is unset. Env-tunable so noisy shared runners can loosen the
+/// gate without a code change — but a value that is *present and
+/// unparsable* (or non-positive) is a hard error, not a silent fallback: a
+/// typo in the CI environment must fail the job loudly instead of quietly
+/// running the gate at a threshold nobody chose.
+pub fn regression_threshold(default: f64) -> anyhow::Result<f64> {
+    parse_threshold(std::env::var("BENCH_REGRESSION_THRESHOLD").ok().as_deref(), default)
+}
+
+/// Env-independent core of [`regression_threshold`] (unit-testable without
+/// cross-test environment races). `None` means the variable is unset.
+pub fn parse_threshold(raw: Option<&str>, default: f64) -> anyhow::Result<f64> {
+    let Some(v) = raw else { return Ok(default) };
+    let t: f64 = v.trim().parse().map_err(|_| {
+        anyhow::anyhow!("BENCH_REGRESSION_THRESHOLD {v:?} is not a number")
+    })?;
+    anyhow::ensure!(
+        t.is_finite() && t > 0.0,
+        "BENCH_REGRESSION_THRESHOLD must be a finite positive ratio, got {v:?}"
+    );
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -472,6 +508,29 @@ mod tests {
         let back = Json::parse_file(&path).unwrap();
         assert_eq!(back, snap);
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// `add_series` feeds externally measured samples (load-gen TTFT/ITL)
+    /// into the same snapshot schema `add` produces.
+    #[test]
+    fn add_series_lands_in_the_snapshot_schema() {
+        let mut emitter = JsonEmitter::new();
+        emitter.add_series("load-gen", "ttft_ms", &[1.0, 2.0, 3.0], vec!["note".into()]);
+        emitter.add_series("load-gen", "itl_ms", &[0.5, 0.5], vec![]);
+        let snap = emitter.snapshot();
+        let groups = snap.get("groups").as_arr().unwrap();
+        assert_eq!(groups.len(), 1, "same title appends to one group");
+        assert_eq!(groups[0].get("title").as_str(), Some("load-gen"));
+        let benches = groups[0].get("benches").as_arr().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(benches[0].get("name").as_str(), Some("ttft_ms"));
+        assert_eq!(benches[0].get("iters").as_usize(), Some(3));
+        assert_eq!(benches[0].get("p50_ms").as_f64(), Some(2.0));
+        let notes = benches[0].get("notes").as_arr().unwrap();
+        assert_eq!(notes[0].as_str(), Some("note"));
+        // Distills into a Baseline like any bench group.
+        let b = Baseline::from_snapshot(&snap).unwrap();
+        assert_eq!(b.groups["load-gen"]["itl_ms"], 0.5);
     }
 
     fn baseline_of(groups: &[(&str, &[(&str, f64)])]) -> Baseline {
@@ -559,18 +618,24 @@ mod tests {
         assert_eq!(report.checked, 0);
     }
 
+    /// Regression: a present-but-unparsable threshold used to fall back
+    /// silently via `.parse().ok()`, quietly running the CI gate at a
+    /// default nobody chose. Unset still means the default; garbage is a
+    /// hard error. (Tested through the env-independent core so parallel
+    /// tests cannot race on the process environment.)
     #[test]
-    fn threshold_env_parsing_falls_back_on_garbage() {
-        // Avoid cross-test env races: this test owns the variable.
-        std::env::remove_var("BENCH_REGRESSION_THRESHOLD");
-        assert_eq!(regression_threshold(2.0), 2.0);
-        std::env::set_var("BENCH_REGRESSION_THRESHOLD", "3.5");
-        assert_eq!(regression_threshold(2.0), 3.5);
-        std::env::set_var("BENCH_REGRESSION_THRESHOLD", "not-a-number");
-        assert_eq!(regression_threshold(2.0), 2.0);
-        std::env::set_var("BENCH_REGRESSION_THRESHOLD", "-1");
-        assert_eq!(regression_threshold(2.0), 2.0);
-        std::env::remove_var("BENCH_REGRESSION_THRESHOLD");
+    fn threshold_garbage_is_a_hard_error_not_a_fallback() {
+        assert_eq!(parse_threshold(None, 2.0).unwrap(), 2.0);
+        assert_eq!(parse_threshold(Some("3.5"), 2.0).unwrap(), 3.5);
+        assert_eq!(parse_threshold(Some(" 4.0 "), 2.0).unwrap(), 4.0);
+        for bad in ["not-a-number", "", "-1", "0", "NaN", "inf", "4.0x"] {
+            let err = parse_threshold(Some(bad), 2.0)
+                .expect_err(&format!("{bad:?} must be rejected"));
+            assert!(
+                err.to_string().contains("BENCH_REGRESSION_THRESHOLD"),
+                "error names the variable: {err}"
+            );
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 /// Summary statistics over a sample.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Finite samples the statistics were computed over.
     pub n: usize,
     pub mean: f64,
     pub std: f64,
@@ -12,16 +13,36 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    /// Non-finite samples (NaN/±inf) excluded from the statistics. One
+    /// poisoned latency observation must not panic a metrics render
+    /// mid-serve — it is dropped and counted instead.
+    pub dropped: usize,
 }
 
 impl Summary {
+    /// Total over any input: non-finite samples are dropped (and counted in
+    /// `dropped`), and an empty — or fully non-finite — input yields the
+    /// all-zero summary instead of panicking.
     pub fn of(xs: &[f64]) -> Summary {
-        assert!(!xs.is_empty(), "Summary::of(empty)");
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let mut sorted: Vec<f64> = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        let dropped = xs.len() - sorted.len();
+        let n = sorted.len();
+        if n == 0 {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                dropped,
+            };
+        }
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         Summary {
             n,
             mean,
@@ -31,6 +52,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
             p99: percentile_sorted(&sorted, 99.0),
+            dropped,
         }
     }
 }
@@ -49,22 +71,30 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Fixed-bin histogram over [lo, hi); values outside clamp to edge bins.
+/// Fixed-bin histogram over [lo, hi); finite values outside clamp to edge
+/// bins, non-finite values are dropped and counted (NaN used to bucket
+/// silently into bin 0 via an `as usize` cast).
 #[derive(Debug, Clone)]
 pub struct Histogram {
     pub lo: f64,
     pub hi: f64,
     pub bins: Vec<u64>,
     pub count: u64,
+    /// Non-finite samples rejected by [`Histogram::add`].
+    pub dropped: u64,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
         assert!(hi > lo && nbins > 0);
-        Histogram { lo, hi, bins: vec![0; nbins], count: 0 }
+        Histogram { lo, hi, bins: vec![0; nbins], count: 0, dropped: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.dropped += 1;
+            return;
+        }
         let nb = self.bins.len();
         let idx = if x <= self.lo {
             0
@@ -150,6 +180,48 @@ mod tests {
         assert_eq!(h.bins[9], 2); // 9.5 and clamped 100
         assert_eq!(h.bins[5], 1);
         assert_eq!(h.bins.iter().sum::<u64>(), 6);
+    }
+
+    /// Regression: one NaN sample used to panic the sort's
+    /// `partial_cmp().unwrap()` — mid-serve, via `Metrics::render`. Now it
+    /// is dropped and counted, and the finite statistics are unaffected.
+    #[test]
+    fn summary_drops_and_counts_non_finite() {
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, f64::INFINITY, 3.0, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.dropped, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        let clean = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s, Summary { dropped: 3, ..clean });
+    }
+
+    /// Regression: `Summary::of(&[])` used to assert; empty (and fully
+    /// non-finite) inputs now yield the zero summary.
+    #[test]
+    fn summary_is_total_on_empty_and_all_nan_input() {
+        let empty = Summary::of(&[]);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.dropped, 0);
+        assert_eq!(empty.mean, 0.0);
+        let poisoned = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(poisoned.n, 0);
+        assert_eq!(poisoned.dropped, 2);
+        assert_eq!(poisoned.p99, 0.0);
+    }
+
+    /// Regression: `(NaN as usize)` is 0, so NaN used to bucket silently
+    /// into bin 0. It must be dropped and counted instead.
+    #[test]
+    fn histogram_drops_non_finite_instead_of_bin_zero() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add_all(&[f64::NAN, 0.5, f64::INFINITY, f64::NEG_INFINITY]);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.dropped, 3);
+        assert_eq!(h.bins[0], 1, "only the finite 0.5 lands in bin 0");
+        assert_eq!(h.bins.iter().sum::<u64>(), 1);
     }
 
     #[test]

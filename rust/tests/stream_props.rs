@@ -1,0 +1,330 @@
+//! Property tests (propcheck) over the streaming delivery path: the
+//! token-sink hook in the scheduler's decode loop, the per-client flush
+//! ladder in `coordinator::stream`, and the server wiring around both.
+//!
+//! The two load-bearing invariants (ISSUE: streaming front end):
+//!
+//!   * **Byte identity** — the token stream a sink observes is exactly the
+//!     sequence of freshly *sampled* tokens, so per request it equals the
+//!     final `Response::tokens` byte-for-byte, even under tight paged
+//!     pools with preempt-and-recompute (replayed prefixes are restored,
+//!     never re-sampled, so the sink sees each token exactly once).
+//!
+//!   * **No head-of-line blocking** — a stalled streaming consumer (full
+//!     chunk channel, never read) degrades its own flush granularity and
+//!     must not change one byte or one schedule step for anybody else.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use pangu_atlas_quant::coordinator::admission::{AdmissionQueue, AdmitConfig};
+use pangu_atlas_quant::coordinator::kv::KvConfig;
+use pangu_atlas_quant::coordinator::request::Request;
+use pangu_atlas_quant::coordinator::scheduler::{
+    AdmitGate, PreemptConfig, Scheduler, SchedulerConfig,
+};
+use pangu_atlas_quant::coordinator::server::Server;
+use pangu_atlas_quant::coordinator::stream::TokenSink;
+use pangu_atlas_quant::runtime::backend::{minilang_mock_script, MockBackend, MockProvider};
+use pangu_atlas_quant::tokenizer::{CotMode, Tokenizer};
+use pangu_atlas_quant::util::propcheck::{check, ensure, ensure_eq};
+
+const MODES: [CotMode; 3] = [CotMode::NoThink, CotMode::AutoThink, CotMode::SlowThink];
+
+fn mk_request(id: u64, mode_tag: u8, examples: u8) -> Request {
+    let ex: Vec<(Vec<u8>, Vec<u8>)> = (0..examples)
+        .map(|_| (vec![1, 2, 3, 4, 5], vec![5, 4, 3, 2, 1]))
+        .collect();
+    Request::new(id, "7b-sim", "int8", MODES[mode_tag as usize], ex)
+}
+
+/// A sink that records every token it is handed, per request id, plus
+/// whether the decode-step stamps it saw were monotone non-decreasing.
+#[derive(Default)]
+struct CollectSink {
+    per_id: BTreeMap<u64, Vec<u32>>,
+    last_step: usize,
+    monotone: bool,
+    started: bool,
+}
+
+impl TokenSink for CollectSink {
+    fn on_token(&mut self, id: u64, token: u32, decode_step: usize) {
+        if self.started && decode_step < self.last_step {
+            self.monotone = false;
+        }
+        self.started = true;
+        self.last_step = decode_step;
+        self.per_id.entry(id).or_default().push(token);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte identity at the scheduler layer, including preempt-and-recompute
+// ---------------------------------------------------------------------------
+
+/// Randomized workloads through `Scheduler::run_streaming` with a
+/// collecting sink, over both an ample pool and a tight paged pool with
+/// preemption enabled: the per-request stream the sink observed equals
+/// `Response::tokens` exactly (no token missed, duplicated, or reordered),
+/// and the decode-step stamps never go backwards. The tight runs must
+/// actually preempt across the suite, or the replay half of the property
+/// would be vacuous.
+#[test]
+fn prop_sink_stream_is_byte_identical_under_preemption() {
+    let run = |kv_cfg: Option<KvConfig>,
+               bucket: usize,
+               shapes: &[(u8, u8)]|
+     -> Result<(BTreeMap<u64, Vec<u32>>, BTreeMap<u64, Vec<u32>>, usize), String> {
+        let tk = Tokenizer::minilang_default();
+        let script = minilang_mock_script(&tk, 30);
+        let mut be = MockBackend::new(64, 48, 96, script);
+        let mut cfg = SchedulerConfig::fixed(bucket, AdmitGate::Continuous).with_preempt(
+            PreemptConfig { enabled: true, max_per_seq: 64, restore_headroom_pages: 1 },
+        );
+        if let Some(kv_cfg) = kv_cfg {
+            cfg = cfg.with_kv(kv_cfg);
+        }
+        let sched = Scheduler::new(&tk, cfg);
+        let mut queue = AdmissionQueue::new(AdmitConfig::with_wait(false, Duration::ZERO));
+        for (i, &(tag, examples)) in shapes.iter().enumerate() {
+            queue.push(mk_request(i as u64, tag, examples));
+        }
+        let mut sink = CollectSink { monotone: true, ..CollectSink::default() };
+        let mut responses: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        let report = sched
+            .run_streaming(
+                &mut be,
+                &mut queue,
+                &mut |_| {},
+                &mut |r| {
+                    responses.insert(r.id, r.tokens);
+                },
+                &mut sink,
+            )
+            .map_err(|e| e.to_string())?;
+        ensure(sink.monotone, "sink saw decode_step go backwards")?;
+        Ok((sink.per_id, responses, report.preemptions))
+    };
+    let total_preemptions = std::cell::Cell::new(0usize);
+    check(
+        "stream-sink-byte-identity",
+        25,
+        0x57B1,
+        |rng| {
+            let bucket = rng.range(2, 4);
+            let shapes: Vec<(u8, u8)> = (0..rng.range(2, 6))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            // 5..=8 pages: tight enough to starve a 4-page-peak sequence,
+            // never too tight to restore it (mirrors the preempt suite).
+            let pages = rng.range(5, 8);
+            (bucket, shapes, pages)
+        },
+        |(bucket, shapes, pages)| {
+            let (streamed, responses, _) = run(None, *bucket, shapes)?;
+            ensure_eq(responses.len(), shapes.len(), "ample: every request answered")?;
+            ensure(
+                streamed == responses,
+                "ample: sink stream diverged from the final responses",
+            )?;
+            let (streamed, responses, preemptions) =
+                run(Some(KvConfig::paged(16, pages * 16)), *bucket, shapes)?;
+            total_preemptions.set(total_preemptions.get() + preemptions);
+            ensure_eq(responses.len(), shapes.len(), "tight: every request answered")?;
+            ensure(
+                streamed == responses,
+                "tight: a preemption replayed tokens into the sink (or dropped them)",
+            )?;
+            Ok(())
+        },
+    );
+    assert!(
+        total_preemptions.get() > 0,
+        "the generator never starved a pool: the replay property was vacuous"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Byte identity at the server layer: chunks concatenate to the response
+// ---------------------------------------------------------------------------
+
+/// Randomized mixed workloads (streaming and plain submissions
+/// interleaved) through the server: for every streaming client with an
+/// ample chunk channel, the concatenated chunks equal the final
+/// `Response::tokens`, chunk stamps are strictly increasing per client,
+/// nothing degrades and no tail is dropped; plain submissions are
+/// unaffected and still answered.
+#[test]
+fn prop_streamed_chunks_concat_to_the_response() {
+    check(
+        "stream-chunks-concat",
+        25,
+        0x57B2,
+        |rng| {
+            let bucket = rng.range(1, 4);
+            let shapes: Vec<(u8, u8, bool)> = (0..rng.range(1, 6))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8, rng.chance(0.7)))
+                .collect();
+            (bucket, shapes)
+        },
+        |(bucket, shapes)| {
+            let tk = Tokenizer::minilang_default();
+            let script = minilang_mock_script(&tk, 30);
+            let provider = MockProvider::new(MockBackend::new(64, 48, 96, script));
+            let (mut server, handle) = Server::new(
+                provider,
+                &tk,
+                SchedulerConfig::fixed(*bucket, AdmitGate::Continuous),
+                AdmitConfig::with_wait(false, Duration::ZERO),
+            );
+            let mut streams = Vec::new();
+            let mut plain = Vec::new();
+            for (i, &(tag, examples, stream)) in shapes.iter().enumerate() {
+                let req = mk_request(i as u64, tag, examples);
+                if stream {
+                    streams.push(handle.submit_streaming(req, 4096).map_err(|e| e.to_string())?);
+                } else {
+                    plain.push(handle.submit(req).map_err(|e| e.to_string())?);
+                }
+            }
+            drop(handle);
+            server
+                .run_until_idle(Duration::from_millis(10))
+                .map_err(|e| e.to_string())?;
+            let mut streamed_tokens = 0u64;
+            for s in streams {
+                let (chunks, resp) = s.collect().map_err(|e| e.to_string())?;
+                let concat: Vec<u32> =
+                    chunks.iter().flat_map(|c| c.tokens.iter().copied()).collect();
+                ensure(
+                    concat == resp.tokens,
+                    format!("request {}: chunks do not concat to the response", resp.id),
+                )?;
+                ensure(
+                    chunks.iter().all(|c| !c.tokens.is_empty()),
+                    "an empty chunk was flushed",
+                )?;
+                ensure(
+                    chunks.windows(2).all(|w| w[0].decode_step < w[1].decode_step),
+                    "chunk decode_step stamps must strictly increase per client",
+                )?;
+                streamed_tokens += resp.tokens.len() as u64;
+            }
+            for rx in plain {
+                let resp = rx.recv().map_err(|e| e.to_string())?;
+                ensure(!resp.tokens.is_empty(), "plain submission got tokens")?;
+            }
+            let m = &server.metrics;
+            ensure_eq(m.counter("stream_tokens"), streamed_tokens, "every token streamed")?;
+            ensure_eq(m.counter("stream_degraded_to_chunk"), 0, "ample channel: no degrade")?;
+            ensure_eq(m.counter("stream_degraded_to_final"), 0, "ample channel: no degrade")?;
+            ensure_eq(m.counter("stream_tail_dropped"), 0, "ample channel: no tail drop")?;
+            ensure_eq(m.counter("replies_dropped"), 0, "all receivers were held")?;
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// No head-of-line blocking: a stalled consumer affects only itself
+// ---------------------------------------------------------------------------
+
+/// Deterministic A/B runs of identical workloads: run A submits everything
+/// as plain requests; run B resubmits the same workload with request 0 as
+/// a streaming client on a capacity-1 channel that is never read (a fully
+/// stalled consumer). Every *other* request's tokens and schedule position
+/// (`first_token_step`) must be identical between the runs, and the total
+/// decode-step count must match — the stalled client cost nobody anything.
+/// The stalled client itself must have degraded (non-vacuity) and its
+/// streamed prefix must still be a prefix of its final response.
+#[test]
+fn prop_stalled_consumer_never_blocks_other_requests() {
+    // (per-request tokens + first_token_step, decode_steps, degraded count)
+    type RunOut = (BTreeMap<u64, (Vec<u32>, usize)>, u64, u64);
+    let run = |stall: bool, bucket: usize, shapes: &[(u8, u8)]| -> Result<RunOut, String> {
+        let tk = Tokenizer::minilang_default();
+        let script = minilang_mock_script(&tk, 30);
+        let provider = MockProvider::new(MockBackend::new(64, 48, 96, script));
+        let (mut server, handle) = Server::new(
+            provider,
+            &tk,
+            SchedulerConfig::fixed(bucket, AdmitGate::Continuous),
+            AdmitConfig::with_wait(false, Duration::ZERO),
+        );
+        // Request 0 is always a slow_think anchor so the stalled variant
+        // has a long stream to (fail to) deliver.
+        let mut stalled = None;
+        if stall {
+            let s = handle.submit_streaming(mk_request(0, 2, 1), 1).map_err(|e| e.to_string())?;
+            stalled = Some(s);
+        }
+        let mut plain = Vec::new();
+        if !stall {
+            plain.push((0u64, handle.submit(mk_request(0, 2, 1)).map_err(|e| e.to_string())?));
+        }
+        for (i, &(tag, examples)) in shapes.iter().enumerate() {
+            let id = i as u64 + 1;
+            let rx = handle.submit(mk_request(id, tag, examples)).map_err(|e| e.to_string())?;
+            plain.push((id, rx));
+        }
+        drop(handle);
+        server
+            .run_until_idle(Duration::from_millis(10))
+            .map_err(|e| e.to_string())?;
+        let mut out = BTreeMap::new();
+        for (id, rx) in plain {
+            let resp = rx.recv().map_err(|e| e.to_string())?;
+            out.insert(id, (resp.tokens, resp.first_token_step));
+        }
+        if let Some(s) = stalled {
+            // Drain only now, after the server retired everything: what did
+            // arrive must be a prefix of the final response.
+            let (chunks, resp) = s.collect().map_err(|e| e.to_string())?;
+            let concat: Vec<u32> =
+                chunks.iter().flat_map(|c| c.tokens.iter().copied()).collect();
+            ensure(
+                resp.tokens.starts_with(&concat),
+                "stalled client streamed bytes that are not a prefix of its response",
+            )?;
+            out.insert(0, (resp.tokens, resp.first_token_step));
+        }
+        let m = &server.metrics;
+        Ok((
+            out,
+            m.counter("decode_steps"),
+            m.counter("stream_degraded_to_chunk") + m.counter("stream_degraded_to_final"),
+        ))
+    };
+    check(
+        "stream-no-head-of-line",
+        25,
+        0x57B3,
+        |rng| {
+            let bucket = rng.range(2, 4);
+            let shapes: Vec<(u8, u8)> = (0..rng.range(1, 6))
+                .map(|_| (rng.range(0, 2) as u8, rng.range(0, 2) as u8))
+                .collect();
+            (bucket, shapes)
+        },
+        |(bucket, shapes)| {
+            let (baseline, base_steps, base_degraded) = run(false, *bucket, shapes)?;
+            let (stalled, stall_steps, stall_degraded) = run(true, *bucket, shapes)?;
+            ensure_eq(base_degraded, 0, "baseline run has no streaming clients")?;
+            ensure(
+                stall_degraded >= 1,
+                "the capacity-1 stalled client never degraded: property vacuous",
+            )?;
+            ensure_eq(stalled.len(), baseline.len(), "every request answered in both runs")?;
+            ensure_eq(stall_steps, base_steps, "a stalled consumer changed the schedule")?;
+            for (id, got) in &stalled {
+                let want = &baseline[id];
+                ensure(
+                    got == want,
+                    format!("request {id}: tokens or schedule diverged under a stalled peer"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
